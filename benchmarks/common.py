@@ -1,0 +1,44 @@
+"""Shared helpers for the benchmark harness."""
+
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parent.parent / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+import numpy as np  # noqa: E402
+
+from repro.core import generate_burst, simulate_single_node, summarize  # noqa: E402
+
+
+def run_config(cores: int, intensity: int, policy: str, mode: str,
+               seeds: int = 3, **kw):
+    """Aggregate one (cores, intensity, policy, mode) configuration."""
+    rows = []
+    colds = []
+    for seed in range(seeds):
+        reqs = generate_burst(cores=cores, intensity=intensity, seed=seed)
+        res = simulate_single_node(reqs, cores=cores, policy=policy,
+                                   mode=mode, **kw)
+        rows.append(summarize(reqs))
+        colds.append(res.cold_starts)
+    return {
+        "R_avg": float(np.mean([s.response_avg for s in rows])),
+        "R_p50": float(np.mean([s.response_pct[50] for s in rows])),
+        "R_p75": float(np.mean([s.response_pct[75] for s in rows])),
+        "R_p95": float(np.mean([s.response_pct[95] for s in rows])),
+        "R_p99": float(np.mean([s.response_pct[99] for s in rows])),
+        "S_avg": float(np.mean([s.stretch_avg for s in rows])),
+        "S_p50": float(np.mean([s.stretch_pct[50] for s in rows])),
+        "max_c": float(np.mean([s.max_completion for s in rows])),
+        "cold": float(np.mean(colds)),
+    }
+
+
+def emit(rows: list[dict]) -> None:
+    """Print the harness-wide CSV contract: name,us_per_call,derived."""
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

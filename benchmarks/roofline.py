@@ -1,0 +1,110 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh) cell, derive the three roofline terms on TPU v5e:
+
+    compute    = HLO_FLOPs_per_chip / 197 TFLOP/s (bf16)
+    memory     = HLO_bytes_per_chip / 819 GB/s HBM
+    collective = collective_bytes_per_chip / 50 GB/s ICI
+
+plus MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill/decode), N = active
+params, and the usefulness ratio MODEL_FLOPS / (HLO_FLOPs * chips) that
+catches remat/dispatch waste.  The dominant term is the bottleneck the
+perf loop iterates on (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import emit
+
+from repro.configs import ALIASES, SHAPES, get_config
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # B/s per chip
+LINK_BW = 50e9               # B/s per chip (ICI)
+
+ART_DIR = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytic useful FLOPs (global, whole step).  6*N*D for train,
+    2*N*D for inference, N = active params; enc-dec splits the stacks
+    (encoder params see encoder tokens, decoder params decoder tokens)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.param_count(active_only=True)
+    mult = 6.0 if shape.step == "train" else 2.0
+    if cfg.is_encdec:
+        d = cfg.d_model
+        per_enc_layer = 4 * d * cfg.head_dim * cfg.n_heads // 1 \
+            + 3 * d * cfg.d_ff  # rough: attn + mlp
+        n_enc = cfg.encoder_layers * (4 * d * d + 3 * d * cfg.d_ff)
+        n_dec = n_active - n_enc
+        enc_tokens = shape.global_batch * shape.seq_len
+        dec_tokens = shape.global_batch * (shape.seq_len // cfg.decoder_ratio)
+        if shape.step == "decode":
+            dec_tokens = shape.global_batch
+            return mult * n_dec * dec_tokens       # encoder not re-run
+        return mult * (n_enc * enc_tokens + n_dec * dec_tokens)
+    if shape.step == "decode":
+        return mult * n_active * shape.global_batch
+    return mult * n_active * shape.global_batch * shape.seq_len
+
+
+def analyse(rec: dict) -> dict:
+    devices = rec["devices"]
+    t_compute = rec["flops"] / PEAK_FLOPS
+    t_memory = rec["bytes_accessed"] / HBM_BW
+    t_coll = rec["collective_bytes_total"] / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    useful = mf / max(rec["flops"] * devices, 1.0)
+    # fraction of the bound step time that is useful compute
+    t_bound = max(terms.values())
+    t_useful = (mf / devices) / PEAK_FLOPS
+    return {
+        **terms,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": useful,
+        "roofline_fraction": t_useful / t_bound if t_bound > 0 else 0.0,
+    }
+
+
+def load_records(mesh: str = "sp") -> list[dict]:
+    recs = []
+    for f in sorted(ART_DIR.glob(f"*__{mesh}.json")):
+        r = json.loads(f.read_text())
+        if r.get("ok"):
+            recs.append(r)
+    return recs
+
+
+def run(quick: bool = False) -> list[dict]:
+    rows = []
+    for rec in load_records("sp"):
+        a = analyse(rec)
+        step_time = max(a["compute"], a["memory"], a["collective"])
+        rows.append({
+            "name": f"roofline/{ALIASES.get(rec['arch'], rec['arch'])}"
+                    f"_{rec['shape']}",
+            "us_per_call": step_time * 1e6,      # bound step time
+            "derived": (f"dominant={a['dominant']};"
+                        f"compute_ms={a['compute']*1e3:.2f};"
+                        f"memory_ms={a['memory']*1e3:.2f};"
+                        f"collective_ms={a['collective']*1e3:.2f};"
+                        f"useful={a['useful_ratio']:.2f};"
+                        f"roofline_frac={a['roofline_fraction']:.3f}"),
+        })
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    emit(run(quick))
+
+
+if __name__ == "__main__":
+    main()

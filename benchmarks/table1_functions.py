@@ -1,0 +1,35 @@
+"""Table I: SeBS function service-time profiles (idle system).
+
+Validates the workload model: sampled medians must match the published
+client-side medians (within sampling noise)."""
+
+from .common import emit
+
+import numpy as np
+
+from repro.core import PROFILES, SEBS_TABLE_I
+from repro.core.workload import KAFKA_OVERHEAD_S
+
+
+def run(quick: bool = False) -> list[dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+    n = 2000 if not quick else 200
+    for fn, (p5, med, p95) in SEBS_TABLE_I.items():
+        samples = PROFILES[fn].sample(rng, n) + KAFKA_OVERHEAD_S
+        got_med = float(np.median(samples)) * 1000
+        rel = abs(got_med - med) / med
+        rows.append({
+            "name": f"table1/{fn}",
+            "us_per_call": got_med * 1000,       # sampled median in us
+            "derived": f"paper_median_ms={med:.0f};rel_err={rel:.3f}",
+        })
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    emit(run(quick))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Table II: maximum request completion time, ours-FIFO / baseline ratio.
+
+Paper: ratio < 1 at 20 cores (0.55-0.78), > 1 at 5 cores low intensity."""
+
+from .common import emit, run_config
+
+PAPER = {  # (cores, intensity) -> published ratio range midpoint
+    (5, 30): 1.17, (5, 60): 1.015, (5, 120): 0.94,
+    (10, 30): 1.19, (10, 60): 0.82, (10, 120): 0.68,
+    (20, 30): 0.725, (20, 60): 0.62, (20, 120): 0.565,
+}
+
+
+def run(quick: bool = False) -> list[dict]:
+    rows = []
+    confs = [(5, 30), (10, 60), (20, 60)] if quick else list(PAPER)
+    for cores, inten in confs:
+        seeds = 2 if quick else 3
+        ours = run_config(cores, inten, "fifo", "ours", seeds=seeds)
+        base = run_config(cores, inten, "fifo", "baseline", seeds=seeds)
+        ratio = ours["max_c"] / base["max_c"]
+        rows.append({
+            "name": f"table2/c{cores}_v{inten}",
+            "us_per_call": ours["max_c"] * 1e6,
+            "derived": f"fifo_to_baseline={ratio:.2f};paper={PAPER[(cores,inten)]:.2f}",
+        })
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    emit(run(quick))
+
+
+if __name__ == "__main__":
+    main()

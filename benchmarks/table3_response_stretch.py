@@ -1,0 +1,54 @@
+"""Table III (main results): response time + stretch for all six strategies.
+
+Reproduces the paper aggregate rows; prints ours vs paper side by side."""
+
+from .common import emit, run_config
+
+# paper Table III (R_avg seconds, S_avg) for 10 cores
+PAPER_10 = {
+    (30, "baseline"): (14.78, 261.6), (30, "fifo"): (36.42, 1000.6),
+    (30, "sept"): (12.52, 104.1), (30, "eect"): (13.22, 166.7),
+    (30, "rect"): (12.15, 144.2), (30, "fc"): (10.67, 83.6),
+    (60, "baseline"): (123.36, 3608.8), (60, "fifo"): (101.76, 2959.5),
+    (60, "sept"): (25.14, 164.5), (60, "eect"): (40.93, 766.2),
+    (60, "rect"): (40.42, 763.8), (60, "fc"): (22.65, 134.2),
+    (120, "baseline"): (340.28, 10098.5), (120, "fifo"): (233.94, 6893.0),
+    (120, "sept"): (54.96, 331.3), (120, "eect"): (102.92, 2194.4),
+    (120, "rect"): (104.77, 2233.6), (120, "fc"): (49.48, 262.9),
+}
+PAPER_20 = {
+    (60, "baseline"): (369.33, 10964.4), (60, "fifo"): (206.81, 6008.2),
+    (60, "sept"): (50.62, 321.7), (60, "fc"): (42.92, 265.5),
+}
+
+
+def run(quick: bool = False) -> list[dict]:
+    rows = []
+    grid = ([(10, 60)] if quick else [(10, 30), (10, 60), (10, 120), (20, 60)])
+    for cores, inten in grid:
+        paper = PAPER_10 if cores == 10 else PAPER_20
+        pols = ["baseline", "fifo", "sept", "eect", "rect", "fc"]
+        if cores == 20:
+            pols = ["baseline", "fifo", "sept", "fc"]
+        for pol in pols:
+            mode = "baseline" if pol == "baseline" else "ours"
+            eff_pol = "fifo" if pol == "baseline" else pol
+            seeds = 2 if quick else 3
+            r = run_config(cores, inten, eff_pol, mode, seeds=seeds)
+            pr, ps = paper.get((inten, pol), (float("nan"), float("nan")))
+            rows.append({
+                "name": f"table3/c{cores}_v{inten}_{pol}",
+                "us_per_call": r["R_avg"] * 1e6,
+                "derived": (f"R_avg={r['R_avg']:.2f};paper_R={pr:.2f};"
+                            f"S_avg={r['S_avg']:.0f};paper_S={ps:.0f};"
+                            f"R_p99={r['R_p99']:.1f}"),
+            })
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    emit(run(quick))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Quickstart: the paper's scheduler on a real JAX serving node.
+
+Two endpoints (a cheap one and an expensive one) receive a burst; we run
+the same burst under FIFO and under the paper's Fair-Choice policy and
+print the response-time statistics.  Everything executes for real (tiny
+models, XLA on CPU).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.configs import get_config
+from repro.models import scale_down
+from repro.serving import Endpoint, ServingEngine
+
+
+def make_engine(policy: str) -> ServingEngine:
+    cheap = scale_down(get_config("qwen3_1_7b"))
+    heavy = scale_down(get_config("deepseek_7b"), layers=4, d_model=128,
+                       d_ff=256)
+    return ServingEngine(
+        [Endpoint("chat-mini", cheap, prompt_len=2, gen_len=2),
+         Endpoint("summarize-long", heavy, prompt_len=4, gen_len=24)],
+        slots=2, policy=policy)
+
+
+def main() -> None:
+    for policy in ("fifo", "fc"):
+        eng = make_engine(policy)
+        # estimator warm-up (the paper's warm-up phase)
+        for _ in range(3):
+            eng.submit("chat-mini")
+            eng.submit("summarize-long")
+        eng.run(max_wall_s=120)
+        eng.completed.clear()
+        # the measured burst: many cheap calls stuck behind heavy ones
+        for _ in range(4):
+            eng.submit("summarize-long")
+        for _ in range(10):
+            eng.submit("chat-mini")
+        eng.run(max_wall_s=240)
+        s = eng.summary()
+        print(f"policy={policy:5s}  n={s['n']:3d}  "
+              f"R_avg={s['R_avg']*1e3:7.1f} ms  "
+              f"R_p50={s['R_p50']*1e3:7.1f} ms  "
+              f"R_p95={s['R_p95']*1e3:7.1f} ms")
+    print("\nFair-Choice should cut the mean/median sharply: cheap calls "
+          "no longer wait behind the long generations (paper §VII).")
+
+
+if __name__ == "__main__":
+    main()

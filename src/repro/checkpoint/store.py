@@ -1,0 +1,113 @@
+"""Checkpoint store: atomic save/restore with async writer (fault tolerance).
+
+Layout: <dir>/step_<n>/arrays.npz + meta.json; a ``LATEST`` file is written
+last (atomic rename), so a crash mid-save never corrupts the restore path.
+``save_async`` offloads serialisation to a daemon thread -- the training
+loop overlaps checkpoint IO with the next step (the standard large-scale
+trick; on multi-host each host writes its own shard directory).
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+from pathlib import Path
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# npz cannot serialise ml_dtypes (bfloat16 etc.); store them as bit-equal
+# uint views with a dtype manifest
+_BITCAST = {
+    "bfloat16": (ml_dtypes.bfloat16, np.uint16),
+    "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+    "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8),
+}
+
+
+def _encode(a: np.ndarray) -> tuple[np.ndarray, str]:
+    name = a.dtype.name
+    if name in _BITCAST:
+        return a.view(_BITCAST[name][1]), name
+    return a, name
+
+
+def _decode(a: np.ndarray, name: str) -> np.ndarray:
+    if name in _BITCAST:
+        return a.view(_BITCAST[name][0])
+    return a
+
+
+class CheckpointStore:
+    def __init__(self, directory: str | Path):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # -- save -------------------------------------------------------------
+    def save(self, step: int, tree, meta: dict | None = None) -> Path:
+        flat, treedef = jax.tree.flatten(tree)
+        host, dtypes = [], []
+        for x in flat:
+            a, name = _encode(np.asarray(x))
+            host.append(a)
+            dtypes.append(name)
+        tmp = self.dir / f".tmp_step_{step}"
+        final = self.dir / f"step_{step}"
+        tmp.mkdir(parents=True, exist_ok=True)
+        np.savez(tmp / "arrays.npz", *host)
+        (tmp / "meta.json").write_text(json.dumps({
+            "step": step,
+            "treedef": str(treedef),
+            "dtypes": dtypes,
+            "meta": meta or {},
+        }))
+        if final.exists():
+            import shutil
+            shutil.rmtree(final)
+        tmp.rename(final)
+        (self.dir / "LATEST.tmp").write_text(str(step))
+        (self.dir / "LATEST.tmp").rename(self.dir / "LATEST")
+        return final
+
+    def save_async(self, step: int, tree, meta: dict | None = None) -> None:
+        """Snapshot to host memory synchronously (cheap), write in background."""
+        self.wait()
+        flat, treedef = jax.tree.flatten(tree)
+        host = [np.asarray(x) for x in flat]           # device->host now
+        snapshot = jax.tree.unflatten(treedef, host)
+
+        def _write():
+            self.save(step, snapshot, meta)
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # -- restore -----------------------------------------------------------
+    def latest_step(self) -> int | None:
+        latest = self.dir / "LATEST"
+        if not latest.exists():
+            return None
+        return int(latest.read_text().strip())
+
+    def restore(self, template, step: int | None = None):
+        """Restore into the structure of ``template``; returns (tree, meta)."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                return None, None
+        path = self.dir / f"step_{step}"
+        meta = json.loads((path / "meta.json").read_text())
+        with np.load(path / "arrays.npz") as data:
+            arrays = [data[f"arr_{i}"] for i in range(len(data.files))]
+        arrays = [_decode(a, name) for a, name in zip(arrays, meta["dtypes"])]
+        flat_t, treedef = jax.tree.flatten(template)
+        assert len(flat_t) == len(arrays), (
+            f"checkpoint has {len(arrays)} leaves, template {len(flat_t)}")
+        return jax.tree.unflatten(treedef, arrays), meta

@@ -1,0 +1,77 @@
+"""Assigned-architecture registry: ``get_config(arch_id)`` + shape sets.
+
+Each architecture has its own module with the exact published configuration;
+``SHAPES`` defines the four evaluation cells shared by the LM family.
+``applicable_shapes(cfg)`` applies the brief's skip rules (long_500k only
+for sub-quadratic archs; decode shapes only for archs with a decoder).
+"""
+
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+
+from repro.models.config import ModelConfig
+
+ARCHS = [
+    "llama4_scout_17b_a16e",
+    "qwen2_moe_a2_7b",
+    "recurrentgemma_9b",
+    "seamless_m4t_large_v2",
+    "gemma3_27b",
+    "qwen2_5_14b",
+    "qwen3_1_7b",
+    "deepseek_7b",
+    "rwkv6_3b",
+    "qwen2_vl_7b",
+]
+
+# dashed aliases as listed in the assignment
+ALIASES = {
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "gemma3-27b": "gemma3_27b",
+    "qwen2.5-14b": "qwen2_5_14b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "deepseek-7b": "deepseek_7b",
+    "rwkv6-3b": "rwkv6_3b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+}
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    step: str          # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod_name = ALIASES.get(arch, arch).replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def applicable_shapes(cfg: ModelConfig) -> list[str]:
+    """Brief's skip rules.  long_500k needs sub-quadratic attention (skip for
+    pure full-attention archs; see DESIGN.md §4)."""
+    shapes = ["train_4k", "prefill_32k", "decode_32k"]
+    if not cfg.full_attention_everywhere() and not cfg.is_encdec:
+        shapes.append("long_500k")
+    return shapes
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """All (arch, shape) cells -- 40 total, skips excluded at the caller."""
+    return [(a, s) for a in ARCHS for s in SHAPES]

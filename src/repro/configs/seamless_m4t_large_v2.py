@@ -1,0 +1,25 @@
+"""SeamlessM4T-large-v2 transformer backbone (speech/text enc-dec).
+
+[arXiv:2308.11596; hf]
+24L encoder + 24L decoder, d_model=1024 16H (MHA kv=16) d_ff=8192
+vocab=256206.  Modality frontend (w2v-BERT conv feature extractor) is a
+STUB: input_specs() provides precomputed frame embeddings (B, S, d).
+Decoder length = seq_len // 4.  vocab padded 256206 -> %256 for TP.
+"""
+
+from repro.models.config import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab=256206,
+    period=(LayerSpec(),),
+    encoder_layers=24,
+    decoder_ratio=4,
+    tie_embeddings=True,
+    frontend="audio",
+)

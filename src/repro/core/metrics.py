@@ -1,0 +1,87 @@
+"""Response-time / stretch aggregation (paper §II).
+
+Reported statistics mirror the paper's tables: average, 50/75/95/99th
+percentiles of R(i) and S(i), plus max c(i) (the makespan of the burst) and
+per-function breakdowns (§VII-D uses those to show FC's fairness).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .request import Request
+from .workload import STRETCH_REFERENCE_S
+
+PERCENTILES = (50, 75, 95, 99)
+
+
+@dataclass
+class Summary:
+    n: int
+    response_avg: float
+    response_pct: dict[int, float]
+    stretch_avg: float
+    stretch_pct: dict[int, float]
+    max_completion: float
+    cold_starts: int = 0
+    failures: int = 0
+    per_function: dict[str, "Summary"] = field(default_factory=dict)
+
+    def row(self) -> dict[str, float]:
+        out = {
+            "n": self.n,
+            "R_avg": self.response_avg,
+            "S_avg": self.stretch_avg,
+            "max_c": self.max_completion,
+            "cold_starts": self.cold_starts,
+            "failures": self.failures,
+        }
+        for p in PERCENTILES:
+            out[f"R_p{p}"] = self.response_pct[p]
+            out[f"S_p{p}"] = self.stretch_pct[p]
+        return out
+
+
+def summarize(
+    requests: list[Request],
+    stretch_ref: dict[str, float] | None = None,
+    per_function: bool = False,
+    cold_starts: int = 0,
+    failures: int = 0,
+) -> Summary:
+    """Aggregate completed requests.  ``stretch_ref`` maps fn -> idle-system
+    median response time (Table I); defaults to the SeBS table, so stretch can
+    be < 1 exactly as the paper notes."""
+    ref = stretch_ref if stretch_ref is not None else STRETCH_REFERENCE_S
+    done = [r for r in requests if r.c is not None]
+    if not done:
+        raise ValueError("no completed requests to summarize")
+    resp = np.array([r.response_time for r in done])
+    stretch = np.array([r.stretch(ref.get(r.fn)) for r in done])
+    max_c = float(max(r.c for r in done))
+
+    summary = Summary(
+        n=len(done),
+        response_avg=float(resp.mean()),
+        response_pct={p: float(np.percentile(resp, p)) for p in PERCENTILES},
+        stretch_avg=float(stretch.mean()),
+        stretch_pct={p: float(np.percentile(stretch, p)) for p in PERCENTILES},
+        max_completion=max_c,
+        cold_starts=cold_starts,
+        failures=failures,
+    )
+    if per_function:
+        fns = sorted({r.fn for r in done})
+        for fn in fns:
+            sub = [r for r in done if r.fn == fn]
+            summary.per_function[fn] = summarize(sub, stretch_ref=ref)
+    return summary
+
+
+def merge_summaries(parts: list[Summary]) -> dict[str, float]:
+    """Average key statistics across repetitions (the paper aggregates the
+    five random call sequences per configuration)."""
+    keys = parts[0].row().keys()
+    return {k: float(np.mean([p.row()[k] for p in parts])) for k in keys}

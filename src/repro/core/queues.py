@@ -1,0 +1,58 @@
+"""Stable priority queue for action calls.
+
+Replaces the invoker's simple FIFO queue (paper §IV-B).  The priority of a
+request is computed once, at push time; ties are broken by push order so the
+queue degenerates to exact FIFO under the FIFO policy.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+
+from .request import Request
+
+
+class PriorityQueue:
+    """Min-heap of (priority, seq, request); stable for equal priorities."""
+
+    def __init__(self) -> None:
+        self._heap: list[tuple[float, int, Request]] = []
+        self._seq = itertools.count()
+
+    def push(self, req: Request, priority: float) -> None:
+        req.priority = float(priority)
+        heapq.heappush(self._heap, (req.priority, next(self._seq), req))
+
+    def pop(self) -> Request:
+        if not self._heap:
+            raise IndexError("pop from empty PriorityQueue")
+        return heapq.heappop(self._heap)[2]
+
+    def peek(self) -> Request:
+        if not self._heap:
+            raise IndexError("peek from empty PriorityQueue")
+        return self._heap[0][2]
+
+    def remove(self, req: Request) -> bool:
+        """Remove a specific request (O(n)); used for straggler-backup
+        cancellation.  Returns True if found."""
+        for i, (_, _, r) in enumerate(self._heap):
+            if r.id == req.id:
+                self._heap[i] = self._heap[-1]
+                self._heap.pop()
+                if i < len(self._heap):
+                    heapq._siftup(self._heap, i)  # noqa: SLF001 - stdlib-sanctioned
+                    heapq._siftdown(self._heap, 0, i)  # noqa: SLF001
+                return True
+        return False
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
+
+    def __iter__(self):
+        """Iterate in heap (not sorted) order; for inspection only."""
+        return (r for _, _, r in self._heap)

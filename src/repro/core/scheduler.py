@@ -1,0 +1,121 @@
+"""Slot-based, non-preemptive node scheduler (the paper's method, §IV).
+
+This is the component that replaces the stock OpenWhisk invoker logic:
+
+  * the simple FIFO queue is replaced by a :class:`PriorityQueue` whose
+    priorities come from a pluggable :class:`Policy` (FIFO/SEPT/EECT/RECT/FC);
+  * admission is **CPU-based**: at most ``slots`` (= CPU cores / decode slots)
+    calls execute concurrently, each on a dedicated slot (no oversubscription,
+    hence no OS preemption);
+  * priorities are computed once, at enqueue time;
+  * the estimator observes arrivals (for FC/RECT) and completions (for E[p]).
+
+The class is deliberately clock-agnostic: callers (the discrete-event
+simulator, or the real serving engine) own time and I/O, and drive the
+scheduler through ``receive`` / ``complete``, which return the set of calls
+that should start executing *now*.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .containers import AcquireResult, ContainerPool
+from .estimator import RuntimeEstimator
+from .policies import Policy, make_policy
+from .queues import PriorityQueue
+from .request import Request
+
+
+@dataclass
+class StartDecision:
+    """A call the scheduler decided to start executing."""
+
+    request: Request
+    acquire: AcquireResult      # container + startup delay (0 when warm)
+
+
+@dataclass
+class NodeScheduler:
+    slots: int
+    policy: Policy
+    pool: ContainerPool
+    estimator: RuntimeEstimator = field(default_factory=RuntimeEstimator)
+    queue: PriorityQueue = field(default_factory=PriorityQueue)
+    busy: int = 0
+
+    # -- construction convenience -------------------------------------------
+    @classmethod
+    def build(
+        cls,
+        slots: int,
+        policy: str = "fc",
+        memory_mb: int = 32 * 1024,
+        container_mb: int = 256,
+        fn_memory: dict | None = None,
+        estimator: RuntimeEstimator | None = None,
+    ) -> "NodeScheduler":
+        pool = ContainerPool(
+            memory_mb=memory_mb,
+            container_mb=container_mb,
+            discipline="ours",
+            cores=slots,
+            fn_memory=fn_memory,
+        )
+        return cls(
+            slots=slots,
+            policy=make_policy(policy),
+            pool=pool,
+            estimator=estimator or RuntimeEstimator(),
+        )
+
+    # -- event entry points ---------------------------------------------------
+    def receive(self, req: Request, now: float) -> list[StartDecision]:
+        """A call was pulled from the (Kafka) queue by this invoker."""
+        req.r_prime = now
+        self.estimator.observe_arrival(req.fn, now)
+        prio = self.policy.priority(req, self.estimator, now)
+        self.queue.push(req, prio)
+        return self._dispatch(now)
+
+    def complete(self, req: Request, processing_time: float, acquire: AcquireResult,
+                 now: float) -> list[StartDecision]:
+        """A call finished executing; record history and backfill slots."""
+        self.estimator.observe_completion(req.fn, processing_time)
+        self.pool.release(acquire.container, now)
+        self.busy -= 1
+        assert self.busy >= 0, "slot accounting went negative"
+        return self._dispatch(now)
+
+    def cancel(self, req: Request) -> bool:
+        """Remove a queued (not yet started) call; used by straggler backups."""
+        return self.queue.remove(req)
+
+    # -- core loop -------------------------------------------------------------
+    def _dispatch(self, now: float) -> list[StartDecision]:
+        """Start queued calls while free slots remain.  Non-preemptive: once a
+        call occupies a slot it runs to completion; we never reshuffle."""
+        started: list[StartDecision] = []
+        while self.queue and self.busy < self.slots:
+            head = self.queue.peek()
+            acq = self.pool.acquire(head.fn, now)
+            if acq is None:
+                # Memory exhausted (cannot happen under the paper's sizing of
+                # RAM >= #fns x cores x container, but stay safe): head-of-line
+                # blocks rather than skipping, to preserve priority order.
+                break
+            req = self.queue.pop()
+            assert req.id == head.id
+            req.start = now + acq.startup_delay
+            req.cold_start = acq.cold_start
+            self.busy += 1
+            started.append(StartDecision(req, acq))
+        return started
+
+    # -- introspection ----------------------------------------------------------
+    @property
+    def queued(self) -> int:
+        return len(self.queue)
+
+    def utilization(self) -> float:
+        return self.busy / max(self.slots, 1)

@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, DataIterator, batch_at
+
+__all__ = ["DataConfig", "DataIterator", "batch_at"]

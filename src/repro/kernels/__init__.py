@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the serving hot spots + pure-jnp oracles.
+
+Layout per the brief: <name>.py holds the pl.pallas_call + BlockSpec kernel,
+ops.py the jit'd dispatch wrapper, ref.py the oracles.
+"""
+
+from .ops import decode_attention, flash_attention, rglru_scan, rwkv6_scan
+
+__all__ = ["decode_attention", "flash_attention", "rglru_scan", "rwkv6_scan"]

@@ -1,0 +1,112 @@
+"""Split-KV decode attention kernel (Pallas TPU, flash-decoding style).
+
+One new token attends over a long KV cache.  The KV sequence is tiled over
+the innermost grid dimension; online-softmax state is carried in VMEM
+scratch; per-row cache lengths (ragged batches, the serving engine's slot
+fill levels) mask invalid tail entries.  Because q_len = 1, tiles are
+(block_k, dh) MXU matvec-shaped; batch and head are leading grid dims.
+
+The ``lengths`` operand is scalar-prefetched (SMEM) so block masking can be
+computed before the tile loads.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, scale: float, block_k: int, kv_blocks: int):
+    b = pl.program_id(0)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = lengths_ref[b]
+    q = q_ref[0, 0]                          # (1, dh)
+    k = k_ref[0, 0]                          # (block_k, dh)
+    s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                        preferred_element_type=jnp.float32) * scale  # (1, bk)
+    k_pos = kj * block_k + lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(k_pos < length, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.where(m_new[:, None] <= NEG_INF / 2, 0.0,
+                  jnp.exp(s - m_new[:, None]))
+    alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - m_new))
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=-1)
+    v = v_ref[0, 0]                          # (block_k, dh)
+    pv = lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                         preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(kj == kv_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("softmax_scale", "block_k", "interpret"))
+def decode_attention(q, k, v, lengths, *, softmax_scale=None, block_k=256,
+                     interpret=False):
+    """q: (B, Hq, dh); k, v: (B, Sk, Hkv, dh); lengths: (B,) int32.
+    Returns (B, Hq, dh)."""
+    B, Hq, dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = softmax_scale or (1.0 / math.sqrt(dh))
+    block_k = min(block_k, Sk)
+    assert Sk % block_k == 0, (Sk, block_k)
+    kv_blocks = Sk // block_k
+
+    qt = q[:, :, None, :]                    # (B, Hq, 1, dh)
+    kt = k.transpose(0, 2, 1, 3)             # (B, Hkv, Sk, dh)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_kernel, scale=scale, block_k=block_k,
+                               kv_blocks=kv_blocks)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, Hq, kv_blocks),
+            in_specs=[
+                pl.BlockSpec((1, 1, 1, dh),
+                             lambda b, h, j, lens: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, block_k, dh),
+                             lambda b, h, j, lens: (b, h // G, j, 0)),
+                pl.BlockSpec((1, 1, block_k, dh),
+                             lambda b, h, j, lens: (b, h // G, j, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, 1, dh),
+                                   lambda b, h, j, lens: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1,), jnp.float32),
+                pltpu.VMEM((1,), jnp.float32),
+                pltpu.VMEM((1, dh), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, 1, dh), q.dtype),
+        interpret=interpret,
+    )(lengths, qt, kt, vt)
+    return out[:, :, 0, :]

@@ -1,0 +1,130 @@
+"""Flash attention forward kernel (Pallas TPU).
+
+TPU-native schedule: the grid is (batch, q_head, q_blocks, kv_blocks) with
+the kv axis innermost -- TPU grids execute sequentially over the trailing
+dimension, so the online-softmax running state (m, l, acc) lives in VMEM
+scratch and is carried across kv iterations; the output tile is written on
+the last kv block.  Blocks are MXU-aligned (128-multiple q/kv blocks).
+
+Supports causal masking, sliding windows (via absolute positions derived
+from block indices) and GQA (kv head = q head // group in the index maps).
+Validated in interpret mode against ref.attention_ref (tests/test_kernels).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int, q_offset: int,
+            block_q: int, block_k: int, kv_blocks: int):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0]                       # (block_q, dh)
+    k = k_ref[0, 0]                       # (block_k, dh)
+    s = lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale        # (bq, bk)
+
+    q_pos = qi * block_q + lax.broadcasted_iota(jnp.int32, s.shape, 0) \
+        + q_offset
+    k_pos = kj * block_k + lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                   # (bq,)
+    l_prev = l_scr[...]
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # fully-masked-so-far rows keep contributing zeros
+    p = jnp.where(m_new[:, None] <= NEG_INF / 2, 0.0,
+                  jnp.exp(s - m_new[:, None]))
+    alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - m_new))
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+    v = v_ref[0, 0]                       # (bk, dh)
+    pv = lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(kj == kv_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softmax_scale", "block_q",
+                     "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=-1, softmax_scale=None,
+                    block_q=128, block_k=128, interpret=False):
+    """q: (B, Sq, Hq, dh); k, v: (B, Sk, Hkv, dh) -> (B, Sq, Hq, dh).
+
+    Suffix-aligned positions (q token i at absolute position Sk - Sq + i),
+    matching ref.attention_ref."""
+    B, Sq, Hq, dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = softmax_scale or (1.0 / math.sqrt(dh))
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, block_q, Sk, block_k)
+    q_blocks, kv_blocks = Sq // block_q, Sk // block_k
+
+    # (B, S, H, dh) -> (B, H, S, dh) for clean 2D tiles
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        q_offset=Sk - Sq, block_q=block_q, block_k=block_k,
+        kv_blocks=kv_blocks)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, q_blocks, kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh),
+                         lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

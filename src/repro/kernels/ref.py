@@ -1,0 +1,91 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests).
+
+These are deliberately naive (materialise full score matrices, sequential
+scans) -- correctness first, no cleverness.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+def attention_ref(q, k, v, *, causal=True, window=-1, softmax_scale=None):
+    """q: (B, Sq, Hq, dh); k, v: (B, Sk, Hkv, dh); GQA by head folding.
+    Positions are assumed to be aligned suffixes: q token i sits at absolute
+    position Sk - Sq + i (the usual prefill/decode layout)."""
+    B, Sq, Hq, dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = softmax_scale or (1.0 / math.sqrt(dh))
+    qg = q.reshape(B, Sq, Hkv, G, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
+    q_pos = jnp.arange(Sq) + (Sk - Sq)
+    k_pos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    return out.reshape(B, Sq, Hq, dh)
+
+
+def decode_attention_ref(q, k, v, lengths, *, softmax_scale=None):
+    """Single-token decode.  q: (B, Hq, dh); k, v: (B, Sk, Hkv, dh);
+    lengths: (B,) int32 -- number of valid cache entries per row."""
+    B, Hq, dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = softmax_scale or (1.0 / math.sqrt(dh))
+    qg = q.reshape(B, Hkv, G, dh)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k).astype(jnp.float32) * scale
+    valid = jnp.arange(Sk)[None] < lengths[:, None]          # (B, Sk)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v.dtype), v)
+    return out.reshape(B, Hq, dh)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+def rglru_ref(a, gx, h0):
+    """h_t = a_t * h_{t-1} + gx_t.  a, gx: (B, S, W); h0: (B, W).
+    Returns (hs (B, S, W), hT (B, W))."""
+    def step(h, inp):
+        a_t, gx_t = inp
+        h = a_t * h + gx_t
+        return h, h
+
+    hT, hs = lax.scan(step, h0, (a.swapaxes(0, 1), gx.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1), hT
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6
+# ---------------------------------------------------------------------------
+def rwkv6_ref(r, k, v, w, u, s0):
+    """RWKV-6 recurrence.  r,k,v,w: (B, S, H, dh); u: (H, dh);
+    s0: (B, H, dh, dh) fp32 state.  Returns (out (B,S,H,dh), sT)."""
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                 # (B, H, dh)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t).astype(jnp.float32)
+        acc = s + u[None, :, :, None].astype(jnp.float32) * kv
+        out = jnp.einsum("bhk,bhkv->bhv", r_t.astype(jnp.float32), acc)
+        s = w_t[..., None].astype(jnp.float32) * s + kv
+        return s, out.astype(r_t.dtype)
+
+    seq = tuple(t.swapaxes(0, 1) for t in (r, k, v, w))
+    sT, outs = lax.scan(step, s0, seq)
+    return outs.swapaxes(0, 1), sT

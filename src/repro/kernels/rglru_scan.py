@@ -1,0 +1,77 @@
+"""RG-LRU linear recurrence kernel (Pallas TPU).
+
+The Griffin recurrence h_t = a_t * h_{t-1} + gx_t is elementwise per
+channel, so the channel axis tiles freely over the grid while time is
+carried sequentially: grid = (batch, channel_blocks, time_blocks), with the
+running state h in VMEM scratch carried across the (innermost) time axis.
+Each invocation processes a (block_t, block_w) tile with an in-register
+fori_loop over block_t steps -- HBM traffic is exactly one read of (a, gx)
+and one write of hs, the memory-bound optimum.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, gx_ref, h0_ref, hs_ref, hT_ref, h_scr, *,
+            block_t: int, t_blocks: int):
+    tj = pl.program_id(2)
+
+    @pl.when(tj == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[0]                 # (block_t, block_w)
+    gx = gx_ref[0]
+
+    def step(t, h):
+        h = a[t].astype(jnp.float32) * h + gx[t].astype(jnp.float32)
+        hs_ref[0, t, :] = h.astype(hs_ref.dtype)
+        return h
+
+    h = lax.fori_loop(0, block_t, step, h_scr[...])
+    h_scr[...] = h
+
+    @pl.when(tj == t_blocks - 1)
+    def _final():
+        hT_ref[0] = h_scr[...].astype(hT_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "block_t",
+                                             "interpret"))
+def rglru_scan(a, gx, h0, *, block_w=512, block_t=256, interpret=False):
+    """a, gx: (B, S, W); h0: (B, W) -> (hs (B, S, W), hT (B, W))."""
+    B, S, W = a.shape
+    block_w = min(block_w, W)
+    block_t = min(block_t, S)
+    assert W % block_w == 0 and S % block_t == 0, (W, block_w, S, block_t)
+    w_blocks, t_blocks = W // block_w, S // block_t
+
+    kernel = functools.partial(_kernel, block_t=block_t, t_blocks=t_blocks)
+    hs, hT = pl.pallas_call(
+        kernel,
+        grid=(B, w_blocks, t_blocks),
+        in_specs=[
+            pl.BlockSpec((1, block_t, block_w), lambda b, w, t: (b, t, w)),
+            pl.BlockSpec((1, block_t, block_w), lambda b, w, t: (b, t, w)),
+            pl.BlockSpec((1, block_w), lambda b, w, t: (b, w)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_t, block_w), lambda b, w, t: (b, t, w)),
+            pl.BlockSpec((1, block_w), lambda b, w, t: (b, w)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, W), a.dtype),
+            jax.ShapeDtypeStruct((B, W), a.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_w,), jnp.float32)],
+        interpret=interpret,
+    )(a, gx, h0)
+    return hs, hT

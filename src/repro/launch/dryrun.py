@@ -1,0 +1,242 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be the first import side effect: the XLA_FLAGS line above runs before
+any other import (jax locks the device count on first initialisation).
+
+Per cell this script:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. assembles step_fn + ShapeDtypeStruct inputs + shardings (steps.py),
+  3. ``jax.jit(step).lower(...)`` then ``.compile()`` -- any sharding
+     mismatch, OOM-at-compile or unsupported collective fails the cell,
+  4. records memory_analysis / cost_analysis / per-collective byte counts
+     parsed from the optimized HLO into a JSON artifact for the roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out artifacts/]
+"""
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import ARCHS, ALIASES, SHAPES, applicable_shapes, get_config  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import build_cell  # noqa: E402
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_SHAPE_RE = re.compile(r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64)"
+                       r"\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every typed shape literal in an HLO result type."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective payload bytes summed over the optimized module.
+
+    Counts each op's *result* shape once -- a faithful proxy for per-device
+    link traffic of one executed instance of the op."""
+    out = {c: 0 for c in COLLECTIVES}
+    counts = {c: 0 for c in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # result-type then `= opname(`: e.g. "x = bf16[8,128]{1,0} all-gather(..."
+        m = re.match(r"^[%\w.\-]+\s*=\s*(.+?)\s+([a-z\-]+)\(", s)
+        if not m:
+            continue
+        result_ty, opname = m.groups()
+        base = opname.rstrip("-start").rstrip("-done")
+        for c in COLLECTIVES:
+            if base == c or opname == c or opname == c + "-start":
+                out[c] += _shape_bytes(result_ty)
+                counts[c] += 1
+                break
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+def _compile_metrics(step, args, shardings, mesh) -> dict:
+    with mesh:
+        jitted = jax.jit(step, in_shardings=shardings)
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "collectives": coll,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        },
+        "hlo_instructions": hlo.count("\n"),
+    }
+
+
+def _calib_cfg(cfg, k: int):
+    """k-period-group unrolled variant for flop calibration."""
+    n = k * len(cfg.period)
+    return dataclasses.replace(
+        cfg, n_layers=n,
+        encoder_layers=n if cfg.is_encdec else 0,
+        unroll_layers=True, unroll_q_chunks=True, remat=False)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides: dict | None = None) -> dict:
+    """Compile the full cell (proof of lowerability + memory analysis), then
+    two small unrolled variants to calibrate per-layer-group cost -- XLA's
+    cost_analysis counts while-loop (scan) bodies ONCE, so the corrected
+    totals are  m1 + (n_groups - 1 + tail/period) * (m2 - m1)."""
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    step, args, shardings = build_cell(arch, shape_name, mesh, cfg=cfg)
+    full = _compile_metrics(step, args, shardings, mesh)
+    t_full = time.time() - t0
+
+    ms = []
+    for k in (1, 2):
+        ck = _calib_cfg(cfg, k)
+        s2, a2, sh2 = build_cell(arch, shape_name, mesh, cfg=ck)
+        ms.append(_compile_metrics(s2, a2, sh2, mesh))
+    m1, m2 = ms
+    mult = cfg.n_groups - 1 + cfg.n_tail / len(cfg.period)
+
+    def corr(path1, path2=None):
+        v1 = m1[path1] if path2 is None else m1[path1][path2]
+        v2 = m2[path1] if path2 is None else m2[path1][path2]
+        return v1 + mult * (v2 - v1)
+
+    coll_bytes = {
+        c: m1["collectives"]["bytes"][c]
+        + mult * (m2["collectives"]["bytes"][c] - m1["collectives"]["bytes"][c])
+        for c in COLLECTIVES
+    }
+
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": 512 if multi_pod else 256,
+        "ok": True,
+        "compile_s": round(t_full, 1),
+        "calib_s": round(time.time() - t0 - t_full, 1),
+        # corrected per-device totals (see docstring)
+        "flops": corr("flops"),
+        "bytes_accessed": corr("bytes_accessed"),
+        "collective_bytes": coll_bytes,
+        "collective_bytes_total": sum(coll_bytes.values()),
+        # raw artifacts
+        "memory": full["memory"],
+        "scan_raw": {"flops": full["flops"],
+                     "bytes_accessed": full["bytes_accessed"],
+                     "collectives": full["collectives"]},
+        "calib": {"m1_flops": m1["flops"], "m2_flops": m2["flops"],
+                  "mult": mult},
+        "hlo_instructions": full["hlo_instructions"],
+    }
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="architecture id (dashed aliases accepted)")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true", help="run every cell")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg field override, e.g. weight_sharding=fsdp_full")
+    args = ap.parse_args()
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        if v.lower() in ("true", "false"):
+            v = v.lower() == "true"
+        else:
+            try:
+                v = int(v)
+            except ValueError:
+                pass
+        overrides[k] = v
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        cells = [(a, s) for a in ARCHS
+                 for s in applicable_shapes(get_config(a))]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{ALIASES.get(arch, arch)}__{shape}__{'mp' if mp else 'sp'}"
+            if overrides:
+                tag += "__" + "_".join(f"{k}-{v}" for k, v in overrides.items())
+            path = outdir / f"{tag}.json"
+            if path.exists():
+                print(f"[skip] {tag} (exists)")
+                results.append(json.loads(path.read_text()))
+                continue
+            print(f"[run ] {tag} ...", flush=True)
+            try:
+                rec = run_cell(arch, shape, mp, overrides=overrides or None)
+                tb = rec["collective_bytes_total"]
+                print(f"[ ok ] {tag}: flops={rec['flops']:.3e} "
+                      f"coll={tb/1e9:.2f}GB compile={rec['compile_s']:.0f}s",
+                      flush=True)
+            except Exception as e:  # noqa: BLE001 - record and continue
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if mp else "16x16", "ok": False,
+                       "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]}
+                print(f"[FAIL] {tag}: {type(e).__name__}: {str(e)[:200]}",
+                      flush=True)
+            path.write_text(json.dumps(rec, indent=2))
+            results.append(rec)
+
+    ok = sum(1 for r in results if r.get("ok"))
+    print(f"\n{ok}/{len(results)} cells passed")
+
+
+if __name__ == "__main__":
+    main()

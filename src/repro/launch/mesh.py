@@ -1,0 +1,42 @@
+"""Production mesh construction (multi-pod dry-run target).
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches JAX device state.  The single-pod mesh
+is 16 x 16 = 256 chips (one v5e pod); the multi-pod mesh adds a leading
+``pod`` axis (2 pods = 512 chips, pod axis crossing DCI).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)}; "
+            "run under dryrun.py (XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=512)")
+    # more devices than needed (e.g. 512 host devices, single-pod mesh):
+    # build the mesh on the leading subset
+    sub = np.array(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(sub, axes)
+
+
+def make_smoke_mesh(shape=(2, 2), axes=("data", "model")):
+    """Tiny mesh for CPU integration tests (device count forced by caller)."""
+    n = int(np.prod(shape))
+    sub = np.array(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(sub, axes)
+
+
+def dp_axes(mesh) -> tuple:
+    """Data-parallel axes: ('pod', 'data') on multi-pod, ('data',) otherwise."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

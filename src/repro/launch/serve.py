@@ -1,0 +1,56 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> --policy fc``.
+
+Stands up a single serving node with the paper's scheduler over one or more
+endpoints of the chosen architecture family (scaled models on CPU; full
+configs on TPU pods use the dryrun-proven shardings), fires a Gatling-style
+burst, and reports response-time statistics per policy.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--policy", default="fc",
+                    choices=["fifo", "sept", "eect", "rect", "fc"])
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--heavy-fraction", type=float, default=0.3,
+                    help="fraction of calls hitting the long-generation "
+                         "endpoint")
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.models import scale_down
+    from repro.serving import Endpoint, ServingEngine
+
+    base = scale_down(get_config(args.arch))
+    short = Endpoint(f"{args.arch}-chat", base, prompt_len=2, gen_len=4)
+    long_cfg = dataclasses.replace(base)
+    long_ = Endpoint(f"{args.arch}-batch", long_cfg, prompt_len=4, gen_len=24)
+
+    eng = ServingEngine([short, long_], slots=args.slots, policy=args.policy)
+    # estimator warm-up (paper §V-A)
+    for _ in range(3):
+        eng.submit(short.name)
+        eng.submit(long_.name)
+    eng.run(max_wall_s=120)
+    eng.completed.clear()
+
+    n_heavy = int(args.requests * args.heavy_fraction)
+    for i in range(args.requests):
+        eng.submit(long_.name if i < n_heavy else short.name)
+    eng.run(max_wall_s=300)
+    s = eng.summary()
+    print(f"[serve] arch={args.arch} policy={args.policy} slots={args.slots}")
+    print(f"[serve] n={s['n']} R_avg={s['R_avg']*1e3:.1f}ms "
+          f"R_p50={s['R_p50']*1e3:.1f}ms R_p95={s['R_p95']*1e3:.1f}ms "
+          f"cold_starts={s['cold_starts']}")
+
+
+if __name__ == "__main__":
+    main()

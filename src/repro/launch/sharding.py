@@ -1,0 +1,195 @@
+"""Logical->physical sharding rules with divisibility fallback.
+
+Every parameter / cache / input leaf gets a PartitionSpec from name-based
+rules; the resolver then *checks divisibility of every sharded dim against
+the mesh* and silently drops (replicates) any axis that does not divide.
+This is what makes all 10 architectures lower on all meshes: 60-expert MoE
+falls back from EP to expert-internal d_ff TP, 40-head attention keeps the
+packed projection dim sharded instead of the head dim, the 256206-entry
+seamless vocab is padded by the config, etc.
+
+Physical axes:
+  tp    = "model"                  (tensor parallel)
+  dp    = ("pod", "data")          (batch / data parallel)
+  fsdp  = "data"                   (ZeRO-3 weight sharding, fsdp_tp archs;
+                                    intra-pod only -- weights are replicated
+                                    across pods to keep layer all-gathers
+                                    off the DCI)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import cache_shapes, param_shapes
+from repro.models.config import ModelConfig
+
+from .mesh import dp_axes
+
+TP = "model"
+FSDP = "data"
+
+
+# ---------------------------------------------------------------------------
+# resolver
+# ---------------------------------------------------------------------------
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        size = 1
+        for a in axis:
+            size *= mesh.shape[a]
+        return size
+    return mesh.shape[axis]
+
+
+def resolve(mesh, spec: tuple, shape: tuple) -> NamedSharding:
+    """Drop any spec entry whose mesh-axis size does not divide the dim."""
+    fixed = []
+    for dim, axis in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if axis is not None and all(a in mesh.axis_names for a in
+                                    (axis if isinstance(axis, tuple) else (axis,))):
+            if dim % _axis_size(mesh, axis) == 0:
+                fixed.append(axis)
+                continue
+        fixed.append(None)
+    return NamedSharding(mesh, P(*fixed))
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+_PARAM_RULES: dict[str, tuple] = {
+    # name -> intrinsic spec (leading stack dims padded automatically)
+    "embed": (TP, None),
+    "lm_head": (None, TP),
+    # attention / generic projections (d, out) and (in, d)
+    "wq": (FSDP, TP), "wk": (FSDP, TP), "wv": (FSDP, TP), "wg": (FSDP, TP),
+    "wr": (FSDP, TP),
+    "wo": (TP, FSDP),
+    "bq": (TP,), "bk": (TP,), "bv": (TP,),
+    # dense mlp
+    "w_gate": (FSDP, TP), "w_up": (FSDP, TP), "w_down": (TP, FSDP),
+    "s_gate": (FSDP, TP), "s_up": (FSDP, TP), "s_down": (TP, FSDP),
+    "cm_wk": (FSDP, TP), "cm_wv": (TP, FSDP), "cm_wr": (FSDP, TP),
+    # moe (specialised below when EP applies)
+    "router": (FSDP, None),
+    "e_gate": (None, FSDP, TP), "e_up": (None, FSDP, TP),
+    "e_down": (None, TP, FSDP),
+    # rglru
+    "w_x": (FSDP, TP), "w_y": (FSDP, TP), "w_out": (TP, FSDP),
+    "conv_w": (None, TP), "conv_b": (TP,),
+    "w_rg": (None, TP), "b_rg": (TP,), "w_ig": (None, TP), "b_ig": (TP,),
+    "lambda": (TP,),
+    # rwkv loras / misc: replicated
+    "maa_w1": (FSDP, None), "maa_w2": (), "mu": (), "w0": (),
+    "wd_w1": (), "wd_w2": (), "u": (), "ln_x": (),
+}
+
+
+def param_specs(cfg: ModelConfig, mesh) -> dict:
+    """Pytree of NamedSharding matching param_shapes(cfg).
+
+    weight_sharding schemes:
+      tp        -- Megatron TP over "model"; replicated over dp.
+      fsdp_tp   -- TP over "model" + ZeRO-3 over "data" (large archs).
+      fsdp_full -- every weight sharded on its largest dim over
+                   ("data","model") jointly; no TP math (weights gathered
+                   per layer by GSPMD).  Pairs with batch_sharding="full".
+    """
+    shapes = param_shapes(cfg)
+    use_fsdp = cfg.weight_sharding == "fsdp_tp" and "data" in mesh.axis_names
+    fsdp_full = cfg.weight_sharding == "fsdp_full" and "data" in mesh.axis_names
+    ep = cfg.n_experts > 0 and cfg.n_experts % mesh.shape[TP] == 0
+
+    def spec_for(path, shape) -> NamedSharding:
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if fsdp_full:
+            if len(shape) == 0 or max(shape) < 1024:
+                return resolve(mesh, (), shape)
+            big = shape.index(max(shape))
+            spec = tuple(("data", TP) if i == big else None
+                         for i in range(len(shape)))
+            return resolve(mesh, spec, shape)
+        base = _PARAM_RULES.get(name, ())
+        if ep and name in ("e_gate", "e_up", "e_down"):
+            # expert parallelism: experts across TP; expert-internal dims use
+            # fsdp only
+            base = {"e_gate": (TP, FSDP, None), "e_up": (TP, FSDP, None),
+                    "e_down": (TP, None, FSDP)}[name]
+        if cfg.moe_constraint == "ep_data" and name in ("e_gate", "e_up",
+                                                        "e_down"):
+            # serving EP: experts resident across the DP axis, d_ff TP --
+            # fully sharded weights with zero per-step gathering
+            base = {"e_gate": (FSDP, None, TP), "e_up": (FSDP, None, TP),
+                    "e_down": (FSDP, TP, None)}[name]
+            return resolve(mesh, (None,) * (len(shape) - 3) + base, shape)
+        if not use_fsdp:
+            base = tuple(None if a == FSDP else a for a in base)
+        spec = (None,) * (len(shape) - len(base)) + tuple(base)
+        return resolve(mesh, spec, shape)
+
+    return jax.tree_util.tree_map_with_path(
+        spec_for, shapes, is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ---------------------------------------------------------------------------
+# cache / activation rules
+# ---------------------------------------------------------------------------
+def cache_specs(cfg: ModelConfig, mesh, batch: int, cache_len: int,
+                enc_len: int = 0, *, long_context: bool = False) -> dict:
+    """KV/state cache shardings.
+
+    decode: batch over dp, KV sequence over TP (split-KV attention: GSPMD
+    turns the softmax/sum over the sharded seq into partial reductions +
+    all-reduce -- flash-decoding across chips).
+    long_context (batch=1): sequence over (data, model) = all 256 chips.
+    """
+    dp = dp_axes(mesh)
+    seq_axis = ("data", TP) if long_context else TP
+    shapes = cache_shapes(cfg, batch, cache_len, enc_len)
+
+    def spec_for(path, shape) -> NamedSharding:
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        rank = len(shape)
+        if name in ("k", "v", "ck", "cv"):
+            base = (dp, seq_axis, None, None)          # (B, S, H, dh)
+        elif name == "wkv":
+            base = ((dp, None, None, TP) if cfg.rwkv_state_tp
+                    else (dp, None, None, None))       # (B, H, dh, dh)
+        elif name in ("h", "shift", "cm_shift"):
+            base = (dp, TP)                            # (B, w|d)
+        elif name == "conv":
+            base = (dp, None, TP)                      # (B, width-1, w)
+        else:
+            base = ()
+        spec = (None,) * (rank - len(base)) + tuple(base)
+        return resolve(mesh, spec, shape)
+
+    return jax.tree_util.tree_map_with_path(
+        spec_for, shapes, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def batch_specs(mesh, batch_tree: dict, batch_sharding: str = "dp") -> dict:
+    """Input batch: leading batch dim over dp (positions (3,B,S) handled).
+    batch_sharding="full" spreads the batch over every mesh axis (pairs
+    with weight_sharding="fsdp_full")."""
+    dp = dp_axes(mesh)
+    if batch_sharding == "full":
+        dp = dp + (TP,)
+
+    def spec_for(path, sds) -> NamedSharding:
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name == "positions" and len(sds.shape) == 3:
+            return resolve(mesh, (None, dp, None), sds.shape)
+        spec = (dp,) + (None,) * (len(sds.shape) - 1)
+        return resolve(mesh, spec, sds.shape)
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch_tree)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

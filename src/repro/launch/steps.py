@@ -1,0 +1,175 @@
+"""Step builders + dry-run input specs for every (arch x shape) cell.
+
+``build_cell(arch, shape, mesh)`` returns (step_fn, args_shape_tree,
+in_shardings, out_shardings) ready for
+``jax.jit(step_fn, ...).lower(*args).compile()`` -- nothing is allocated
+(ShapeDtypeStruct stand-ins throughout, params via jax.eval_shape).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, ShapeSpec, get_config
+from repro.models import decode_step, forward, init, param_shapes, prefill
+from repro.models import cache_shapes, init_cache
+from repro.models.config import ModelConfig
+from repro.training import optim
+
+from . import sharding as sh
+from .mesh import dp_axes
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, lr: float = 3e-4):
+    def loss_fn(params, batch):
+        logits = forward(params, cfg, batch)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        labels = batch["labels"]
+        ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        return -jnp.mean(ll)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state = optim.update(params, grads, opt_state, lr=lr)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch, cache):
+        logits, cache = prefill(params, cfg, batch, cache)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, tokens, cache, pos):
+        logits, cache = decode_step(params, cfg, tokens, cache, pos)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_struct(cfg: ModelConfig, B: int, S: int, *, labels: bool) -> dict:
+    """Training/prefill batch stand-in for one architecture."""
+    if cfg.is_encdec:
+        S_dec = max(S // cfg.decoder_ratio, 16)
+        batch = {
+            "tokens": _sds((B, S_dec), jnp.int32),
+            "enc_embeds": _sds((B, S, cfg.d_model), jnp.dtype(cfg.dtype)),
+        }
+        if labels:
+            batch["labels"] = _sds((B, S_dec), jnp.int32)
+        return batch
+    batch = {"tokens": _sds((B, S), jnp.int32)}
+    if cfg.mrope:
+        batch["positions"] = _sds((3, B, S), jnp.int32)
+    if labels:
+        batch["labels"] = _sds((B, S), jnp.int32)
+    return batch
+
+
+def params_struct(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init(cfg, jax.random.PRNGKey(0)))
+
+
+def cache_struct(cfg: ModelConfig, B: int, cache_len: int, enc_len: int = 0):
+    return jax.eval_shape(
+        lambda: init_cache(cfg, B, cache_len, enc_len=enc_len))
+
+
+def input_specs(arch: str, shape_name: str):
+    """Public helper: the dry-run stand-ins for one cell (no shardings)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    return _cell_structs(cfg, shape)
+
+
+def _cell_structs(cfg: ModelConfig, shape: ShapeSpec):
+    B, S = shape.global_batch, shape.seq_len
+    if shape.step == "train":
+        params = params_struct(cfg)
+        batch = batch_struct(cfg, B, S, labels=True)
+        opt = optim.state_shapes(params)
+        return {"params": params, "opt_state": opt, "batch": batch}
+    if shape.step == "prefill":
+        params = params_struct(cfg)
+        enc_len = S if cfg.is_encdec else 0
+        cache_len = S // cfg.decoder_ratio if cfg.is_encdec else S
+        batch = batch_struct(cfg, B, S, labels=False)
+        cache = cache_struct(cfg, B, cache_len, enc_len)
+        return {"params": params, "batch": batch, "cache": cache}
+    # decode
+    params = params_struct(cfg)
+    enc_len = S if cfg.is_encdec else 0
+    cache_len = S // cfg.decoder_ratio if cfg.is_encdec else S
+    cache = cache_struct(cfg, B, cache_len, enc_len)
+    return {
+        "params": params,
+        "tokens": _sds((B,), jnp.int32),
+        "cache": cache,
+        "pos": _sds((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# full cell assembly
+# ---------------------------------------------------------------------------
+def build_cell(arch: str, shape_name: str, mesh, cfg: ModelConfig | None = None):
+    """-> (step_fn, args tuple of ShapeDtypeStructs, in_shardings tuple)."""
+    if cfg is None:
+        cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    structs = _cell_structs(cfg, shape)
+    pspecs = sh.param_specs(cfg, mesh)
+    long_ctx = shape.name == "long_500k"
+
+    if shape.step == "train":
+        step = make_train_step(cfg)
+        opt_specs = optim.AdamWState(
+            step=sh.replicated(mesh),
+            m=jax.tree.map(lambda s: s, pspecs),
+            v=jax.tree.map(lambda s: s, pspecs),
+        )
+        args = (structs["params"], structs["opt_state"], structs["batch"])
+        shardings = (pspecs, opt_specs,
+                     sh.batch_specs(mesh, structs["batch"],
+                                    cfg.batch_sharding))
+        return step, args, shardings
+
+    B, S = shape.global_batch, shape.seq_len
+    enc_len = S if cfg.is_encdec else 0
+    cache_len = S // cfg.decoder_ratio if cfg.is_encdec else S
+    cspecs = sh.cache_specs(cfg, mesh, B, cache_len, enc_len,
+                            long_context=long_ctx)
+    if shape.step == "prefill":
+        step = make_prefill_step(cfg)
+        args = (structs["params"], structs["batch"], structs["cache"])
+        shardings = (pspecs,
+                     sh.batch_specs(mesh, structs["batch"],
+                                    cfg.batch_sharding), cspecs)
+        return step, args, shardings
+
+    step = make_serve_step(cfg)
+    dp = dp_axes(mesh)
+    tok_spec = sh.resolve(mesh, (dp,), (B,))
+    args = (structs["params"], structs["tokens"], structs["cache"],
+            structs["pos"])
+    shardings = (pspecs, tok_spec, cspecs, sh.replicated(mesh))
+    return step, args, shardings

@@ -1,0 +1,57 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On real TPU pods this drives the full config through the production mesh
+(the exact sharding proven by dryrun.py); on CPU (default here) it trains a
+scaled-down same-family model so every architecture's training path is
+exercisable anywhere.  XLA latency-hiding flags for overlap are set for
+TPU runs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--full", action="store_true",
+                    help="full published config (TPU pods; needs the "
+                         "production mesh)")
+    args = ap.parse_args()
+
+    if args.full:
+        # overlap compute/comm on real hardware
+        os.environ.setdefault(
+            "LIBTPU_INIT_ARGS",
+            "--xla_tpu_enable_latency_hiding_scheduler=true")
+
+    # imports after env so jax sees the flags
+    from repro.configs import get_config
+    from repro.models import scale_down
+    from repro.training import TrainConfig, train
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = dataclasses.replace(
+            scale_down(cfg), vocab=2048, vocab_pad_multiple=256)
+    tcfg = TrainConfig(
+        steps=args.steps, global_batch=args.global_batch,
+        seq_len=args.seq_len, microbatches=args.microbatches,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=max(args.steps // 4, 1))
+    print(f"[launch] {cfg.name}: {cfg.param_count()/1e6:.1f}M params "
+          f"({'full' if args.full else 'scaled'})")
+    out = train(cfg, tcfg)
+    print(f"[launch] done; final loss {out['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

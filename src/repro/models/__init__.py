@@ -1,0 +1,18 @@
+"""Model zoo: config + pure-JAX implementations of the assigned archs."""
+
+from .config import ATTN, GLOBAL_WINDOW, LayerSpec, ModelConfig, RGLRU, RWKV, scale_down
+from .model import (
+    cache_shapes,
+    decode_step,
+    forward,
+    init,
+    init_cache,
+    param_shapes,
+    prefill,
+)
+
+__all__ = [
+    "ATTN", "GLOBAL_WINDOW", "LayerSpec", "ModelConfig", "RGLRU", "RWKV",
+    "cache_shapes", "decode_step", "forward", "init", "init_cache",
+    "param_shapes", "prefill", "scale_down",
+]

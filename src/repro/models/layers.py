@@ -1,0 +1,442 @@
+"""Neural building blocks (pure JAX, parameter dicts, scan-friendly).
+
+All functions take explicit parameter dicts so layer stacks can be stacked
+along a leading axis and driven by ``jax.lax.scan`` (depth-independent HLO).
+Attention is implemented flash-style (chunked online softmax over query
+blocks) so 32k-token prefill never materialises an S x S score matrix; the
+Pallas kernels in ``repro.kernels`` are drop-in TPU replacements validated
+against these functions.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * lax.rsqrt(var + eps).astype(x.dtype)) * (1.0 + scale)
+
+
+def group_norm_heads(x: jax.Array, scale: jax.Array, eps: float = 64e-5) -> jax.Array:
+    """Per-head LayerNorm used by RWKV time-mix output.  x: (..., H, dh)."""
+    xf = x.astype(jnp.float32)
+    mean = xf.mean(axis=-1, keepdims=True)
+    var = xf.var(axis=-1, keepdims=True)
+    return ((xf - mean) * lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (RoPE + 3D multimodal M-RoPE)
+# ---------------------------------------------------------------------------
+def _rope_angles(positions: jax.Array, d_half: int, theta: float) -> jax.Array:
+    """positions (..., S) -> angles (..., S, d_half)."""
+    freqs = theta ** (-jnp.arange(0, d_half, dtype=jnp.float32) / d_half)
+    return positions[..., None].astype(jnp.float32) * freqs
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 1e4) -> jax.Array:
+    """x: (B, S, H, dh), positions: (B, S)."""
+    d_half = x.shape[-1] // 2
+    ang = _rope_angles(positions, d_half, theta)          # (B, S, d_half)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, sections: tuple,
+                theta: float = 1e6) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.  positions: (3, B, S) for (t, h, w); the
+    rotary dimension is split into ``sections`` (summing to dh/2), each
+    rotated by its own positional stream."""
+    d_half = x.shape[-1] // 2
+    assert sum(sections) == d_half, (sections, d_half)
+    ang_parts = []
+    off = 0
+    for sec, pos in zip(sections, positions):
+        freqs = theta ** (-(jnp.arange(off, off + sec, dtype=jnp.float32)) / d_half)
+        ang_parts.append(pos[..., None].astype(jnp.float32) * freqs)
+        off += sec
+    ang = jnp.concatenate(ang_parts, axis=-1)             # (B, S, d_half)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention (flash-style chunked online softmax; GQA; windows; causal/bidir)
+# ---------------------------------------------------------------------------
+NEG_INF = -1e30
+
+
+def _mask(q_pos, k_pos, causal: bool, window: int):
+    """q_pos (B,Sq), k_pos (B,Sk) -> bool (B,1,1,Sq,Sk); True = attend."""
+    dq = q_pos[:, :, None]
+    dk = k_pos[:, None, :]
+    m = jnp.ones(dq.shape[:1] + (dq.shape[1], dk.shape[2]), dtype=bool)
+    if causal:
+        m &= dk <= dq
+    if window > 0:
+        m &= (dq - dk) < window
+    m &= dk >= 0          # negative k positions mark invalid (ring buffer)
+    return m[:, None, None]
+
+
+def attention(q, k, v, q_pos, k_pos, *, causal=True, window=-1,
+              q_chunk=512, softmax_scale=None, unroll=False):
+    """GQA attention.
+
+    q: (B, Sq, Hq, dh); k, v: (B, Sk, Hkv, dh); positions are absolute.
+    Returns (B, Sq, Hq, dh).  Query-chunked so peak memory is
+    O(Sq_chunk x Sk) regardless of Sq (flash-attention schedule; the kv-axis
+    online softmax lives in the Pallas kernel, XLA fuses this form well).
+    """
+    B, Sq, Hq, dh = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    scale = softmax_scale or (1.0 / math.sqrt(dh))
+    qg = q.reshape(B, Sq, Hkv, G, dh)
+
+    def block(q_blk, qpos_blk):
+        # q_blk: (B, C, Hkv, G, dh)
+        s = jnp.einsum("bchgd,bkhd->bhgck", q_blk, k).astype(jnp.float32) * scale
+        m = _mask(qpos_blk, k_pos, causal, window)          # (B,1,1,C,Sk)
+        s = jnp.where(m, s, NEG_INF)
+        s = jax.nn.softmax(s, axis=-1)
+        # guard fully-masked rows (all NEG_INF -> uniform garbage)
+        any_valid = jnp.any(m, axis=-1, keepdims=True)
+        s = jnp.where(any_valid, s, 0.0).astype(q.dtype)
+        return jnp.einsum("bhgck,bkhd->bchgd", s, v)
+
+    if Sq <= q_chunk:
+        out = block(qg, q_pos)
+        return out.reshape(B, Sq, Hq, dh)
+
+    assert Sq % q_chunk == 0, (Sq, q_chunk)
+    n = Sq // q_chunk
+    qs = qg.reshape(B, n, q_chunk, Hkv, G, dh).transpose(1, 0, 2, 3, 4, 5)
+    ps = q_pos.reshape(B, n, q_chunk).transpose(1, 0, 2)
+    if unroll:
+        # python-unrolled chunks so XLA cost_analysis sees every block
+        # (while-loop bodies are otherwise counted once -- dry-run only)
+        out = jnp.stack([block(qs[i], ps[i]) for i in range(n)])
+    else:
+        out = lax.map(lambda args: block(*args), (qs, ps))  # (n,B,C,Hkv,G,dh)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, Hq, dh)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# attention layer (projections + rope + cache handling)
+# ---------------------------------------------------------------------------
+def attn_params_shapes(cfg, cross: bool = False) -> dict:
+    d, dh = cfg.d_model, cfg.head_dim
+    shapes = {
+        "wq": (d, cfg.n_heads * dh),
+        "wk": (d, cfg.n_kv_heads * dh),
+        "wv": (d, cfg.n_kv_heads * dh),
+        "wo": (cfg.n_heads * dh, d),
+    }
+    if cfg.qkv_bias and not cross:
+        shapes |= {"bq": (cfg.n_heads * dh,), "bk": (cfg.n_kv_heads * dh,),
+                   "bv": (cfg.n_kv_heads * dh,)}
+    if cfg.qk_norm:
+        shapes |= {"q_norm": (dh,), "k_norm": (dh,)}
+    return shapes
+
+
+def attn_project_qkv(p: dict, x: jax.Array, cfg, positions,
+                     rope: bool = True):
+    B, S, _ = x.shape
+    dh = cfg.head_dim
+    q = (x @ p["wq"] + p.get("bq", 0)).reshape(B, S, cfg.n_heads, dh)
+    k = (x @ p["wk"] + p.get("bk", 0)).reshape(B, S, cfg.n_kv_heads, dh)
+    v = (x @ p["wv"] + p.get("bv", 0)).reshape(B, S, cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if rope:
+        if cfg.mrope:
+            q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+            k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def mlp_params_shapes(cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {"w_gate": (d, f), "w_up": (d, f), "w_down": (f, d)}
+
+
+def swiglu_mlp(p: dict, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (GShard-style capacity dispatch; correct FLOP count)
+# ---------------------------------------------------------------------------
+def _moe_constrain(x, cfg):
+    """Optional explicit sharding constraint on the (E, cap, d) dispatch
+    buffers -- the perf-hillclimb lever that stops GSPMD from replicating
+    the dispatch (EXPERIMENTS.md §Perf)."""
+    if not cfg.moe_constraint:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = {
+        "ep_model": P("model", None, None),     # experts across TP axis
+        "ep_data": P("data", None, None),       # experts across DP axis
+        "tokens_data": P(None, "data", None),   # capacity rows across DP
+    }[cfg.moe_constraint]
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, TypeError):
+        return x  # no ambient mesh (single-device smoke tests)
+def moe_params_shapes(cfg) -> dict:
+    d, f, e = cfg.d_model, cfg.expert_d_ff, cfg.n_experts
+    shapes = {
+        "router": (d, e),
+        "e_gate": (e, d, f),
+        "e_up": (e, d, f),
+        "e_down": (e, f, d),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * f
+        shapes |= {"s_gate": (d, fs), "s_up": (d, fs), "s_down": (fs, d)}
+    return shapes
+
+
+def moe_mlp(p: dict, x: jax.Array, cfg) -> jax.Array:
+    """Top-k routed experts with capacity, sort-based dispatch.
+
+    Memory is O(T*k*d) (scatter/gather into an (E, cap, d) buffer) rather
+    than the O(T*E*cap) of one-hot GShard dispatch, so 1M-token prefills
+    stay lowerable.  FLOPs are the true active-expert FLOPs
+    (E*cap*d*f*3*2 with E*cap ~= T*k*capacity_factor).
+
+    With cfg.moe_groups > 1 the dispatch runs per group (GShard-style
+    per-group capacity): the group axis aligns with the DP shards so the
+    sort/scatter/gather never crosses devices (EXPERIMENTS.md §Perf)."""
+    if cfg.moe_groups > 1:
+        B, S, d = x.shape
+        g = cfg.moe_groups
+        assert (B * S) % g == 0, (B, S, g)
+        xg = x.reshape(g, (B * S) // g, 1, d)
+        if cfg.moe_constraint == "group_data":
+            from jax.sharding import PartitionSpec as P
+            try:
+                xg = jax.lax.with_sharding_constraint(
+                    xg, P("data", None, None, None))
+            except (ValueError, TypeError):
+                pass
+        import dataclasses
+        sub = dataclasses.replace(cfg, moe_groups=1, moe_constraint="")
+        yg = jax.vmap(lambda t: moe_mlp(p, t, sub))(xg)
+        return yg.reshape(B, S, d)
+    B, S, d = x.shape
+    T = B * S
+    E, k = cfg.n_experts, cfg.top_k
+    cap = max(1, int(cfg.capacity_factor * T * k / E))
+    xt = x.reshape(T, d)
+
+    if cfg.moe_constraint == "tokens_data":
+        from jax.sharding import PartitionSpec as P
+        try:
+            xt = jax.lax.with_sharding_constraint(xt, P("data", None))
+        except (ValueError, TypeError):
+            pass
+
+    gates = jax.nn.softmax(xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    top_w, top_i = lax.top_k(gates, k)                      # (T, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # sort (token, choice) pairs by expert; position within expert via the
+    # sorted rank minus the expert's start offset
+    flat_e = top_i.reshape(T * k)
+    flat_t = jnp.arange(T * k, dtype=jnp.int32) // k
+    flat_w = top_w.reshape(T * k)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    sorted_t = flat_t[order]
+    sorted_w = flat_w[order]
+    counts = jnp.bincount(flat_e, length=E)
+    starts = jnp.cumsum(counts) - counts                    # (E,)
+    pos_in_e = jnp.arange(T * k, dtype=jnp.int32) - starts[sorted_e]
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, sorted_e * cap + pos_in_e, E * cap)  # overflow bin
+
+    xe = jnp.zeros((E * cap + 1, d), xt.dtype).at[slot].set(xt[sorted_t])
+    xe = xe[:-1].reshape(E, cap, d)
+    xe = _moe_constrain(xe, cfg)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["e_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", xe, p["e_up"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["e_down"])
+    ye = _moe_constrain(ye, cfg).reshape(E * cap, d)
+
+    contrib = ye[jnp.minimum(slot, E * cap - 1)] * (
+        sorted_w * keep).astype(xt.dtype)[:, None]
+    y = jnp.zeros((T, d), xt.dtype).at[sorted_t].add(contrib)
+    if cfg.moe_constraint == "tokens_data":
+        from jax.sharding import PartitionSpec as P
+        try:
+            y = jax.lax.with_sharding_constraint(y, P("data", None))
+        except (ValueError, TypeError):
+            pass
+
+    if cfg.n_shared_experts:
+        y = y + (jax.nn.silu(xt @ p["s_gate"]) * (xt @ p["s_up"])) @ p["s_down"]
+    return y.reshape(B, S, d)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (Griffin / RecurrentGemma)
+# ---------------------------------------------------------------------------
+def rglru_params_shapes(cfg) -> dict:
+    d, w = cfg.d_model, cfg.lru_dim
+    return {
+        "w_x": (d, w), "w_y": (d, w), "w_out": (w, d),
+        "conv_w": (cfg.conv1d_width, w), "conv_b": (w,),
+        "w_rg": (w, w), "b_rg": (w,),       # recurrence gate
+        "w_ig": (w, w), "b_ig": (w,),       # input gate
+        "lambda": (w,),                      # per-channel decay parameter
+    }
+
+
+def _rglru_coeffs(p, x, c: float = 8.0):
+    """x: (..., w) -> (a, gated_in): decay and gated input per step."""
+    r = jax.nn.sigmoid(x @ p["w_rg"] + p["b_rg"])
+    i = jax.nn.sigmoid(x @ p["w_ig"] + p["b_ig"])
+    log_a = -c * jax.nn.softplus(p["lambda"]) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a.astype(x.dtype), (beta.astype(x.dtype) * i * x)
+
+
+def rglru_scan(p: dict, xb: jax.Array, h0: jax.Array):
+    """Sequential RG-LRU over time.  xb: (B, S, w); h0: (B, w)."""
+    a, gx = _rglru_coeffs(p, xb)
+
+    def step(h, inp):
+        a_t, gx_t = inp
+        h = a_t * h + gx_t
+        return h, h
+
+    hT, hs = lax.scan(step, h0, (a.swapaxes(0, 1), gx.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1), hT            # (B, S, w), (B, w)
+
+
+def rglru_block(p: dict, x: jax.Array, cfg, state: dict | None):
+    """Griffin recurrent block: dual branch, causal conv1d, RG-LRU.
+
+    state: {"h": (B, w), "conv": (B, width-1, w)} or None for fresh prefill.
+    Returns (out (B,S,d), new_state).
+    """
+    B, S, _ = x.shape
+    w = cfg.lru_dim
+    width = cfg.conv1d_width
+    gate = jax.nn.gelu(x @ p["w_y"])                        # (B, S, w)
+    xb = x @ p["w_x"]
+    # causal conv1d with carried context
+    ctx = state["conv"] if state is not None else jnp.zeros(
+        (B, width - 1, w), x.dtype)
+    xc = jnp.concatenate([ctx, xb], axis=1)                 # (B, S+width-1, w)
+    kernel = p["conv_w"]                                    # (width, w)
+    conv = sum(xc[:, i:i + S, :] * kernel[i] for i in range(width))
+    conv = conv + p["conv_b"]
+    h0 = state["h"] if state is not None else jnp.zeros((B, w), x.dtype)
+    hs, hT = rglru_scan(p, conv, h0)
+    out = (gate * hs) @ p["w_out"]
+    new_state = {"h": hT, "conv": xc[:, S:, :] if width > 1 else ctx}
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 ("Finch") time-mix + channel-mix
+# ---------------------------------------------------------------------------
+RWKV_LORA = 32
+
+
+def rwkv_params_shapes(cfg) -> dict:
+    d = cfg.d_model
+    h = cfg.rwkv_heads
+    dh = cfg.rwkv_head_size
+    f = int(3.5 * d)
+    return {
+        # time-mix
+        "mu": (5, d),                       # static token-shift mix (r,k,v,g,w)
+        "maa_w1": (d, 5 * RWKV_LORA), "maa_w2": (5, RWKV_LORA, d),
+        "w0": (d,), "wd_w1": (d, RWKV_LORA * 2), "wd_w2": (RWKV_LORA * 2, d),
+        "wr": (d, d), "wk": (d, d), "wv": (d, d), "wg": (d, d), "wo": (d, d),
+        "u": (h, dh),                       # bonus for current token
+        "ln_x": (d,),
+        # channel-mix
+        "cm_mu_k": (d,), "cm_mu_r": (d,),
+        "cm_wk": (d, f), "cm_wv": (f, d), "cm_wr": (d, d),
+    }
+
+
+def _rwkv_shift(x, x_prev):
+    """Token shift: previous timestep per position.  x: (B,S,d); x_prev (B,d)."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def rwkv_time_mix(p: dict, x: jax.Array, cfg, state: dict):
+    """state: {"shift": (B,d), "wkv": (B,H,dh,dh) fp32}."""
+    B, S, d = x.shape
+    H, dh = cfg.rwkv_heads, cfg.rwkv_head_size
+    xs = _rwkv_shift(x, state["shift"])
+    dx = xs - x
+    # data-dependent token-shift mixing (5 LoRA'd mixes: w,k,v,r,g)
+    xxx = x + dx * p["mu"][0]
+    lora = jnp.tanh(xxx @ p["maa_w1"]).reshape(B, S, 5, RWKV_LORA)
+    mixes = jnp.einsum("bsfr,frd->bsfd", lora, p["maa_w2"]) + p["mu"]
+    xw, xk, xv, xr, xg = [x + dx * mixes[:, :, i] for i in range(5)]
+
+    # data-dependent per-channel decay
+    ww = jnp.tanh(xw @ p["wd_w1"]) @ p["wd_w2"]
+    w = jnp.exp(-jnp.exp((p["w0"] + ww).astype(jnp.float32)))  # (B,S,d) in (0,1)
+
+    r = (xr @ p["wr"]).reshape(B, S, H, dh)
+    k = (xk @ p["wk"]).reshape(B, S, H, dh)
+    v = (xv @ p["wv"]).reshape(B, S, H, dh)
+    g = jax.nn.silu(xg @ p["wg"])
+    w = w.reshape(B, S, H, dh)
+
+    def step(S_state, inp):
+        r_t, k_t, v_t, w_t = inp             # (B,H,dh) each
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t).astype(jnp.float32)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t,
+                         (S_state + p["u"][None, :, :, None].astype(jnp.float32) * kv
+                          ).astype(r_t.dtype).astype(jnp.float32))
+        S_state = w_t[..., None].astype(jnp.float32) * S_state + kv
+        return S_state, out.astype(r_t.dtype)
+
+    seq = (r.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1), w.swapaxes(0, 1))
+    S_new, outs = lax.scan(step, state["wkv"], seq)
+    out = outs.swapaxes(0, 1).reshape(B, S, H, dh)
+    out = group_norm_heads(out, 1.0 + p["ln_x"].reshape(H, dh))
+    out = (out.reshape(B, S, d) * g) @ p["wo"]
+    return out, {"shift": x[:, -1, :], "wkv": S_new}
+
+
+def rwkv_channel_mix(p: dict, x: jax.Array, state: dict):
+    xs = _rwkv_shift(x, state["cm_shift"])
+    dx = xs - x
+    xk = x + dx * p["cm_mu_k"]
+    xr = x + dx * p["cm_mu_r"]
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_wk"]))
+    out = jax.nn.sigmoid(xr @ p["cm_wr"]) * (kk @ p["cm_wv"])
+    return out, {"cm_shift": x[:, -1, :]}

@@ -1,0 +1,538 @@
+"""Model zoo core: one decoder-stack implementation covering dense, MoE,
+hybrid (RG-LRU), SSM (RWKV6), enc-dec and VLM backbones.
+
+Layer stacks are organised as ``n_groups`` repetitions of a period (tuple of
+LayerSpec) and executed with ``jax.lax.scan`` over stacked parameters, so
+HLO size is independent of depth.  Remainder layers (62 = 10*6 + 2 for
+gemma3) live in an unrolled ``tail``.
+
+Public entry points (all pure functions, jit/pjit-friendly):
+  init(cfg, rng)                                -> params
+  train_step-compatible ``forward(params, batch)`` -> logits
+  prefill(params, batch)                        -> logits, cache
+  decode_step(params, token_batch, cache, pos)  -> logits, cache
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import layers as L
+from .config import ATTN, GLOBAL_WINDOW, RGLRU, RWKV, LayerSpec, ModelConfig
+
+# ---------------------------------------------------------------------------
+# parameter shape trees
+# ---------------------------------------------------------------------------
+def _layer_shapes(cfg: ModelConfig, spec: LayerSpec, cross: bool = False) -> dict:
+    d = cfg.d_model
+    shapes: dict = {"ln1": (d,), "ln2": (d,)}
+    if spec.kind == ATTN:
+        shapes["attn"] = L.attn_params_shapes(cfg)
+    elif spec.kind == RGLRU:
+        shapes["rglru"] = L.rglru_params_shapes(cfg)
+    elif spec.kind == RWKV:
+        shapes["tm"] = {k: v for k, v in L.rwkv_params_shapes(cfg).items()
+                        if not k.startswith("cm_")}
+    else:
+        raise ValueError(spec.kind)
+    if spec.kind == RWKV:
+        shapes["cm"] = {k: v for k, v in L.rwkv_params_shapes(cfg).items()
+                        if k.startswith("cm_")}
+    elif spec.moe:
+        shapes["moe"] = L.moe_params_shapes(cfg)
+    else:
+        shapes["mlp"] = L.mlp_params_shapes(cfg)
+    if cross:
+        shapes["ln_cross"] = (d,)
+        shapes["cross"] = L.attn_params_shapes(cfg, cross=True)
+    return shapes
+
+
+def param_shapes(cfg: ModelConfig) -> dict:
+    """Full parameter shape tree (leaves are shape tuples)."""
+    d, V = cfg.d_model, cfg.padded_vocab
+    n_tail = cfg.n_layers % len(cfg.period)
+    n_groups = cfg.n_layers // len(cfg.period)
+    cross = cfg.is_encdec
+
+    def stack(shape_dict: dict, n: int) -> dict:
+        return jax.tree.map(lambda s: (n, *s), shape_dict,
+                            is_leaf=lambda x: isinstance(x, tuple))
+
+    tree: dict = {
+        "embed": (V, d),
+        "final_norm": (d,),
+        "groups": {
+            f"pos{i}": stack(_layer_shapes(cfg, spec, cross), n_groups)
+            for i, spec in enumerate(cfg.period)
+        },
+    }
+    if n_tail:
+        tree["tail"] = {
+            f"layer{i}": _layer_shapes(cfg, cfg.period[i], cross)
+            for i in range(n_tail)
+        }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = (d, V)
+    if cfg.is_encdec:
+        enc_cfg = cfg  # same widths; encoder is bidirectional full attention
+        tree["enc"] = {
+            "groups": {
+                "pos0": stack(_layer_shapes(enc_cfg, LayerSpec()), cfg.encoder_layers)
+            },
+            "final_norm": (d,),
+        }
+    return tree
+
+
+def init(cfg: ModelConfig, rng: jax.Array) -> dict:
+    """Materialise parameters (smoke tests / examples only -- the dry-run
+    uses ``jax.eval_shape(lambda: init(cfg, rng))`` and never allocates)."""
+    shapes = param_shapes(cfg)
+    flat, treedef = jax.tree.flatten(shapes, is_leaf=lambda x: isinstance(x, tuple))
+    keys = jax.random.split(rng, len(flat))
+    dtype = jnp.dtype(cfg.dtype)
+
+    def make(key, shape):
+        if len(shape) <= 1:
+            return jnp.zeros(shape, dtype)
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        return (jax.random.normal(key, shape, jnp.float32)
+                / math.sqrt(fan_in)).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [make(k, s) for k, s in zip(keys, flat)])
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+def _layer_cache_shapes(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                        cache_len: int) -> dict:
+    dh = cfg.head_dim
+    if spec.kind == ATTN:
+        s = cache_len if spec.window <= 0 else min(spec.window, cache_len)
+        return {"k": (batch, s, cfg.n_kv_heads, dh),
+                "v": (batch, s, cfg.n_kv_heads, dh)}
+    if spec.kind == RGLRU:
+        w = cfg.lru_dim
+        return {"h": (batch, w), "conv": (batch, cfg.conv1d_width - 1, w)}
+    if spec.kind == RWKV:
+        return {"shift": (batch, cfg.d_model),
+                "wkv": (batch, cfg.rwkv_heads, cfg.rwkv_head_size,
+                        cfg.rwkv_head_size),
+                "cm_shift": (batch, cfg.d_model)}
+    raise ValueError(spec.kind)
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, cache_len: int,
+                 enc_len: int = 0) -> dict:
+    n_tail = cfg.n_layers % len(cfg.period)
+    n_groups = cfg.n_layers // len(cfg.period)
+
+    def stack(d: dict, n: int) -> dict:
+        return jax.tree.map(lambda s: (n, *s), d,
+                            is_leaf=lambda x: isinstance(x, tuple))
+
+    tree: dict = {
+        "groups": {
+            f"pos{i}": stack(_layer_cache_shapes(cfg, spec, batch, cache_len),
+                             n_groups)
+            for i, spec in enumerate(cfg.period)
+        }
+    }
+    if n_tail:
+        tree["tail"] = {
+            f"layer{i}": _layer_cache_shapes(cfg, cfg.period[i], batch, cache_len)
+            for i in range(n_tail)
+        }
+    if cfg.is_encdec:
+        # cross-attention memory: encoder K/V per decoder layer
+        dh = cfg.head_dim
+        ck = {"ck": (batch, enc_len, cfg.n_kv_heads, dh),
+              "cv": (batch, enc_len, cfg.n_kv_heads, dh)}
+        tree["cross_groups"] = {
+            f"pos{i}": stack(ck, n_groups) for i in range(len(cfg.period))
+        }
+        if n_tail:
+            tree["cross_tail"] = {f"layer{i}": ck for i in range(n_tail)}
+    return tree
+
+
+KV_QUANT_SCALE = 32.0    # static symmetric scale for int8 KV (values ~N(0,1);
+                         # per-channel calibration is a serving-time feature)
+
+
+def _kv_quant(x):
+    return jnp.clip(jnp.round(x.astype(jnp.float32) * KV_QUANT_SCALE),
+                    -127, 127).astype(jnp.int8)
+
+
+def _kv_dequant(x, dtype):
+    return (x.astype(jnp.float32) / KV_QUANT_SCALE).astype(dtype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               enc_len: int = 0, dtype=None) -> dict:
+    dt = dtype or jnp.dtype(cfg.dtype)
+    kv_dt = jnp.int8 if cfg.kv_cache_dtype == "int8" else dt
+
+    def make(path, shape):
+        name = str(path[-1])
+        if "wkv" in name:
+            return jnp.zeros(shape, jnp.float32)
+        if name in ("['k']", "['v']"):      # self-attn KV only (cross stays
+            return jnp.zeros(shape, kv_dt)  # full precision)
+        return jnp.zeros(shape, dt)
+
+    shapes = cache_shapes(cfg, batch, cache_len, enc_len)
+    return jax.tree_util.tree_map_with_path(
+        make, shapes, is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ---------------------------------------------------------------------------
+# single layer application
+# ---------------------------------------------------------------------------
+@dataclass
+class Ctx:
+    cfg: ModelConfig
+    positions: jax.Array          # (B, S) or (3, B, S) for mrope
+    mode: str                     # "train" | "prefill" | "decode"
+    pos: jax.Array | None = None  # decode write index (scalar int32)
+    cross_x: jax.Array | None = None   # encoder output (enc-dec prefill)
+
+
+def _attn_sublayer(p, spec, x, ctx: Ctx, cache):
+    cfg = ctx.cfg
+    B, S, _ = x.shape
+    q, k_new, v_new = L.attn_project_qkv(p["attn"], x, cfg, ctx.positions)
+    qpos = ctx.positions[0] if cfg.mrope else ctx.positions  # (B,S) time axis
+
+    quant = cache is not None and cache["k"].dtype == jnp.int8
+    if ctx.mode == "decode":
+        Sc = cache["k"].shape[1]
+        if spec.window > 0 and spec.window <= Sc:
+            slot = ctx.pos % Sc
+        else:
+            slot = jnp.minimum(ctx.pos, Sc - 1)
+        k_store = _kv_quant(k_new) if quant else k_new
+        v_store = _kv_quant(v_new) if quant else v_new
+        k_cache = lax.dynamic_update_slice_in_dim(cache["k"], k_store, slot,
+                                                  axis=1)
+        v_cache = lax.dynamic_update_slice_in_dim(cache["v"], v_store, slot,
+                                                  axis=1)
+        idx = jnp.arange(Sc)
+        if spec.window > 0 and spec.window <= Sc:
+            ages = (ctx.pos - idx) % Sc
+            k_pos = ctx.pos - ages                    # absolute; <0 invalid
+        else:
+            k_pos = jnp.where(idx <= ctx.pos, idx, -1)
+        k_pos = jnp.broadcast_to(k_pos[None, :], (B, Sc))
+        k_att = _kv_dequant(k_cache, q.dtype) if quant else k_cache
+        v_att = _kv_dequant(v_cache, q.dtype) if quant else v_cache
+        out = L.attention(q, k_att, v_att, qpos, k_pos,
+                          causal=True, window=spec.window,
+                          unroll=cfg.unroll_q_chunks)
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        out = L.attention(q, k_new, v_new, qpos, qpos,
+                          causal=True, window=spec.window,
+                          unroll=cfg.unroll_q_chunks)
+        if ctx.mode == "prefill":
+            Sc = cache["k"].shape[1]
+            k_store = _kv_quant(k_new) if quant else k_new
+            v_store = _kv_quant(v_new) if quant else v_new
+            if S >= Sc:
+                # ring buffer: absolute position s must land in slot s % Sc
+                shift = S % Sc
+                keep_k = jnp.roll(k_store[:, -Sc:, :, :], shift, axis=1)
+                keep_v = jnp.roll(v_store[:, -Sc:, :, :], shift, axis=1)
+            else:
+                keep_k = lax.dynamic_update_slice_in_dim(
+                    cache["k"], k_store, 0, axis=1)
+                keep_v = lax.dynamic_update_slice_in_dim(
+                    cache["v"], v_store, 0, axis=1)
+            new_cache = {"k": keep_k, "v": keep_v}
+        else:
+            new_cache = cache
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return out @ p["attn"]["wo"], new_cache
+
+
+def _bidir_attn_sublayer(p, x, ctx: Ctx):
+    """Encoder self-attention (bidirectional, full)."""
+    cfg = ctx.cfg
+    q, k, v = L.attn_project_qkv(p["attn"], x, cfg, ctx.positions)
+    out = L.attention(q, k, v, ctx.positions, ctx.positions,
+                      causal=False, window=-1, unroll=cfg.unroll_q_chunks)
+    out = out.reshape(*x.shape[:2], cfg.n_heads * cfg.head_dim)
+    return out @ p["attn"]["wo"]
+
+
+def _cross_attn_sublayer(p, x, ctx: Ctx, cache):
+    """Decoder cross-attention over encoder memory (no rope)."""
+    cfg = ctx.cfg
+    B, S, _ = x.shape
+    dh = cfg.head_dim
+    q = (x @ p["cross"]["wq"]).reshape(B, S, cfg.n_heads, dh)
+    if ctx.mode == "decode":
+        ck, cv = cache["ck"], cache["cv"]
+    else:
+        mem = ctx.cross_x
+        Sm = mem.shape[1]
+        ck = (mem @ p["cross"]["wk"]).reshape(B, Sm, cfg.n_kv_heads, dh)
+        cv = (mem @ p["cross"]["wv"]).reshape(B, Sm, cfg.n_kv_heads, dh)
+    Sm = ck.shape[1]
+    qpos = jnp.zeros((B, S), jnp.int32)
+    kpos = jnp.broadcast_to(jnp.arange(Sm)[None], (B, Sm))
+    out = L.attention(q, ck, cv, qpos, kpos, causal=False, window=-1,
+                      unroll=cfg.unroll_q_chunks)
+    out = out.reshape(B, S, cfg.n_heads * dh)
+    return out @ p["cross"]["wo"], {"ck": ck, "cv": cv}
+
+
+def apply_layer(p: dict, spec: LayerSpec, x: jax.Array, ctx: Ctx,
+                cache: dict | None, cross_cache: dict | None = None):
+    """Pre-norm residual layer; returns (x, new_cache, new_cross_cache)."""
+    cfg = ctx.cfg
+    h = L.rms_norm(x, p["ln1"])
+    if spec.kind == ATTN:
+        out, cache = _attn_sublayer(p, spec, h, ctx, cache)
+    elif spec.kind == RGLRU:
+        out, cache = L.rglru_block(p["rglru"], h, cfg,
+                                   cache if ctx.mode != "train" else None)
+        if ctx.mode == "train":
+            cache = None
+    elif spec.kind == RWKV:
+        st = cache if ctx.mode != "train" else {
+            "shift": jnp.zeros((x.shape[0], cfg.d_model), x.dtype),
+            "wkv": jnp.zeros((x.shape[0], cfg.rwkv_heads, cfg.rwkv_head_size,
+                              cfg.rwkv_head_size), jnp.float32),
+            "cm_shift": jnp.zeros((x.shape[0], cfg.d_model), x.dtype),
+        }
+        out, tm_new = L.rwkv_time_mix(p["tm"], h, cfg, st)
+        cache = (cache or st) | tm_new if ctx.mode != "train" else None
+    else:
+        raise ValueError(spec.kind)
+    x = x + out
+
+    if cfg.is_encdec and "cross" in p:
+        h = L.rms_norm(x, p["ln_cross"])
+        out, cross_cache = _cross_attn_sublayer(p, h, ctx, cross_cache)
+        x = x + out
+
+    h = L.rms_norm(x, p["ln2"])
+    if spec.kind == RWKV:
+        st = cache if ctx.mode != "train" else {
+            "cm_shift": jnp.zeros((x.shape[0], cfg.d_model), x.dtype)}
+        out, cm_new = L.rwkv_channel_mix(p["cm"], h, st)
+        if ctx.mode != "train":
+            cache = cache | cm_new
+    elif spec.moe:
+        out = L.moe_mlp(p["moe"], h, cfg)
+    else:
+        out = L.swiglu_mlp(p["mlp"], h)
+    x = x + out
+    return x, cache, cross_cache
+
+
+# ---------------------------------------------------------------------------
+# full stacks
+# ---------------------------------------------------------------------------
+def _run_stack(params: dict, x: jax.Array, ctx: Ctx, cache: dict | None):
+    """Scan over period groups, then the unrolled tail."""
+    cfg = ctx.cfg
+    period = cfg.period
+    have_cache = cache is not None
+    remat = cfg.remat and ctx.mode == "train"
+
+    def make_layer_fn(spec):
+        fn = lambda p, h, c, cc: apply_layer(p, spec, h, ctx, c, cc)  # noqa: E731
+        if remat:
+            fn = jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.nothing_saveable)
+        return fn
+
+    layer_fns = [make_layer_fn(spec) for spec in period]
+
+    def group_step(h, xs):
+        gp, gcache, gcross = xs
+        new_caches, new_crosses = [], []
+        for i, _spec in enumerate(period):
+            c = gcache[f"pos{i}"] if have_cache else None
+            cc = gcross[f"pos{i}"] if (gcross is not None) else None
+            h, c_new, cc_new = layer_fns[i](gp[f"pos{i}"], h, c, cc)
+            new_caches.append(c_new)
+            new_crosses.append(cc_new)
+        ys = ({f"pos{i}": c for i, c in enumerate(new_caches)}
+              if have_cache else None,
+              {f"pos{i}": c for i, c in enumerate(new_crosses)}
+              if gcross is not None else None)
+        return h, ys
+
+    # re-nest stacked params: groups dict pos{i} -> leaves (n_groups, ...)
+    gp = params["groups"]
+    gcache = cache["groups"] if have_cache else None
+    gcross = cache.get("cross_groups") if (have_cache and cfg.is_encdec) else None
+
+    if cfg.unroll_layers:
+        # python loop over groups (dry-run flop calibration; see dryrun.py)
+        n_groups = cfg.n_groups
+        take = lambda t, g: (jax.tree.map(lambda a: a[g], t)  # noqa: E731
+                             if t is not None else None)
+        ys_list = []
+        for g in range(n_groups):
+            x, ys_g = group_step(x, (take(gp, g), take(gcache, g),
+                                     take(gcross, g)))
+            ys_list.append(ys_g)
+        stack = lambda *ts: jnp.stack(ts)  # noqa: E731
+        new_cache = (jax.tree.map(stack, *[y[0] for y in ys_list])
+                     if have_cache else None)
+        new_cross = (jax.tree.map(stack, *[y[1] for y in ys_list])
+                     if (have_cache and gcross is not None) else None)
+    else:
+        xs = (gp, gcache, gcross)
+        # lax.scan needs every xs leaf to share the leading dim (n_groups)
+        if gcache is None and gcross is None:
+            x, ys = lax.scan(lambda h, p_: group_step(h, (p_, None, None)),
+                             x, gp)
+            new_cache, new_cross = None, None
+        elif gcross is None:
+            x, ys = lax.scan(lambda h, pc: group_step(h, (*pc, None)), x,
+                             (gp, gcache))
+            new_cache, new_cross = ys[0], None
+        else:
+            x, ys = lax.scan(group_step, x, xs)
+            new_cache, new_cross = ys
+
+    tail_cache, tail_cross = {}, {}
+    if "tail" in params:
+        for i in range(len(params["tail"])):
+            c = cache["tail"][f"layer{i}"] if have_cache else None
+            cc = (cache.get("cross_tail", {}).get(f"layer{i}")
+                  if have_cache and cfg.is_encdec else None)
+            x, c_new, cc_new = layer_fns[i](params["tail"][f"layer{i}"],
+                                            x, c, cc)
+            tail_cache[f"layer{i}"] = c_new
+            tail_cross[f"layer{i}"] = cc_new
+
+    if not have_cache:
+        return x, None
+    out_cache: dict = {"groups": new_cache}
+    if "tail" in params:
+        out_cache["tail"] = tail_cache
+    if cfg.is_encdec:
+        out_cache["cross_groups"] = new_cross
+        if tail_cross:
+            out_cache["cross_tail"] = tail_cross
+    return x, out_cache
+
+
+def _encode(params: dict, cfg: ModelConfig, emb: jax.Array,
+            positions: jax.Array) -> jax.Array:
+    """Bidirectional encoder stack (enc-dec models)."""
+    ctx = Ctx(cfg=cfg, positions=positions, mode="train")
+
+    def step(h, gp):
+        hn = L.rms_norm(h, gp["ln1"])
+        out = _bidir_attn_sublayer(gp, hn, ctx)
+        h = h + out
+        hn = L.rms_norm(h, gp["ln2"])
+        h = h + L.swiglu_mlp(gp["mlp"], hn)
+        return h, None
+
+    if cfg.unroll_layers:
+        x = emb
+        stacked = params["enc"]["groups"]["pos0"]
+        n = jax.tree.leaves(stacked)[0].shape[0]
+        for g in range(n):
+            x, _ = step(x, jax.tree.map(lambda a: a[g], stacked))
+    else:
+        x, _ = lax.scan(step, emb, params["enc"]["groups"]["pos0"])
+    return L.rms_norm(x, params["enc"]["final_norm"])
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+def _embed(params, cfg, tokens=None, embeds=None):
+    if embeds is not None:
+        return embeds.astype(jnp.dtype(cfg.dtype))
+    return params["embed"][tokens]
+
+
+def _unembed(params, cfg, x):
+    x = L.rms_norm(x, params["final_norm"])
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    return x @ head
+
+
+def _default_positions(cfg, B, S, offset=0):
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None] + offset, (B, S))
+    if cfg.mrope:
+        pos = jnp.broadcast_to(pos[None], (3, B, S))
+    return pos
+
+
+def forward(params: dict, cfg: ModelConfig, batch: dict) -> jax.Array:
+    """Training forward -> logits (B, S, V).
+
+    batch keys: tokens (B,S) int32; optional positions; enc-dec adds
+    enc_embeds (B,Se,d) [audio stub] or enc_tokens; vlm adds embeds."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = _default_positions(cfg, B, S)
+    x = _embed(params, cfg, tokens, batch.get("embeds"))
+    ctx = Ctx(cfg=cfg, positions=positions, mode="train")
+    if cfg.is_encdec:
+        enc_in = batch.get("enc_embeds")
+        if enc_in is None:
+            enc_in = _embed(params, cfg, batch["enc_tokens"])
+        Se = enc_in.shape[1]
+        enc_pos = _default_positions(cfg, B, Se)
+        ctx.cross_x = _encode(params, cfg, enc_in, enc_pos)
+    x, _ = _run_stack(params, x, ctx, None)
+    return _unembed(params, cfg, x)
+
+
+def prefill(params: dict, cfg: ModelConfig, batch: dict, cache: dict):
+    """Prompt processing; fills ``cache`` (created by init_cache) and returns
+    (last-token logits (B, V), cache)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = _default_positions(cfg, B, S)
+    x = _embed(params, cfg, tokens, batch.get("embeds"))
+    ctx = Ctx(cfg=cfg, positions=positions, mode="prefill")
+    if cfg.is_encdec:
+        enc_in = batch.get("enc_embeds")
+        if enc_in is None:
+            enc_in = _embed(params, cfg, batch["enc_tokens"])
+        Se = enc_in.shape[1]
+        ctx.cross_x = _encode(params, cfg, enc_in, _default_positions(cfg, B, Se))
+    x, cache = _run_stack(params, x, ctx, cache)
+    logits = _unembed(params, cfg, x[:, -1:, :])
+    return logits[:, 0, :], cache
+
+
+def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                cache: dict, pos: jax.Array):
+    """One decode step.  tokens (B,) int32; pos scalar int32 (current index).
+    Returns (logits (B, V), new cache)."""
+    B = tokens.shape[0]
+    positions = _default_positions(cfg, B, 1, offset=pos)
+    x = _embed(params, cfg, tokens[:, None])
+    ctx = Ctx(cfg=cfg, positions=positions, mode="decode", pos=pos)
+    x, cache = _run_stack(params, x, ctx, cache)
+    logits = _unembed(params, cfg, x)
+    return logits[:, 0, :], cache

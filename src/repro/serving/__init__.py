@@ -1,0 +1,6 @@
+"""Serving engine: the paper's scheduler driving real JAX model execution."""
+
+from .engine import Endpoint, ServingEngine
+from .kvcache import SlotPool
+
+__all__ = ["Endpoint", "ServingEngine", "SlotPool"]

@@ -1,0 +1,22 @@
+"""Token samplers (greedy / temperature / top-k)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature(logits: jax.Array, rng: jax.Array, t: float = 1.0) -> jax.Array:
+    return jax.random.categorical(rng, logits / max(t, 1e-4)).astype(jnp.int32)
+
+
+def top_k(logits: jax.Array, rng: jax.Array, k: int = 40,
+          t: float = 1.0) -> jax.Array:
+    vals, idx = jax.lax.top_k(logits, k)
+    choice = jax.random.categorical(rng, vals / max(t, 1e-4))
+    return jnp.take_along_axis(idx, choice[..., None], axis=-1)[..., 0] \
+        .astype(jnp.int32)

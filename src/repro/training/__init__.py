@@ -1,0 +1,4 @@
+from . import optim
+from .trainer import TrainConfig, make_train_step, train
+
+__all__ = ["TrainConfig", "make_train_step", "optim", "train"]

@@ -1,0 +1,128 @@
+"""Multi-node cluster: load balancing, fault tolerance, stragglers, scaling."""
+
+import numpy as np
+
+from repro.core import (
+    Cluster,
+    ClusterConfig,
+    generate_burst,
+    simulate_baseline_cluster,
+    simulate_cluster,
+    summarize,
+)
+
+
+def _burst(nodes=2, cores=10, intensity=30, seed=0):
+    return generate_burst(cores=nodes * cores, intensity=intensity, seed=seed)
+
+
+class TestAssignmentModels:
+    def test_pull_completes_all(self):
+        reqs = _burst()
+        res = simulate_cluster(reqs, nodes=2, cores_per_node=10, policy="fc")
+        assert len(res.requests) == len(reqs)
+
+    def test_push_completes_all(self):
+        reqs = _burst()
+        res = simulate_cluster(reqs, nodes=2, cores_per_node=10,
+                               policy="fc", assignment="push")
+        assert len(res.requests) == len(reqs)
+
+    def test_baseline_home_invoker(self):
+        reqs = _burst()
+        res = simulate_baseline_cluster(reqs, nodes=2, cores_per_node=10)
+        assert len(res.requests) == len(reqs)
+
+    def test_work_spreads_across_nodes(self):
+        reqs = _burst(nodes=3)
+        res = simulate_cluster(reqs, nodes=3, cores_per_node=10, policy="fc")
+        nodes_used = {r.node for r in res.requests}
+        assert len(nodes_used) == 3
+
+
+class TestFaultTolerance:
+    def test_pull_model_requeues_after_failure(self):
+        """Node dies mid-burst; pull model re-queues its calls -> everything
+        still completes (on the surviving node)."""
+        reqs = _burst(nodes=2, intensity=30)
+        cfg = ClusterConfig(nodes=2, cores_per_node=10, policy="fc",
+                            assignment="pull")
+        cluster = Cluster(cfg, warm_functions=sorted({r.fn for r in reqs}))
+        cluster.fail_node(1, at=10.0)
+        res = cluster.run(reqs)
+        assert res.failures > 0                      # something was in flight
+        done_ids = {r.id for r in res.requests}
+        assert len(done_ids) == len(reqs)            # but nothing was lost
+        assert all(r.node == "node0" for r in res.requests
+                   if r.start is not None and r.start > 12.0)
+
+    def test_push_model_retry_recovers(self):
+        reqs = _burst(nodes=2, intensity=30)
+        cfg = ClusterConfig(nodes=2, cores_per_node=10, policy="fc",
+                            assignment="push", retry_on_failure=True)
+        cluster = Cluster(cfg, warm_functions=sorted({r.fn for r in reqs}))
+        cluster.fail_node(0, at=5.0)
+        res = cluster.run(reqs)
+        assert len(res.requests) == len(reqs)
+
+    def test_push_model_without_retry_loses_requests(self):
+        """Paper §III: 'if the invoker fails, the assigned requests are
+        lost' in the push model."""
+        reqs = _burst(nodes=2, intensity=30)
+        cfg = ClusterConfig(nodes=2, cores_per_node=10, policy="fc",
+                            assignment="push", retry_on_failure=False)
+        cluster = Cluster(cfg, warm_functions=sorted({r.fn for r in reqs}))
+        cluster.fail_node(0, at=5.0)
+        res = cluster.run(reqs)
+        assert len(res.requests) < len(reqs)
+
+
+class TestStragglers:
+    def test_backup_requests_cut_tail_with_slow_node(self):
+        """One node at 20% speed receiving work via blind round-robin push;
+        hedged backups should cut the tail.  (Under the pull model the slow
+        node naturally takes less work, so hedging has nothing to fix --
+        that interplay is exactly why both exist.)"""
+        stats = {}
+        for backups in (False, True):
+            p95 = []
+            for seed in range(2):
+                reqs = _burst(nodes=2, intensity=20, seed=seed)
+                res = simulate_cluster(
+                    reqs, nodes=2, cores_per_node=10, policy="fc",
+                    assignment="push", lb="round_robin",
+                    backup_requests=backups, straggler_factor=3.0,
+                    node_speeds={1: 0.2})
+                p95.append(summarize(res.requests).response_pct[95])
+            stats[backups] = np.mean(p95)
+        assert stats[True] <= stats[False]
+
+    def test_backups_are_issued(self):
+        reqs = _burst(nodes=2, intensity=20)
+        res = simulate_cluster(reqs, nodes=2, cores_per_node=10, policy="fc",
+                               assignment="push", lb="round_robin",
+                               backup_requests=True, straggler_factor=2.0,
+                               node_speeds={1: 0.1})
+        assert res.backups_issued > 0
+
+
+class TestElasticScaling:
+    def test_autoscaler_adds_nodes_under_overload(self):
+        reqs = _burst(nodes=1, cores=10, intensity=120)
+        res = simulate_cluster(reqs, nodes=1, cores_per_node=10, policy="fc",
+                               autoscale=True, provision_delay_s=20.0,
+                               scale_up_queue_per_slot=2.0)
+        assert res.nodes_used > 1
+        assert len(res.requests) == len(reqs)
+
+    def test_scale_out_improves_makespan(self):
+        reqs1 = _burst(nodes=1, cores=10, intensity=90)
+        base = simulate_cluster(reqs1, nodes=1, cores_per_node=10, policy="fc")
+        reqs2 = _burst(nodes=1, cores=10, intensity=90)
+        scaled = simulate_cluster(reqs2, nodes=1, cores_per_node=10,
+                                  policy="fc", autoscale=True,
+                                  provision_delay_s=15.0,
+                                  scale_up_queue_per_slot=1.0)
+        m1 = summarize(base.requests).max_completion
+        m2 = summarize(scaled.requests).max_completion
+        assert m2 < m1

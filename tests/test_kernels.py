@@ -1,0 +1,177 @@
+"""Pallas kernel validation: interpret-mode sweep vs pure-jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.rwkv6_scan import rwkv6_scan
+
+RNG = np.random.default_rng(0)
+
+
+def _arr(*shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-3, atol=2e-3)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,S,Hq,Hkv,dh", [
+        (1, 128, 4, 4, 64),      # MHA
+        (2, 256, 8, 2, 64),      # GQA 4:1
+        (1, 256, 4, 1, 128),     # MQA
+        (1, 512, 2, 2, 32),      # long seq, small heads
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_causal_matches_ref(self, B, S, Hq, Hkv, dh, dtype):
+        q = _arr(B, S, Hq, dh, dtype=dtype)
+        k = _arr(B, S, Hkv, dh, dtype=dtype)
+        v = _arr(B, S, Hkv, dh, dtype=dtype)
+        out = flash_attention(q, k, v, causal=True, interpret=True)
+        exp = ref.attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(exp, np.float32),
+            **_tol(dtype))
+
+    @pytest.mark.parametrize("window", [32, 64, 128])
+    def test_sliding_window(self, window):
+        q, k, v = (_arr(1, 256, 4, 64) for _ in range(3))
+        out = flash_attention(q, k, v, causal=True, window=window,
+                              interpret=True)
+        exp = ref.attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_bidirectional(self):
+        q, k, v = (_arr(1, 128, 2, 64) for _ in range(3))
+        out = flash_attention(q, k, v, causal=False, interpret=True)
+        exp = ref.attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_cross_lengths(self):
+        """Sq != Sk (suffix-aligned decode-like block)."""
+        q = _arr(1, 128, 2, 64)
+        k = _arr(1, 256, 2, 64)
+        v = _arr(1, 256, 2, 64)
+        out = flash_attention(q, k, v, causal=True, interpret=True)
+        exp = ref.attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=2e-3, atol=2e-3)
+
+    @pytest.mark.parametrize("bq,bk", [(64, 64), (128, 256), (256, 128)])
+    def test_block_shape_invariance(self, bq, bk):
+        q, k, v = (_arr(1, 512, 2, 64) for _ in range(3))
+        out = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                              interpret=True)
+        exp = ref.attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=2e-3, atol=2e-3)
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("B,Sk,Hq,Hkv,dh", [
+        (2, 256, 4, 4, 64),
+        (4, 512, 8, 2, 64),
+        (1, 1024, 4, 1, 128),
+    ])
+    def test_matches_ref(self, B, Sk, Hq, Hkv, dh):
+        q = _arr(B, Hq, dh)
+        k = _arr(B, Sk, Hkv, dh)
+        v = _arr(B, Sk, Hkv, dh)
+        lengths = jnp.asarray(RNG.integers(1, Sk + 1, B), jnp.int32)
+        out = decode_attention(q, k, v, lengths, interpret=True)
+        exp = ref.decode_attention_ref(q, k, v, lengths)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_ragged_lengths_mask_tail(self):
+        """Entries beyond ``lengths`` must not affect the result."""
+        q = _arr(1, 2, 64)
+        k = _arr(1, 256, 2, 64)
+        v = _arr(1, 256, 2, 64)
+        lengths = jnp.array([100], jnp.int32)
+        out1 = decode_attention(q, k, v, lengths, interpret=True)
+        k2 = k.at[:, 100:].set(99.0)
+        v2 = v.at[:, 100:].set(-99.0)
+        out2 = decode_attention(q, k2, v2, lengths, interpret=True)
+        np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                                   rtol=1e-6, atol=1e-6)
+
+
+class TestRGLRU:
+    @pytest.mark.parametrize("B,S,W", [(1, 256, 512), (2, 512, 1024),
+                                       (1, 128, 2048)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, B, S, W, dtype):
+        a = jnp.asarray(RNG.uniform(0.8, 0.999, (B, S, W)), dtype)
+        gx = _arr(B, S, W, dtype=dtype, scale=0.1)
+        h0 = _arr(B, W, dtype=dtype, scale=0.1)
+        hs, hT = rglru_scan(a, gx, h0, interpret=True)
+        ehs, ehT = ref.rglru_ref(a, gx, h0)
+        tol = _tol(dtype)
+        np.testing.assert_allclose(np.asarray(hs, np.float32),
+                                   np.asarray(ehs, np.float32), **tol)
+        np.testing.assert_allclose(np.asarray(hT, np.float32),
+                                   np.asarray(ehT, np.float32), **tol)
+
+    def test_block_shape_invariance(self):
+        a = jnp.asarray(RNG.uniform(0.9, 0.999, (1, 256, 512)), jnp.float32)
+        gx = _arr(1, 256, 512, scale=0.1)
+        h0 = _arr(1, 512, scale=0.1)
+        hs1, _ = rglru_scan(a, gx, h0, block_w=128, block_t=64, interpret=True)
+        hs2, _ = rglru_scan(a, gx, h0, block_w=512, block_t=256,
+                            interpret=True)
+        np.testing.assert_allclose(np.asarray(hs1), np.asarray(hs2),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestRWKV6:
+    @pytest.mark.parametrize("B,S,H,dh", [(1, 128, 2, 64), (2, 256, 4, 32)])
+    def test_matches_ref(self, B, S, H, dh):
+        r = _arr(B, S, H, dh)
+        k = _arr(B, S, H, dh, scale=0.2)
+        v = _arr(B, S, H, dh, scale=0.2)
+        w = jnp.asarray(RNG.uniform(0.9, 0.999, (B, S, H, dh)), jnp.float32)
+        u = _arr(H, dh, scale=0.1)
+        out = rwkv6_scan(r, k, v, w, u, interpret=True)
+        s0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        exp, _ = ref.rwkv6_ref(r, k, v, w, u, s0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=5e-3, atol=5e-3)
+
+    def test_decay_forgets_distant_past(self):
+        """With strong decay, early tokens stop influencing late outputs."""
+        B, S, H, dh = 1, 64, 1, 32
+        r = _arr(B, S, H, dh)
+        k = _arr(B, S, H, dh, scale=0.2)
+        v = _arr(B, S, H, dh, scale=0.2)
+        w = jnp.full((B, S, H, dh), 0.1, jnp.float32)    # fast decay
+        u = _arr(H, dh, scale=0.1)
+        out1 = rwkv6_scan(r, k, v, w, u, interpret=True)
+        k2 = k.at[:, 0].add(5.0)
+        out2 = rwkv6_scan(r, k2, v, w, u, interpret=True)
+        np.testing.assert_allclose(np.asarray(out1[:, -1]),
+                                   np.asarray(out2[:, -1]),
+                                   rtol=1e-3, atol=1e-3)
+
+
+class TestModelIntegration:
+    def test_flash_matches_model_attention(self):
+        """The kernel agrees with the model's chunked-jnp attention path."""
+        from repro.models.layers import attention
+        q, k, v = (_arr(1, 256, 4, 64) for _ in range(3))
+        qpos = jnp.broadcast_to(jnp.arange(256, dtype=jnp.int32), (1, 256))
+        model_out = attention(q, k, v, qpos, qpos, causal=True, q_chunk=64)
+        kern_out = flash_attention(q, k, v, causal=True, interpret=True)
+        np.testing.assert_allclose(np.asarray(model_out),
+                                   np.asarray(kern_out),
+                                   rtol=2e-3, atol=2e-3)

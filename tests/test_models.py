@@ -1,0 +1,189 @@
+"""Per-arch smoke tests (reduced configs) + model-level invariants."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, applicable_shapes, get_config
+from repro.models import (
+    decode_step,
+    forward,
+    init,
+    init_cache,
+    prefill,
+    scale_down,
+)
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=32):
+    b = {"tokens": jax.random.randint(RNG, (B, S), 0, cfg.vocab)}
+    if cfg.mrope:
+        b["positions"] = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32), (3, B, S))
+    if cfg.is_encdec:
+        b["enc_embeds"] = jnp.full((B, S, cfg.d_model), 0.01,
+                                   jnp.dtype(cfg.dtype))
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+class TestArchSmoke:
+    """One reduced-config forward/train + decode step per assigned arch."""
+
+    def test_forward_shape_and_finite(self, arch):
+        cfg = scale_down(get_config(arch))
+        params = init(cfg, RNG)
+        B, S = 2, 32
+        logits = forward(params, cfg, _batch(cfg, B, S))
+        S_out = S // cfg.decoder_ratio if cfg.is_encdec else S
+        if cfg.is_encdec:
+            # decoder length = enc length // ratio in batch_struct; here the
+            # smoke batch uses tokens of length S directly
+            S_out = S
+        assert logits.shape == (B, S_out, cfg.padded_vocab)
+        assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+    def test_prefill_then_decode(self, arch):
+        cfg = scale_down(get_config(arch))
+        params = init(cfg, RNG)
+        B, S = 2, 32
+        cache = init_cache(cfg, B, 64, enc_len=S if cfg.is_encdec else 0)
+        logits, cache = prefill(params, cfg, _batch(cfg, B, S), cache)
+        assert logits.shape == (B, cfg.padded_vocab)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        logits2, cache = decode_step(params, cfg, tok, cache, jnp.int32(S))
+        assert logits2.shape == (B, cfg.padded_vocab)
+        assert bool(jnp.isfinite(logits2.astype(jnp.float32)).all())
+
+    def test_train_step_no_nan(self, arch):
+        from repro.training import TrainConfig, make_train_step, optim
+        cfg = dataclasses.replace(scale_down(get_config(arch)),
+                                  vocab=128, vocab_pad_multiple=16)
+        params = init(cfg, RNG)
+        opt = optim.init_state(params)
+        step = make_train_step(cfg, TrainConfig(lr=1e-3))
+        batch = _batch(cfg, 2, 16)
+        batch["tokens"] = batch["tokens"] % cfg.vocab
+        batch["labels"] = batch["tokens"]
+        params, opt, loss = jax.jit(step)(params, opt, batch)
+        assert bool(jnp.isfinite(loss))
+
+
+class TestDecodeParity:
+    """Incremental decode must equal the full forward pass."""
+
+    @pytest.mark.parametrize("arch", ["qwen3_1_7b", "gemma3_27b", "rwkv6_3b",
+                                      "recurrentgemma_9b"])
+    def test_decode_matches_forward(self, arch):
+        cfg = dataclasses.replace(scale_down(get_config(arch), layers=6),
+                                  dtype="float32")
+        params = init(cfg, RNG)
+        T = 12
+        toks = jax.random.randint(jax.random.PRNGKey(7), (1, T), 0, cfg.vocab)
+        full = forward(params, cfg, {"tokens": toks})
+        cache = init_cache(cfg, 1, T + 4)
+        lg, cache = prefill(params, cfg, {"tokens": toks[:, :T - 1]}, cache)
+        np.testing.assert_allclose(np.asarray(lg),
+                                   np.asarray(full[:, T - 2]),
+                                   rtol=3e-4, atol=3e-4)
+        lg2, _ = decode_step(params, cfg, toks[:, T - 1], cache,
+                             jnp.int32(T - 1))
+        np.testing.assert_allclose(np.asarray(lg2),
+                                   np.asarray(full[:, T - 1]),
+                                   rtol=3e-4, atol=3e-4)
+
+
+class TestModelInvariants:
+    def test_sliding_window_limits_attention(self):
+        """Token far outside the window must not influence the last logit."""
+        from repro.models.config import LayerSpec
+        cfg = dataclasses.replace(
+            scale_down(get_config("qwen3_1_7b")),
+            period=(LayerSpec(window=4),), dtype="float32")
+        params = init(cfg, RNG)
+        toks = jax.random.randint(jax.random.PRNGKey(3), (1, 16), 0, cfg.vocab)
+        toks2 = toks.at[0, 0].set((toks[0, 0] + 7) % cfg.vocab)  # outside window
+        a = forward(params, cfg, {"tokens": toks})
+        b = forward(params, cfg, {"tokens": toks2})
+        np.testing.assert_allclose(np.asarray(a[0, -1]), np.asarray(b[0, -1]),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_causality(self):
+        """Future tokens must not influence earlier logits."""
+        cfg = dataclasses.replace(scale_down(get_config("deepseek_7b")),
+                                  dtype="float32")
+        params = init(cfg, RNG)
+        toks = jax.random.randint(jax.random.PRNGKey(4), (1, 16), 0, cfg.vocab)
+        toks2 = toks.at[0, -1].set((toks[0, -1] + 1) % cfg.vocab)
+        a = forward(params, cfg, {"tokens": toks})
+        b = forward(params, cfg, {"tokens": toks2})
+        np.testing.assert_allclose(np.asarray(a[0, :-1]),
+                                   np.asarray(b[0, :-1]),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_moe_routing_distributes_tokens(self):
+        from repro.models.layers import moe_mlp, moe_params_shapes
+        cfg = scale_down(get_config("qwen2_moe_a2_7b"))
+        shapes = moe_params_shapes(cfg)
+        key = jax.random.PRNGKey(5)
+        params = {}
+        for name, shape in shapes.items():
+            key, sub = jax.random.split(key)
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * 0.05
+        x = jax.random.normal(key, (2, 16, cfg.d_model), jnp.float32)
+        y = moe_mlp(params, x, cfg)
+        assert y.shape == x.shape
+        assert bool(jnp.isfinite(y).all())
+
+    def test_param_count_close_to_published(self):
+        """Sanity: derived parameter counts are near the published sizes."""
+        expected = {
+            "gemma3_27b": 27e9, "qwen2_5_14b": 14e9, "deepseek_7b": 6.9e9,
+            "rwkv6_3b": 2.7e9, "qwen3_1_7b": 1.7e9,
+        }
+        for arch, n in expected.items():
+            got = get_config(arch).param_count()
+            assert abs(got - n) / n < 0.15, (arch, got, n)
+
+    def test_long_500k_skip_rules(self):
+        """long_500k only for sub-quadratic archs (DESIGN.md §4)."""
+        runs = {a for a in ARCHS
+                if "long_500k" in applicable_shapes(get_config(a))}
+        assert runs == {"recurrentgemma_9b", "gemma3_27b", "rwkv6_3b"}
+
+
+class TestServingOptimizations:
+    """Perf-hillclimb features (EXPERIMENTS.md §Perf) stay correct."""
+
+    def test_int8_kv_cache_parity(self):
+        cfg = dataclasses.replace(scale_down(get_config("qwen3_1_7b")),
+                                  dtype="float32")
+        cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+        params = init(cfg, RNG)
+        toks = jax.random.randint(jax.random.PRNGKey(7), (1, 9), 0, cfg.vocab)
+        full = forward(params, cfg, {"tokens": toks})
+        cache = init_cache(cfg8, 1, 16)
+        assert cache["groups"]["pos0"]["k"].dtype == jnp.int8
+        _, cache = prefill(params, cfg8, {"tokens": toks[:, :8]}, cache)
+        lg, _ = decode_step(params, cfg8, toks[:, 8], cache, jnp.int32(8))
+        a = np.asarray(lg).ravel()
+        b = np.asarray(full[:, 8]).ravel()
+        corr = float(np.corrcoef(a, b)[0, 1])
+        assert corr > 0.995, corr
+
+    def test_moe_group_dispatch_matches_global(self):
+        cfg = dataclasses.replace(scale_down(get_config("qwen2_moe_a2_7b")),
+                                  dtype="float32", capacity_factor=8.0)
+        grouped = dataclasses.replace(cfg, moe_groups=2)
+        params = init(cfg, RNG)
+        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(8), (2, 16),
+                                              0, cfg.vocab)}
+        a = forward(params, cfg, batch)
+        b = forward(params, grouped, batch)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)

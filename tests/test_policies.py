@@ -1,0 +1,145 @@
+"""Unit + property tests for the paper's scheduling policies (§IV)."""
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import (
+    EECT, FIFO, FairChoice, PriorityQueue, RECT, Request, RuntimeEstimator,
+    SEPT, make_policy,
+)
+
+
+def _req(fn, r_prime):
+    r = Request(fn=fn, r=r_prime)
+    r.r_prime = r_prime
+    return r
+
+
+# ---------------------------------------------------------------------------
+# estimator
+# ---------------------------------------------------------------------------
+class TestEstimator:
+    def test_unseen_function_estimate_is_zero(self):
+        est = RuntimeEstimator()
+        assert est.estimate("nope") == 0.0
+
+    def test_mean_of_recent(self):
+        est = RuntimeEstimator()
+        for p in [1.0, 2.0, 3.0]:
+            est.observe_completion("f", p)
+        assert abs(est.estimate("f") - 2.0) < 1e-12
+
+    @given(st.lists(st.floats(0.001, 100.0), min_size=1, max_size=50))
+    @settings(max_examples=50, deadline=None)
+    def test_window_keeps_last_10(self, times):
+        est = RuntimeEstimator()
+        for p in times:
+            est.observe_completion("f", p)
+        tail = times[-10:]
+        assert abs(est.estimate("f") - sum(tail) / len(tail)) < 1e-9
+
+    def test_fc_counter_prunes_horizon(self):
+        est = RuntimeEstimator(fc_horizon=60.0)
+        for t in [0.0, 10.0, 50.0]:
+            est.observe_arrival("f", t)
+        assert est.recent_count("f", 50.0) == 3
+        assert est.recent_count("f", 100.0) == 1       # only t=50 remains
+        assert est.recent_count("f", 111.0) == 0
+
+    def test_prev_arrival_tracks_previous_not_current(self):
+        est = RuntimeEstimator()
+        est.observe_arrival("f", 1.0)
+        est.observe_arrival("f", 5.0)
+        assert est.prev_arrival("f") == 1.0
+
+
+# ---------------------------------------------------------------------------
+# policy formulas (paper definitions, verbatim)
+# ---------------------------------------------------------------------------
+class TestPolicyFormulas:
+    def setup_method(self):
+        self.est = RuntimeEstimator()
+        for p in [2.0, 2.0]:
+            self.est.observe_completion("f", p)
+        self.est.observe_arrival("f", 1.0)
+        self.est.observe_arrival("f", 3.0)
+
+    def test_fifo_is_receive_time(self):
+        assert FIFO().priority(_req("f", 7.5), self.est, 9.0) == 7.5
+
+    def test_sept_is_estimate(self):
+        assert SEPT().priority(_req("f", 7.5), self.est, 9.0) == 2.0
+
+    def test_eect_is_receive_plus_estimate(self):
+        assert EECT().priority(_req("f", 7.5), self.est, 9.0) == 9.5
+
+    def test_rect_uses_previous_arrival(self):
+        # r̄(f) = 1.0 (previous arrival), E[p] = 2.0
+        assert RECT().priority(_req("f", 7.5), self.est, 9.0) == 3.0
+
+    def test_fc_is_count_times_estimate(self):
+        # 2 arrivals in window * 2.0 estimate
+        assert FairChoice().priority(_req("f", 7.5), self.est, 9.0) == 4.0
+
+    def test_make_policy_rejects_unknown(self):
+        import pytest
+        with pytest.raises(ValueError):
+            make_policy("lifo")
+
+
+# ---------------------------------------------------------------------------
+# starvation-freeness (paper §IV): EECT bounds waiting
+# ---------------------------------------------------------------------------
+@given(st.lists(st.tuples(st.floats(0, 100), st.floats(0.01, 10)),
+                min_size=2, max_size=30))
+@settings(max_examples=50, deadline=None)
+def test_eect_no_infinite_bypass(arrivals):
+    """If r'(j) > r'(i) + E[p(i)], then priority(j) > priority(i): a call
+    can only be bypassed by calls arriving within its expected-completion
+    horizon -- the paper's starvation-freeness argument."""
+    est = RuntimeEstimator()
+    est.observe_completion("f", 1.0)
+    pol = EECT()
+    arrivals = sorted(arrivals)
+    for (t_i, _), (t_j, _) in zip(arrivals, arrivals[1:]):
+        if t_j > t_i + est.estimate("f"):
+            pi = pol.priority(_req("f", t_i), est, t_i)
+            pj = pol.priority(_req("f", t_j), est, t_j)
+            assert pj > pi
+
+
+# ---------------------------------------------------------------------------
+# priority queue
+# ---------------------------------------------------------------------------
+class TestPriorityQueue:
+    def test_pops_in_priority_order(self):
+        q = PriorityQueue()
+        reqs = [_req(f"f{i}", float(i)) for i in range(5)]
+        for r, p in zip(reqs, [3.0, 1.0, 4.0, 0.5, 2.0]):
+            q.push(r, p)
+        order = [q.pop().fn for _ in range(5)]
+        assert order == ["f3", "f1", "f4", "f0", "f2"]
+
+    def test_stable_for_equal_priorities(self):
+        q = PriorityQueue()
+        for i in range(10):
+            q.push(_req(f"f{i}", 0.0), 1.0)
+        assert [q.pop().fn for _ in range(10)] == [f"f{i}" for i in range(10)]
+
+    def test_remove_specific(self):
+        q = PriorityQueue()
+        reqs = [_req(f"f{i}", 0.0) for i in range(5)]
+        for i, r in enumerate(reqs):
+            q.push(r, float(i))
+        assert q.remove(reqs[2])
+        assert not q.remove(reqs[2])
+        assert [q.pop().fn for _ in range(4)] == ["f0", "f1", "f3", "f4"]
+
+    @given(st.lists(st.floats(0, 1e6), min_size=1, max_size=100))
+    @settings(max_examples=50, deadline=None)
+    def test_heap_order_property(self, prios):
+        q = PriorityQueue()
+        for i, p in enumerate(prios):
+            q.push(_req(f"f{i}", 0.0), p)
+        popped = [q.pop().priority for _ in range(len(prios))]
+        assert popped == sorted(popped)

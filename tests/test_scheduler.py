@@ -1,0 +1,129 @@
+"""Scheduler + container-pool invariants (paper §IV-A, §VI)."""
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import ContainerPool, NodeScheduler, Request
+
+
+def _req(fn, t):
+    return Request(fn=fn, r=t)
+
+
+class TestSlotAdmission:
+    def test_never_exceeds_slots(self):
+        s = NodeScheduler.build(slots=3, policy="fifo")
+        started = []
+        for i in range(10):
+            started += s.receive(_req("f", float(i)), float(i))
+        assert len(started) == 3
+        assert s.busy == 3
+        assert s.queued == 7
+
+    def test_completion_backfills(self):
+        s = NodeScheduler.build(slots=1, policy="fifo")
+        d1 = s.receive(_req("f", 0.0), 0.0)
+        s.receive(_req("f", 0.1), 0.1)
+        assert s.busy == 1 and s.queued == 1
+        d2 = s.complete(d1[0].request, 1.0, d1[0].acquire, 1.0)
+        assert len(d2) == 1 and s.busy == 1 and s.queued == 0
+
+    def test_sept_orders_queue(self):
+        s = NodeScheduler.build(slots=1, policy="sept")
+        # seed history: "fast" 0.1s, "slow" 5s
+        for _ in range(3):
+            s.estimator.observe_completion("fast", 0.1)
+            s.estimator.observe_completion("slow", 5.0)
+        d = s.receive(_req("slow", 0.0), 0.0)     # occupies the slot
+        s.receive(_req("slow", 0.1), 0.1)
+        s.receive(_req("fast", 0.2), 0.2)
+        nxt = s.complete(d[0].request, 5.0, d[0].acquire, 5.0)
+        assert nxt[0].request.fn == "fast"        # fast jumped the queue
+
+    def test_non_clairvoyant(self):
+        """The scheduler never reads p_true of queued requests."""
+        s = NodeScheduler.build(slots=1, policy="sept")
+        r = _req("f", 0.0)
+        r.p_true = 123.0
+        s.receive(r, 0.0)
+        assert r.priority == 0.0                  # estimate, not p_true
+
+    @given(st.lists(st.tuples(st.integers(0, 3), st.floats(0.01, 5)),
+                    min_size=1, max_size=60),
+           st.integers(1, 8),
+           st.sampled_from(["fifo", "sept", "eect", "rect", "fc"]))
+    @settings(max_examples=40, deadline=None)
+    def test_work_conservation(self, calls, slots, policy):
+        """Every received call eventually starts exactly once, and busy
+        never exceeds slots (hypothesis sweep over all policies)."""
+        s = NodeScheduler.build(slots=slots, policy=policy)
+        t = 0.0
+        running = []
+        started_total = 0
+        for fn_i, p in calls:
+            t += 0.05
+            for d in s.receive(_req(f"f{fn_i}", t), t):
+                running.append((d, p))
+                started_total += 1
+            assert 0 <= s.busy <= slots
+        # drain
+        while running:
+            d, p = running.pop(0)
+            t += p
+            for d2 in s.complete(d.request, p, d.acquire, t):
+                running.append((d2, 0.01))
+                started_total += 1
+            assert 0 <= s.busy <= slots
+        assert started_total == len(calls)
+        assert s.queued == 0 and s.busy == 0
+
+
+class TestContainerPool:
+    def test_warm_reuse_no_cold(self):
+        p = ContainerPool(memory_mb=1024, container_mb=128, cores=2)
+        p.warm_up(["f"], per_fn=2)
+        a = p.acquire("f", 0.0)
+        assert not a.cold_start and a.startup_delay == 0.0
+
+    def test_prewarm_init_is_cold_start(self):
+        p = ContainerPool(memory_mb=1024, container_mb=128, prewarm_count=1)
+        a1 = p.acquire("f", 0.0)        # prewarm init
+        assert a1.cold_start and 0 < a1.startup_delay <= 1.0
+
+    def test_create_from_scratch(self):
+        p = ContainerPool(memory_mb=1024, container_mb=128, prewarm_count=0)
+        a = p.acquire("f", 0.0)         # no prewarm pool: docker create
+        assert a.cold_start and a.startup_delay > 1.0
+
+    def test_memory_exhaustion_queues(self):
+        p = ContainerPool(memory_mb=256, container_mb=128, prewarm_count=0)
+        assert p.acquire("f", 0.0) is not None
+        assert p.acquire("f", 0.0) is not None
+        assert p.acquire("f", 0.0) is None          # full, all busy
+
+    def test_eviction_lru(self):
+        p = ContainerPool(memory_mb=256, container_mb=128, prewarm_count=0)
+        a = p.acquire("old", 0.0)
+        p.release(a.container, 1.0)
+        b = p.acquire("older", 2.0)
+        p.release(b.container, 3.0)
+        c = p.acquire("new", 4.0)                   # must evict LRU ("old")
+        assert c is not None
+        assert p.evictions == 1
+        fns = {x.fn for x in p.containers}
+        assert "old" not in fns and "older" in fns
+
+    def test_ours_discipline_bounds_warm_per_fn(self):
+        p = ContainerPool(memory_mb=100 * 1024, container_mb=128,
+                          discipline="ours", cores=2, prewarm_count=0)
+        acquired = [p.acquire("f", 0.0) for _ in range(6)]
+        for a in acquired:
+            p.release(a.container, 1.0)
+        assert p.warm_count("f") <= 2               # bounded by cores
+
+    def test_per_function_memory(self):
+        p = ContainerPool(memory_mb=1024, prewarm_count=0,
+                          fn_memory={"big": 1024, "small": 128})
+        a = p.acquire("big", 0.0)
+        assert a is not None
+        assert p.acquire("small", 0.0) is None      # big container filled pool

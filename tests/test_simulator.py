@@ -1,0 +1,115 @@
+"""Simulator behaviour tests: conservation laws + the paper's trends."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    generate_burst,
+    generate_fairness_burst,
+    simulate_single_node,
+    summarize,
+)
+
+
+def _run(cores, intensity, policy, mode, seed=0, **kw):
+    reqs = generate_burst(cores=cores, intensity=intensity, seed=seed)
+    res = simulate_single_node(reqs, cores=cores, policy=policy, mode=mode,
+                               **kw)
+    return reqs, res
+
+
+class TestConservation:
+    @pytest.mark.parametrize("mode,policy", [
+        ("ours", "fifo"), ("ours", "sept"), ("ours", "fc"),
+        ("ours", "eect"), ("ours", "rect"), ("baseline", "fifo"),
+    ])
+    def test_all_requests_complete(self, mode, policy):
+        reqs, _ = _run(5, 30, policy, mode)
+        assert all(r.c is not None for r in reqs)
+
+    def test_response_at_least_processing(self):
+        reqs, _ = _run(5, 30, "fifo", "ours")
+        for r in reqs:
+            assert r.response_time >= r.p_true - 1e-9
+
+    def test_causality(self):
+        reqs, _ = _run(5, 30, "sept", "ours")
+        for r in reqs:
+            assert r.start >= r.r
+            assert r.finish >= r.start
+            assert r.c >= r.finish
+
+    def test_ours_never_oversubscribes(self):
+        """Non-preemptive + dedicated core: intervals [start, finish) never
+        have more than ``cores`` overlaps."""
+        reqs, _ = _run(5, 60, "fc", "ours")
+        events = []
+        for r in reqs:
+            events.append((r.start, 1))
+            events.append((r.finish, -1))
+        events.sort()
+        busy = 0
+        for _, d in events:
+            busy += d
+            assert busy <= 5
+
+
+class TestPaperTrends:
+    """Qualitative reproduction of §VII (exact numbers in benchmarks/)."""
+
+    def test_sept_beats_fifo_mean_response_under_load(self):
+        _, _ = _run(10, 60, "fifo", "ours")
+        r_fifo = summarize(_run(10, 60, "fifo", "ours")[0]).response_avg
+        r_sept = summarize(_run(10, 60, "sept", "ours")[0]).response_avg
+        assert r_sept < 0.5 * r_fifo
+
+    def test_sept_beats_fifo_stretch_by_large_factor(self):
+        s_fifo = summarize(_run(10, 60, "fifo", "ours")[0]).stretch_avg
+        s_sept = summarize(_run(10, 60, "sept", "ours")[0]).stretch_avg
+        assert s_sept < 0.25 * s_fifo
+
+    def test_ours_fifo_beats_baseline_at_20_cores(self):
+        r_base = summarize(_run(20, 60, "fifo", "baseline")[0]).response_avg
+        r_ours = summarize(_run(20, 60, "fifo", "ours")[0]).response_avg
+        assert r_ours < r_base
+
+    def test_baseline_beats_ours_fifo_low_cores_low_intensity(self):
+        """Paper: baseline is actually better at 10 cores / intensity 30."""
+        r_base = summarize(_run(10, 30, "fifo", "baseline")[0]).response_avg
+        r_ours = summarize(_run(10, 30, "fifo", "ours")[0]).response_avg
+        assert r_base < r_ours
+
+    def test_cold_starts_baseline_grow_with_intensity(self):
+        _, res30 = _run(10, 30, "fifo", "baseline")
+        _, res120 = _run(10, 120, "fifo", "baseline")
+        assert res120.cold_starts > 3 * max(res30.cold_starts, 1)
+
+    def test_cold_starts_ours_zero_at_32gb(self):
+        _, res = _run(10, 60, "fifo", "ours", memory_mb=32 * 1024)
+        assert res.cold_starts == 0
+
+    def test_cold_starts_ours_nonzero_when_memory_tight(self):
+        _, res = _run(10, 60, "fifo", "ours", memory_mb=4 * 1024)
+        assert res.cold_starts > 0
+
+    def test_fc_protects_rare_long_function(self):
+        """§VII-D: FC cuts the rare dna-visualisation's stretch vs SEPT."""
+        dna = {}
+        for pol in ("sept", "fc"):
+            vals = []
+            for seed in range(2):
+                reqs = generate_fairness_burst(seed=seed)
+                simulate_single_node(reqs, cores=10, policy=pol, mode="ours")
+                s = summarize(reqs, per_function=True)
+                vals.append(s.per_function["dna-visualisation"].stretch_avg)
+            dna[pol] = np.mean(vals)
+        assert dna["fc"] < dna["sept"]
+
+    def test_estimator_learns_despite_nonclairvoyance(self):
+        reqs, _ = _run(10, 40, "sept", "ours", seed=3)
+        # late-arriving short calls should have much lower priority values
+        # than long ones (estimates converged)
+        short = [r for r in reqs if r.fn == "graph-bfs"][-5:]
+        long_ = [r for r in reqs if r.fn == "dna-visualisation"][-5:]
+        assert np.mean([r.priority for r in short]) < \
+            np.mean([r.priority for r in long_])

@@ -1,0 +1,187 @@
+"""Substrate tests: data pipeline, checkpointing, serving engine, sharding."""
+
+import dataclasses
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import DataConfig, DataIterator, batch_at
+from repro.checkpoint import CheckpointStore
+from repro.models import init, scale_down
+
+
+class TestDataPipeline:
+    def test_deterministic_across_restarts(self):
+        cfg = DataConfig(vocab=100, global_batch=4, seq_len=16)
+        a = batch_at(cfg, step=7)
+        b = batch_at(cfg, step=7)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+    def test_steps_differ(self):
+        cfg = DataConfig(vocab=100, global_batch=4, seq_len=16)
+        a = batch_at(cfg, 0)
+        b = batch_at(cfg, 1)
+        assert not np.array_equal(a["tokens"], b["tokens"])
+
+    def test_host_sharding_partitions(self):
+        cfg = DataConfig(vocab=100, global_batch=8, seq_len=16)
+        s0 = batch_at(cfg, 0, host_id=0, n_hosts=2)
+        s1 = batch_at(cfg, 0, host_id=1, n_hosts=2)
+        assert s0["tokens"].shape == (4, 16)
+        assert not np.array_equal(s0["tokens"], s1["tokens"])
+
+    def test_iterator_state_roundtrip(self):
+        cfg = DataConfig(vocab=100, global_batch=2, seq_len=8)
+        it = DataIterator(cfg)
+        next(it); next(it)
+        st = it.state()
+        a = next(it)
+        it2 = DataIterator(cfg)
+        it2.restore(st)
+        b = next(it2)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+    def test_labels_are_shifted_tokens(self):
+        cfg = DataConfig(vocab=100, global_batch=2, seq_len=8)
+        b = batch_at(cfg, 0)
+        assert b["tokens"].shape == b["labels"].shape
+
+
+class TestCheckpoint:
+    def test_roundtrip_bf16(self, tmp_path):
+        store = CheckpointStore(tmp_path)
+        tree = {"a": jnp.ones((3, 4), jnp.bfloat16) * 1.5,
+                "b": {"c": jnp.arange(5, dtype=jnp.int32)}}
+        store.save(3, tree)
+        restored, meta = store.restore(tree)
+        assert meta["step"] == 3
+        np.testing.assert_array_equal(np.asarray(restored["a"], np.float32),
+                                      np.asarray(tree["a"], np.float32))
+        assert restored["a"].dtype == np.asarray(tree["a"]).dtype
+
+    def test_latest_wins(self, tmp_path):
+        store = CheckpointStore(tmp_path)
+        tree = {"x": jnp.zeros(2)}
+        store.save(1, tree)
+        store.save(5, {"x": jnp.ones(2)})
+        restored, meta = store.restore(tree)
+        assert meta["step"] == 5
+        np.testing.assert_array_equal(np.asarray(restored["x"]), [1.0, 1.0])
+
+    def test_async_save(self, tmp_path):
+        store = CheckpointStore(tmp_path)
+        store.save_async(2, {"x": jnp.ones(3)})
+        store.wait()
+        assert store.latest_step() == 2
+
+    def test_model_params_roundtrip(self, tmp_path):
+        cfg = scale_down(get_config("qwen3_1_7b"))
+        params = init(cfg, jax.random.PRNGKey(0))
+        store = CheckpointStore(tmp_path)
+        store.save(0, params)
+        restored, _ = store.restore(params)
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+
+class TestServingEngine:
+    def test_engine_completes_burst(self):
+        from repro.serving import Endpoint, ServingEngine
+        cfg = scale_down(get_config("qwen3_1_7b"))
+        eng = ServingEngine([Endpoint("f", cfg, prompt_len=2, gen_len=3)],
+                            slots=2, policy="fc")
+        for _ in range(5):
+            eng.submit("f")
+        eng.run(max_wall_s=60)
+        assert eng.summary()["n"] == 5
+
+    def test_sept_admits_cheap_first(self):
+        from repro.serving import Endpoint, ServingEngine
+        cheap = scale_down(get_config("qwen3_1_7b"))
+        heavy = scale_down(get_config("deepseek_7b"), layers=4, d_model=128,
+                           d_ff=256)
+        eng = ServingEngine(
+            [Endpoint("cheap", cheap, prompt_len=2, gen_len=2),
+             Endpoint("heavy", heavy, prompt_len=2, gen_len=24)],
+            slots=1, policy="sept")
+        # seed history so SEPT can discriminate
+        for _ in range(3):
+            eng.estimator.observe_completion("cheap", 0.01)
+            eng.estimator.observe_completion("heavy", 1.0)
+        eng.submit("heavy")
+        eng.submit("cheap")
+        eng.submit("cheap")
+        eng.run(max_wall_s=60)
+        done = [r.fn for r in eng.completed]
+        assert done[0] == "cheap" and done[1] == "cheap"
+
+    def test_slot_pool_accounting(self):
+        from repro.serving import SlotPool
+        cfg = scale_down(get_config("qwen3_1_7b"))
+        pool = SlotPool(cfg, n_slots=3, max_len=32)
+        s1 = pool.assign(101)
+        s2 = pool.assign(102)
+        assert pool.free_slots == 1
+        pool.advance(s1, 5)
+        assert int(pool.lengths_array()[s1]) == 5
+        pool.release(s1)
+        assert pool.free_slots == 2
+        with pytest.raises(AssertionError):
+            pool.release(s1)
+        _ = s2
+
+
+class TestShardingResolver:
+    def test_divisibility_fallback(self):
+        """Non-divisible dims silently replicate instead of failing."""
+        from repro.launch.sharding import resolve
+        from repro.launch.mesh import make_smoke_mesh
+        mesh = make_smoke_mesh(shape=(1, 1), axes=("data", "model"))
+        s = resolve(mesh, ("data", "model"), (7, 13))
+        assert s is not None  # 1-sized axes always divide
+
+    def test_dryrun_lowering_on_forced_devices(self):
+        """End-to-end mini dry-run in a subprocess with 8 host devices: the
+        full sharding pipeline lowers and compiles a scaled-down arch."""
+        script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "SRC")
+import jax, dataclasses
+import numpy as np
+from repro.configs import get_config
+from repro.models import scale_down
+from repro.launch.steps import make_train_step, batch_struct, params_struct
+from repro.launch import sharding as sh
+from repro.training import optim
+
+cfg = dataclasses.replace(
+    scale_down(get_config("qwen2_moe_a2_7b"), d_model=64, n_heads=4),
+    vocab=128, vocab_pad_multiple=16)
+mesh = jax.sharding.Mesh(
+    np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+params = params_struct(cfg)
+pspecs = sh.param_specs(cfg, mesh)
+batch = batch_struct(cfg, 4, 16, labels=True)
+opt = optim.state_shapes(params)
+opt_specs = optim.AdamWState(step=sh.replicated(mesh), m=pspecs, v=pspecs)
+step = make_train_step(cfg)
+with mesh:
+    compiled = jax.jit(step, in_shardings=(
+        pspecs, opt_specs, sh.batch_specs(mesh, batch))
+    ).lower(params, opt, batch).compile()
+print("MINI_DRYRUN_OK", compiled.cost_analysis()["flops"] > 0)
+"""
+        src = str(Path(__file__).resolve().parent.parent / "src")
+        out = subprocess.run(
+            [sys.executable, "-c", script.replace("SRC", src)],
+            capture_output=True, text=True, timeout=300)
+        assert "MINI_DRYRUN_OK True" in out.stdout, out.stderr[-2000:]
