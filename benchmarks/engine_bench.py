@@ -1,44 +1,64 @@
 """Beyond-paper: the policies on the REAL JAX serving engine (tiny models).
 
 Mixed cheap/heavy endpoints under a burst; SEPT/FC should cut mean response
-vs FIFO exactly as in the simulator -- but with actual XLA execution."""
+vs FIFO exactly as in the simulator -- but with actual XLA execution.
 
-import time
+The policy grid is declared as a SweepSpec like every simulator benchmark,
+but runs through a custom cell runner with ``workers=1``: XLA runtimes do
+not survive a fork, so these cells must execute in-process."""
+
+from functools import partial
 
 from .common import emit
 
-from repro.configs import get_config
-from repro.models import scale_down
-from repro.serving import Endpoint, ServingEngine
+from repro.core import SweepCell, SweepSpec, run_sweep
+
+
+def spec() -> SweepSpec:
+    # quick mode shrinks the per-cell burst (see _engine_cell), not the grid
+    return SweepSpec(policies=("fifo", "sept", "fc"), seeds=1)
+
+
+def _engine_cell(cell: SweepCell, quick: bool = False) -> dict:
+    """One policy on the live engine; returns sweep-shaped metrics."""
+    from repro.configs import get_config
+    from repro.models import scale_down
+    from repro.serving import Endpoint, ServingEngine
+
+    n_cheap, n_heavy = (6, 3) if quick else (16, 6)
+    cheap_cfg = scale_down(get_config("qwen3_1_7b"))
+    heavy_cfg = scale_down(get_config("deepseek_7b"), layers=4,
+                           d_model=128, d_ff=256)
+    eng = ServingEngine(
+        [Endpoint("cheap", cheap_cfg, prompt_len=2, gen_len=2),
+         Endpoint("heavy", heavy_cfg, prompt_len=4, gen_len=32)],
+        slots=2, policy=cell.policy)
+    for _ in range(3):          # seed the estimator
+        eng.submit("cheap"); eng.submit("heavy")
+    eng.run(max_wall_s=120)
+    eng.completed.clear()
+    for i in range(max(n_cheap, n_heavy)):
+        if i < n_cheap:
+            eng.submit("cheap")
+        if i < n_heavy:
+            eng.submit("heavy")
+    eng.run(max_wall_s=240)
+    s = eng.summary()
+    return {"R_avg": s["R_avg"], "R_p50": s["R_p50"], "R_p95": s["R_p95"],
+            "n": float(s["n"])}
 
 
 def run(quick: bool = False) -> list[dict]:
+    result = run_sweep(spec(), workers=1,
+                       runner=partial(_engine_cell, quick=quick))
     rows = []
-    n_cheap, n_heavy = (6, 3) if quick else (16, 6)
-    for pol in ("fifo", "sept", "fc"):
-        cheap_cfg = scale_down(get_config("qwen3_1_7b"))
-        heavy_cfg = scale_down(get_config("deepseek_7b"), layers=4,
-                               d_model=128, d_ff=256)
-        eng = ServingEngine(
-            [Endpoint("cheap", cheap_cfg, prompt_len=2, gen_len=2),
-             Endpoint("heavy", heavy_cfg, prompt_len=4, gen_len=32)],
-            slots=2, policy=pol)
-        for _ in range(3):          # seed the estimator
-            eng.submit("cheap"); eng.submit("heavy")
-        eng.run(max_wall_s=120)
-        eng.completed.clear()
-        t0 = time.monotonic()
-        for i in range(max(n_cheap, n_heavy)):
-            if i < n_cheap:
-                eng.submit("cheap")
-            if i < n_heavy:
-                eng.submit("heavy")
-        eng.run(max_wall_s=240)
-        s = eng.summary()
+    for cr in result.results:
+        m = cr.metrics
         rows.append({
-            "name": f"engine/{pol}",
-            "us_per_call": s["R_avg"] * 1e6,
-            "derived": f"R_p50={s['R_p50']*1e3:.0f}ms;R_p95={s['R_p95']*1e3:.0f}ms;n={s['n']}",
+            "name": f"engine/{cr.cell.policy}",
+            "us_per_call": m["R_avg"] * 1e6,
+            "derived": (f"R_p50={m['R_p50']*1e3:.0f}ms;"
+                        f"R_p95={m['R_p95']*1e3:.0f}ms;n={m['n']:.0f}"),
         })
     return rows
 

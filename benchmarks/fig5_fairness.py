@@ -1,32 +1,35 @@
 """Fig. 5: FC fairness -- stretch of the rare long function vs SEPT.
 
 Paper: FC cuts dna-visualisation mean stretch 5.3 -> 2.1 while graph-bfs
-rises 22.2 -> 25.8."""
-
-import numpy as np
+rises 22.2 -> 25.8.  Declared as a SweepSpec and run through the parallel
+sweep engine; per-function metrics come straight out of the cells."""
 
 from .common import emit
 
-from repro.core import generate_fairness_burst, simulate_single_node, summarize
+from repro.core import SweepSpec, run_sweep
+
+
+def spec(quick: bool = False) -> SweepSpec:
+    return SweepSpec(
+        policies=("sept", "fc"),
+        arrivals=("fairness",),
+        cores=(10,),
+        intensities=(90,),
+        seeds=2 if quick else 5,
+        per_function=("dna-visualisation", "graph-bfs"),
+    )
 
 
 def run(quick: bool = False) -> list[dict]:
+    result = run_sweep(spec(quick))
     rows = []
-    seeds = 2 if quick else 5
     for pol in ("sept", "fc"):
-        dna, bfs, overall = [], [], []
-        for seed in range(seeds):
-            reqs = generate_fairness_burst(seed=seed)
-            simulate_single_node(reqs, cores=10, policy=pol, mode="ours")
-            s = summarize(reqs, per_function=True)
-            dna.append(s.per_function["dna-visualisation"].stretch_avg)
-            bfs.append(s.per_function["graph-bfs"].stretch_avg)
-            overall.append(s.stretch_avg)
+        agg = result.find(policy=pol)
         rows.append({
             "name": f"fig5/{pol}",
-            "us_per_call": float(np.mean(overall)) * 1e6,
-            "derived": (f"dna_stretch={np.mean(dna):.1f};"
-                        f"graphbfs_stretch={np.mean(bfs):.1f}"),
+            "us_per_call": agg["S_avg"] * 1e6,
+            "derived": (f"dna_stretch={agg['S_avg:dna-visualisation']:.1f};"
+                        f"graphbfs_stretch={agg['S_avg:graph-bfs']:.1f}"),
         })
     return rows
 

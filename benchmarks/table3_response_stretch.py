@@ -1,8 +1,12 @@
 """Table III (main results): response time + stretch for all six strategies.
 
-Reproduces the paper aggregate rows; prints ours vs paper side by side."""
+Reproduces the paper aggregate rows; prints ours vs paper side by side.
+The whole table is one ragged SweepSpec (policy x cores x intensity) run
+through the parallel sweep engine."""
 
-from .common import emit, run_config
+from .common import emit
+
+from repro.core import SweepSpec, run_sweep
 
 # paper Table III (R_avg seconds, S_avg) for 10 cores
 PAPER_10 = {
@@ -21,27 +25,42 @@ PAPER_20 = {
     (60, "sept"): (50.62, 321.7), (60, "fc"): (42.92, 265.5),
 }
 
+ALL_POLICIES = ("baseline", "fifo", "sept", "eect", "rect", "fc")
+
+
+def _grid(quick: bool) -> list[tuple[int, int]]:
+    return [(10, 60)] if quick else [(10, 30), (10, 60), (10, 120), (20, 60)]
+
+
+def spec(quick: bool = False) -> SweepSpec:
+    grid = set(_grid(quick))
+    return SweepSpec(
+        policies=ALL_POLICIES,
+        cores=tuple(sorted({c for c, _ in grid})),
+        intensities=tuple(sorted({v for _, v in grid})),
+        seeds=2 if quick else 3,
+        # paper only reports 4 strategies at 20 cores
+        cell_filter=lambda c: (c.cores, c.intensity) in grid and not (
+            c.cores == 20 and c.policy in ("eect", "rect")),
+    )
+
 
 def run(quick: bool = False) -> list[dict]:
+    result = run_sweep(spec(quick))
     rows = []
-    grid = ([(10, 60)] if quick else [(10, 30), (10, 60), (10, 120), (20, 60)])
-    for cores, inten in grid:
+    for cores, inten in _grid(quick):
         paper = PAPER_10 if cores == 10 else PAPER_20
-        pols = ["baseline", "fifo", "sept", "eect", "rect", "fc"]
-        if cores == 20:
-            pols = ["baseline", "fifo", "sept", "fc"]
+        pols = [p for p in ALL_POLICIES
+                if not (cores == 20 and p in ("eect", "rect"))]
         for pol in pols:
-            mode = "baseline" if pol == "baseline" else "ours"
-            eff_pol = "fifo" if pol == "baseline" else pol
-            seeds = 2 if quick else 3
-            r = run_config(cores, inten, eff_pol, mode, seeds=seeds)
+            agg = result.find(policy=pol, cores=cores, intensity=inten)
             pr, ps = paper.get((inten, pol), (float("nan"), float("nan")))
             rows.append({
                 "name": f"table3/c{cores}_v{inten}_{pol}",
-                "us_per_call": r["R_avg"] * 1e6,
-                "derived": (f"R_avg={r['R_avg']:.2f};paper_R={pr:.2f};"
-                            f"S_avg={r['S_avg']:.0f};paper_S={ps:.0f};"
-                            f"R_p99={r['R_p99']:.1f}"),
+                "us_per_call": agg["R_avg"] * 1e6,
+                "derived": (f"R_avg={agg['R_avg']:.2f};paper_R={pr:.2f};"
+                            f"S_avg={agg['S_avg']:.0f};paper_S={ps:.0f};"
+                            f"R_p99={agg['R_p99']:.1f}"),
             })
     return rows
 

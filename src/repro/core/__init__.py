@@ -25,20 +25,41 @@ from .simulator import (
     simulate_single_node,
 )
 from .cluster import Cluster, ClusterConfig, simulate_baseline_cluster, simulate_cluster
+from .sweep import (
+    CellResult,
+    SweepCell,
+    SweepResult,
+    SweepSpec,
+    run_cell,
+    run_sweep,
+)
+from .traces import (
+    generate_trace_requests,
+    load_azure_trace,
+    requests_from_trace,
+    stable_hash,
+)
 from .workload import (
+    ARRIVAL_KINDS,
     FUNCTIONS,
     MEAN_IDLE_RESPONSE_S,
     PROFILES,
     SEBS_TABLE_I,
     STRETCH_REFERENCE_S,
+    diurnal_arrivals,
     generate_burst,
     generate_fairness_burst,
+    generate_trace_burst,
+    mmpp_arrivals,
+    poisson_arrivals,
 )
 
 __all__ = [
+    "ARRIVAL_KINDS",
     "AcquireResult",
     "BaselineNodeSim",
     "CallRecord",
+    "CellResult",
     "Cluster",
     "ClusterConfig",
     "Container",
@@ -63,12 +84,25 @@ __all__ = [
     "SimResult",
     "StartDecision",
     "Summary",
+    "SweepCell",
+    "SweepResult",
+    "SweepSpec",
+    "diurnal_arrivals",
     "generate_burst",
     "generate_fairness_burst",
+    "generate_trace_burst",
+    "generate_trace_requests",
+    "load_azure_trace",
     "make_policy",
     "merge_summaries",
+    "mmpp_arrivals",
+    "poisson_arrivals",
+    "requests_from_trace",
+    "run_cell",
+    "run_sweep",
     "simulate_baseline_cluster",
     "simulate_cluster",
     "simulate_single_node",
+    "stable_hash",
     "summarize",
 ]

@@ -31,6 +31,7 @@ from dataclasses import dataclass, field
 
 from .estimator import RuntimeEstimator
 from .request import Request
+from .traces import stable_hash
 from .simulator import (
     EventLoop,
     OursNodeSim,
@@ -127,8 +128,9 @@ class Cluster:
             return alive[self._rr]
         if self.cfg.lb == "home":
             # OpenWhisk-style home invoker: hash the action, walk forward on
-            # saturation.
-            start = hash(req.fn) % len(alive)
+            # saturation.  CRC32, not builtin hash(): per-interpreter hash
+            # salting would make sweep cells non-deterministic across runs.
+            start = stable_hash(req.fn) % len(alive)
             for k in range(len(alive)):
                 cand = alive[(start + k) % len(alive)]
                 if cand.free_slots > 0:
@@ -312,7 +314,7 @@ def simulate_baseline_cluster(
     ]
 
     def route(req: Request) -> None:
-        start = hash(req.fn) % nodes
+        start = stable_hash(req.fn) % nodes
         for k in range(nodes):
             cand = workers[(start + k) % nodes]
             if cand.free_slots > 0:

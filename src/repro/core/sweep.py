@@ -1,0 +1,388 @@
+"""Parallel scenario-sweep engine.
+
+The paper's headline numbers (4x mean response, 18x stretch, 3 nodes beating
+a 4-node baseline) all come from sweeping scenario grids -- policy x
+intensity x cores x nodes x seeds.  This module makes those grids first-class:
+
+* :class:`SweepSpec` -- a declarative cartesian grid over policy, assignment
+  model, intensity, cores, nodes, arrival process, autoscaling, failure
+  injection and seeds, with an optional ``cell_filter`` for ragged grids.
+* :func:`run_sweep` -- executes every cell through a process pool with
+  deterministic per-cell seeding; ``workers=1`` runs inline and produces
+  *bit-identical* metrics to ``workers=N`` (each cell is a self-contained
+  pure function of its :class:`SweepCell`).
+* :class:`SweepResult` -- structured per-cell metrics, seed-aggregated rows
+  (mean response / percentiles / stretch / makespan per cell), and JSON/CSV
+  emission compatible with the ``benchmarks.common.emit`` contract.
+
+The engine deliberately imports no JAX: cells run the pure-Python
+discrete-event simulator, so pool workers fork instantly and a 200+-cell
+grid saturates all cores.
+"""
+
+from __future__ import annotations
+
+import csv
+import itertools
+import json
+import multiprocessing
+import os
+import sys
+import time
+from concurrent.futures import ProcessPoolExecutor
+from dataclasses import dataclass, field, fields
+from typing import Callable, Sequence
+
+import numpy as np
+
+from .metrics import summarize
+from .request import Request
+from .workload import (
+    generate_burst,
+    generate_fairness_burst,
+    generate_trace_burst,
+)
+
+# grid axes that identify a cell up to its seed (aggregation groups by these)
+GRID_FIELDS = ("policy", "mode", "assignment", "arrival", "intensity",
+               "cores", "nodes", "autoscale", "fail_at")
+
+# metrics averaged across seeds in aggregate()
+METRIC_KEYS = ("R_avg", "R_p50", "R_p75", "R_p95", "R_p99",
+               "S_avg", "S_p50", "S_p75", "S_p95", "S_p99",
+               "max_c", "cold", "n", "failures", "backups", "nodes_used")
+
+
+@dataclass(frozen=True)
+class SweepCell:
+    """One fully-specified scenario: everything a worker needs to run it."""
+
+    policy: str = "fifo"          # fifo|sept|eect|rect|fc|baseline (sentinel)
+    mode: str = "ours"            # ours | baseline
+    assignment: str = "pull"      # cluster request-assignment model
+    arrival: str = "uniform"      # uniform|poisson|diurnal|mmpp|fairness|trace
+    intensity: int = 30
+    cores: int = 10               # per node
+    nodes: int = 1
+    autoscale: bool = False
+    fail_at: float | None = None  # inject: node 0 dies at this time
+    seed: int = 0
+    duration_s: float = 60.0
+    workload_cores: int | None = None  # burst sized for this many cores
+                                       # (default: cores * nodes)
+    per_function: tuple[str, ...] = ()  # extra per-function metric columns
+    trace_path: str | None = None       # for arrival == "trace"
+    warm: bool = True
+
+    def key(self) -> tuple:
+        """Identity of the cell up to its seed (the aggregation group)."""
+        return tuple(getattr(self, f) for f in GRID_FIELDS)
+
+    def label(self) -> str:
+        parts = [f"{self.mode}-{self.policy}", f"c{self.cores}",
+                 f"v{self.intensity}"]
+        if self.nodes != 1:
+            parts.append(f"n{self.nodes}")
+        if self.arrival != "uniform":
+            parts.append(self.arrival)
+        if self.autoscale:
+            parts.append("autoscale")
+        if self.fail_at is not None:
+            parts.append(f"fail{self.fail_at:g}")
+        return "_".join(parts)
+
+
+@dataclass
+class SweepSpec:
+    """Declarative cartesian grid; ``cells()`` expands it."""
+
+    policies: Sequence[str] = ("fifo",)
+    modes: Sequence[str] = ("ours",)
+    assignments: Sequence[str] = ("pull",)
+    arrivals: Sequence[str] = ("uniform",)
+    intensities: Sequence[int] = (30,)
+    cores: Sequence[int] = (10,)
+    nodes: Sequence[int] = (1,)
+    autoscale: Sequence[bool] = (False,)
+    failures: Sequence[float | None] = (None,)
+    seeds: int | Sequence[int] = 3
+    base_seed: int = 0
+    duration_s: float = 60.0
+    workload_cores: int | None = None
+    per_function: tuple[str, ...] = ()
+    trace_path: str | None = None
+    warm: bool = True
+    # prune the cartesian product (ragged grids, e.g. baseline only at n=4);
+    # evaluated in the parent process, so any callable works
+    cell_filter: Callable[[SweepCell], bool] | None = None
+
+    def seed_list(self) -> list[int]:
+        if isinstance(self.seeds, int):
+            return [self.base_seed + s for s in range(self.seeds)]
+        return [self.base_seed + s for s in self.seeds]
+
+    def cells(self) -> list[SweepCell]:
+        out = []
+        for (pol, mode, asg, arr, inten, c, n, auto, fail, seed) in \
+                itertools.product(self.policies, self.modes, self.assignments,
+                                  self.arrivals, self.intensities, self.cores,
+                                  self.nodes, self.autoscale, self.failures,
+                                  self.seed_list()):
+            cell = SweepCell(
+                policy=pol, mode=mode, assignment=asg, arrival=arr,
+                intensity=inten, cores=c, nodes=n, autoscale=auto,
+                fail_at=fail, seed=seed, duration_s=self.duration_s,
+                workload_cores=self.workload_cores,
+                per_function=self.per_function, trace_path=self.trace_path,
+                warm=self.warm,
+            )
+            if self.cell_filter is None or self.cell_filter(cell):
+                out.append(cell)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# cell execution (must stay a picklable module-level function)
+# ---------------------------------------------------------------------------
+def make_workload(cell: SweepCell) -> list[Request]:
+    """Deterministic workload for a cell; cells differing only in policy /
+    mode / nodes share the same burst (paired common random numbers, exactly
+    how the paper compares strategies)."""
+    wcores = cell.workload_cores or cell.cores * cell.nodes
+    if cell.arrival == "uniform":
+        return generate_burst(cores=wcores, intensity=cell.intensity,
+                              seed=cell.seed, duration_s=cell.duration_s)
+    if cell.arrival == "fairness":
+        return generate_fairness_burst(cores=wcores, intensity=cell.intensity,
+                                       seed=cell.seed,
+                                       duration_s=cell.duration_s)
+    if cell.arrival == "trace":
+        from .traces import generate_trace_requests
+        if cell.trace_path is None:
+            raise ValueError("arrival='trace' requires trace_path")
+        return generate_trace_requests(cell.trace_path, seed=cell.seed)
+    return generate_trace_burst(cores=wcores, intensity=cell.intensity,
+                                seed=cell.seed, kind=cell.arrival,
+                                duration_s=cell.duration_s)
+
+
+def run_cell(cell: SweepCell) -> dict[str, float]:
+    """Run one scenario end-to-end; pure function of the cell (bit-identical
+    metrics for identical cells, in any process)."""
+    from .cluster import Cluster, ClusterConfig, simulate_baseline_cluster
+    from .simulator import simulate_single_node
+
+    reqs = make_workload(cell)
+    mode = "baseline" if (cell.mode == "baseline"
+                          or cell.policy == "baseline") else "ours"
+    policy = "fifo" if cell.policy == "baseline" else cell.policy
+    failures = backups = 0
+    nodes_used = cell.nodes
+    cold = 0
+
+    if cell.nodes <= 1 and not cell.autoscale and cell.fail_at is None:
+        res = simulate_single_node(reqs, cores=cell.cores, policy=policy,
+                                   mode=mode, warm=cell.warm)
+        done, cold = res.requests, res.cold_starts
+    elif mode == "baseline":
+        if cell.fail_at is not None:
+            raise ValueError("failure injection unsupported for the stock "
+                             "baseline cluster (no retry semantics)")
+        res = simulate_baseline_cluster(reqs, nodes=cell.nodes,
+                                        cores_per_node=cell.cores,
+                                        warm=cell.warm)
+        done, cold = res.requests, res.cold_starts
+    else:
+        cfg = ClusterConfig(nodes=cell.nodes, cores_per_node=cell.cores,
+                            policy=policy, assignment=cell.assignment,
+                            autoscale=cell.autoscale)
+        warm_fns = sorted({r.fn for r in reqs}) if cell.warm else None
+        cluster = Cluster(cfg, warm_functions=warm_fns)
+        if cell.fail_at is not None:
+            cluster.fail_node(0, at=cell.fail_at)
+        res = cluster.run(reqs)
+        done, cold = res.requests, res.cold_starts
+        failures, backups = res.failures, res.backups_issued
+        nodes_used = res.nodes_used
+
+    s = summarize(done, per_function=bool(cell.per_function))
+    metrics: dict[str, float] = {
+        "R_avg": s.response_avg, "S_avg": s.stretch_avg,
+        "max_c": s.max_completion, "cold": float(cold), "n": float(s.n),
+        "failures": float(failures), "backups": float(backups),
+        "nodes_used": float(nodes_used),
+    }
+    for p, v in s.response_pct.items():
+        metrics[f"R_p{p}"] = v
+    for p, v in s.stretch_pct.items():
+        metrics[f"S_p{p}"] = v
+    for fn in cell.per_function:
+        sub = s.per_function.get(fn)
+        if sub is not None:
+            metrics[f"R_avg:{fn}"] = sub.response_avg
+            metrics[f"S_avg:{fn}"] = sub.stretch_avg
+    return metrics
+
+
+# ---------------------------------------------------------------------------
+# results
+# ---------------------------------------------------------------------------
+@dataclass
+class CellResult:
+    cell: SweepCell
+    metrics: dict[str, float]
+
+
+@dataclass
+class SweepResult:
+    results: list[CellResult]
+    wall_s: float = 0.0
+    workers: int = 1
+    meta: dict = field(default_factory=dict)
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+    # -- aggregation --------------------------------------------------------
+    def aggregate(self) -> list[dict]:
+        """Mean metrics per cell identity (across seeds), in first-seen
+        order.  Adds ``seeds`` (count) and ``R_avg_std``."""
+        groups: dict[tuple, list[CellResult]] = {}
+        for cr in self.results:
+            groups.setdefault(cr.cell.key(), []).append(cr)
+        rows = []
+        for key, crs in groups.items():
+            row: dict = dict(zip(GRID_FIELDS, key))
+            row["label"] = crs[0].cell.label()
+            row["seeds"] = len(crs)
+            metric_keys = sorted({k for cr in crs for k in cr.metrics})
+            for mk in metric_keys:
+                vals = [cr.metrics[mk] for cr in crs if mk in cr.metrics]
+                row[mk] = float(np.mean(vals))
+            row["R_avg_std"] = float(np.std(
+                [cr.metrics["R_avg"] for cr in crs]))
+            rows.append(row)
+        return rows
+
+    def find(self, **conds) -> dict:
+        """The single aggregated row matching ``conds`` (grid-field values)."""
+        hits = [r for r in self.aggregate()
+                if all(r.get(k) == v for k, v in conds.items())]
+        if len(hits) != 1:
+            raise KeyError(f"{conds} matched {len(hits)} aggregated rows")
+        return hits[0]
+
+    # -- emission -----------------------------------------------------------
+    def rows(self, prefix: str = "sweep") -> list[dict]:
+        """``benchmarks.common.emit``-compatible rows (one per aggregate)."""
+        out = []
+        for r in self.aggregate():
+            derived = (f"R_avg={r['R_avg']:.2f};S_avg={r['S_avg']:.1f};"
+                       f"max_c={r['max_c']:.1f};seeds={r['seeds']}")
+            out.append({"name": f"{prefix}/{r['label']}",
+                        "us_per_call": r["R_avg"] * 1e6,
+                        "derived": derived})
+        return out
+
+    def to_json(self, path) -> None:
+        payload = {
+            "wall_s": self.wall_s, "workers": self.workers,
+            "cells": len(self.results), "meta": self.meta,
+            "results": [
+                {"cell": {f.name: getattr(cr.cell, f.name)
+                          for f in fields(SweepCell)},
+                 "metrics": cr.metrics}
+                for cr in self.results
+            ],
+            "aggregate": self.aggregate(),
+        }
+        with open(path, "w") as fh:
+            json.dump(payload, fh, indent=1, default=str)
+
+    def to_csv(self, path) -> None:
+        rows = self.aggregate()
+        cols = list(rows[0].keys()) if rows else []
+        with open(path, "w", newline="") as fh:
+            w = csv.DictWriter(fh, fieldnames=cols, extrasaction="ignore")
+            w.writeheader()
+            w.writerows(rows)
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+def run_sweep(
+    spec: SweepSpec,
+    workers: int | None = None,
+    runner: Callable[[SweepCell], dict] | None = None,
+    progress: Callable[[int, int], None] | None = None,
+) -> SweepResult:
+    """Execute every cell of ``spec``.
+
+    ``workers=1`` runs inline (no pool); ``workers=N`` fans cells out over a
+    process pool.  Results are identical either way: a cell's metrics depend
+    only on the cell itself.  ``runner`` overrides the per-cell function
+    (must be picklable for N > 1, e.g. a module-level function); benchmarks
+    with process-hostile dependencies (real XLA engines) pass their own
+    runner with ``workers=1``."""
+    cells = spec.cells()
+    if not cells:
+        raise ValueError("SweepSpec expands to zero cells")
+    fn = runner or run_cell
+    if workers is None:
+        env = os.environ.get("SWEEP_WORKERS")
+        workers = int(env) if env else (os.cpu_count() or 1)
+    workers = max(1, min(workers, len(cells)))
+
+    t0 = time.monotonic()
+    metrics: list[dict]
+    if workers == 1:
+        metrics = []
+        for i, cell in enumerate(cells):
+            metrics.append(fn(cell))
+            if progress is not None:
+                progress(i + 1, len(cells))
+    else:
+        chunk = max(1, len(cells) // (workers * 8))
+        # fork is fastest, but forking a process that already initialised
+        # JAX/XLA can deadlock; fall back to spawn in that case (workers
+        # re-import repro.core, which stays JAX-free by design)
+        method = "spawn" if ("jax" in sys.modules
+                             or not hasattr(os, "fork")) else "fork"
+        if method == "spawn" and hasattr(os, "fork"):
+            main_file = getattr(sys.modules.get("__main__"), "__file__", None)
+            if main_file is not None and not os.path.exists(main_file):
+                # a "<stdin>" main cannot be re-imported by spawn; fork is
+                # the only pool that works there (accepting the JAX risk)
+                method = "fork"
+        ctx = multiprocessing.get_context(method)
+        with ProcessPoolExecutor(max_workers=workers, mp_context=ctx) as ex:
+            it = ex.map(fn, cells, chunksize=chunk)
+            metrics = []
+            for i, m in enumerate(it):
+                metrics.append(m)
+                if progress is not None:
+                    progress(i + 1, len(cells))
+    wall = time.monotonic() - t0
+    return SweepResult(
+        results=[CellResult(c, m) for c, m in zip(cells, metrics)],
+        wall_s=wall, workers=workers,
+        meta={"cells": len(cells)},
+    )
+
+
+def compare(spec: SweepSpec, baseline_policy: str = "fifo",
+            metric: str = "R_avg", workers: int | None = None) -> list[dict]:
+    """Convenience: run the sweep and report each policy's ``metric`` as a
+    ratio to ``baseline_policy`` within the same (non-policy) cell identity."""
+    res = run_sweep(spec, workers=workers)
+    agg = res.aggregate()
+    base = {tuple(r[f] for f in GRID_FIELDS if f != "policy"): r[metric]
+            for r in agg if r["policy"] == baseline_policy}
+    out = []
+    for r in agg:
+        key = tuple(r[f] for f in GRID_FIELDS if f != "policy")
+        ref = base.get(key)
+        out.append({**r, f"{metric}_vs_{baseline_policy}":
+                    (r[metric] / ref) if ref else float("nan")})
+    return out

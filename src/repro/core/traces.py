@@ -1,0 +1,114 @@
+"""Azure-Functions-style trace loading -> simulator workloads.
+
+Production FaaS providers publish per-function invocation-rate traces (the
+Azure Functions 2019 dataset is the canonical one: one row per function,
+per-minute invocation counts).  This module loads that shape of CSV and
+turns it into :class:`~repro.core.request.Request` streams the simulator and
+sweep engine consume, so sweeps can replay production-shaped load instead of
+only the paper's synthetic 60-second bursts.
+
+Accepted CSV layout (header optional)::
+
+    function,m0,m1,m2,...
+    thumbnailer,12,40,9,...
+    my-custom-fn,3,0,7,...
+
+Function names that match a SeBS profile (Table I) keep their measured
+processing-time distribution; unknown names are mapped deterministically
+(CRC32) onto a SeBS profile so any trace can drive the calibrated simulator.
+"""
+
+from __future__ import annotations
+
+import csv
+import zlib
+from pathlib import Path
+
+import numpy as np
+
+from .request import Request
+from .workload import FUNCTIONS, PROFILES
+
+
+def stable_hash(name: str) -> int:
+    """Process-independent string hash (CRC32).  Python's builtin ``hash``
+    is salted per interpreter, which would make trace->profile mapping and
+    home-invoker routing differ between sweep workers and across runs."""
+    return zlib.crc32(name.encode("utf-8"))
+
+
+def profile_for(fn: str) -> str:
+    """Map an arbitrary trace function name onto a SeBS profile name."""
+    if fn in PROFILES:
+        return fn
+    return FUNCTIONS[stable_hash(fn) % len(FUNCTIONS)]
+
+
+def load_azure_trace(path: str | Path) -> dict[str, list[int]]:
+    """Parse an Azure-style ``(fn, invocations_per_minute...)`` CSV.
+
+    Returns ``{function_name: [count_minute_0, count_minute_1, ...]}``.
+    A header row (first data cell not an integer) is skipped automatically.
+    """
+    out: dict[str, list[int]] = {}
+    with open(path, newline="") as fh:
+        for i, row in enumerate(csv.reader(fh)):
+            if not row or not row[0].strip():
+                continue
+            cells = [c.strip() for c in row]
+            try:
+                counts = [int(float(c)) for c in cells[1:]]
+            except ValueError:
+                if i == 0:
+                    continue  # header row
+                raise ValueError(
+                    f"unparsable invocation counts for {cells[0]!r} "
+                    f"(row {i + 1})") from None
+            if any(c < 0 for c in counts):
+                raise ValueError(f"negative invocation count for {cells[0]!r}")
+            out[cells[0]] = counts
+    if not out:
+        raise ValueError(f"no trace rows parsed from {path}")
+    return out
+
+
+def requests_from_trace(
+    trace: dict[str, list[int]],
+    seed: int,
+    minute_s: float = 60.0,
+    max_minutes: int | None = None,
+) -> list[Request]:
+    """Expand per-minute invocation counts into a request stream.
+
+    Each invocation arrives uniformly at random within its minute; the
+    processing time is drawn from the (mapped) SeBS profile.  Iteration order
+    is sorted by function name so the stream is deterministic for a seed."""
+    rng = np.random.default_rng(seed)
+    reqs: list[Request] = []
+    for fn in sorted(trace):
+        counts = trace[fn]
+        if max_minutes is not None:
+            counts = counts[:max_minutes]
+        profile = PROFILES[profile_for(fn)]
+        for minute, count in enumerate(counts):
+            if count <= 0:
+                continue
+            times = rng.uniform(minute * minute_s, (minute + 1) * minute_s,
+                                size=count)
+            procs = profile.sample(rng, count)
+            for t, p in zip(times, procs):
+                reqs.append(Request(fn=fn, r=float(t),
+                                    p_true=float(max(p, 1e-4))))
+    reqs.sort(key=lambda r: r.r)
+    return reqs
+
+
+def generate_trace_requests(
+    path: str | Path,
+    seed: int = 0,
+    minute_s: float = 60.0,
+    max_minutes: int | None = None,
+) -> list[Request]:
+    """Convenience: load an Azure-style CSV and expand it to requests."""
+    return requests_from_trace(load_azure_trace(path), seed,
+                               minute_s=minute_s, max_minutes=max_minutes)

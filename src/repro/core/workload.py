@@ -154,3 +154,121 @@ def expected_cpu_utilization(intensity: int) -> float:
     container-management overheads)."""
     per_core_work = 1.1 * intensity * MEAN_IDLE_RESPONSE_S / 1.1 / 60.0
     return per_core_work * 1.1
+
+
+# ---------------------------------------------------------------------------
+# trace-driven arrival processes (beyond the paper's uniform burst)
+# ---------------------------------------------------------------------------
+def poisson_arrivals(
+    rate_per_s: float, duration_s: float, rng: np.random.Generator
+) -> np.ndarray:
+    """Homogeneous Poisson process: i.i.d. exponential gaps at ``rate_per_s``.
+
+    Returns sorted arrival times within [0, duration_s)."""
+    if rate_per_s <= 0:
+        return np.empty(0)
+    # draw enough gaps to cover the window with high probability, then trim
+    n_guess = int(rate_per_s * duration_s * 1.5 + 10 * math.sqrt(
+        rate_per_s * duration_s + 1.0))
+    times = np.cumsum(rng.exponential(1.0 / rate_per_s, size=n_guess))
+    while times.size and times[-1] < duration_s:
+        extra = np.cumsum(rng.exponential(1.0 / rate_per_s, size=n_guess))
+        times = np.concatenate([times, times[-1] + extra])
+    return times[times < duration_s]
+
+
+def diurnal_arrivals(
+    rate_per_s: float,
+    duration_s: float,
+    rng: np.random.Generator,
+    period_s: float | None = None,
+    depth: float = 0.8,
+) -> np.ndarray:
+    """Sine-modulated (diurnal) Poisson process by thinning.
+
+    Instantaneous rate lambda(t) = rate * (1 + depth * sin(2 pi t / period)),
+    so the *mean* rate over a whole period is ``rate_per_s``."""
+    if not 0.0 <= depth <= 1.0:
+        raise ValueError(f"depth must be in [0, 1], got {depth}")
+    period = period_s if period_s is not None else duration_s
+    peak = rate_per_s * (1.0 + depth)
+    cand = poisson_arrivals(peak, duration_s, rng)
+    lam = rate_per_s * (1.0 + depth * np.sin(2.0 * math.pi * cand / period))
+    keep = rng.uniform(0.0, peak, size=cand.size) < lam
+    return cand[keep]
+
+
+def mmpp_arrivals(
+    rate_per_s: float,
+    duration_s: float,
+    rng: np.random.Generator,
+    burst_factor: float = 4.0,
+    burst_fraction: float = 0.2,
+    burst_sojourn_s: float = 5.0,
+) -> np.ndarray:
+    """Bursty 2-state Markov-modulated Poisson process.
+
+    The process alternates between a calm and a burst state (exponential
+    sojourns); the burst state emits at ``burst_factor`` x the calm rate and
+    occupies ``burst_fraction`` of the time, so the long-run mean rate is
+    ``rate_per_s``."""
+    if burst_factor < 1.0:
+        raise ValueError("burst_factor must be >= 1")
+    if not 0.0 < burst_fraction < 1.0:
+        raise ValueError("burst_fraction must be in (0, 1)")
+    calm_rate = rate_per_s / ((1.0 - burst_fraction)
+                              + burst_factor * burst_fraction)
+    burst_rate = burst_factor * calm_rate
+    calm_sojourn = burst_sojourn_s * (1.0 - burst_fraction) / burst_fraction
+    out: list[np.ndarray] = []
+    t = 0.0
+    # stationary initial state: always starting calm would bias the mean
+    # rate low on short windows
+    bursting = bool(rng.uniform() < burst_fraction)
+    while t < duration_s:
+        mean_sojourn = burst_sojourn_s if bursting else calm_sojourn
+        seg = min(float(rng.exponential(mean_sojourn)), duration_s - t)
+        rate = burst_rate if bursting else calm_rate
+        out.append(t + poisson_arrivals(rate, seg, rng))
+        t += seg
+        bursting = not bursting
+    return np.concatenate(out) if out else np.empty(0)
+
+
+ARRIVAL_KINDS = ("uniform", "poisson", "diurnal", "mmpp")
+
+
+def generate_trace_burst(
+    cores: int,
+    intensity: int,
+    seed: int,
+    kind: str = "poisson",
+    duration_s: float = 60.0,
+    functions: list[str] | None = None,
+    **kwargs,
+) -> list[Request]:
+    """Production-shaped variant of :func:`generate_burst`: the same expected
+    call volume (1.1 * cores * intensity over ``duration_s``) but arrivals
+    drawn from a stochastic process instead of the paper's uniform window.
+    Functions are sampled uniformly per call; processing times from the SeBS
+    lognormal profiles."""
+    fns = functions or FUNCTIONS
+    rate = 1.1 * cores * intensity / duration_s
+    rng = np.random.default_rng(seed)
+    if kind == "uniform":
+        return generate_burst(cores, intensity, seed, duration_s, functions)
+    if kind == "poisson":
+        times = poisson_arrivals(rate, duration_s, rng)
+    elif kind == "diurnal":
+        times = diurnal_arrivals(rate, duration_s, rng, **kwargs)
+    elif kind == "mmpp":
+        times = mmpp_arrivals(rate, duration_s, rng, **kwargs)
+    else:
+        raise ValueError(f"unknown arrival kind {kind!r}")
+    reqs: list[Request] = []
+    for t in times:
+        fn = fns[int(rng.integers(len(fns)))]
+        p = PROFILES[fn].sample(rng, 1)[0]
+        reqs.append(Request(fn=fn, r=float(t), p_true=float(max(p, 1e-4))))
+    reqs.sort(key=lambda r: r.r)
+    return reqs

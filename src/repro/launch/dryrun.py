@@ -88,6 +88,8 @@ def _compile_metrics(step, args, shardings, mesh) -> dict:
         compiled = lowered.compile()
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):   # older JAX returns [dict]
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
     return {

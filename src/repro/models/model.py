@@ -117,8 +117,13 @@ def _layer_cache_shapes(cfg: ModelConfig, spec: LayerSpec, batch: int,
     dh = cfg.head_dim
     if spec.kind == ATTN:
         s = cache_len if spec.window <= 0 else min(spec.window, cache_len)
-        return {"k": (batch, s, cfg.n_kv_heads, dh),
-                "v": (batch, s, cfg.n_kv_heads, dh)}
+        shapes = {"k": (batch, s, cfg.n_kv_heads, dh),
+                  "v": (batch, s, cfg.n_kv_heads, dh)}
+        if cfg.kv_cache_dtype == "int8":
+            # per-token, per-head symmetric scales (float32 planes)
+            shapes["k_scale"] = (batch, s, cfg.n_kv_heads)
+            shapes["v_scale"] = (batch, s, cfg.n_kv_heads)
+        return shapes
     if spec.kind == RGLRU:
         w = cfg.lru_dim
         return {"h": (batch, w), "conv": (batch, cfg.conv1d_width - 1, w)}
@@ -164,17 +169,21 @@ def cache_shapes(cfg: ModelConfig, batch: int, cache_len: int,
     return tree
 
 
-KV_QUANT_SCALE = 32.0    # static symmetric scale for int8 KV (values ~N(0,1);
-                         # per-channel calibration is a serving-time feature)
-
-
 def _kv_quant(x):
-    return jnp.clip(jnp.round(x.astype(jnp.float32) * KV_QUANT_SCALE),
-                    -127, 127).astype(jnp.int8)
+    """Per-token, per-head symmetric int8 quantization over head_dim.
+
+    Returns (int8 values, float32 scales); scales have the value shape minus
+    the trailing head_dim axis.  Dynamic scaling tracks the actual K/V
+    magnitudes (which vary strongly across layers and positions), unlike a
+    static global scale."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1) / 127.0, 1e-8)
+    q = jnp.round(xf / scale[..., None]).astype(jnp.int8)
+    return q, scale
 
 
-def _kv_dequant(x, dtype):
-    return (x.astype(jnp.float32) / KV_QUANT_SCALE).astype(dtype)
+def _kv_dequant(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
 
 
 def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
@@ -184,7 +193,7 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
 
     def make(path, shape):
         name = str(path[-1])
-        if "wkv" in name:
+        if "wkv" in name or "_scale" in name:
             return jnp.zeros(shape, jnp.float32)
         if name in ("['k']", "['v']"):      # self-attn KV only (cross stays
             return jnp.zeros(shape, kv_dt)  # full precision)
@@ -220,12 +229,20 @@ def _attn_sublayer(p, spec, x, ctx: Ctx, cache):
             slot = ctx.pos % Sc
         else:
             slot = jnp.minimum(ctx.pos, Sc - 1)
-        k_store = _kv_quant(k_new) if quant else k_new
-        v_store = _kv_quant(v_new) if quant else v_new
-        k_cache = lax.dynamic_update_slice_in_dim(cache["k"], k_store, slot,
-                                                  axis=1)
-        v_cache = lax.dynamic_update_slice_in_dim(cache["v"], v_store, slot,
-                                                  axis=1)
+
+        def store(name, new):
+            vals, scales = _kv_quant(new) if quant else (new, None)
+            val_cache = lax.dynamic_update_slice_in_dim(
+                cache[name], vals, slot, axis=1)
+            if not quant:
+                return val_cache, None, val_cache
+            scale_cache = lax.dynamic_update_slice_in_dim(
+                cache[f"{name}_scale"], scales, slot, axis=1)
+            return val_cache, scale_cache, _kv_dequant(val_cache, scale_cache,
+                                                       q.dtype)
+
+        k_cache, ks_cache, k_att = store("k", k_new)
+        v_cache, vs_cache, v_att = store("v", v_new)
         idx = jnp.arange(Sc)
         if spec.window > 0 and spec.window <= Sc:
             ages = (ctx.pos - idx) % Sc
@@ -233,31 +250,40 @@ def _attn_sublayer(p, spec, x, ctx: Ctx, cache):
         else:
             k_pos = jnp.where(idx <= ctx.pos, idx, -1)
         k_pos = jnp.broadcast_to(k_pos[None, :], (B, Sc))
-        k_att = _kv_dequant(k_cache, q.dtype) if quant else k_cache
-        v_att = _kv_dequant(v_cache, q.dtype) if quant else v_cache
         out = L.attention(q, k_att, v_att, qpos, k_pos,
                           causal=True, window=spec.window,
                           unroll=cfg.unroll_q_chunks)
         new_cache = {"k": k_cache, "v": v_cache}
+        if quant:
+            new_cache |= {"k_scale": ks_cache, "v_scale": vs_cache}
     else:
         out = L.attention(q, k_new, v_new, qpos, qpos,
                           causal=True, window=spec.window,
                           unroll=cfg.unroll_q_chunks)
         if ctx.mode == "prefill":
             Sc = cache["k"].shape[1]
-            k_store = _kv_quant(k_new) if quant else k_new
-            v_store = _kv_quant(v_new) if quant else v_new
-            if S >= Sc:
-                # ring buffer: absolute position s must land in slot s % Sc
-                shift = S % Sc
-                keep_k = jnp.roll(k_store[:, -Sc:, :, :], shift, axis=1)
-                keep_v = jnp.roll(v_store[:, -Sc:, :, :], shift, axis=1)
-            else:
-                keep_k = lax.dynamic_update_slice_in_dim(
-                    cache["k"], k_store, 0, axis=1)
-                keep_v = lax.dynamic_update_slice_in_dim(
-                    cache["v"], v_store, 0, axis=1)
+
+            def store(name, new):
+                vals, scales = _kv_quant(new) if quant else (new, None)
+                if S >= Sc:
+                    # ring buffer: position s must land in slot s % Sc
+                    shift = S % Sc
+                    keep = jnp.roll(vals[:, -Sc:], shift, axis=1)
+                    keep_s = (jnp.roll(scales[:, -Sc:], shift, axis=1)
+                              if quant else None)
+                else:
+                    keep = lax.dynamic_update_slice_in_dim(
+                        cache[name], vals, 0, axis=1)
+                    keep_s = (lax.dynamic_update_slice_in_dim(
+                        cache[f"{name}_scale"], scales, 0, axis=1)
+                        if quant else None)
+                return keep, keep_s
+
+            keep_k, keep_ks = store("k", k_new)
+            keep_v, keep_vs = store("v", v_new)
             new_cache = {"k": keep_k, "v": keep_v}
+            if quant:
+                new_cache |= {"k_scale": keep_ks, "v_scale": keep_vs}
         else:
             new_cache = cache
     out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)

@@ -1,0 +1,89 @@
+"""Optional-hypothesis shim for the property-based tests.
+
+When ``hypothesis`` is installed, this module re-exports the real
+``given`` / ``settings`` / ``strategies``.  When it is not (the container
+does not bake it in, and tier-1 must not die at import), a deterministic
+mini-implementation takes over: each strategy knows how to draw an example
+from a seeded ``random.Random``, and ``given`` runs the test body over
+``max_examples`` drawn samples.  The property sweeps keep running either
+way -- only shrinking and coverage-guided generation are lost.
+"""
+
+from __future__ import annotations
+
+HAVE_HYPOTHESIS = True
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import random
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def integers(min_value=0, max_value=100, **_kw):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10, **_kw):
+            return _Strategy(lambda rng: [
+                elements.example(rng)
+                for _ in range(rng.randint(min_size, max_size))
+            ])
+
+        @staticmethod
+        def tuples(*elements):
+            return _Strategy(lambda rng: tuple(e.example(rng)
+                                               for e in elements))
+
+        @staticmethod
+        def sampled_from(seq):
+            items = list(seq)
+            return _Strategy(lambda rng: items[rng.randrange(len(items))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 25, **_kw):
+        """Records max_examples on the test function; other hypothesis
+        options (deadline, ...) are accepted and ignored."""
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        """Run the wrapped test over deterministically drawn examples."""
+        def deco(fn):
+            n = getattr(fn, "_shim_max_examples", 25)
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = random.Random(0xC0FFEE)
+                for _ in range(n):
+                    drawn = tuple(s.example(rng) for s in strategies)
+                    fn(*args, *drawn, **kwargs)
+            # pytest introspects signatures through __wrapped__ and would
+            # mistake the strategy parameters for fixtures
+            del wrapper.__wrapped__
+            return wrapper
+        return deco
+
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

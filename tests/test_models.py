@@ -19,6 +19,16 @@ from repro.models import (
 
 RNG = jax.random.PRNGKey(0)
 
+# Per-arch compile sweeps dominate suite wall-clock (~2-14 s per arch per
+# test on CPU).  Tier-1 keeps one cheap representative; the full matrix is
+# the `slow` calibration set.
+FAST_ARCHS = {"qwen3_1_7b"}
+
+
+def _arch_params(archs):
+    return [a if a in FAST_ARCHS else pytest.param(a, marks=pytest.mark.slow)
+            for a in archs]
+
 
 def _batch(cfg, B=2, S=32):
     b = {"tokens": jax.random.randint(RNG, (B, S), 0, cfg.vocab)}
@@ -31,7 +41,7 @@ def _batch(cfg, B=2, S=32):
     return b
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", _arch_params(ARCHS))
 class TestArchSmoke:
     """One reduced-config forward/train + decode step per assigned arch."""
 
@@ -77,8 +87,8 @@ class TestArchSmoke:
 class TestDecodeParity:
     """Incremental decode must equal the full forward pass."""
 
-    @pytest.mark.parametrize("arch", ["qwen3_1_7b", "gemma3_27b", "rwkv6_3b",
-                                      "recurrentgemma_9b"])
+    @pytest.mark.parametrize("arch", _arch_params(
+        ["qwen3_1_7b", "gemma3_27b", "rwkv6_3b", "recurrentgemma_9b"]))
     def test_decode_matches_forward(self, arch):
         cfg = dataclasses.replace(scale_down(get_config(arch), layers=6),
                                   dtype="float32")

@@ -1,7 +1,6 @@
 """Unit + property tests for the paper's scheduling policies (§IV)."""
 
-import hypothesis.strategies as st
-from hypothesis import given, settings
+from _hypothesis_shim import given, settings, st
 
 from repro.core import (
     EECT, FIFO, FairChoice, PriorityQueue, RECT, Request, RuntimeEstimator,

@@ -1,7 +1,6 @@
 """Scheduler + container-pool invariants (paper §IV-A, §VI)."""
 
-import hypothesis.strategies as st
-from hypothesis import given, settings
+from _hypothesis_shim import given, settings, st
 
 from repro.core import ContainerPool, NodeScheduler, Request
 
