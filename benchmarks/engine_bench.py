@@ -1,22 +1,81 @@
-"""Beyond-paper: the policies on the REAL JAX serving engine (tiny models).
+"""Beyond-paper: the policies on the REAL JAX serving engine (tiny models),
+plus the simulation-backend speedup row.
 
 Mixed cheap/heavy endpoints under a burst; SEPT/FC should cut mean response
 vs FIFO exactly as in the simulator -- but with actual XLA execution.
 
 The policy grid is declared as a SweepSpec like every simulator benchmark,
 but runs through a custom cell runner with ``workers=1``: XLA runtimes do
-not survive a fork, so these cells must execute in-process."""
+not survive a fork, so these cells must execute in-process.
 
+``backend_speedup_rows`` times the simulation engines themselves on a
+high-intensity sweep grid (workload generation and metric aggregation are
+identical across backends and excluded): reference event loop vs the
+vectorized fast path (exact), plus the batched jax.lax.scan variant when
+JAX is importable."""
+
+import time
 from functools import partial
 
 from .common import emit
 
-from repro.core import SweepCell, SweepSpec, run_sweep
+from repro.core import SweepCell, SweepSpec, run_sweep, simulate_single_node
+from repro.core.sweep import make_workload
 
 
 def spec() -> SweepSpec:
     # quick mode shrinks the per-cell burst (see _engine_cell), not the grid
     return SweepSpec(policies=("fifo", "sept", "fc"), seeds=1)
+
+
+def speedup_spec(quick: bool = False) -> SweepSpec:
+    """High-intensity grid for the backend shoot-out: every policy at the
+    paper's heaviest published load (10 cores, intensity 120)."""
+    return SweepSpec(policies=("fifo", "sept", "eect", "rect", "fc"),
+                     intensities=(60,) if quick else (120, 180),
+                     cores=(10,), seeds=1 if quick else 2)
+
+
+def _time_backend(cells, backend: str) -> float:
+    """Simulation wall-clock over the grid (workloads pre-generated)."""
+    total = 0.0
+    for cell in cells:
+        reqs = make_workload(cell)
+        t0 = time.perf_counter()
+        simulate_single_node(reqs, cores=cell.cores, policy=cell.policy,
+                             mode="ours", warm=cell.warm, backend=backend)
+        total += time.perf_counter() - t0
+    return total
+
+
+def backend_speedup_rows(quick: bool = False,
+                         backend: str = "vectorized") -> list[dict]:
+    # the speedup row compares concrete fast engines against the event loop;
+    # sweep-level selectors (auto/cross-check/reference) from run.py's
+    # --backend, and scan without an importable jax, degrade to the
+    # vectorized backend instead of erroring out
+    if backend not in ("vectorized", "scan"):
+        backend = "vectorized"
+    if backend == "scan":
+        try:
+            import jax  # noqa: F401
+        except ImportError:
+            backend = "vectorized"
+    cells = speedup_spec(quick).cells()
+    t_ref = _time_backend(cells, "reference")
+    t_fast = _time_backend(cells, backend)
+    derived = (f"ref_s={t_ref:.2f};{backend}_s={t_fast:.3f};"
+               f"speedup={t_ref / t_fast:.1f}x;cells={len(cells)}")
+    if backend == "scan":
+        # the per-cell timing above pays one jit compile then reuses it;
+        # the batched row shows the whole grid as ONE vmapped scan
+        from repro.core import run_cells_scan
+        t0 = time.perf_counter()
+        run_cells_scan(cells)
+        derived += f";scan_batch_s={time.perf_counter() - t0:.2f}"
+    return [{"name": "engine/simbackend_speedup",
+             "us_per_call": t_fast / len(cells) * 1e6,
+             "derived": derived}]
 
 
 def _engine_cell(cell: SweepCell, quick: bool = False) -> dict:
@@ -48,7 +107,7 @@ def _engine_cell(cell: SweepCell, quick: bool = False) -> dict:
             "n": float(s["n"])}
 
 
-def run(quick: bool = False) -> list[dict]:
+def run(quick: bool = False, backend: str = "vectorized") -> list[dict]:
     result = run_sweep(spec(), workers=1,
                        runner=partial(_engine_cell, quick=quick))
     rows = []
@@ -60,12 +119,20 @@ def run(quick: bool = False) -> list[dict]:
             "derived": (f"R_p50={m['R_p50']*1e3:.0f}ms;"
                         f"R_p95={m['R_p95']*1e3:.0f}ms;n={m['n']:.0f}"),
         })
+    rows.extend(backend_speedup_rows(quick, backend=backend))
     return rows
 
 
-def main(quick: bool = False) -> None:
-    emit(run(quick))
+def main(quick: bool = False, backend: str = "vectorized") -> None:
+    emit(run(quick, backend=backend))
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--backend", default="vectorized",
+                    choices=("vectorized", "scan"),
+                    help="fast backend for the speedup row")
+    args = ap.parse_args()
+    main(args.quick, backend=args.backend)

@@ -9,19 +9,20 @@ from .common import emit
 from repro.core import SweepSpec, run_sweep
 
 
-def spec(quick: bool = False) -> SweepSpec:
+def spec(quick: bool = False, backend: str = "reference") -> SweepSpec:
     return SweepSpec(
         policies=("sept", "fc"),
         arrivals=("fairness",),
         cores=(10,),
         intensities=(90,),
         seeds=2 if quick else 5,
+        backends=(backend,),
         per_function=("dna-visualisation", "graph-bfs"),
     )
 
 
-def run(quick: bool = False) -> list[dict]:
-    result = run_sweep(spec(quick))
+def run(quick: bool = False, backend: str = "reference") -> list[dict]:
+    result = run_sweep(spec(quick, backend))
     rows = []
     for pol in ("sept", "fc"):
         agg = result.find(policy=pol)
@@ -34,9 +35,14 @@ def run(quick: bool = False) -> list[dict]:
     return rows
 
 
-def main(quick: bool = False) -> None:
-    emit(run(quick))
+def main(quick: bool = False, backend: str = "reference") -> None:
+    emit(run(quick, backend))
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--backend", default="reference")
+    args = ap.parse_args()
+    main(args.quick, args.backend)

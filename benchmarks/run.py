@@ -5,6 +5,7 @@ Prints the harness CSV contract ``name,us_per_call,derived`` for every row.
 """
 
 import argparse
+import inspect
 import sys
 import time
 
@@ -17,6 +18,7 @@ from . import (
     table1_functions,
     table2_completion,
     table3_response_stretch,
+    trace_replay,
 )
 from .common import emit
 
@@ -27,6 +29,7 @@ MODULES = [
     ("fig2", fig2_cold_starts),
     ("fig5", fig5_fairness),
     ("fig6", fig6_multinode),
+    ("trace", trace_replay),
     ("engine", engine_bench),
     ("roofline", roofline),
 ]
@@ -37,6 +40,9 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated module prefixes")
+    ap.add_argument("--backend", default=None,
+                    help="simulation backend for sweep-based modules "
+                         "(reference|vectorized|scan|auto|cross-check)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -47,7 +53,11 @@ def main() -> None:
             continue
         t0 = time.time()
         try:
-            rows = mod.run(quick=args.quick)
+            kwargs = {"quick": args.quick}
+            if (args.backend is not None
+                    and "backend" in inspect.signature(mod.run).parameters):
+                kwargs["backend"] = args.backend
+            rows = mod.run(**kwargs)
             emit(rows)
             print(f"# {name}: {len(rows)} rows in {time.time()-t0:.0f}s",
                   file=sys.stderr)

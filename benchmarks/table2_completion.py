@@ -16,7 +16,7 @@ PAPER = {  # (cores, intensity) -> published ratio range midpoint
 }
 
 
-def spec(quick: bool = False) -> SweepSpec:
+def spec(quick: bool = False, backend: str = "reference") -> SweepSpec:
     confs = {(5, 30), (10, 60), (20, 60)} if quick else set(PAPER)
     return SweepSpec(
         # "baseline" is the sweep engine's sentinel for the stock system
@@ -24,12 +24,15 @@ def spec(quick: bool = False) -> SweepSpec:
         cores=tuple(sorted({c for c, _ in confs})),
         intensities=tuple(sorted({v for _, v in confs})),
         seeds=2 if quick else 3,
+        # baseline cells always run on the reference event loop; a fast
+        # backend selector accelerates the ours-fifo half of each ratio
+        backends=(backend,),
         cell_filter=lambda c: (c.cores, c.intensity) in confs,
     )
 
 
-def run(quick: bool = False) -> list[dict]:
-    sp = spec(quick)
+def run(quick: bool = False, backend: str = "reference") -> list[dict]:
+    sp = spec(quick, backend)
     result = run_sweep(sp)
     rows = []
     confs = sorted({(r["cores"], r["intensity"])
@@ -47,9 +50,14 @@ def run(quick: bool = False) -> list[dict]:
     return rows
 
 
-def main(quick: bool = False) -> None:
-    emit(run(quick))
+def main(quick: bool = False, backend: str = "reference") -> None:
+    emit(run(quick, backend))
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--backend", default="reference")
+    args = ap.parse_args()
+    main(args.quick, args.backend)

@@ -32,21 +32,22 @@ def _grid(quick: bool) -> list[tuple[int, int]]:
     return [(10, 60)] if quick else [(10, 30), (10, 60), (10, 120), (20, 60)]
 
 
-def spec(quick: bool = False) -> SweepSpec:
+def spec(quick: bool = False, backend: str = "reference") -> SweepSpec:
     grid = set(_grid(quick))
     return SweepSpec(
         policies=ALL_POLICIES,
         cores=tuple(sorted({c for c, _ in grid})),
         intensities=tuple(sorted({v for _, v in grid})),
         seeds=2 if quick else 3,
+        backends=(backend,),
         # paper only reports 4 strategies at 20 cores
         cell_filter=lambda c: (c.cores, c.intensity) in grid and not (
             c.cores == 20 and c.policy in ("eect", "rect")),
     )
 
 
-def run(quick: bool = False) -> list[dict]:
-    result = run_sweep(spec(quick))
+def run(quick: bool = False, backend: str = "reference") -> list[dict]:
+    result = run_sweep(spec(quick, backend))
     rows = []
     for cores, inten in _grid(quick):
         paper = PAPER_10 if cores == 10 else PAPER_20
@@ -65,9 +66,14 @@ def run(quick: bool = False) -> list[dict]:
     return rows
 
 
-def main(quick: bool = False) -> None:
-    emit(run(quick))
+def main(quick: bool = False, backend: str = "reference") -> None:
+    emit(run(quick, backend))
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--backend", default="reference")
+    args = ap.parse_args()
+    main(args.quick, args.backend)

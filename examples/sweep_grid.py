@@ -22,16 +22,23 @@ from repro.core import SweepSpec, run_sweep  # noqa: E402
 POLICIES = ("fifo", "sept", "eect", "rect", "fc")
 
 
-def build_spec(quick: bool) -> SweepSpec:
+def build_spec(quick: bool, backend: str = "reference") -> SweepSpec:
+    # backend="cross-check" validates the fast path against the reference
+    # on every eligible cell (raises BackendMismatchError on >1% drift)
+    validate = "cross-check" if backend == "cross-check" else None
+    backends = ("reference",) if backend == "cross-check" else (backend,)
     if quick:
         return SweepSpec(policies=POLICIES, intensities=(30,), cores=(5,),
-                         arrivals=("uniform", "poisson"), seeds=2)
+                         arrivals=("uniform", "poisson"), seeds=2,
+                         backends=backends, validate=validate)
     return SweepSpec(
         policies=POLICIES,                      # 5
         intensities=(30, 60, 90),               # x3
         cores=(5, 10),                          # x2
         arrivals=("uniform", "poisson", "mmpp"),  # x3
         seeds=3,                                # x3  -> 270 cells
+        backends=backends,
+        validate=validate,
     )
 
 
@@ -41,14 +48,18 @@ def main() -> None:
     ap.add_argument("--workers", type=int, default=None)
     ap.add_argument("--csv", default=None)
     ap.add_argument("--json", default=None)
+    ap.add_argument("--backend", default="reference",
+                    help="simulation backend: reference|vectorized|scan|"
+                         "auto|cross-check")
     args = ap.parse_args()
 
-    spec = build_spec(args.quick)
+    spec = build_spec(args.quick, args.backend)
     cells = spec.cells()
     print(f"sweep: {len(cells)} cells "
           f"({len(spec.policies)} policies x {len(spec.intensities)} "
           f"intensities x {len(spec.cores)} cores x "
-          f"{len(spec.arrivals)} arrival processes x seeds)")
+          f"{len(spec.arrivals)} arrival processes x seeds) "
+          f"[backend={args.backend}]")
 
     if sys.stdout.isatty():
         progress = lambda i, n: print(f"  {i}/{n} cells", end="\r",  # noqa: E731

@@ -8,11 +8,36 @@ Public API:
   - simulator / cluster: discrete-event reproduction of the paper's setup
   - workload: SeBS Table-I profiles + Gatling-style burst generator
   - metrics: response-time / stretch summaries
+
+Simulation backends (``simulate_single_node(..., backend=...)`` and the
+``SweepSpec(backends=...)`` axis):
+  - ``"reference"`` -- the discrete-event loop; supports every scenario and
+    defines the semantics.
+  - ``"vectorized"`` -- array fast path for the ours-mode single node
+    (``core/fastpath.py``); ~10x faster and **exact** (bit-identical
+    metrics), including cold starts and tight-memory eviction.
+  - ``"scan"`` -- batched ``jax.lax.scan`` variant; a whole grid runs as one
+    scan over a padded request tensor (``run_cells_scan``).  Requires the
+    always-warm regime (``scan_eligible``) and is float32, so it agrees with
+    the reference to rounding (~1e-6), not bitwise.
+  - ``"auto"`` -- vectorized where eligible, reference elsewhere (baseline
+    mode, clusters, autoscaling and failure injection always run on the
+    reference event loop).
+  - ``SweepSpec(validate="cross-check")`` runs sampled eligible cells on
+    both backends and raises :class:`~repro.core.sweep.BackendMismatchError`
+    if any reported metric drifts beyond 1%.
 """
 
 from .containers import AcquireResult, Container, ContainerPool
 from .estimator import RuntimeEstimator
-from .metrics import Summary, merge_summaries, summarize
+from .fastpath import (
+    ScanBackend,
+    VectorizedBackend,
+    scan_eligible,
+    simulate_cells_scan,
+    simulate_ours_vectorized,
+)
+from .metrics import Summary, merge_summaries, summarize, summarize_arrays
 from .policies import EECT, FIFO, FairChoice, Policy, RECT, SEPT, make_policy
 from .queues import PriorityQueue
 from .request import CallRecord, Request
@@ -21,16 +46,24 @@ from .simulator import (
     BaselineNodeSim,
     EventLoop,
     OursNodeSim,
+    ReferenceBackend,
+    SimBackend,
     SimResult,
+    available_backends,
+    get_backend,
+    register_backend,
     simulate_single_node,
 )
 from .cluster import Cluster, ClusterConfig, simulate_baseline_cluster, simulate_cluster
 from .sweep import (
+    BACKEND_CHOICES,
+    BackendMismatchError,
     CellResult,
     SweepCell,
     SweepResult,
     SweepSpec,
     run_cell,
+    run_cells_scan,
     run_sweep,
 )
 from .traces import (
@@ -57,6 +90,8 @@ from .workload import (
 __all__ = [
     "ARRIVAL_KINDS",
     "AcquireResult",
+    "BACKEND_CHOICES",
+    "BackendMismatchError",
     "BaselineNodeSim",
     "CallRecord",
     "CellResult",
@@ -76,33 +111,45 @@ __all__ = [
     "Policy",
     "PriorityQueue",
     "RECT",
+    "ReferenceBackend",
     "Request",
     "RuntimeEstimator",
     "SEBS_TABLE_I",
     "SEPT",
     "STRETCH_REFERENCE_S",
+    "ScanBackend",
+    "SimBackend",
     "SimResult",
     "StartDecision",
     "Summary",
     "SweepCell",
     "SweepResult",
     "SweepSpec",
+    "VectorizedBackend",
+    "available_backends",
     "diurnal_arrivals",
     "generate_burst",
     "generate_fairness_burst",
     "generate_trace_burst",
     "generate_trace_requests",
+    "get_backend",
     "load_azure_trace",
     "make_policy",
     "merge_summaries",
     "mmpp_arrivals",
     "poisson_arrivals",
+    "register_backend",
     "requests_from_trace",
     "run_cell",
+    "run_cells_scan",
     "run_sweep",
+    "scan_eligible",
     "simulate_baseline_cluster",
+    "simulate_cells_scan",
     "simulate_cluster",
+    "simulate_ours_vectorized",
     "simulate_single_node",
     "stable_hash",
     "summarize",
+    "summarize_arrays",
 ]

@@ -44,6 +44,32 @@ class Summary:
         return out
 
 
+def summarize_arrays(
+    resp: np.ndarray,
+    stretch: np.ndarray,
+    max_completion: float,
+    cold_starts: int = 0,
+    failures: int = 0,
+) -> Summary:
+    """Aggregate pre-extracted response-time / stretch arrays.
+
+    The array-level core of :func:`summarize` (which extracts the arrays
+    from a request list first), exposed for callers that already hold
+    response/stretch arrays and want to skip the per-request extraction."""
+    if resp.size == 0:
+        raise ValueError("no completed requests to summarize")
+    return Summary(
+        n=int(resp.size),
+        response_avg=float(resp.mean()),
+        response_pct={p: float(np.percentile(resp, p)) for p in PERCENTILES},
+        stretch_avg=float(stretch.mean()),
+        stretch_pct={p: float(np.percentile(stretch, p)) for p in PERCENTILES},
+        max_completion=float(max_completion),
+        cold_starts=cold_starts,
+        failures=failures,
+    )
+
+
 def summarize(
     requests: list[Request],
     stretch_ref: dict[str, float] | None = None,
@@ -62,16 +88,8 @@ def summarize(
     stretch = np.array([r.stretch(ref.get(r.fn)) for r in done])
     max_c = float(max(r.c for r in done))
 
-    summary = Summary(
-        n=len(done),
-        response_avg=float(resp.mean()),
-        response_pct={p: float(np.percentile(resp, p)) for p in PERCENTILES},
-        stretch_avg=float(stretch.mean()),
-        stretch_pct={p: float(np.percentile(stretch, p)) for p in PERCENTILES},
-        max_completion=max_c,
-        cold_starts=cold_starts,
-        failures=failures,
-    )
+    summary = summarize_arrays(resp, stretch, max_c,
+                               cold_starts=cold_starts, failures=failures)
     if per_function:
         fns = sorted({r.fn for r in done})
         for fn in fns:

@@ -37,8 +37,9 @@ from __future__ import annotations
 
 import heapq
 import itertools
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable
+from typing import Callable, Protocol, runtime_checkable
 
 from .containers import ContainerPool
 from .request import Request
@@ -277,7 +278,7 @@ class BaselineNodeSim:
             self.pool.warm_up(warm_functions, per_fn=min(cores, 4))
         self.jobs: dict[int, _PSJob] = {}
         self.pending: dict[int, Request] = {}   # dispatched, waiting on channel
-        self.fifo: list[Request] = []
+        self.fifo: deque[Request] = deque()
         self.completed: list[Request] = []
         self._last_advance = 0.0
         self._version = 0
@@ -381,7 +382,7 @@ class BaselineNodeSim:
     def _drain_fifo(self) -> None:
         while self.fifo:
             if self._try_dispatch(self.fifo[0]):
-                self.fifo.pop(0)
+                self.fifo.popleft()
             else:
                 break
 
@@ -399,7 +400,7 @@ class BaselineNodeSim:
         self.alive = False
         self._version += 1
         lost = ([j.req for j in self.jobs.values()]
-                + list(self.pending.values()) + self.fifo)
+                + list(self.pending.values()) + list(self.fifo))
         self.jobs.clear()
         self.pending.clear()
         self.fifo.clear()
@@ -429,6 +430,124 @@ class SimResult:
     meta: dict = field(default_factory=dict)
 
 
+# --------------------------------------------------------------------------
+# backend registry
+# --------------------------------------------------------------------------
+@runtime_checkable
+class SimBackend(Protocol):
+    """A single-node simulation engine: submit requests -> :class:`SimResult`.
+
+    Backends are interchangeable where :meth:`supports` says so; the
+    ``reference`` backend (the discrete-event loop above) defines the
+    semantics, alternative backends must agree with it on every metric the
+    sweep engine reports (see ``SweepSpec(validate="cross-check")``).
+    """
+
+    name: str
+
+    def supports(self, *, mode: str, policy: str, warm: bool) -> bool:
+        """Can this backend run the scenario exactly?"""
+        ...
+
+    def simulate(
+        self,
+        requests: list[Request],
+        cores: int,
+        policy: str = "fifo",
+        mode: str = "ours",
+        memory_mb: int = 32 * 1024,
+        container_mb: int = 128,
+        warm: bool = True,
+        kappa: float = PS_KAPPA,
+    ) -> SimResult:
+        ...
+
+
+class ReferenceBackend:
+    """The pure-Python discrete-event loop; supports every scenario."""
+
+    name = "reference"
+
+    def supports(self, *, mode: str, policy: str, warm: bool) -> bool:
+        return True
+
+    def simulate(
+        self,
+        requests: list[Request],
+        cores: int,
+        policy: str = "fifo",
+        mode: str = "ours",
+        memory_mb: int = 32 * 1024,
+        container_mb: int = 128,
+        warm: bool = True,
+        kappa: float = PS_KAPPA,
+    ) -> SimResult:
+        loop = EventLoop()
+        warm_fns = sorted({r.fn for r in requests}) if warm else None
+        node: OursNodeSim | BaselineNodeSim
+        if mode == "ours":
+            node = OursNodeSim(loop, cores, policy=policy, memory_mb=memory_mb,
+                               container_mb=container_mb,
+                               warm_functions=warm_fns)
+            pool = node.scheduler.pool
+        elif mode == "baseline":
+            node = BaselineNodeSim(loop, cores, memory_mb=memory_mb,
+                                   container_mb=container_mb, kappa=kappa,
+                                   warm_functions=warm_fns)
+            pool = node.pool
+        else:
+            raise ValueError(f"unknown mode {mode!r}")
+
+        base_cold = pool.cold_starts  # warm-up colds are not measured (§V-A)
+        for req in requests:
+            loop.schedule(req.r + REQ_OVERHEAD_S, lambda r=req: node.submit(r))
+        loop.run()
+
+        missing = [r for r in requests if r.c is None]
+        assert not missing, f"{len(missing)} requests never completed"
+        return SimResult(
+            requests=requests,
+            cold_starts=pool.cold_starts - base_cold,
+            evictions=pool.evictions,
+            creations=pool.creations,
+            meta={"mode": mode, "policy": policy, "cores": cores,
+                  "backend": self.name},
+        )
+
+
+_BACKENDS: dict[str, SimBackend] = {}
+
+
+def register_backend(backend: SimBackend) -> None:
+    _BACKENDS[backend.name] = backend
+
+
+def get_backend(name: str) -> SimBackend:
+    """Look up a registered backend.
+
+    The fast backends register themselves when :mod:`.fastpath` is imported
+    -- normally via the ``repro.core`` package import; the import here is a
+    safety net for callers that reached this module another way.  (Neither
+    import pulls in JAX: fastpath defers its jax imports to the scan calls,
+    so sweep workers still fork cleanly.)"""
+    if name not in _BACKENDS:
+        from . import fastpath  # noqa: F401  (registers its backends)
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown simulation backend {name!r}; "
+            f"available: {sorted(_BACKENDS)}") from None
+
+
+def available_backends() -> list[str]:
+    from . import fastpath  # noqa: F401  (registers its backends)
+    return sorted(_BACKENDS)
+
+
+register_backend(ReferenceBackend())
+
+
 def simulate_single_node(
     requests: list[Request],
     cores: int,
@@ -438,34 +557,21 @@ def simulate_single_node(
     container_mb: int = 128,
     warm: bool = True,
     kappa: float = PS_KAPPA,
+    backend: str = "reference",
 ) -> SimResult:
-    """Run one burst on one node; returns completed requests + counters."""
-    loop = EventLoop()
-    warm_fns = sorted({r.fn for r in requests}) if warm else None
-    node: OursNodeSim | BaselineNodeSim
-    if mode == "ours":
-        node = OursNodeSim(loop, cores, policy=policy, memory_mb=memory_mb,
-                           container_mb=container_mb, warm_functions=warm_fns)
-        pool = node.scheduler.pool
-    elif mode == "baseline":
-        node = BaselineNodeSim(loop, cores, memory_mb=memory_mb,
-                               container_mb=container_mb, kappa=kappa,
-                               warm_functions=warm_fns)
-        pool = node.pool
-    else:
-        raise ValueError(f"unknown mode {mode!r}")
+    """Run one burst on one node; returns completed requests + counters.
 
-    base_cold = pool.cold_starts  # warm-up cold starts are not measured (§V-A)
-    for req in requests:
-        loop.schedule(req.r + REQ_OVERHEAD_S, lambda r=req: node.submit(r))
-    loop.run()
-
-    missing = [r for r in requests if r.c is None]
-    assert not missing, f"{len(missing)} requests never completed"
-    return SimResult(
-        requests=requests,
-        cold_starts=pool.cold_starts - base_cold,
-        evictions=pool.evictions,
-        creations=pool.creations,
-        meta={"mode": mode, "policy": policy, "cores": cores},
-    )
+    ``backend`` selects the simulation engine: ``"reference"`` (the event
+    loop), ``"vectorized"`` (array fast path, ours mode only) or ``"scan"``
+    (batched jax.lax.scan variant).  A backend raises ``ValueError`` when it
+    does not support the scenario; the sweep engine's ``backend="auto"``
+    selector (``SweepSpec(backends=("auto",))``) falls back gracefully."""
+    be = get_backend(backend)
+    if not be.supports(mode=mode, policy=policy, warm=warm):
+        raise ValueError(
+            f"backend {be.name!r} does not support mode={mode!r} "
+            f"policy={policy!r} warm={warm!r}; use backend='reference' "
+            f"or backend='auto' in the sweep engine")
+    return be.simulate(requests, cores, policy=policy, mode=mode,
+                       memory_mb=memory_mb, container_mb=container_mb,
+                       warm=warm, kappa=kappa)

@@ -30,7 +30,7 @@ import os
 import sys
 import time
 from concurrent.futures import ProcessPoolExecutor
-from dataclasses import dataclass, field, fields
+from dataclasses import dataclass, field, fields, replace
 from typing import Callable, Sequence
 
 import numpy as np
@@ -45,7 +45,24 @@ from .workload import (
 
 # grid axes that identify a cell up to its seed (aggregation groups by these)
 GRID_FIELDS = ("policy", "mode", "assignment", "arrival", "intensity",
-               "cores", "nodes", "autoscale", "fail_at")
+               "cores", "nodes", "autoscale", "fail_at", "backend")
+
+# simulation-backend selectors accepted by SweepCell.backend; the SweepSpec
+# backends axis additionally accepts "cross-check" as sugar for
+# backends=("reference",) + validate="cross-check"
+BACKEND_CHOICES = ("reference", "vectorized", "scan", "auto")
+
+# per-cell agreement budget for cross-checked backends (relative); the
+# vectorized backend is exact, so any drift here is a real bug
+CROSS_CHECK_RTOL = 1e-2
+# metrics the cross-check compares (count-like metrics must match exactly
+# anyway; near-zero values use an absolute epsilon)
+CROSS_CHECK_KEYS = ("R_avg", "R_p50", "R_p75", "R_p95", "R_p99",
+                    "S_avg", "S_p50", "S_p95", "max_c", "cold", "n")
+
+
+class BackendMismatchError(AssertionError):
+    """Cross-check failed: a fast backend disagreed with the reference."""
 
 # metrics averaged across seeds in aggregate()
 METRIC_KEYS = ("R_avg", "R_p50", "R_p75", "R_p95", "R_p99",
@@ -73,6 +90,12 @@ class SweepCell:
     per_function: tuple[str, ...] = ()  # extra per-function metric columns
     trace_path: str | None = None       # for arrival == "trace"
     warm: bool = True
+    backend: str = "reference"          # simulation engine (BACKEND_CHOICES)
+    # validation flag, orthogonal to the backend identity: a cross-checked
+    # cell runs its own backend normally AND a counterpart backend, asserts
+    # agreement, and reports xcheck_err -- so sampled cells keep the exact
+    # key()/label() of their unsampled seed-group siblings
+    cross_check: bool = False
 
     def key(self) -> tuple:
         """Identity of the cell up to its seed (the aggregation group)."""
@@ -89,6 +112,8 @@ class SweepCell:
             parts.append("autoscale")
         if self.fail_at is not None:
             parts.append(f"fail{self.fail_at:g}")
+        if self.backend != "reference":
+            parts.append(self.backend)
         return "_".join(parts)
 
 
@@ -112,6 +137,13 @@ class SweepSpec:
     per_function: tuple[str, ...] = ()
     trace_path: str | None = None
     warm: bool = True
+    backends: Sequence[str] = ("reference",)
+    # validate="cross-check" re-runs sampled vectorized-eligible cells on
+    # BOTH backends and raises BackendMismatchError if any reported metric
+    # drifts beyond CROSS_CHECK_RTOL; validate_stride samples every k-th
+    # eligible cell identity (1 = all of them, whole seed-groups at a time)
+    validate: str | None = None
+    validate_stride: int = 1
     # prune the cartesian product (ragged grids, e.g. baseline only at n=4);
     # evaluated in the parent process, so any callable works
     cell_filter: Callable[[SweepCell], bool] | None = None
@@ -122,22 +154,62 @@ class SweepSpec:
         return [self.base_seed + s for s in self.seeds]
 
     def cells(self) -> list[SweepCell]:
+        if self.validate not in (None, "cross-check"):
+            raise ValueError(f"unknown validate mode {self.validate!r}; "
+                             "expected None or 'cross-check'")
+        validate = self.validate
+        backends: list[str] = []
+        for b in self.backends:
+            if b == "cross-check":      # axis sugar used by --backend flags
+                validate = "cross-check"
+                b = "reference"
+            if b not in BACKEND_CHOICES:
+                raise ValueError(f"unknown backend {b!r}; "
+                                 f"available: {BACKEND_CHOICES}")
+            if b not in backends:
+                backends.append(b)
         out = []
-        for (pol, mode, asg, arr, inten, c, n, auto, fail, seed) in \
+        for (pol, mode, asg, arr, inten, c, n, auto, fail, be, seed) in \
                 itertools.product(self.policies, self.modes, self.assignments,
                                   self.arrivals, self.intensities, self.cores,
                                   self.nodes, self.autoscale, self.failures,
-                                  self.seed_list()):
+                                  backends, self.seed_list()):
             cell = SweepCell(
                 policy=pol, mode=mode, assignment=asg, arrival=arr,
                 intensity=inten, cores=c, nodes=n, autoscale=auto,
                 fail_at=fail, seed=seed, duration_s=self.duration_s,
                 workload_cores=self.workload_cores,
                 per_function=self.per_function, trace_path=self.trace_path,
-                warm=self.warm,
+                warm=self.warm, backend=be,
             )
             if self.cell_filter is None or self.cell_filter(cell):
                 out.append(cell)
+        if validate == "cross-check":
+            stride = max(1, self.validate_stride)
+            # Cross-checking dual-runs a cell's own engine against the exact
+            # vectorized/reference counterpart (see run_cell), so the sampled
+            # axis value must resolve to one of those -- a scan-only axis
+            # would compare scan against nothing new (its float32 parity is
+            # covered by tests/test_fastpath.py instead).
+            compat = [b for b in backends
+                      if b in ("reference", "vectorized", "auto")]
+            if not compat:
+                raise ValueError(
+                    "validate='cross-check' validates the vectorized backend;"
+                    " include 'reference', 'vectorized' or 'auto' in backends"
+                    " (the scan backend is covered by its own parity tests)")
+            # Sample whole seed-groups (cell identities) of ONE backend axis
+            # value.  cross_check is a flag, not a backend identity, so the
+            # sampled cells keep exactly the key()/label() of their group.
+            sample_be = "reference" if "reference" in compat else compat[0]
+            groups: dict[tuple, list[int]] = {}
+            for i, cell in enumerate(out):
+                if _vectorized_eligible(cell) and cell.backend == sample_be:
+                    groups.setdefault(cell.key(), []).append(i)
+            for g, key in enumerate(groups):
+                if g % stride == 0:
+                    for i in groups[key]:
+                        out[i] = replace(out[i], cross_check=True)
         return out
 
 
@@ -166,6 +238,81 @@ def make_workload(cell: SweepCell) -> list[Request]:
                                 duration_s=cell.duration_s)
 
 
+def _vectorized_eligible(cell: SweepCell) -> bool:
+    """Can the cell run on the vectorized (ours-node) fast path?"""
+    mode = "baseline" if (cell.mode == "baseline"
+                          or cell.policy == "baseline") else "ours"
+    return (mode == "ours" and cell.nodes <= 1 and not cell.autoscale
+            and cell.fail_at is None)
+
+
+def _resolve_backend(cell: SweepCell, reqs, mode: str, policy: str) -> str:
+    """Map a backend *selector* to a concrete backend for this cell.
+
+    Explicit fast selectors degrade gracefully: a grid that mixes baseline
+    (reference-only) cells with ours cells can still be swept with
+    ``backends=("vectorized",)`` -- the stock-system cells simply stay on
+    the event loop.  ``simulate_single_node`` itself stays strict."""
+    want = cell.backend
+    if want not in BACKEND_CHOICES:
+        raise ValueError(f"unknown backend {want!r}; "
+                         f"available: {BACKEND_CHOICES}")
+    if want == "reference":
+        return "reference"
+    if not _vectorized_eligible(cell):
+        return "reference"
+    if want == "scan":
+        from .fastpath import scan_eligible
+        try:
+            import jax  # noqa: F401
+        except ImportError:
+            return "vectorized"
+        if scan_eligible(reqs, cell.cores, policy, mode=mode,
+                         warm=cell.warm):
+            return "scan"
+        return "vectorized"
+    return "vectorized"  # "auto" | "vectorized"
+
+
+def _cell_metrics(cell: SweepCell, done, cold, failures, backups,
+                  nodes_used) -> dict[str, float]:
+    s = summarize(done, per_function=bool(cell.per_function))
+    metrics: dict[str, float] = {
+        "R_avg": s.response_avg, "S_avg": s.stretch_avg,
+        "max_c": s.max_completion, "cold": float(cold), "n": float(s.n),
+        "failures": float(failures), "backups": float(backups),
+        "nodes_used": float(nodes_used),
+    }
+    for p, v in s.response_pct.items():
+        metrics[f"R_p{p}"] = v
+    for p, v in s.stretch_pct.items():
+        metrics[f"S_p{p}"] = v
+    for fn in cell.per_function:
+        sub = s.per_function.get(fn)
+        if sub is not None:
+            metrics[f"R_avg:{fn}"] = sub.response_avg
+            metrics[f"S_avg:{fn}"] = sub.stretch_avg
+    return metrics
+
+
+def _cross_check(cell: SweepCell, ref: dict[str, float],
+                 fast: dict[str, float], backend: str) -> float:
+    """Max relative disagreement over CROSS_CHECK_KEYS; raises on breach."""
+    worst = 0.0
+    for k in CROSS_CHECK_KEYS:
+        a, b = ref.get(k), fast.get(k)
+        if a is None or b is None:
+            continue
+        err = abs(a - b) / max(abs(a), abs(b), 1e-9)
+        worst = max(worst, err)
+        if err > CROSS_CHECK_RTOL:
+            raise BackendMismatchError(
+                f"backend {backend!r} disagrees with reference on "
+                f"{cell.label()} seed={cell.seed}: {k} {b!r} vs {a!r} "
+                f"(rel err {err:.2e} > {CROSS_CHECK_RTOL})")
+    return worst
+
+
 def run_cell(cell: SweepCell) -> dict[str, float]:
     """Run one scenario end-to-end; pure function of the cell (bit-identical
     metrics for identical cells, in any process)."""
@@ -181,8 +328,24 @@ def run_cell(cell: SweepCell) -> dict[str, float]:
     cold = 0
 
     if cell.nodes <= 1 and not cell.autoscale and cell.fail_at is None:
+        backend = _resolve_backend(cell, reqs, mode, policy)
         res = simulate_single_node(reqs, cores=cell.cores, policy=policy,
-                                   mode=mode, warm=cell.warm)
+                                   mode=mode, warm=cell.warm,
+                                   backend=backend)
+        if cell.cross_check and _vectorized_eligible(cell):
+            # dual-run the exact counterpart on the same burst (fresh
+            # objects) and assert metric agreement within the 1% budget
+            other = "vectorized" if backend == "reference" else "reference"
+            metrics = _cell_metrics(cell, res.requests, res.cold_starts,
+                                    0, 0, nodes_used)
+            other_res = simulate_single_node(
+                make_workload(cell), cores=cell.cores, policy=policy,
+                mode=mode, warm=cell.warm, backend=other)
+            other_m = _cell_metrics(cell, other_res.requests,
+                                    other_res.cold_starts, 0, 0, nodes_used)
+            metrics["xcheck_err"] = _cross_check(cell, metrics, other_m,
+                                                 other)
+            return metrics
         done, cold = res.requests, res.cold_starts
     elif mode == "baseline":
         if cell.fail_at is not None:
@@ -205,23 +368,29 @@ def run_cell(cell: SweepCell) -> dict[str, float]:
         failures, backups = res.failures, res.backups_issued
         nodes_used = res.nodes_used
 
-    s = summarize(done, per_function=bool(cell.per_function))
-    metrics: dict[str, float] = {
-        "R_avg": s.response_avg, "S_avg": s.stretch_avg,
-        "max_c": s.max_completion, "cold": float(cold), "n": float(s.n),
-        "failures": float(failures), "backups": float(backups),
-        "nodes_used": float(nodes_used),
-    }
-    for p, v in s.response_pct.items():
-        metrics[f"R_p{p}"] = v
-    for p, v in s.stretch_pct.items():
-        metrics[f"S_p{p}"] = v
-    for fn in cell.per_function:
-        sub = s.per_function.get(fn)
-        if sub is not None:
-            metrics[f"R_avg:{fn}"] = sub.response_avg
-            metrics[f"S_avg:{fn}"] = sub.stretch_avg
-    return metrics
+    return _cell_metrics(cell, done, cold, failures, backups, nodes_used)
+
+
+def run_cells_scan(cells: Sequence[SweepCell]) -> list[dict[str, float]]:
+    """Run a whole list of cells as ONE batched ``jax.lax.scan`` (padded
+    request tensor, cells vmapped) and return per-cell metrics in order.
+
+    Every cell must be in the scan-eligible regime (ours mode, single node,
+    always-warm -- see :func:`repro.core.fastpath.scan_eligible`); raises
+    ``ValueError`` otherwise.  Unlike :func:`run_sweep` this executes
+    in-process: the batch IS the parallelism."""
+    from .fastpath import simulate_cells_scan
+
+    batch = []
+    for cell in cells:
+        if not _vectorized_eligible(cell) or not cell.warm:
+            raise ValueError(f"cell {cell.label()} is not scan-eligible")
+        batch.append((make_workload(cell), cell.cores, cell.policy))
+    results = simulate_cells_scan(batch)
+    return [
+        _cell_metrics(cell, res.requests, res.cold_starts, 0, 0, cell.nodes)
+        for cell, res in zip(cells, results)
+    ]
 
 
 # ---------------------------------------------------------------------------
@@ -301,9 +470,15 @@ class SweepResult:
 
     def to_csv(self, path) -> None:
         rows = self.aggregate()
-        cols = list(rows[0].keys()) if rows else []
+        # union of columns in first-seen order: ragged grids carry metrics
+        # not every group has (xcheck_err, per-function columns, ...)
+        cols: list[str] = []
+        for r in rows:
+            for k in r:
+                if k not in cols:
+                    cols.append(k)
         with open(path, "w", newline="") as fh:
-            w = csv.DictWriter(fh, fieldnames=cols, extrasaction="ignore")
+            w = csv.DictWriter(fh, fieldnames=cols)
             w.writeheader()
             w.writerows(rows)
 

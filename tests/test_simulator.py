@@ -1,14 +1,21 @@
-"""Simulator behaviour tests: conservation laws + the paper's trends."""
+"""Simulator behaviour tests: conservation laws + the paper's trends +
+failure-injection determinism and lost-request accounting."""
 
 import numpy as np
 import pytest
 
 from repro.core import (
+    BaselineNodeSim,
+    EventLoop,
+    OursNodeSim,
+    SweepCell,
     generate_burst,
     generate_fairness_burst,
+    run_cell,
     simulate_single_node,
     summarize,
 )
+from repro.core.simulator import REQ_OVERHEAD_S
 
 
 def _run(cores, intensity, policy, mode, seed=0, **kw):
@@ -113,3 +120,72 @@ class TestPaperTrends:
         long_ = [r for r in reqs if r.fn == "dna-visualisation"][-5:]
         assert np.mean([r.priority for r in short]) < \
             np.mean([r.priority for r in long_])
+
+
+class TestFailureInjection:
+    """kill() mid-flight: deterministic under per-cell seeding, and every
+    request is accounted for (completed | lost | dropped-after-death)."""
+
+    KILL_AT = 6.0
+
+    def _run_with_kill(self, mode, seed):
+        reqs = generate_burst(cores=5, intensity=20, seed=seed)
+        loop = EventLoop()
+        warm = sorted({r.fn for r in reqs})
+        if mode == "ours":
+            node = OursNodeSim(loop, 5, policy="sept", warm_functions=warm)
+        else:
+            node = BaselineNodeSim(loop, 5, warm_functions=warm)
+        for req in reqs:
+            loop.schedule(req.r + REQ_OVERHEAD_S, lambda r=req: node.submit(r))
+        box = {}
+        loop.schedule(self.KILL_AT, lambda: box.setdefault("lost", node.kill()))
+        loop.run()
+        return reqs, node, box["lost"]
+
+    @pytest.mark.parametrize("mode", ["ours", "baseline"])
+    def test_every_request_accounted_for(self, mode):
+        reqs, node, lost = self._run_with_kill(mode, seed=0)
+        done_ids = {r.id for r in node.completed}
+        lost_ids = {r.id for r in lost}
+        # dropped: arrived after the crash, rejected at submit()
+        dropped_ids = {r.id for r in reqs} - done_ids - lost_ids
+        assert not done_ids & lost_ids
+        assert len(done_ids) + len(lost_ids) + len(dropped_ids) == len(reqs)
+        assert lost_ids, "nothing was in flight at the kill -- dead scenario"
+        assert all(r.c is None for r in lost)
+        assert all(r.r + REQ_OVERHEAD_S > self.KILL_AT
+                   for r in reqs if r.id in dropped_ids)
+
+    @pytest.mark.parametrize("mode", ["ours", "baseline"])
+    def test_kill_includes_midflight_work(self, mode):
+        """The kill must interrupt *running* calls, not only queued ones."""
+        reqs, node, lost = self._run_with_kill(mode, seed=0)
+        started = [r for r in lost if r.start is not None
+                   and r.start <= self.KILL_AT]
+        assert started, "expected at least one executing call to be lost"
+
+    @pytest.mark.parametrize("mode", ["ours", "baseline"])
+    def test_kill_deterministic(self, mode):
+        """Same seed -> identical completions and identical lost set
+        (request ids are a global counter, so compare by content)."""
+        r1, n1, l1 = self._run_with_kill(mode, seed=1)
+        r2, n2, l2 = self._run_with_kill(mode, seed=1)
+        key = lambda rs: sorted((r.fn, r.r, r.c) for r in rs)  # noqa: E731
+        assert key(n1.completed) == key(n2.completed)
+        assert sorted((r.fn, r.r) for r in l1) == \
+            sorted((r.fn, r.r) for r in l2)
+
+    def test_sweep_failure_cell_deterministic_and_recovers(self):
+        """Under the sweep engine's per-cell seeding the fail_at cell is a
+        pure function of the cell, and the pull cluster re-queues lost work
+        so nothing is silently dropped."""
+        cell = SweepCell(policy="fc", nodes=2, cores=5, intensity=20,
+                         fail_at=5.0, seed=7)
+        m1, m2 = run_cell(cell), run_cell(cell)
+        assert m1 == m2
+        assert m1["failures"] > 0
+        baseline = run_cell(SweepCell(policy="fc", nodes=2, cores=5,
+                                      intensity=20, seed=7))
+        assert m1["n"] == baseline["n"]   # lost requests were re-dispatched
+        assert m1["R_avg"] > baseline["R_avg"]  # but the failure cost time
