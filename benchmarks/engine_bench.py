@@ -1,26 +1,44 @@
 """Beyond-paper: the policies on the REAL JAX serving engine (tiny models),
-plus the simulation-backend speedup row.
+plus the simulation-backend speedup rows.
 
 Mixed cheap/heavy endpoints under a burst; SEPT/FC should cut mean response
 vs FIFO exactly as in the simulator -- but with actual XLA execution.
 
 The policy grid is declared as a SweepSpec like every simulator benchmark,
-but runs through a custom cell runner with ``workers=1``: XLA runtimes do
-not survive a fork, so these cells must execute in-process.
+and runs through a custom cell runner.  XLA runtimes do not survive a fork,
+so these cells execute in-process by default; ``--workers N`` fans them out
+over a **spawn**-based pool instead (``run_sweep(executor="spawn")``), each
+worker paying its own XLA warm-up but running concurrently.
 
 ``backend_speedup_rows`` times the simulation engines themselves on a
 high-intensity sweep grid (workload generation and metric aggregation are
 identical across backends and excluded): reference event loop vs the
 vectorized fast path (exact), plus the batched jax.lax.scan variant when
-JAX is importable."""
+JAX is importable.
 
+``cluster_speedup_rows`` is the cluster-scale version: a >=1k-cell
+nodes x intensity x policy x seed grid through the bucketed multi-node scan
+path (one XLA dispatch per padded bucket shape) against the reference
+event-loop Cluster, whose cost is estimated from a stratified cell sample.
+The scan wall is measured post-compile (a warm-up pass populates the bucket
+cache first); the cold wall and the bucket count are reported alongside."""
+
+import json
 import time
+from dataclasses import replace
 from functools import partial
 
 from .common import emit
 
-from repro.core import SweepCell, SweepSpec, run_sweep, simulate_single_node
-from repro.core.sweep import make_workload
+from repro.core import (
+    SweepCell,
+    SweepSpec,
+    run_cells_scan,
+    run_sweep,
+    scan_cache_stats,
+    simulate_single_node,
+)
+from repro.core.sweep import make_workload, run_cell
 
 
 def spec() -> SweepSpec:
@@ -78,6 +96,56 @@ def backend_speedup_rows(quick: bool = False,
              "derived": derived}]
 
 
+def cluster_speedup_spec(quick: bool = False) -> SweepSpec:
+    """The cluster-scale grid: nodes x intensity x all five policies x seeds
+    through the pull model (the paper's fig6 shape, scaled up).  Full mode is
+    1035 cells; quick is a 36-cell smoke grid for CI."""
+    if quick:
+        return SweepSpec(policies=("fifo", "sept", "fc"),
+                         nodes=(2, 4), cores=(8,), intensities=(20, 30),
+                         seeds=3, backends=("scan",))
+    return SweepSpec(policies=("fifo", "sept", "eect", "rect", "fc"),
+                     nodes=(2, 4, 8), cores=(8,), intensities=(30, 50, 70),
+                     seeds=23, backends=("scan",))
+
+
+def cluster_speedup_rows(quick: bool = False) -> list[dict]:
+    """Bucketed cluster-scan vs reference event loop on the cluster grid."""
+    try:
+        import jax  # noqa: F401
+    except ImportError:
+        return [{"name": "engine/cluster_scan_speedup", "us_per_call": 0.0,
+                 "derived": "skipped=no-jax"}]
+    cells = cluster_speedup_spec(quick).cells()
+
+    before = scan_cache_stats()            # other rows may have used the
+                                           # cache; report deltas, not totals
+    t0 = time.perf_counter()
+    run_cells_scan(cells)                  # compiles + runs (cold)
+    t_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    run_cells_scan(cells)                  # post-compile, cache hits only
+    t_scan = time.perf_counter() - t0
+
+    # reference cost from a stratified sample of the same grid (the full
+    # event-loop run would take ~half an hour -- that is the point)
+    stride = max(1, len(cells) // (8 if quick else 24))
+    sample = cells[::stride]
+    t0 = time.perf_counter()
+    for cell in sample:
+        run_cell(replace(cell, backend="reference", cross_check=False))
+    t_ref = (time.perf_counter() - t0) / len(sample) * len(cells)
+    stats = scan_cache_stats()
+    derived = (f"ref_est_s={t_ref:.1f};scan_s={t_scan:.2f};"
+               f"scan_cold_s={t_cold:.2f};speedup={t_ref / t_scan:.1f}x;"
+               f"cells={len(cells)};ref_sample={len(sample)};"
+               f"buckets={stats['misses'] - before['misses']};"
+               f"cache_hits={stats['hits'] - before['hits']}")
+    return [{"name": "engine/cluster_scan_speedup",
+             "us_per_call": t_scan / len(cells) * 1e6,
+             "derived": derived}]
+
+
 def _engine_cell(cell: SweepCell, quick: bool = False) -> dict:
     """One policy on the live engine; returns sweep-shaped metrics."""
     from repro.configs import get_config
@@ -107,24 +175,43 @@ def _engine_cell(cell: SweepCell, quick: bool = False) -> dict:
             "n": float(s["n"])}
 
 
-def run(quick: bool = False, backend: str = "vectorized") -> list[dict]:
-    result = run_sweep(spec(), workers=1,
-                       runner=partial(_engine_cell, quick=quick))
+ROW_GROUPS = ("all", "engine", "backend", "cluster")
+
+
+def run(quick: bool = False, backend: str = "vectorized",
+        workers: int | None = None, rows_group: str = "all") -> list[dict]:
     rows = []
-    for cr in result.results:
-        m = cr.metrics
-        rows.append({
-            "name": f"engine/{cr.cell.policy}",
-            "us_per_call": m["R_avg"] * 1e6,
-            "derived": (f"R_p50={m['R_p50']*1e3:.0f}ms;"
-                        f"R_p95={m['R_p95']*1e3:.0f}ms;n={m['n']:.0f}"),
-        })
-    rows.extend(backend_speedup_rows(quick, backend=backend))
+    if rows_group in ("all", "engine"):
+        # XLA engines cannot fork; workers>1 uses a spawn pool so the
+        # cells run concurrently, each worker with its own runtime
+        result = run_sweep(spec(), workers=workers or 1,
+                           runner=partial(_engine_cell, quick=quick),
+                           executor="spawn" if (workers or 1) > 1 else None)
+        for cr in result.results:
+            m = cr.metrics
+            rows.append({
+                "name": f"engine/{cr.cell.policy}",
+                "us_per_call": m["R_avg"] * 1e6,
+                "derived": (f"R_p50={m['R_p50']*1e3:.0f}ms;"
+                            f"R_p95={m['R_p95']*1e3:.0f}ms;n={m['n']:.0f};"
+                            f"workers={result.workers}"),
+            })
+    if rows_group in ("all", "backend"):
+        rows.extend(backend_speedup_rows(quick, backend=backend))
+    if rows_group in ("all", "cluster"):
+        rows.extend(cluster_speedup_rows(quick))
     return rows
 
 
-def main(quick: bool = False, backend: str = "vectorized") -> None:
-    emit(run(quick, backend=backend))
+def main(quick: bool = False, backend: str = "vectorized",
+         workers: int | None = None, rows_group: str = "all",
+         json_path: str | None = None) -> None:
+    rows = run(quick, backend=backend, workers=workers,
+               rows_group=rows_group)
+    emit(rows)
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(rows, fh, indent=1)
 
 
 if __name__ == "__main__":
@@ -134,5 +221,13 @@ if __name__ == "__main__":
     ap.add_argument("--backend", default="vectorized",
                     choices=("vectorized", "scan"),
                     help="fast backend for the speedup row")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="spawn-based pool size for the engine cells "
+                         "(XLA cannot fork; >1 uses executor='spawn')")
+    ap.add_argument("--rows", default="all", choices=ROW_GROUPS,
+                    help="which benchmark rows to run")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the rows as a JSON artifact")
     args = ap.parse_args()
-    main(args.quick, backend=args.backend)
+    main(args.quick, backend=args.backend, workers=args.workers,
+         rows_group=args.rows, json_path=args.json)

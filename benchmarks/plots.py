@@ -1,0 +1,209 @@
+"""Sweep-native plotting: paper-style figures straight from sweep artifacts.
+
+Renders fig5/fig6-style figures directly from a :class:`SweepResult`
+artifact (the CSV/JSON written by ``SweepResult.to_csv/to_json``) or from
+in-memory aggregated rows, so any sweep -- the 270-cell example grid, a 10k
+cluster grid, CI's cross-check artifact -- can be turned into the paper's
+plots without re-running the simulation:
+
+* **policy curves** (fig5-style): a metric (R_avg, R_p95, S_avg, ...) vs
+  intensity, one line per policy, one panel per (arrival, cores) slice.
+* **node frontier** (fig6-style): the metric vs node count, one line per
+  mode/policy series -- the "3 machines with scheduling beat 4 stock
+  machines" claim as a frontier curve.
+
+Usage::
+
+    python -m benchmarks.plots sweep.csv --out plots/
+    python -m benchmarks.plots sweep.json --out plots/ --metric R_p95
+    python examples/sweep_grid.py --quick --plot plots/   # end-to-end
+"""
+
+from __future__ import annotations
+
+import csv
+import json
+import sys
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parent.parent / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+# numeric columns in aggregate rows (everything else stays a string)
+_STR_COLS = {"policy", "mode", "assignment", "arrival", "backend", "label"}
+
+
+def _coerce(key: str, val):
+    if val is None or val == "":
+        return None
+    if key in _STR_COLS:
+        return val
+    try:
+        f = float(val)
+    except (TypeError, ValueError):
+        return val
+    return f
+
+
+def load_rows(path: str | Path) -> list[dict]:
+    """Aggregated sweep rows from a ``SweepResult`` CSV or JSON artifact."""
+    path = Path(path)
+    if path.suffix == ".json":
+        payload = json.loads(path.read_text())
+        if isinstance(payload, list):        # bare row list (engine_bench)
+            rows = payload
+        else:
+            rows = payload.get("aggregate", [])
+    else:
+        with open(path, newline="") as fh:
+            rows = list(csv.DictReader(fh))
+    out = [{k: _coerce(k, v) for k, v in row.items()} for row in rows]
+    if not out:
+        raise ValueError(f"no aggregated sweep rows in {path}")
+    return out
+
+
+def _fig(n_panels: int):
+    import matplotlib
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    cols = min(n_panels, 3)
+    rows = (n_panels + cols - 1) // cols
+    fig, axes = plt.subplots(rows, cols, figsize=(4.6 * cols, 3.4 * rows),
+                             squeeze=False)
+    return fig, [ax for row in axes for ax in row]
+
+
+def _series_sorted(rows, x_key):
+    return sorted(rows, key=lambda r: r[x_key])
+
+
+def plot_policy_curves(rows: list[dict], metric: str = "R_avg",
+                       out: str | Path = "sweep_policies.png") -> Path:
+    """fig5-style: ``metric`` vs intensity, one line per policy, a panel per
+    (arrival, cores, nodes) slice present in the artifact."""
+    panels: dict[tuple, list[dict]] = {}
+    for r in rows:
+        if r.get("intensity") is None or r.get(metric) is None:
+            continue
+        key = (r.get("arrival", "uniform"), r.get("cores"), r.get("nodes"))
+        panels.setdefault(key, []).append(r)
+    if not panels:
+        raise ValueError(f"artifact has no (intensity, {metric}) rows")
+    fig, axes = _fig(len(panels))
+    for ax, (key, prows) in zip(axes, sorted(panels.items(),
+                                             key=lambda kv: str(kv[0]))):
+        arrival, cores, nodes = key
+        by_policy: dict[str, list[dict]] = {}
+        for r in prows:
+            by_policy.setdefault(str(r.get("policy")), []).append(r)
+        for pol, srows in sorted(by_policy.items()):
+            pts = _series_sorted(srows, "intensity")
+            ax.plot([p["intensity"] for p in pts], [p[metric] for p in pts],
+                    marker="o", markersize=3, linewidth=1.4, label=pol)
+        title = f"{arrival}, c={cores:g}"
+        if nodes and nodes != 1:
+            title += f", n={nodes:g}"
+        ax.set_title(title, fontsize=10)
+        ax.set_xlabel("intensity")
+        ax.set_ylabel(f"{metric} (s)" if metric.startswith("R") else metric)
+        ax.grid(alpha=0.3)
+        ax.legend(fontsize=8)
+    for ax in axes[len(panels):]:
+        ax.set_visible(False)
+    fig.tight_layout()
+    fig.savefig(out, dpi=120)
+    import matplotlib.pyplot as plt
+    plt.close(fig)
+    return Path(out)
+
+
+def plot_node_frontier(rows: list[dict], metric: str = "R_avg",
+                       out: str | Path = "sweep_nodes.png") -> Path:
+    """fig6-style: ``metric`` vs node count, one line per mode/policy series
+    (per arrival/intensity slice) -- fewer-machines-same-tail frontiers."""
+    panels: dict[tuple, list[dict]] = {}
+    for r in rows:
+        if r.get("nodes") is None or r.get(metric) is None:
+            continue
+        key = (r.get("arrival", "uniform"), r.get("intensity"))
+        panels.setdefault(key, []).append(r)
+    panels = {k: v for k, v in panels.items()
+              if len({r["nodes"] for r in v}) > 1}
+    if not panels:
+        raise ValueError(f"artifact has no multi-node (nodes, {metric}) rows")
+    fig, axes = _fig(len(panels))
+    for ax, (key, prows) in zip(axes, sorted(panels.items(),
+                                             key=lambda kv: str(kv[0]))):
+        arrival, intensity = key
+        series: dict[str, list[dict]] = {}
+        for r in prows:
+            name = f"{r.get('mode', 'ours')}-{r.get('policy')}"
+            series.setdefault(name, []).append(r)
+        for name, srows in sorted(series.items()):
+            pts = _series_sorted(srows, "nodes")
+            ax.plot([p["nodes"] for p in pts], [p[metric] for p in pts],
+                    marker="s", markersize=3.5, linewidth=1.4, label=name)
+        ax.set_title(f"{arrival}, v={intensity:g}", fontsize=10)
+        ax.set_xlabel("nodes")
+        ax.set_ylabel(f"{metric} (s)" if metric.startswith("R") else metric)
+        ax.grid(alpha=0.3)
+        ax.legend(fontsize=8)
+    for ax in axes[len(panels):]:
+        ax.set_visible(False)
+    fig.tight_layout()
+    fig.savefig(out, dpi=120)
+    import matplotlib.pyplot as plt
+    plt.close(fig)
+    return Path(out)
+
+
+def render_rows(rows: list[dict], outdir: str | Path,
+                metrics: tuple[str, ...] = ("R_avg",)) -> list[Path]:
+    """Render every figure the artifact supports: policy curves when an
+    intensity axis exists, node frontiers when a nodes axis exists."""
+    outdir = Path(outdir)
+    outdir.mkdir(parents=True, exist_ok=True)
+    written: list[Path] = []
+    for metric in metrics:
+        try:
+            written.append(plot_policy_curves(
+                rows, metric, outdir / f"policies_{metric}.png"))
+        except ValueError:
+            pass
+        try:
+            written.append(plot_node_frontier(
+                rows, metric, outdir / f"nodes_{metric}.png"))
+        except ValueError:
+            pass
+    if not written:
+        raise ValueError(
+            f"artifact supports none of the figures for metrics {metrics} "
+            "(needs an intensity or nodes axis)")
+    return written
+
+
+def render(path: str | Path, outdir: str | Path,
+           metrics: tuple[str, ...] = ("R_avg",)) -> list[Path]:
+    """Load a sweep artifact and render its figures into ``outdir``."""
+    return render_rows(load_rows(path), outdir, metrics)
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="render fig5/fig6-style figures from a sweep artifact")
+    ap.add_argument("artifact", help="SweepResult .csv or .json")
+    ap.add_argument("--out", default="plots", help="output directory")
+    ap.add_argument("--metric", action="append", default=None,
+                    help="metric column(s) to plot (default: R_avg)")
+    args = ap.parse_args()
+    metrics = tuple(args.metric) if args.metric else ("R_avg",)
+    for p in render(args.artifact, args.out, metrics):
+        print(f"wrote {p}")
+
+
+if __name__ == "__main__":
+    main()

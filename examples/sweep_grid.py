@@ -8,6 +8,7 @@ experiment the paper runs per table -- here it is one declarative spec.
 Usage:
     PYTHONPATH=src python examples/sweep_grid.py [--quick] [--workers N]
                                                  [--csv out.csv] [--json out.json]
+                                                 [--plot DIR]
 """
 
 import argparse
@@ -16,6 +17,7 @@ import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 from repro.core import SweepSpec, run_sweep  # noqa: E402
 
@@ -48,6 +50,8 @@ def main() -> None:
     ap.add_argument("--workers", type=int, default=None)
     ap.add_argument("--csv", default=None)
     ap.add_argument("--json", default=None)
+    ap.add_argument("--plot", default=None, metavar="DIR",
+                    help="render fig5-style figures from the sweep into DIR")
     ap.add_argument("--backend", default="reference",
                     help="simulation backend: reference|vectorized|scan|"
                          "auto|cross-check")
@@ -99,6 +103,11 @@ def main() -> None:
     if args.json:
         result.to_json(args.json)
         print(f"wrote {args.json}")
+    if args.plot:
+        from benchmarks.plots import render_rows
+        for p in render_rows(result.aggregate(), args.plot,
+                             metrics=("R_avg", "R_p95")):
+            print(f"wrote {p}")
 
 
 if __name__ == "__main__":

@@ -33,8 +33,13 @@ from .estimator import RuntimeEstimator
 from .fastpath import (
     ScanBackend,
     VectorizedBackend,
+    cluster_scan_eligible,
+    scan_cache_clear,
+    scan_cache_stats,
     scan_eligible,
     simulate_cells_scan,
+    simulate_cluster_cells_scan,
+    simulate_cluster_scan,
     simulate_ours_vectorized,
 )
 from .metrics import Summary, merge_summaries, summarize, summarize_arrays
@@ -54,7 +59,15 @@ from .simulator import (
     register_backend,
     simulate_single_node,
 )
-from .cluster import Cluster, ClusterConfig, simulate_baseline_cluster, simulate_cluster
+from .cluster import (
+    Cluster,
+    ClusterConfig,
+    home_invoker_index,
+    least_loaded_index,
+    most_free_index,
+    simulate_baseline_cluster,
+    simulate_cluster,
+)
 from .sweep import (
     BACKEND_CHOICES,
     BackendMismatchError,
@@ -71,6 +84,7 @@ from .traces import (
     load_azure_trace,
     requests_from_trace,
     stable_hash,
+    tile_trace,
 )
 from .workload import (
     ARRIVAL_KINDS,
@@ -127,29 +141,38 @@ __all__ = [
     "SweepSpec",
     "VectorizedBackend",
     "available_backends",
+    "cluster_scan_eligible",
     "diurnal_arrivals",
     "generate_burst",
     "generate_fairness_burst",
     "generate_trace_burst",
     "generate_trace_requests",
     "get_backend",
+    "home_invoker_index",
+    "least_loaded_index",
     "load_azure_trace",
     "make_policy",
     "merge_summaries",
     "mmpp_arrivals",
+    "most_free_index",
     "poisson_arrivals",
     "register_backend",
     "requests_from_trace",
     "run_cell",
     "run_cells_scan",
     "run_sweep",
+    "scan_cache_clear",
+    "scan_cache_stats",
     "scan_eligible",
     "simulate_baseline_cluster",
     "simulate_cells_scan",
     "simulate_cluster",
+    "simulate_cluster_cells_scan",
+    "simulate_cluster_scan",
     "simulate_ours_vectorized",
     "simulate_single_node",
     "stable_hash",
     "summarize",
     "summarize_arrays",
+    "tile_trace",
 ]

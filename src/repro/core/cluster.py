@@ -41,6 +41,44 @@ from .simulator import (
 )
 
 
+# ---------------------------------------------------------------------------
+# routing decisions as pure functions
+# ---------------------------------------------------------------------------
+# The controller's load-balancing choices are kept as standalone functions of
+# plain sequences so the scan backend (core/fastpath.py) replicates exactly
+# these rules in array form inside its scan step; the Cluster methods below
+# and the tests both call them, keeping the two implementations honest.
+
+def least_loaded_index(loads) -> int:
+    """Push balancer: the least-loaded node (busy + queued), first on ties."""
+    best = 0
+    for i, v in enumerate(loads):
+        if v < loads[best]:
+            best = i
+    return best
+
+
+def most_free_index(free_slots) -> int:
+    """Pull dispatch: the invoker with the most free slots, first on ties."""
+    best = 0
+    for i, v in enumerate(free_slots):
+        if v > free_slots[best]:
+            best = i
+    return best
+
+
+def home_invoker_index(fn: str, free_slots) -> int:
+    """OpenWhisk home invoker: CRC32 the action name, walk forward from the
+    home node to the first one with a free slot, else stay home."""
+    k = len(free_slots)
+    start = stable_hash(fn) % k
+    for step in range(k):
+        cand = (start + step) % k
+        if free_slots[cand] > 0:
+            return cand
+    return start
+
+
 @dataclass
 class ClusterConfig:
     nodes: int = 4
@@ -127,17 +165,12 @@ class Cluster:
             self._rr = (self._rr + 1) % len(alive)
             return alive[self._rr]
         if self.cfg.lb == "home":
-            # OpenWhisk-style home invoker: hash the action, walk forward on
-            # saturation.  CRC32, not builtin hash(): per-interpreter hash
-            # salting would make sweep cells non-deterministic across runs.
-            start = stable_hash(req.fn) % len(alive)
-            for k in range(len(alive)):
-                cand = alive[(start + k) % len(alive)]
-                if cand.free_slots > 0:
-                    return cand
-            return alive[start]
-        # least_loaded
-        return min(alive, key=lambda n: n.load)
+            # OpenWhisk-style home invoker (CRC32, not builtin hash():
+            # per-interpreter salting would make sweep cells
+            # non-deterministic across runs)
+            return alive[home_invoker_index(
+                req.fn, [n.free_slots for n in alive])]
+        return alive[least_loaded_index([n.load for n in alive])]
 
     # pull model -----------------------------------------------------------------
     def _pull_round(self) -> None:
@@ -150,7 +183,7 @@ class Cluster:
             if not free:
                 return
             # rank queue by the node policy (same formula, controller history)
-            node = max(free, key=lambda n: n.free_slots)
+            node = free[most_free_index([n.free_slots for n in free])]
             best_i = min(
                 range(len(self._global_queue)),
                 key=lambda i: node.scheduler.policy.priority(
@@ -281,8 +314,53 @@ def simulate_cluster(
     policy: str = "fc",
     assignment: str = "pull",
     warm: bool = True,
+    backend: str = "reference",
     **kwargs,
 ) -> SimResult:
+    """Run one burst on an N-node cluster.
+
+    ``backend`` selects the engine: ``"reference"`` (the event-loop
+    :class:`Cluster` above), ``"scan"`` (the batched multi-node
+    ``jax.lax.scan`` kernel -- always-warm regime only, raises ``ValueError``
+    when the scenario is outside it) or ``"auto"`` (scan where eligible,
+    reference elsewhere).  Scan eligibility additionally requires default
+    fault/straggler/autoscaler settings -- any extra ``kwargs`` beyond
+    ``lb``/``memory_mb``/``container_mb`` force the reference path."""
+    if backend not in ("reference", "scan", "auto"):
+        raise ValueError(f"unknown cluster backend {backend!r}; "
+                         "available: ('reference', 'scan', 'auto')")
+    if backend in ("scan", "auto"):
+        from .fastpath import (
+            CLUSTER_CONTAINER_MB,
+            CLUSTER_MEMORY_MB,
+            cluster_scan_eligible,
+            simulate_cluster_scan,
+        )
+        lb = kwargs.get("lb", "least_loaded")
+        memory_mb = kwargs.get("memory_mb", CLUSTER_MEMORY_MB)
+        container_mb = kwargs.get("container_mb", CLUSTER_CONTAINER_MB)
+        extra = set(kwargs) - {"lb", "memory_mb", "container_mb"}
+        try:
+            import jax  # noqa: F401
+            have_jax = True
+        except ImportError:
+            have_jax = False
+        eligible = (have_jax and not extra and cluster_scan_eligible(
+            requests, nodes, cores_per_node, policy, assignment=assignment,
+            lb=lb, warm=warm, memory_mb=memory_mb,
+            container_mb=container_mb))
+        if eligible:
+            return simulate_cluster_scan(
+                requests, nodes, cores_per_node, policy,
+                assignment=assignment, lb=lb, memory_mb=memory_mb,
+                container_mb=container_mb)
+        if backend == "scan":
+            raise ValueError(
+                "scan cluster backend requires jax and the always-warm ours "
+                f"regime with default fault settings (policy={policy!r}, "
+                f"nodes={nodes}, cores={cores_per_node}, "
+                f"assignment={assignment!r}); use backend='auto' to fall "
+                "back to the reference event loop")
     cfg = ClusterConfig(
         nodes=nodes, cores_per_node=cores_per_node, policy=policy,
         assignment=assignment, **kwargs,
@@ -314,13 +392,8 @@ def simulate_baseline_cluster(
     ]
 
     def route(req: Request) -> None:
-        start = stable_hash(req.fn) % nodes
-        for k in range(nodes):
-            cand = workers[(start + k) % nodes]
-            if cand.free_slots > 0:
-                cand.submit(req)
-                return
-        workers[start].submit(req)
+        workers[home_invoker_index(
+            req.fn, [w.free_slots for w in workers])].submit(req)
 
     for req in requests:
         loop.schedule(req.r + REQ_OVERHEAD_S, lambda r=req: route(r))

@@ -17,14 +17,26 @@ policies) in array form:
   decision-for-decision (same priorities, same container choices, same LRU
   eviction order, same event tie-breaking), so metrics agree to the bit --
   including cold starts, tight-memory eviction and ``warm=False`` runs.
-* :class:`ScanBackend` / :func:`simulate_cells_scan` -- a ``jax.lax.scan``
-  variant that runs a whole batch of cells as one scan over a padded request
-  tensor (one event per step, cells vmapped).  It assumes the *always-warm*
-  regime -- every function has ``cores`` warm containers after warm-up, so
-  the pool never cold-starts or evicts -- which holds for the default 32 GB
-  node up to 10 cores (see :func:`scan_eligible`).  Arithmetic is float32 on
-  accelerators, so agreement with the reference is within rounding (well
-  inside the 1% cross-check budget), not bitwise.
+* :class:`ScanBackend` / :func:`simulate_cells_scan` /
+  :func:`simulate_cluster_cells_scan` -- a ``jax.lax.scan`` variant that runs
+  a whole batch of cells as one scan over padded request tensors (one event
+  per step, cells vmapped).  The kernel is **multi-node**: slot occupancy and
+  management-channel clocks carry a node axis, and the per-event dispatch
+  computes the cluster routing decision (pull most-free-slots, push
+  least-loaded / home-invoker) inside the scan step, so an entire N-node
+  cluster cell is one scan and a whole nodes x intensity x policy grid is a
+  handful of bucketed XLA dispatches.  It assumes the *always-warm* regime --
+  every function has ``cores`` warm containers after warm-up, so the pool
+  never cold-starts or evicts -- which holds for the default 32 GB node up to
+  10 cores (see :func:`scan_eligible`) and the cluster's 40 GB nodes up to
+  ~13 (see :func:`cluster_scan_eligible`).  Arithmetic is float32, so
+  agreement with the reference is within rounding for single nodes (~1e-6)
+  and within the documented cluster tolerance for clusters (near-tie
+  orderings can flip; see ``repro.core.sweep.CLUSTER_XCHECK_RTOL``).
+
+Compilations are cached per padded bucket shape (powers of two over requests
+x nodes x slots x functions x batch; :func:`scan_cache_stats`), so repeated
+``run_sweep`` calls pay one XLA compile per bucket per process.
 
 The baseline (stock OpenWhisk) node is processor-sharing with state-dependent
 rates; it stays on the reference backend (``supports`` says no and the sweep
@@ -36,7 +48,7 @@ from __future__ import annotations
 import heapq
 from collections import deque
 from dataclasses import dataclass
-from functools import lru_cache
+from functools import partial
 
 import numpy as np
 
@@ -408,8 +420,9 @@ class VectorizedBackend:
 
     name = "vectorized"
 
-    def supports(self, *, mode: str, policy: str, warm: bool) -> bool:
-        return mode == "ours" and policy in POLICY_NAMES
+    def supports(self, *, mode: str, policy: str, warm: bool,
+                 nodes: int = 1, assignment: str = "pull") -> bool:
+        return mode == "ours" and policy in POLICY_NAMES and nodes <= 1
 
     def simulate(
         self,
@@ -447,6 +460,28 @@ _POLICY_COEF = {
     "fc":   (0.0, 0.0, 0.0, 1.0),
 }
 
+# Pull-model coefficients differ in two places from the frozen-at-enqueue
+# family above, both faithful to the reference Cluster semantics:
+#  * fifo -- the global queue is ranked at pull time when r' is still unset,
+#    so the reference degenerates to queue insertion order; ranking by the
+#    (static) controller receive time is the same order without the all-equal
+#    ties.
+#  * eect -- "now + E[p]" shares the same `now` across every queued call, so
+#    the ranking is identical to SEPT's; we drop the common term.
+_PULL_COEF = {
+    "fifo": (1.0, 0.0, 0.0, 0.0),
+    "sept": (0.0, 0.0, 1.0, 0.0),
+    "eect": (0.0, 0.0, 1.0, 0.0),
+    "rect": (0.0, 1.0, 1.0, 0.0),
+    "fc":   (0.0, 0.0, 0.0, 1.0),
+}
+
+# ClusterConfig defaults, mirrored here so scan eligibility is judged against
+# the same node sizing the reference cluster uses (tests assert they agree;
+# cluster.py is only imported lazily to keep this module importable alone)
+CLUSTER_MEMORY_MB = 40 * 1024
+CLUSTER_CONTAINER_MB = 128
+
 
 def scan_eligible(
     requests: list[Request],
@@ -470,200 +505,568 @@ def scan_eligible(
     return all(len(pool.free.get(fn, ())) >= cores for fn in fns)
 
 
-def _scan_one_cell(t_arr, fnid, p, cost, prev, cnt, coef, cores, ring0,
-                   rsum0, rlen0, rpos0, n_slots, window):
-    """Single-cell event scan; vmapped over the batch by the caller."""
+def _scan_cell_kernel(t_arr, fnid, p, cost, cnt, home0, coef, cores, nodes,
+                      route, ring0, rsum0, rlen0, rpos0, cumf, fn_ev,
+                      *, n_nodes, n_slots, window, freeze, use_fc,
+                      horizon):
+    """One cell's event scan over a whole **cluster**: slot-occupancy and
+    channel clocks carry a node axis, and the per-event dispatch includes the
+    routing decision.  vmapped over the batch by the caller.
+
+    Two static regimes share the body:
+
+    * ``freeze=True`` -- single-node and push-assignment semantics: the
+      priority is computed once at arrival from the *routed node's* estimator
+      state (rings/prev-arrival are ``(n_nodes, F)``), and each event only
+      dispatches on the node it touched.  ``route`` selects the push balancer
+      per cell: 0 = least-loaded (min busy+queued, first on ties), 1 = home
+      invoker (``home0`` carries the per-request CRC32 start index; walk
+      forward to the first node with a free slot).
+    * ``freeze=False`` -- the pull model: queued calls are re-ranked at every
+      pull from the *controller's* estimator (rings are ``(1, F)`` and start
+      empty, exactly like the reference controller), the dispatch node is the
+      one with the most free slots, and the FC window count is reconstructed
+      exactly from the static arrival stream (``cumf[k, f]`` = calls of f
+      among the first k arrivals, so #(f, (now-T, now]) = cumf[a] - cumf[k0]
+      with k0 found by searchsorted).
+
+      The global best-of-queue is found in O(F), not O(n): a pull-time
+      priority is a per-*function* value (every queued call of f shares
+      est/prev/count, and the FIFO coefficient orders a function's calls by
+      arrival), so each function's queue is the contiguous tail of its static
+      arrival sequence ``fn_ev[f]`` and the reference's argmin over the whole
+      queue equals the argmin over the F queue *heads*, with the first-index
+      tie-break preserved by taking the smallest head event index among the
+      minimum-priority functions.
+    """
     import jax
     import jax.numpy as jnp
 
     n = t_arr.shape[0] - 1           # t_arr carries a trailing +inf sentinel
     inf = jnp.float32(jnp.inf)
+    node_ids = jnp.arange(n_nodes)
+    slot_ids = jnp.arange(n_slots)
+    fn_ids_ax = jnp.arange(ring0.shape[1])
+    win_ids = jnp.arange(window)
 
+    # XLA's CPU scatter runs a slow generic per-element path, so every
+    # fixed-size state update below is a dense one-hot ``where`` instead of
+    # an ``.at[]`` scatter -- the masks are tiny ((F,), (nodes, slots), ...)
+    # and the elementwise chains fuse into a handful of kernels per step.
     def step(state, _):
-        (ai, busy, chan_free, pending, fin_s, idx_s,
-         ring, rsum, rlen, rpos, start, finish, prio) = state
+        (ai, pend, fprio, node_of, head, fin_s, idx_s,
+         busy, qn, chan, ring, rsum, rlen, rpos, last_t, prev_t, narr) = state
+
         t_a = t_arr[ai]
-        t_c = jnp.min(fin_s)
+        flat = fin_s.reshape(-1)
+        kflat = jnp.argmin(flat)
+        t_c = flat[kflat]
         arrival = t_a <= t_c         # arrivals beat completions on ties
         none_left = jnp.isinf(t_a) & jnp.isinf(t_c)
         now = jnp.minimum(t_a, t_c)
+        do_arr = arrival & ~none_left
+        do_comp = ~arrival & ~none_left
 
-        # -- arrival: compute the (frozen) priority, join the queue
+        # -- completion: free the slot, feed the estimator ring -------------
+        kn = kflat // n_slots
+        ks = kflat % n_slots
+        j_done = idx_s[kn, ks]
+        f_done = fnid[j_done]
+        en_c = kn if freeze else 0   # which estimator observed it
+        m_en = (jnp.arange(ring.shape[0]) == en_c)
+        m_fd = (fn_ids_ax == f_done)
+        m_cf = (m_en[:, None] & m_fd[None, :]) & do_comp     # (NE, F)
+        pos = rpos[en_c, f_done]
+        v = p[j_done]
+        old = ring[en_c, f_done, pos]
+        full = rlen[en_c, f_done] == window
+        rsum = jnp.where(m_cf, rsum + v - jnp.where(full, old, 0.0), rsum)
+        ring = jnp.where(m_cf[:, :, None] & (win_ids == pos), v, ring)
+        rlen = jnp.where(m_cf & ~full, rlen + 1, rlen)
+        rpos = jnp.where(m_cf, (rpos + 1) % window, rpos)
+        m_kn = (node_ids == kn) & do_comp
+        busy = jnp.where(m_kn, busy - 1, busy)
+        fin_s = jnp.where(m_kn[:, None] & (slot_ids == ks), inf, fin_s)
+
+        # -- arrival: route (freeze) / enqueue, observe the estimator -------
         i = jnp.minimum(ai, n)
         f_i = fnid[i]
-        est_i = jnp.where(rlen[f_i] > 0,
-                          rsum[f_i] / jnp.maximum(rlen[f_i], 1), 0.0)
-        prio_i = (coef[0] * t_a + coef[1] * prev[i]
-                  + (coef[2] + coef[3] * cnt[i]) * est_i)
-        do_arr = arrival & ~none_left
-        pending = pending.at[i].set(jnp.where(do_arr, prio_i, pending[i]))
-        prio = prio.at[i].set(jnp.where(do_arr, prio_i, prio[i]))
-        ai = ai + do_arr
+        if freeze:
+            real = node_ids < nodes
+            # push least-loaded: min busy+queued over nodes, first on ties
+            load = jnp.where(real, busy + qn, jnp.int32(2 ** 30))
+            k_ll = jnp.argmin(load)
+            # push home invoker: hash start, walk to the first free node
+            free_n = (busy < cores) & real
+            walk = (home0[i] + node_ids) % jnp.maximum(nodes, 1)
+            wfree = free_n[walk] & real
+            k_home = jnp.where(jnp.any(wfree), walk[jnp.argmax(wfree)],
+                               home0[i])
+            k_arr = jnp.where(route == 1, k_home, k_ll)
+        else:
+            k_arr = jnp.int32(0)
+        en_a = k_arr if freeze else 0
+        first = narr[en_a, f_i] == 0
+        prev_used = jnp.where(first, t_a, last_t[en_a, f_i])
+        m_ea = (jnp.arange(ring.shape[0]) == en_a)
+        m_af = (m_ea[:, None] & (fn_ids_ax == f_i)[None, :]) & do_arr
+        prev_t = jnp.where(m_af, prev_used, prev_t)
+        last_t = jnp.where(m_af, t_a, last_t)
+        narr = jnp.where(m_af, narr + 1, narr)
+        qn = jnp.where((node_ids == k_arr) & do_arr, qn + 1, qn)
+        ai = ai + do_arr.astype(jnp.int32)
+        if freeze:
+            est_i = jnp.where(rlen[en_a, f_i] > 0,
+                              rsum[en_a, f_i]
+                              / jnp.maximum(rlen[en_a, f_i], 1), 0.0)
+            prio_i = (coef[0] * t_a + coef[1] * prev_used
+                      + (coef[2] + coef[3] * cnt[i]) * est_i)
+            pend = pend.at[i].set(jnp.where(do_arr, True, pend[i]))
+            fprio = fprio.at[i].set(jnp.where(do_arr, prio_i, fprio[i]))
+            node_of = node_of.at[i].set(jnp.where(do_arr, k_arr, node_of[i]))
 
-        # -- completion: free the slot, feed the estimator ring
-        k = jnp.argmin(fin_s)
-        j_done = idx_s[k]
-        f_done = fnid[j_done]
-        do_comp = ~arrival & ~none_left
-        v = p[j_done]
-        old = ring[f_done, rpos[f_done]]
-        full = rlen[f_done] == window
-        rsum = rsum.at[f_done].add(
-            jnp.where(do_comp, v - jnp.where(full, old, 0.0), 0.0))
-        ring = ring.at[f_done, rpos[f_done]].set(
-            jnp.where(do_comp, v, old))
-        rlen = rlen.at[f_done].add(
-            jnp.where(do_comp & ~full, 1, 0))
-        rpos = rpos.at[f_done].set(
-            jnp.where(do_comp, (rpos[f_done] + 1) % window, rpos[f_done]))
-        busy = busy - do_comp
-        fin_s = fin_s.at[k].set(jnp.where(do_comp, inf, fin_s[k]))
-
-        # -- dispatch: lowest priority (earliest arrival on ties), one per
-        # event -- always-warm admission means a free slot implies an empty
-        # queue, so a single launch restores the invariant
-        j = jnp.argmin(pending)
-        can = ~none_left & (busy < cores) & (pending[j] < inf)
-        exec_start = jnp.maximum(now, chan_free) + cost[j]
-        chan_free = jnp.where(can, exec_start, chan_free)
+        # -- dispatch: one launch restores the "queued => saturated"
+        # invariant (always-warm admission never blocks)
+        if freeze:
+            # an event only changes its own node's queue/slots
+            k_d = jnp.where(do_arr, k_arr, kn)
+            prio_vec = jnp.where(pend & (node_of == k_d), fprio, inf)
+            j = jnp.argmin(prio_vec)
+            has_q = prio_vec[j] < inf
+            prio_j = prio_vec[j]
+        else:
+            # pull: the invoker with the most free slots pulls the global
+            # best head, ranked fresh from the controller estimator --
+            # O(F) over the function-queue heads (see the docstring)
+            fs = jnp.where(node_ids < nodes, cores - busy, -1)
+            k_d = jnp.argmax(fs)
+            est_f = jnp.where(rlen[0] > 0,
+                              rsum[0] / jnp.maximum(rlen[0], 1), 0.0)
+            kmax = fn_ev.shape[1] - 1
+            idx_f = jnp.take_along_axis(
+                fn_ev, jnp.minimum(head, kmax)[:, None], axis=1)[:, 0]
+            valid = head < narr[0]
+            if use_fc:               # FC window counts: static-stream lookup
+                k0 = jnp.searchsorted(t_arr, now - horizon, side="right")
+                cnt_f = (cumf[ai] - cumf[k0]).astype(jnp.float32)
+                w_est = coef[2] + coef[3] * cnt_f
+            else:
+                w_est = coef[2]
+            prio_f = (coef[0] * t_arr[idx_f] + coef[1] * prev_t[0]
+                      + w_est * est_f)
+            prio_f = jnp.where(valid, prio_f, inf)
+            best = jnp.min(prio_f)
+            # first-index tie-break over the (virtual) global queue
+            j = jnp.min(jnp.where(valid & (prio_f == best), idx_f, n))
+            has_q = j < n
+            prio_j = best
+        can = ~none_left & (busy[k_d] < cores) & has_q
+        exec_start = jnp.maximum(now, chan[k_d]) + cost[j]
+        m_kd = (node_ids == k_d)
+        chan = jnp.where(m_kd & can, exec_start, chan)
         fin_j = exec_start + p[j]
-        slot_free = jnp.isinf(fin_s) & (jnp.arange(n_slots) < cores)
+        slot_free = jnp.isinf(fin_s[k_d]) & (slot_ids < cores)
         s = jnp.argmax(slot_free)
-        fin_s = fin_s.at[s].set(jnp.where(can, fin_j, fin_s[s]))
-        idx_s = idx_s.at[s].set(jnp.where(can, j, idx_s[s]))
-        busy = busy + can
-        pending = pending.at[j].set(jnp.where(can, inf, pending[j]))
-        start = start.at[j].set(jnp.where(can, exec_start, start[j]))
-        finish = finish.at[j].set(jnp.where(can, fin_j, finish[j]))
+        m_ds = (m_kd[:, None] & (slot_ids == s)[None, :]) & can
+        fin_s = jnp.where(m_ds, fin_j, fin_s)
+        idx_s = jnp.where(m_ds, j, idx_s)
+        busy = jnp.where(m_kd & can, busy + 1, busy)
+        qn = jnp.where(m_kd & can, qn - 1, qn)
+        if freeze:
+            pend = pend.at[j].set(jnp.where(can, False, pend[j]))
+        else:
+            head = jnp.where((fn_ids_ax == fnid[j]) & can, head + 1, head)
 
-        return (ai, busy, chan_free, pending, fin_s, idx_s,
-                ring, rsum, rlen, rpos, start, finish, prio), None
+        # per-dispatch record: scattered into per-request arrays after the
+        # scan, so the carry holds no O(n) output state (the pull carry is
+        # O(F + nodes), which is what makes long streams cheap)
+        out = (jnp.where(can, j, n), exec_start, fin_j, prio_j, k_d)
+        return (ai, pend, fprio, node_of, head, fin_s, idx_s,
+                busy, qn, chan, ring, rsum, rlen, rpos,
+                last_t, prev_t, narr), out
 
+    n_est = n_nodes if freeze else 1
+    n_fns = ring0.shape[1]
     state0 = (
-        jnp.int32(0), jnp.int32(0), jnp.float32(0.0),
-        jnp.full(n, inf), jnp.full(n_slots, inf),
-        jnp.zeros(n_slots, dtype=jnp.int32),
+        jnp.int32(0),
+        jnp.zeros(n + 1 if freeze else 1, dtype=bool),
+        jnp.zeros(n + 1 if freeze else 1, dtype=jnp.float32),
+        jnp.zeros(n + 1 if freeze else 1, dtype=jnp.int32),
+        jnp.zeros(n_fns, dtype=jnp.int32),
+        jnp.full((n_nodes, n_slots), inf),
+        jnp.zeros((n_nodes, n_slots), dtype=jnp.int32),
+        jnp.zeros(n_nodes, dtype=jnp.int32),
+        jnp.zeros(n_nodes, dtype=jnp.int32),
+        jnp.zeros(n_nodes, dtype=jnp.float32),
         ring0, rsum0, rlen0, rpos0,
-        jnp.zeros(n), jnp.zeros(n), jnp.zeros(n),
+        jnp.zeros((n_est, n_fns), dtype=jnp.float32),
+        jnp.zeros((n_est, n_fns), dtype=jnp.float32),
+        jnp.zeros((n_est, n_fns), dtype=jnp.int32),
     )
-    state, _ = jax.lax.scan(step, state0, None, length=2 * n)
-    return state[10], state[11], state[12]     # start, finish, priority
+    state, (j_s, es_s, fs_s, pj_s, kd_s) = jax.lax.scan(
+        step, state0, None, length=2 * n)
+    # one batched scatter per output; can=False steps landed on sentinel n
+    start = jnp.zeros(n + 1).at[j_s].set(es_s)
+    finish = jnp.zeros(n + 1).at[j_s].set(fs_s)
+    if freeze:
+        prio = state[2]              # frozen at arrival, never overwritten
+        node = state[3]
+    else:
+        prio = jnp.zeros(n + 1).at[j_s].set(pj_s)
+        node = jnp.zeros(n + 1, dtype=jnp.int32).at[j_s].set(kd_s)
+    return start, finish, prio, node
 
 
-@lru_cache(maxsize=8)
-def _scan_runner(n_slots: int, window: int):
-    """Jitted, vmapped cell scanner, cached per (slots, window) so repeated
-    calls -- per-cell ScanBackend runs, sweep batches of the same grid --
-    reuse XLA compilations instead of re-tracing from scratch (jit only
-    caches on the callable identity plus input shapes)."""
+# ---------------------------------------------------------------------------
+# compilation cache keyed by padded bucket shape
+# ---------------------------------------------------------------------------
+# Shapes are padded to powers of two (requests, nodes, slots, functions and
+# batch) so a whole sweep resolves to a handful of distinct bucket keys; each
+# key holds one jitted vmapped kernel, shared across run_sweep calls, so the
+# XLA compile is paid once per bucket per process.
+SCAN_BATCH_MAX = 256         # cells per dispatched chunk (memory bound)
+SCAN_CACHE_MAX = 32          # resident compiled runners (LRU beyond this)
+
+_SCAN_CACHE: dict[tuple, object] = {}    # insertion-ordered => LRU
+_SCAN_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def _pow2(x: int) -> int:
+    """Smallest power of two >= x (>= 1)."""
+    return 1 << max(0, int(x) - 1).bit_length()
+
+
+def scan_cache_stats() -> dict:
+    """Bucket-cache counters: ``misses`` = distinct bucket shapes compiled in
+    this process, ``hits`` = batch dispatches that reused one, ``size`` =
+    resident compiled runners."""
+    return {**_SCAN_CACHE_STATS, "size": len(_SCAN_CACHE)}
+
+
+def scan_cache_clear() -> None:
+    _SCAN_CACHE.clear()
+    _SCAN_CACHE_STATS["hits"] = 0
+    _SCAN_CACHE_STATS["misses"] = 0
+
+
+def _scan_runner(key: tuple):
+    """Jitted vmapped kernel for one bucket shape ``key = (freeze, use_fc,
+    n_req, n_nodes, n_slots, n_fns, fn_queue_cap, window, batch)``."""
+    runner = _SCAN_CACHE.pop(key, None)
+    if runner is not None:
+        _SCAN_CACHE_STATS["hits"] += 1
+        _SCAN_CACHE[key] = runner        # re-insert: most-recently-used last
+        return runner
+    _SCAN_CACHE_STATS["misses"] += 1
     import jax
 
-    return jax.jit(jax.vmap(
-        lambda *xs: _scan_one_cell(*xs, n_slots=n_slots, window=window)))
+    freeze, use_fc, _, n_nodes, n_slots, _, _, window, _ = key
+    runner = jax.jit(jax.vmap(partial(
+        _scan_cell_kernel, n_nodes=n_nodes, n_slots=n_slots, window=window,
+        freeze=freeze, use_fc=use_fc, horizon=DEFAULT_FC_HORIZON)))
+    while len(_SCAN_CACHE) >= SCAN_CACHE_MAX:
+        # bound resident XLA executables in long-lived processes that sweep
+        # ever-changing shapes; dict order makes this LRU eviction
+        _SCAN_CACHE.pop(next(iter(_SCAN_CACHE)))
+    _SCAN_CACHE[key] = runner
+    return runner
+
+
+@dataclass
+class _ScanCell:
+    """One prepared cell: features + shape parameters for bucketing."""
+
+    requests: list
+    feats: _Arrivals
+    cores: int
+    nodes: int
+    policy: str
+    assignment: str      # "single" | "pull" | "push"
+    lb: str = "least_loaded"
+
+    def bucket(self) -> tuple:
+        freeze = self.assignment != "pull"
+        use_fc = not freeze and self.policy == "fc"
+        if freeze:
+            kq = 1                   # fn_ev unused in frozen-priority mode
+        else:                        # per-function queue capacity
+            kq = _pow2(int(np.bincount(self.feats.fn_ids).max())
+                       if len(self.feats.fn_ids) else 1)
+        return (freeze, use_fc, _pow2(len(self.feats.t)), _pow2(self.nodes),
+                _pow2(self.cores), _pow2(len(self.feats.fns)), kq,
+                DEFAULT_WINDOW)
+
+
+def _run_scan_bucket(key: tuple, cells: list[_ScanCell]) -> list[tuple]:
+    """Dispatch one shape bucket (possibly in SCAN_BATCH_MAX chunks, each
+    padded to a power-of-two batch) and return per-cell
+    ``(start, finish, prio, node)`` arrays in event order."""
+    import jax.numpy as jnp
+
+    freeze, use_fc, n_b, nodes_b, slots_b, f_b, kq, window = key
+    n1 = n_b + 1
+    out: list[tuple] = []
+    for lo in range(0, len(cells), SCAN_BATCH_MAX):
+        chunk = cells[lo:lo + SCAN_BATCH_MAX]
+        bsz = _pow2(len(chunk))
+        n_est = nodes_b if freeze else 1
+
+        t_arr = np.full((bsz, n1), np.inf, dtype=np.float32)
+        fnid = np.zeros((bsz, n1), dtype=np.int32)
+        p = np.zeros((bsz, n1), dtype=np.float32)
+        cost = np.zeros((bsz, n1), dtype=np.float32)
+        cnt = np.zeros((bsz, n1), dtype=np.float32)
+        home0 = np.zeros((bsz, n1), dtype=np.int32)
+        coef = np.zeros((bsz, 4), dtype=np.float32)
+        cores_v = np.zeros(bsz, dtype=np.int32)
+        nodes_v = np.ones(bsz, dtype=np.int32)
+        route_v = np.zeros(bsz, dtype=np.int32)
+        ring0 = np.zeros((bsz, n_est, f_b, window), dtype=np.float32)
+        rsum0 = np.zeros((bsz, n_est, f_b), dtype=np.float32)
+        rlen0 = np.zeros((bsz, n_est, f_b), dtype=np.int32)
+        rpos0 = np.zeros((bsz, n_est, f_b), dtype=np.int32)
+        # FC pull counts and the per-function queue sequences come from the
+        # static arrival stream; freeze buckets get dummy rows (the kernel
+        # never traces those branches there)
+        cumf = np.zeros((bsz, n1 if use_fc else 1, f_b),
+                        dtype=np.float32)
+        fn_ev = (np.full((bsz, f_b, kq), n_b, dtype=np.int32)
+                 if not freeze else np.zeros((bsz, 1, 1), dtype=np.int32))
+
+        for b, cell in enumerate(chunk):
+            f = cell.feats
+            n = len(f.t)
+            t_arr[b, :n] = f.t
+            fnid[b, :n] = f.fn_ids
+            p[b, :n] = f.p
+            cost[b, :n] = f.chan_cost
+            cnt[b, :n] = f.count
+            cores_v[b] = cell.cores
+            nodes_v[b] = cell.nodes
+            if cell.assignment == "pull":
+                coef[b] = _PULL_COEF[cell.policy]
+                if use_fc:
+                    onehot = np.zeros((n, f_b), dtype=np.float32)
+                    onehot[np.arange(n), f.fn_ids] = 1.0
+                    cumf[b, 1:n + 1] = np.cumsum(onehot, axis=0)
+                    cumf[b, n + 1:] = cumf[b, n]
+                for fi in range(len(f.fns)):
+                    idx = np.nonzero(f.fn_ids == fi)[0]
+                    fn_ev[b, fi, :idx.size] = idx
+                continue
+            coef[b] = _POLICY_COEF[cell.policy]
+            if cell.assignment == "push" and cell.lb == "home":
+                from .traces import stable_hash
+                route_v[b] = 1
+                hashes = np.array([stable_hash(fn) for fn in f.fns],
+                                  dtype=np.int64)
+                home0[b, :n] = (hashes % cell.nodes)[f.fn_ids]
+            # §V-A warm-up seeds every node's estimator with the profile
+            # median (single-node semantics at nodes=1)
+            seed_n = min(cell.cores, window)
+            for fi, fn in enumerate(f.fns):
+                w = PROFILES[fn].median_s if fn in PROFILES else 0.1
+                ring0[b, :, fi, :seed_n] = w
+                rsum0[b, :, fi] = seed_n * w
+                rlen0[b, :, fi] = seed_n
+                rpos0[b, :, fi] = seed_n % window
+
+        run = _scan_runner((freeze, use_fc, n_b, nodes_b, slots_b, f_b,
+                            kq, window, bsz))
+        start_b, finish_b, prio_b, node_b = run(
+            jnp.asarray(t_arr), jnp.asarray(fnid), jnp.asarray(p),
+            jnp.asarray(cost), jnp.asarray(cnt), jnp.asarray(home0),
+            jnp.asarray(coef), jnp.asarray(cores_v), jnp.asarray(nodes_v),
+            jnp.asarray(route_v), jnp.asarray(ring0), jnp.asarray(rsum0),
+            jnp.asarray(rlen0), jnp.asarray(rpos0), jnp.asarray(cumf),
+            jnp.asarray(fn_ev))
+        start_b = np.asarray(start_b, dtype=np.float64)
+        finish_b = np.asarray(finish_b, dtype=np.float64)
+        prio_b = np.asarray(prio_b, dtype=np.float64)
+        node_b = np.asarray(node_b)
+        out.extend((start_b[b], finish_b[b], prio_b[b], node_b[b])
+                   for b in range(len(chunk)))
+    return out
+
+
+def _run_scan_cells(cells: list[_ScanCell]) -> list[SimResult]:
+    """Bucket, dispatch and write back a list of prepared cells (any mix of
+    single-node / pull / push), preserving input order."""
+    buckets: dict[tuple, list[int]] = {}
+    for i, cell in enumerate(cells):
+        buckets.setdefault(cell.bucket(), []).append(i)
+    results: list[SimResult | None] = [None] * len(cells)
+    for key, idxs in buckets.items():
+        arrays = _run_scan_bucket(key, [cells[i] for i in idxs])
+        for i, (start, finish, prio, node) in zip(idxs, arrays):
+            cell = cells[i]
+            f = cell.feats
+            order = f.order.tolist()
+            t_list = f.t.tolist()
+            for e, ridx in enumerate(order):
+                req = cell.requests[ridx]
+                req.node = f"node{int(node[e])}"
+                req.r_prime = t_list[e]
+                req.priority = float(prio[e])    # float32-rounded
+                req.cold_start = False           # always-warm regime
+                req.start = float(start[e])
+                req.finish = float(finish[e])
+                req.c = req.finish + RESP_OVERHEAD_S
+            meta = {"mode": "ours", "policy": cell.policy,
+                    "cores": cell.cores, "backend": "scan"}
+            if cell.assignment != "single":
+                meta["nodes"] = cell.nodes
+                meta["assignment"] = cell.assignment
+            results[i] = SimResult(
+                requests=cell.requests, cold_starts=0, evictions=0,
+                creations=0, nodes_used=cell.nodes, meta=meta)
+    return results  # type: ignore[return-value]
 
 
 def simulate_cells_scan(
     batch: list[tuple[list[Request], int, str]],
     memory_mb: int = 32 * 1024,
     container_mb: int = 128,
+    validate: bool = True,
 ) -> list[SimResult]:
-    """Run a batch of (requests, cores, policy) ours-mode scenarios as ONE
-    ``jax.lax.scan`` over a padded request tensor (cells vmapped).
+    """Run a batch of (requests, cores, policy) ours-mode **single-node**
+    scenarios through the bucketed scan path (cells vmapped, one XLA compile
+    per padded bucket shape, shared across calls).
 
     Every cell must satisfy :func:`scan_eligible`; this is checked and raises
-    ``ValueError`` otherwise.  Start/finish times are written back into the
-    request objects exactly like the other backends."""
-    import jax
-    import jax.numpy as jnp
-
+    ``ValueError`` otherwise (callers that already checked pass
+    ``validate=False`` to skip the re-check).  Start/finish times are written
+    back into the request objects exactly like the other backends."""
     if not batch:
         return []
-    feats = []
+    cells = []
     for requests, cores, policy in batch:
-        if not scan_eligible(requests, cores, policy, memory_mb=memory_mb,
-                             container_mb=container_mb):
+        if validate and not scan_eligible(requests, cores, policy,
+                                          memory_mb=memory_mb,
+                                          container_mb=container_mb):
             raise ValueError(
                 "scan backend requires the always-warm ours regime "
                 f"(policy={policy!r}, cores={cores}); use "
                 "backend='vectorized' for the general exact fast path")
-        feats.append(_arrival_features(requests))
+        cells.append(_ScanCell(requests=requests,
+                               feats=_arrival_features(requests),
+                               cores=cores, nodes=1, policy=policy,
+                               assignment="single"))
+    return _run_scan_cells(cells)
 
-    bsz = len(batch)
-    n_max = max(len(f.t) for f in feats)
-    f_max = max(len(f.fns) for f in feats)
-    c_max = max(cores for _, cores, _ in batch)
-    window = DEFAULT_WINDOW
 
-    t_arr = np.full((bsz, n_max + 1), np.inf, dtype=np.float32)
-    fnid = np.zeros((bsz, n_max + 1), dtype=np.int32)
-    p = np.zeros((bsz, n_max + 1), dtype=np.float32)
-    cost = np.zeros((bsz, n_max + 1), dtype=np.float32)
-    prev = np.zeros((bsz, n_max + 1), dtype=np.float32)
-    cnt = np.zeros((bsz, n_max + 1), dtype=np.float32)
-    coef = np.zeros((bsz, 4), dtype=np.float32)
-    cores_v = np.zeros(bsz, dtype=np.int32)
-    ring0 = np.zeros((bsz, f_max, window), dtype=np.float32)
-    rsum0 = np.zeros((bsz, f_max), dtype=np.float32)
-    rlen0 = np.zeros((bsz, f_max), dtype=np.int32)
-    rpos0 = np.zeros((bsz, f_max), dtype=np.int32)
+# ---------------------------------------------------------------------------
+# cluster-scale scan: N-node cells, whole grids as bucketed batches
+# ---------------------------------------------------------------------------
+def cluster_scan_eligible(
+    requests: list[Request],
+    nodes: int,
+    cores: int,
+    policy: str = "fc",
+    assignment: str = "pull",
+    lb: str = "least_loaded",
+    warm: bool = True,
+    memory_mb: int = CLUSTER_MEMORY_MB,
+    container_mb: int = CLUSTER_CONTAINER_MB,
+) -> bool:
+    """True when the scan kernel reproduces the reference cluster within
+    float32 rounding: ours mode, known policy, always-warm nodes (the §V-A
+    warm-up provisions ``cores`` containers per function on the cluster's
+    40 GB nodes, so up to ~13 cores for the full SeBS set), and
 
-    for b, ((requests, cores, policy), f) in enumerate(zip(batch, feats)):
-        n = len(f.t)
-        t_arr[b, :n] = f.t
-        fnid[b, :n] = f.fn_ids
-        p[b, :n] = f.p
-        cost[b, :n] = f.chan_cost
-        prev[b, :n] = f.prev
-        cnt[b, :n] = f.count
-        coef[b] = _POLICY_COEF[policy]
-        cores_v[b] = cores
-        seed_n = min(cores, window)
-        for fi, fn in enumerate(f.fns):
-            w = PROFILES[fn].median_s if fn in PROFILES else 0.1
-            ring0[b, fi, :seed_n] = w
-            rsum0[b, fi] = seed_n * w
-            rlen0[b, fi] = seed_n
-            rpos0[b, fi] = seed_n % window
+    * ``assignment="pull"`` -- any policy (priorities are re-ranked at pull
+      time from the controller estimator, exactly like the reference), or
+    * ``assignment="push"`` with ``lb`` least_loaded/home -- any policy
+      except FC, whose per-node sliding-window count depends on the dynamic
+      routing history and cannot be reconstructed statically.
+    """
+    if policy not in POLICY_NAMES or not warm or nodes < 1:
+        return False
+    if assignment == "push":
+        if policy == "fc" or lb not in ("least_loaded", "home"):
+            return False
+    elif assignment != "pull":
+        return False
+    fns = sorted({r.fn for r in requests})
+    pool = _FastPool(memory_mb=memory_mb, container_mb=container_mb,
+                     cores=cores, fn_memory=SEBS_MEMORY_MB)
+    pool.warm_up(fns, per_fn=cores)
+    return all(len(pool.free.get(fn, ())) >= cores for fn in fns)
 
-    run = _scan_runner(c_max, window)
-    start_b, finish_b, prio_b = run(
-        jnp.asarray(t_arr), jnp.asarray(fnid), jnp.asarray(p),
-        jnp.asarray(cost), jnp.asarray(prev), jnp.asarray(cnt),
-        jnp.asarray(coef), jnp.asarray(cores_v), jnp.asarray(ring0),
-        jnp.asarray(rsum0), jnp.asarray(rlen0), jnp.asarray(rpos0))
-    start_b = np.asarray(start_b, dtype=np.float64)
-    finish_b = np.asarray(finish_b, dtype=np.float64)
-    prio_b = np.asarray(prio_b, dtype=np.float64)
 
-    out = []
-    for b, ((requests, cores, policy), f) in enumerate(zip(batch, feats)):
-        order = f.order.tolist()
-        t_list = f.t.tolist()
-        for e, ridx in enumerate(order):
-            req = requests[ridx]
-            req.node = "node0"
-            req.r_prime = t_list[e]
-            req.priority = float(prio_b[b, e])   # float32-rounded
-            req.cold_start = False               # always-warm regime
-            req.start = float(start_b[b, e])
-            req.finish = float(finish_b[b, e])
-            req.c = req.finish + RESP_OVERHEAD_S
-        out.append(SimResult(
-            requests=requests, cold_starts=0, evictions=0, creations=0,
-            meta={"mode": "ours", "policy": policy, "cores": cores,
-                  "backend": "scan"},
-        ))
-    return out
+def simulate_cluster_cells_scan(
+    batch: list[tuple],
+    memory_mb: int = CLUSTER_MEMORY_MB,
+    container_mb: int = CLUSTER_CONTAINER_MB,
+    validate: bool = True,
+) -> list[SimResult]:
+    """Run a batch of ``(requests, nodes, cores, policy[, assignment[, lb]])``
+    ours-mode cluster scenarios as bucketed vmapped scans -- an entire
+    nodes x intensity x policy grid becomes a handful of XLA dispatches.
+
+    Every cell must satisfy :func:`cluster_scan_eligible` (raises
+    ``ValueError`` otherwise; ``validate=False`` skips the re-check for
+    callers that already ran it).  Semantics follow the reference
+    :class:`~repro.core.cluster.Cluster` in the always-warm regime; agreement
+    is within the documented cluster cross-check tolerance (float32 clocks,
+    index-order tie-breaking), see ``repro.core.sweep.CLUSTER_XCHECK_RTOL``.
+    """
+    if not batch:
+        return []
+    cells = []
+    for item in batch:
+        requests, nodes, cores, policy = item[:4]
+        assignment = item[4] if len(item) > 4 else "pull"
+        lb = item[5] if len(item) > 5 else "least_loaded"
+        if validate and not cluster_scan_eligible(
+                requests, nodes, cores, policy, assignment=assignment,
+                lb=lb, memory_mb=memory_mb, container_mb=container_mb):
+            raise ValueError(
+                "scan cluster backend requires the always-warm ours regime "
+                f"(policy={policy!r}, nodes={nodes}, cores={cores}, "
+                f"assignment={assignment!r}); use backend='reference'")
+        cells.append(_ScanCell(requests=requests,
+                               feats=_arrival_features(requests),
+                               cores=cores, nodes=nodes, policy=policy,
+                               assignment=assignment, lb=lb))
+    return _run_scan_cells(cells)
+
+
+def simulate_cluster_scan(
+    requests: list[Request],
+    nodes: int,
+    cores_per_node: int = 18,
+    policy: str = "fc",
+    assignment: str = "pull",
+    lb: str = "least_loaded",
+    memory_mb: int = CLUSTER_MEMORY_MB,
+    container_mb: int = CLUSTER_CONTAINER_MB,
+) -> SimResult:
+    """Single-cell convenience wrapper over
+    :func:`simulate_cluster_cells_scan`."""
+    return simulate_cluster_cells_scan(
+        [(requests, nodes, cores_per_node, policy, assignment, lb)],
+        memory_mb=memory_mb, container_mb=container_mb)[0]
 
 
 class ScanBackend:
-    """Batched jax.lax.scan variant (always-warm ours regime, float32)."""
+    """Batched jax.lax.scan variant (always-warm ours regime, float32).
+
+    Supports single nodes *and* clusters: ``nodes > 1`` with the pull
+    assignment (any policy) or the push assignment (any policy but FC)."""
 
     name = "scan"
 
-    def supports(self, *, mode: str, policy: str, warm: bool) -> bool:
+    def supports(self, *, mode: str, policy: str, warm: bool,
+                 nodes: int = 1, assignment: str = "pull") -> bool:
         if mode != "ours" or policy not in POLICY_NAMES or not warm:
             return False
+        if nodes > 1:
+            if assignment == "push":
+                if policy == "fc":
+                    return False
+            elif assignment != "pull":
+                return False
         try:
             import jax  # noqa: F401
         except ImportError:

@@ -435,17 +435,23 @@ class SimResult:
 # --------------------------------------------------------------------------
 @runtime_checkable
 class SimBackend(Protocol):
-    """A single-node simulation engine: submit requests -> :class:`SimResult`.
+    """A simulation engine: submit requests -> :class:`SimResult`.
 
     Backends are interchangeable where :meth:`supports` says so; the
     ``reference`` backend (the discrete-event loop above) defines the
     semantics, alternative backends must agree with it on every metric the
     sweep engine reports (see ``SweepSpec(validate="cross-check")``).
+
+    ``supports`` also answers for *cluster* scenarios: callers pass
+    ``nodes``/``assignment`` and a backend declares whether it can run the
+    N-node system (the scan backend runs always-warm ours clusters; the
+    single-node fast paths say no for ``nodes > 1``).
     """
 
     name: str
 
-    def supports(self, *, mode: str, policy: str, warm: bool) -> bool:
+    def supports(self, *, mode: str, policy: str, warm: bool,
+                 nodes: int = 1, assignment: str = "pull") -> bool:
         """Can this backend run the scenario exactly?"""
         ...
 
@@ -468,7 +474,8 @@ class ReferenceBackend:
 
     name = "reference"
 
-    def supports(self, *, mode: str, policy: str, warm: bool) -> bool:
+    def supports(self, *, mode: str, policy: str, warm: bool,
+                 nodes: int = 1, assignment: str = "pull") -> bool:
         return True
 
     def simulate(

@@ -15,9 +15,13 @@ intensity x cores x nodes x seeds.  This module makes those grids first-class:
   (mean response / percentiles / stretch / makespan per cell), and JSON/CSV
   emission compatible with the ``benchmarks.common.emit`` contract.
 
-The engine deliberately imports no JAX: cells run the pure-Python
-discrete-event simulator, so pool workers fork instantly and a 200+-cell
-grid saturates all cores.
+The engine imports no JAX at module scope: reference/vectorized cells run
+pure Python, so pool workers fork instantly and a 200+-cell grid saturates
+all cores.  Cells on the ``"scan"`` backend never go to the pool at all --
+``run_sweep`` partitions them into padded shape buckets (powers of two over
+requests x nodes x slots x functions) and dispatches each bucket as one
+batched ``jax.lax.scan`` call in the parent process, reusing one cached XLA
+compilation per bucket shape across sweeps (``scan_cache_stats``).
 """
 
 from __future__ import annotations
@@ -55,6 +59,14 @@ BACKEND_CHOICES = ("reference", "vectorized", "scan", "auto")
 # per-cell agreement budget for cross-checked backends (relative); the
 # vectorized backend is exact, so any drift here is a real bug
 CROSS_CHECK_RTOL = 1e-2
+# Cluster scan-vs-reference budget.  The multi-node scan kernel replays the
+# reference Cluster's pull/push semantics but computes clocks and priorities
+# in float32 and resolves exact ties by array index, so near-tie orderings
+# can flip and cascade through routing under heavy backlog: worst observed
+# drift over a policy x nodes x intensity x arrival stress grid is ~1.3%
+# (tail percentiles of FC/RECT at sustained overload); typical cells are at
+# float32 rounding (~1e-6).  3% leaves headroom without masking real bugs.
+CLUSTER_XCHECK_RTOL = 3e-2
 # metrics the cross-check compares (count-like metrics must match exactly
 # anyway; near-zero values use an absolute epsilon)
 CROSS_CHECK_KEYS = ("R_avg", "R_p50", "R_p75", "R_p95", "R_p99",
@@ -89,6 +101,8 @@ class SweepCell:
                                        # (default: cores * nodes)
     per_function: tuple[str, ...] = ()  # extra per-function metric columns
     trace_path: str | None = None       # for arrival == "trace"
+    trace_repeat: int = 1               # tile the trace into longer streams
+    trace_scale: float = 1.0            # scale per-minute trace rates
     warm: bool = True
     backend: str = "reference"          # simulation engine (BACKEND_CHOICES)
     # validation flag, orthogonal to the backend identity: a cross-checked
@@ -136,6 +150,8 @@ class SweepSpec:
     workload_cores: int | None = None
     per_function: tuple[str, ...] = ()
     trace_path: str | None = None
+    trace_repeat: int = 1
+    trace_scale: float = 1.0
     warm: bool = True
     backends: Sequence[str] = ("reference",)
     # validate="cross-check" re-runs sampled vectorized-eligible cells on
@@ -180,20 +196,27 @@ class SweepSpec:
                 fail_at=fail, seed=seed, duration_s=self.duration_s,
                 workload_cores=self.workload_cores,
                 per_function=self.per_function, trace_path=self.trace_path,
+                trace_repeat=self.trace_repeat,
+                trace_scale=self.trace_scale,
                 warm=self.warm, backend=be,
             )
             if self.cell_filter is None or self.cell_filter(cell):
                 out.append(cell)
         if validate == "cross-check":
             stride = max(1, self.validate_stride)
-            # Cross-checking dual-runs a cell's own engine against the exact
-            # vectorized/reference counterpart (see run_cell), so the sampled
-            # axis value must resolve to one of those -- a scan-only axis
-            # would compare scan against nothing new (its float32 parity is
-            # covered by tests/test_fastpath.py instead).
+            # Cross-checking dual-runs a cell's own engine against a
+            # reference counterpart (see run_cell).  Single-node cells
+            # validate the exact vectorized/reference pair, so the sampled
+            # axis value must resolve to one of those; scan-backend
+            # *cluster* cells validate scan-vs-reference-Cluster at
+            # CLUSTER_XCHECK_RTOL and are sampled off the scan axis itself.
             compat = [b for b in backends
                       if b in ("reference", "vectorized", "auto")]
-            if not compat:
+            cluster_groups: dict[tuple, list[int]] = {}
+            for i, cell in enumerate(out):
+                if cell.backend == "scan" and _cluster_scan_capable(cell):
+                    cluster_groups.setdefault(cell.key(), []).append(i)
+            if not compat and not cluster_groups:
                 raise ValueError(
                     "validate='cross-check' validates the vectorized backend;"
                     " include 'reference', 'vectorized' or 'auto' in backends"
@@ -201,15 +224,18 @@ class SweepSpec:
             # Sample whole seed-groups (cell identities) of ONE backend axis
             # value.  cross_check is a flag, not a backend identity, so the
             # sampled cells keep exactly the key()/label() of their group.
-            sample_be = "reference" if "reference" in compat else compat[0]
             groups: dict[tuple, list[int]] = {}
-            for i, cell in enumerate(out):
-                if _vectorized_eligible(cell) and cell.backend == sample_be:
-                    groups.setdefault(cell.key(), []).append(i)
-            for g, key in enumerate(groups):
-                if g % stride == 0:
-                    for i in groups[key]:
-                        out[i] = replace(out[i], cross_check=True)
+            if compat:
+                sample_be = "reference" if "reference" in compat else compat[0]
+                for i, cell in enumerate(out):
+                    if (_vectorized_eligible(cell)
+                            and cell.backend == sample_be):
+                        groups.setdefault(cell.key(), []).append(i)
+            for gdict in (groups, cluster_groups):
+                for g, key in enumerate(gdict):
+                    if g % stride == 0:
+                        for i in gdict[key]:
+                            out[i] = replace(out[i], cross_check=True)
         return out
 
 
@@ -232,7 +258,9 @@ def make_workload(cell: SweepCell) -> list[Request]:
         from .traces import generate_trace_requests
         if cell.trace_path is None:
             raise ValueError("arrival='trace' requires trace_path")
-        return generate_trace_requests(cell.trace_path, seed=cell.seed)
+        return generate_trace_requests(cell.trace_path, seed=cell.seed,
+                                       repeat=cell.trace_repeat,
+                                       scale=cell.trace_scale)
     return generate_trace_burst(cores=wcores, intensity=cell.intensity,
                                 seed=cell.seed, kind=cell.arrival,
                                 duration_s=cell.duration_s)
@@ -244,6 +272,30 @@ def _vectorized_eligible(cell: SweepCell) -> bool:
                           or cell.policy == "baseline") else "ours"
     return (mode == "ours" and cell.nodes <= 1 and not cell.autoscale
             and cell.fail_at is None)
+
+
+def _cluster_scan_capable(cell: SweepCell) -> bool:
+    """Static (workload-independent) part of scan-cluster eligibility: ours
+    mode, >1 node, pull (any policy) or push (any but FC), no autoscaling or
+    failure injection, warm.  The always-warm check needs the workload and
+    happens in :func:`run_cells_scan` / ``cluster_scan_eligible``."""
+    mode = "baseline" if (cell.mode == "baseline"
+                          or cell.policy == "baseline") else "ours"
+    if (mode != "ours" or cell.nodes <= 1 or cell.autoscale
+            or cell.fail_at is not None or not cell.warm):
+        return False
+    if cell.assignment == "push":
+        return cell.policy != "fc"
+    return cell.assignment == "pull"
+
+
+def _scan_batchable(cell: SweepCell) -> bool:
+    """Should run_sweep route this cell into a bucketed scan batch?
+    Cross-checked cells stay on the per-cell path (they dual-run)."""
+    if cell.backend != "scan" or cell.cross_check:
+        return False
+    return ((_vectorized_eligible(cell) and cell.warm)
+            or _cluster_scan_capable(cell))
 
 
 def _resolve_backend(cell: SweepCell, reqs, mode: str, policy: str) -> str:
@@ -296,7 +348,8 @@ def _cell_metrics(cell: SweepCell, done, cold, failures, backups,
 
 
 def _cross_check(cell: SweepCell, ref: dict[str, float],
-                 fast: dict[str, float], backend: str) -> float:
+                 fast: dict[str, float], backend: str,
+                 rtol: float = CROSS_CHECK_RTOL) -> float:
     """Max relative disagreement over CROSS_CHECK_KEYS; raises on breach."""
     worst = 0.0
     for k in CROSS_CHECK_KEYS:
@@ -305,18 +358,35 @@ def _cross_check(cell: SweepCell, ref: dict[str, float],
             continue
         err = abs(a - b) / max(abs(a), abs(b), 1e-9)
         worst = max(worst, err)
-        if err > CROSS_CHECK_RTOL:
+        if err > rtol:
             raise BackendMismatchError(
                 f"backend {backend!r} disagrees with reference on "
                 f"{cell.label()} seed={cell.seed}: {k} {b!r} vs {a!r} "
-                f"(rel err {err:.2e} > {CROSS_CHECK_RTOL})")
+                f"(rel err {err:.2e} > {rtol})")
     return worst
+
+
+def _cluster_scan_ok(cell: SweepCell, reqs: list[Request],
+                     policy: str) -> bool:
+    """Workload-dependent half of scan-cluster eligibility (+ jax)."""
+    try:
+        import jax  # noqa: F401
+    except ImportError:
+        return False
+    from .fastpath import cluster_scan_eligible
+    return cluster_scan_eligible(reqs, cell.nodes, cell.cores, policy,
+                                 assignment=cell.assignment, warm=cell.warm)
 
 
 def run_cell(cell: SweepCell) -> dict[str, float]:
     """Run one scenario end-to-end; pure function of the cell (bit-identical
     metrics for identical cells, in any process)."""
-    from .cluster import Cluster, ClusterConfig, simulate_baseline_cluster
+    from .cluster import (
+        Cluster,
+        ClusterConfig,
+        simulate_baseline_cluster,
+        simulate_cluster,
+    )
     from .simulator import simulate_single_node
 
     reqs = make_workload(cell)
@@ -356,6 +426,31 @@ def run_cell(cell: SweepCell) -> dict[str, float]:
                                         warm=cell.warm)
         done, cold = res.requests, res.cold_starts
     else:
+        # scan-backend cluster cells run the multi-node kernel (per-cell
+        # here; run_sweep batches whole buckets instead where it can);
+        # cross-checked cells keep their own engine as primary and dual-run
+        # the counterpart, asserting CLUSTER_XCHECK_RTOL agreement
+        scan_ok = (cell.backend == "scan" or cell.cross_check) \
+            and _cluster_scan_capable(cell) \
+            and _cluster_scan_ok(cell, reqs, policy)
+        if cell.backend == "scan" and scan_ok:
+            from .fastpath import simulate_cluster_cells_scan
+            res = simulate_cluster_cells_scan(
+                [(reqs, cell.nodes, cell.cores, policy, cell.assignment)])[0]
+            metrics = _cell_metrics(cell, res.requests, res.cold_starts,
+                                    0, 0, res.nodes_used)
+            if cell.cross_check:
+                other = simulate_cluster(
+                    make_workload(cell), nodes=cell.nodes,
+                    cores_per_node=cell.cores, policy=policy,
+                    assignment=cell.assignment, warm=cell.warm)
+                other_m = _cell_metrics(cell, other.requests,
+                                        other.cold_starts, 0, 0,
+                                        other.nodes_used)
+                metrics["xcheck_err"] = _cross_check(
+                    cell, other_m, metrics, "scan",
+                    rtol=CLUSTER_XCHECK_RTOL)
+            return metrics
         cfg = ClusterConfig(nodes=cell.nodes, cores_per_node=cell.cores,
                             policy=policy, assignment=cell.assignment,
                             autoscale=cell.autoscale)
@@ -367,30 +462,95 @@ def run_cell(cell: SweepCell) -> dict[str, float]:
         done, cold = res.requests, res.cold_starts
         failures, backups = res.failures, res.backups_issued
         nodes_used = res.nodes_used
+        if cell.cross_check and scan_ok:
+            from .fastpath import simulate_cluster_cells_scan
+            metrics = _cell_metrics(cell, done, cold, failures, backups,
+                                    nodes_used)
+            other = simulate_cluster_cells_scan(
+                [(make_workload(cell), cell.nodes, cell.cores, policy,
+                  cell.assignment)])[0]
+            other_m = _cell_metrics(cell, other.requests, other.cold_starts,
+                                    0, 0, other.nodes_used)
+            metrics["xcheck_err"] = _cross_check(
+                cell, metrics, other_m, "scan", rtol=CLUSTER_XCHECK_RTOL)
+            return metrics
 
     return _cell_metrics(cell, done, cold, failures, backups, nodes_used)
 
 
-def run_cells_scan(cells: Sequence[SweepCell]) -> list[dict[str, float]]:
-    """Run a whole list of cells as ONE batched ``jax.lax.scan`` (padded
-    request tensor, cells vmapped) and return per-cell metrics in order.
+def _run_cells_scan_partial(
+        cells: Sequence[SweepCell]) -> list[dict[str, float] | None]:
+    """Bucketed scan dispatch over whichever cells are eligible; returns
+    ``None`` in the slots of ineligible cells (the caller decides how to run
+    those -- :func:`run_sweep` sends them to its pool).
 
-    Every cell must be in the scan-eligible regime (ours mode, single node,
-    always-warm -- see :func:`repro.core.fastpath.scan_eligible`); raises
-    ``ValueError`` otherwise.  Unlike :func:`run_sweep` this executes
-    in-process: the batch IS the parallelism."""
-    from .fastpath import simulate_cells_scan
+    Workloads are only generated after the static eligibility checks pass,
+    and eligibility is checked exactly once per cell (the batch calls run
+    with ``validate=False``)."""
+    from .fastpath import (
+        scan_eligible,
+        simulate_cells_scan,
+        simulate_cluster_cells_scan,
+    )
+    try:
+        import jax  # noqa: F401
+    except ImportError:
+        return [None] * len(cells)
 
-    batch = []
-    for cell in cells:
-        if not _vectorized_eligible(cell) or not cell.warm:
-            raise ValueError(f"cell {cell.label()} is not scan-eligible")
-        batch.append((make_workload(cell), cell.cores, cell.policy))
-    results = simulate_cells_scan(batch)
-    return [
-        _cell_metrics(cell, res.requests, res.cold_starts, 0, 0, cell.nodes)
-        for cell, res in zip(cells, results)
-    ]
+    metrics: list[dict[str, float] | None] = [None] * len(cells)
+    singles: list[tuple[int, SweepCell, list[Request]]] = []
+    clusters: list[tuple[int, SweepCell, list[Request]]] = []
+    for pos, cell in enumerate(cells):
+        mode = "baseline" if (cell.mode == "baseline"
+                              or cell.policy == "baseline") else "ours"
+        policy = "fifo" if cell.policy == "baseline" else cell.policy
+        if _cluster_scan_capable(cell):
+            reqs = make_workload(cell)
+            if _cluster_scan_ok(cell, reqs, policy):
+                clusters.append((pos, cell, reqs))
+        elif _vectorized_eligible(cell) and cell.warm and mode == "ours":
+            reqs = make_workload(cell)
+            if scan_eligible(reqs, cell.cores, policy):
+                singles.append((pos, cell, reqs))
+
+    if singles:
+        results = simulate_cells_scan(
+            [(reqs, cell.cores, cell.policy) for _, cell, reqs in singles],
+            validate=False)
+        for (pos, cell, _), res in zip(singles, results):
+            metrics[pos] = _cell_metrics(cell, res.requests, res.cold_starts,
+                                         0, 0, cell.nodes)
+    if clusters:
+        results = simulate_cluster_cells_scan(
+            [(reqs, cell.nodes, cell.cores, cell.policy, cell.assignment)
+             for _, cell, reqs in clusters], validate=False)
+        for (pos, cell, _), res in zip(clusters, results):
+            metrics[pos] = _cell_metrics(cell, res.requests, res.cold_starts,
+                                         0, 0, res.nodes_used)
+    return metrics
+
+
+def run_cells_scan(cells: Sequence[SweepCell],
+                   strict: bool = True) -> list[dict[str, float]]:
+    """Run a whole list of cells through the bucketed ``jax.lax.scan`` path
+    (padded tensors, cells vmapped, one XLA dispatch per shape bucket) and
+    return per-cell metrics in order.
+
+    Handles single-node *and* cluster cells: single-node cells must satisfy
+    :func:`repro.core.fastpath.scan_eligible`, cluster cells
+    :func:`repro.core.fastpath.cluster_scan_eligible`.  With ``strict=True``
+    (default) an ineligible cell raises ``ValueError``; with
+    ``strict=False`` ineligible cells quietly run through :func:`run_cell`
+    instead.  Unlike :func:`run_sweep` this executes in-process: the batch
+    IS the parallelism."""
+    metrics = _run_cells_scan_partial(cells)
+    for pos, m in enumerate(metrics):
+        if m is None:
+            if strict:
+                raise ValueError(
+                    f"cell {cells[pos].label()} is not scan-eligible")
+            metrics[pos] = run_cell(cells[pos])
+    return metrics  # type: ignore[return-value]
 
 
 # ---------------------------------------------------------------------------
@@ -491,18 +651,31 @@ def run_sweep(
     workers: int | None = None,
     runner: Callable[[SweepCell], dict] | None = None,
     progress: Callable[[int, int], None] | None = None,
+    executor: str | None = None,
 ) -> SweepResult:
     """Execute every cell of ``spec``.
 
     ``workers=1`` runs inline (no pool); ``workers=N`` fans cells out over a
     process pool.  Results are identical either way: a cell's metrics depend
     only on the cell itself.  ``runner`` overrides the per-cell function
-    (must be picklable for N > 1, e.g. a module-level function); benchmarks
-    with process-hostile dependencies (real XLA engines) pass their own
-    runner with ``workers=1``."""
+    (must be picklable for N > 1, e.g. a module-level function).
+
+    ``executor`` pins the pool start method: ``"fork"`` (fastest),
+    ``"spawn"`` (required for XLA-using runners -- engines do not survive a
+    fork, so benchmarks like ``engine_bench`` pass ``executor="spawn"`` to
+    run their cells concurrently), or ``None`` to pick automatically.
+
+    Cells on the ``"scan"`` backend are *not* sent to the pool: they are
+    partitioned into padded shape buckets and dispatched as batched
+    ``jax.lax.scan`` calls in-process (see :func:`run_cells_scan`) -- for a
+    10k-cell cluster grid that is a handful of XLA dispatches after one
+    compile per bucket, far faster than any per-cell pool."""
     cells = spec.cells()
     if not cells:
         raise ValueError("SweepSpec expands to zero cells")
+    if executor not in (None, "fork", "spawn"):
+        raise ValueError(f"unknown executor {executor!r}; "
+                         "expected None, 'fork' or 'spawn'")
     fn = runner or run_cell
     if workers is None:
         env = os.environ.get("SWEEP_WORKERS")
@@ -510,39 +683,61 @@ def run_sweep(
     workers = max(1, min(workers, len(cells)))
 
     t0 = time.monotonic()
-    metrics: list[dict]
-    if workers == 1:
-        metrics = []
-        for i, cell in enumerate(cells):
-            metrics.append(fn(cell))
+    metrics: list[dict | None] = [None] * len(cells)
+    done = 0
+
+    # batched scan dispatch: whole shape buckets as single vmapped calls;
+    # cells that turn out ineligible at runtime (no jax, partial warm-up)
+    # come back as None and go to the pool below with everything else
+    scan_pos = [i for i, c in enumerate(cells)
+                if runner is None and _scan_batchable(c)]
+    scan_batched = 0
+    if scan_pos:
+        for i, m in zip(scan_pos,
+                        _run_cells_scan_partial([cells[i] for i in scan_pos])):
+            if m is not None:
+                metrics[i] = m
+                scan_batched += 1
+        done = scan_batched
+        if done and progress is not None:
+            progress(done, len(cells))
+
+    rest = [i for i in range(len(cells)) if metrics[i] is None]
+    pool_workers = max(1, min(workers, len(rest)))
+    if rest and (pool_workers == 1 or len(rest) == 1):
+        for i in rest:
+            metrics[i] = fn(cells[i])
+            done += 1
             if progress is not None:
-                progress(i + 1, len(cells))
-    else:
-        chunk = max(1, len(cells) // (workers * 8))
+                progress(done, len(cells))
+    elif rest:
+        chunk = max(1, len(rest) // (pool_workers * 8))
         # fork is fastest, but forking a process that already initialised
         # JAX/XLA can deadlock; fall back to spawn in that case (workers
         # re-import repro.core, which stays JAX-free by design)
-        method = "spawn" if ("jax" in sys.modules
-                             or not hasattr(os, "fork")) else "fork"
-        if method == "spawn" and hasattr(os, "fork"):
+        method = executor or ("spawn" if ("jax" in sys.modules
+                                          or not hasattr(os, "fork"))
+                              else "fork")
+        if method == "spawn" and executor is None and hasattr(os, "fork"):
             main_file = getattr(sys.modules.get("__main__"), "__file__", None)
             if main_file is not None and not os.path.exists(main_file):
                 # a "<stdin>" main cannot be re-imported by spawn; fork is
                 # the only pool that works there (accepting the JAX risk)
                 method = "fork"
         ctx = multiprocessing.get_context(method)
-        with ProcessPoolExecutor(max_workers=workers, mp_context=ctx) as ex:
-            it = ex.map(fn, cells, chunksize=chunk)
-            metrics = []
-            for i, m in enumerate(it):
-                metrics.append(m)
+        with ProcessPoolExecutor(max_workers=pool_workers,
+                                 mp_context=ctx) as ex:
+            it = ex.map(fn, [cells[i] for i in rest], chunksize=chunk)
+            for i, m in zip(rest, it):
+                metrics[i] = m
+                done += 1
                 if progress is not None:
-                    progress(i + 1, len(cells))
+                    progress(done, len(cells))
     wall = time.monotonic() - t0
     return SweepResult(
         results=[CellResult(c, m) for c, m in zip(cells, metrics)],
         wall_s=wall, workers=workers,
-        meta={"cells": len(cells)},
+        meta={"cells": len(cells), "scan_batched": scan_batched},
     )
 
 

@@ -72,6 +72,26 @@ def load_azure_trace(path: str | Path) -> dict[str, list[int]]:
     return out
 
 
+def tile_trace(trace: dict[str, list[int]], repeat: int = 1,
+               scale: float = 1.0) -> dict[str, list[int]]:
+    """Tile a per-minute trace ``repeat`` times end-to-end and scale its
+    per-minute counts -- the minutes-scale vendored slice becomes an
+    hours-scale stream (``repeat=8`` on the 15-minute Azure slice is two
+    hours of load).  Counts are scaled deterministically
+    (``round(count * scale)``), so the result is reproducible."""
+    if repeat < 1:
+        raise ValueError(f"repeat must be >= 1, got {repeat}")
+    if scale <= 0:
+        raise ValueError(f"scale must be > 0, got {scale}")
+    out: dict[str, list[int]] = {}
+    for fn, counts in trace.items():
+        tiled = list(counts) * repeat
+        if scale != 1.0:
+            tiled = [int(round(c * scale)) for c in tiled]
+        out[fn] = tiled
+    return out
+
+
 def requests_from_trace(
     trace: dict[str, list[int]],
     seed: int,
@@ -108,7 +128,16 @@ def generate_trace_requests(
     seed: int = 0,
     minute_s: float = 60.0,
     max_minutes: int | None = None,
+    repeat: int = 1,
+    scale: float = 1.0,
 ) -> list[Request]:
-    """Convenience: load an Azure-style CSV and expand it to requests."""
-    return requests_from_trace(load_azure_trace(path), seed,
+    """Convenience: load an Azure-style CSV and expand it to requests.
+
+    ``repeat``/``scale`` tile and scale the per-minute counts (see
+    :func:`tile_trace`) *before* the ``max_minutes`` cut, so a repeated
+    trace can still be truncated to a window."""
+    trace = load_azure_trace(path)
+    if repeat != 1 or scale != 1.0:
+        trace = tile_trace(trace, repeat=repeat, scale=scale)
+    return requests_from_trace(trace, seed,
                                minute_s=minute_s, max_minutes=max_minutes)

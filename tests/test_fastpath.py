@@ -333,8 +333,15 @@ class TestScanBackend:
         assert ref == scn
 
     def test_run_cells_scan_rejects_ineligible(self):
+        """Pull clusters are scan-eligible since the multi-node kernel, but
+        autoscaling cells (dynamic node count) still are not."""
         with pytest.raises(ValueError, match="not scan-eligible"):
-            run_cells_scan([SweepCell(policy="fc", nodes=2)])
+            run_cells_scan([SweepCell(policy="fc", nodes=2, cores=5,
+                                      intensity=10, autoscale=True)])
+        # ...and strict=False degrades them to run_cell instead of raising
+        cell = SweepCell(policy="fc", nodes=2, cores=5, intensity=10,
+                         autoscale=True)
+        assert run_cells_scan([cell], strict=False)[0] == run_cell(cell)
 
     def test_run_cells_scan_rejects_cold_cells(self):
         """warm=False has cold starts the always-warm scan cannot model;
