@@ -146,6 +146,116 @@ def cluster_speedup_rows(quick: bool = False) -> list[dict]:
              "derived": derived}]
 
 
+def frontier_spec(quick: bool = False) -> SweepSpec:
+    """The autoscaler frontier grid: initial-node-count x provision-delay x
+    scale-up-threshold with a static-fleet baseline, one shared burst per
+    seed (``workload_cores`` pinned to the largest static fleet so every
+    node count faces the *same* offered load).  This is the paper's capstone
+    scenario -- "with good scheduling, fewer machines give the same tail" --
+    swept at cluster scale through the dynamic-capacity scan kernel."""
+    nodes = (2, 3) if quick else (2, 3, 4, 5)
+    return SweepSpec(
+        policies=("fc",),
+        nodes=nodes,
+        cores=(8,),
+        intensities=(30,) if quick else (40,),
+        autoscale=(False, True),
+        provision_delays=(10.0,) if quick else (10.0, 30.0, 60.0),
+        scale_ups=(2.0,),
+        max_nodes=max(nodes) + 2,
+        seeds=2 if quick else 5,
+        workload_cores=8 * max(nodes),
+        backends=("scan",),
+    )
+
+
+def frontier_rows(quick: bool = False,
+                  artifacts: str | None = None) -> list[dict]:
+    """Sweep the frontier grid on the scan backend, cross-check a sample
+    against the reference event loop at ``CLUSTER_XCHECK_RTOL``, report the
+    measured scan-vs-reference speedup, and extract the paper's claim: the
+    best autoscaled config at N initial nodes vs the static fleet at N+1."""
+    try:
+        import jax  # noqa: F401
+    except ImportError:
+        return [{"name": "engine/frontier", "us_per_call": 0.0,
+                 "derived": "skipped=no-jax"}]
+    from repro.core.sweep import CLUSTER_XCHECK_RTOL
+
+    spec = frontier_spec(quick)
+    cells = spec.cells()
+    t0 = time.perf_counter()
+    run_sweep(spec, workers=1)             # compiles the dyn buckets (cold)
+    t_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    result = run_sweep(spec, workers=1)    # post-compile, cache hits only
+    t_scan = time.perf_counter() - t0
+
+    # reference cost estimated from a stratified sample; the same sample
+    # doubles as the cross-check (scan vs event loop within the documented
+    # cluster tolerance -- failures/nodes_used must agree exactly)
+    stride = max(1, len(cells) // (4 if quick else 8))
+    sample = cells[::stride]
+    worst_err = 0.0
+    t0 = time.perf_counter()
+    for cell in sample:
+        ref_m = run_cell(replace(cell, backend="reference",
+                                 cross_check=False))
+        scan_m = next(cr.metrics for cr in result.results
+                      if cr.cell == cell)
+        cell_err = max(abs(ref_m[k] - scan_m[k]) / max(abs(ref_m[k]), 1e-9)
+                       for k in ("R_avg", "R_p95", "max_c"))
+        worst_err = max(worst_err, cell_err)
+        if cell_err > CLUSTER_XCHECK_RTOL:
+            raise AssertionError(
+                f"frontier cross-check breach on {cell.label()}: "
+                f"{cell_err:.3f}")
+    t_ref = (time.perf_counter() - t0) / len(sample) * len(cells)
+
+    # the claim: best autoscaled config at N nodes vs static fleet at N+1
+    agg = result.aggregate()
+    static = {int(r["nodes"]): r for r in agg if not r["autoscale"]}
+    best_auto: dict[int, dict] = {}
+    for r in agg:
+        if r["autoscale"]:
+            n = int(r["nodes"])
+            if n not in best_auto or r["R_p95"] < best_auto[n]["R_p95"]:
+                best_auto[n] = r
+    claim = ""
+    for n in sorted(best_auto):
+        big = static.get(n + 1)
+        if big is None:
+            continue
+        small = best_auto[n]
+        if small["R_p95"] <= big["R_p95"]:
+            claim = (f"{n}n+auto(pd{small['provision_delay']:g}) "
+                     f"p95={small['R_p95']:.2f} <= {n + 1}n static "
+                     f"p95={big['R_p95']:.2f}")
+            break
+    if not claim:
+        claim = "no-frontier-point"
+
+    if artifacts:
+        import os
+        os.makedirs(artifacts, exist_ok=True)
+        csv_path = f"{artifacts}/frontier.csv"
+        result.to_csv(csv_path)
+        try:
+            from .plots import plot_frontier
+            plot_frontier(agg, "R_p95", f"{artifacts}/frontier_R_p95.png")
+        except Exception as e:  # noqa: BLE001  (matplotlib optional)
+            print(f"# frontier plot skipped: {e}")
+
+    derived = (f"{claim};scan_s={t_scan:.2f};scan_cold_s={t_cold:.2f};"
+               f"ref_est_s={t_ref:.1f};"
+               f"speedup={t_ref / max(t_scan, 1e-9):.1f}x;"
+               f"cells={len(cells)};xcheck_n={len(sample)};"
+               f"xcheck_worst={worst_err:.2e}")
+    return [{"name": "engine/frontier",
+             "us_per_call": t_scan / len(cells) * 1e6,
+             "derived": derived}]
+
+
 def _engine_cell(cell: SweepCell, quick: bool = False) -> dict:
     """One policy on the live engine; returns sweep-shaped metrics."""
     from repro.configs import get_config
@@ -175,11 +285,12 @@ def _engine_cell(cell: SweepCell, quick: bool = False) -> dict:
             "n": float(s["n"])}
 
 
-ROW_GROUPS = ("all", "engine", "backend", "cluster")
+ROW_GROUPS = ("all", "engine", "backend", "cluster", "frontier")
 
 
 def run(quick: bool = False, backend: str = "vectorized",
-        workers: int | None = None, rows_group: str = "all") -> list[dict]:
+        workers: int | None = None, rows_group: str = "all",
+        artifacts: str | None = None) -> list[dict]:
     rows = []
     if rows_group in ("all", "engine"):
         # XLA engines cannot fork; workers>1 uses a spawn pool so the
@@ -200,14 +311,17 @@ def run(quick: bool = False, backend: str = "vectorized",
         rows.extend(backend_speedup_rows(quick, backend=backend))
     if rows_group in ("all", "cluster"):
         rows.extend(cluster_speedup_rows(quick))
+    if rows_group in ("all", "frontier"):
+        rows.extend(frontier_rows(quick, artifacts=artifacts))
     return rows
 
 
 def main(quick: bool = False, backend: str = "vectorized",
          workers: int | None = None, rows_group: str = "all",
-         json_path: str | None = None) -> None:
+         json_path: str | None = None,
+         artifacts: str | None = None) -> None:
     rows = run(quick, backend=backend, workers=workers,
-               rows_group=rows_group)
+               rows_group=rows_group, artifacts=artifacts)
     emit(rows)
     if json_path:
         with open(json_path, "w") as fh:
@@ -228,6 +342,9 @@ if __name__ == "__main__":
                     help="which benchmark rows to run")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the rows as a JSON artifact")
+    ap.add_argument("--artifacts", default=None, metavar="DIR",
+                    help="directory for the frontier CSV/plot artifacts")
     args = ap.parse_args()
     main(args.quick, backend=args.backend, workers=args.workers,
-         rows_group=args.rows, json_path=args.json)
+         rows_group=args.rows, json_path=args.json,
+         artifacts=args.artifacts)

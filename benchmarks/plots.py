@@ -39,6 +39,8 @@ def _coerce(key: str, val):
         return None
     if key in _STR_COLS:
         return val
+    if val in ("True", "False"):          # CSV round-trip of bool axes
+        return val == "True"
     try:
         f = float(val)
     except (TypeError, ValueError):
@@ -160,10 +162,63 @@ def plot_node_frontier(rows: list[dict], metric: str = "R_avg",
     return Path(out)
 
 
+def plot_frontier(rows: list[dict], metric: str = "R_p95",
+                  out: str | Path = "sweep_frontier.png") -> Path:
+    """Autoscaler frontier: ``metric`` (a tail percentile) vs node count,
+    one line per provision delay plus a ``static`` line for autoscale-off
+    rows -- the paper's "fewer machines, same tail" claim as a family of
+    frontier curves.  Panels per (policy, intensity) slice."""
+    panels: dict[tuple, list[dict]] = {}
+    for r in rows:
+        if r.get("nodes") is None or r.get(metric) is None:
+            continue
+        key = (str(r.get("policy")), r.get("intensity"))
+        panels.setdefault(key, []).append(r)
+    panels = {k: v for k, v in panels.items()
+              if len({r["nodes"] for r in v}) > 1
+              and any(r.get("autoscale") for r in v)}
+    if not panels:
+        raise ValueError(
+            f"artifact has no autoscale frontier rows for {metric} "
+            "(needs nodes + autoscale axes)")
+    fig, axes = _fig(len(panels))
+    for ax, (key, prows) in zip(axes, sorted(panels.items(),
+                                             key=lambda kv: str(kv[0]))):
+        policy, intensity = key
+        series: dict[str, list[dict]] = {}
+        for r in prows:
+            if r.get("autoscale"):
+                pd = r.get("provision_delay")
+                name = f"provision {pd:g}s" if pd is not None else "autoscale"
+            else:
+                name = "static fleet"
+            series.setdefault(name, []).append(r)
+        for name, srows in sorted(series.items()):
+            pts = _series_sorted(srows, "nodes")
+            style = dict(marker="o", markersize=3.5, linewidth=1.4)
+            if name == "static fleet":
+                style.update(color="black", linestyle="--", marker="s")
+            ax.plot([p["nodes"] for p in pts], [p[metric] for p in pts],
+                    label=name, **style)
+        ax.set_title(f"{policy}, v={intensity:g}", fontsize=10)
+        ax.set_xlabel("initial nodes")
+        ax.set_ylabel(f"{metric} (s)" if metric.startswith("R") else metric)
+        ax.grid(alpha=0.3)
+        ax.legend(fontsize=8)
+    for ax in axes[len(panels):]:
+        ax.set_visible(False)
+    fig.tight_layout()
+    fig.savefig(out, dpi=120)
+    import matplotlib.pyplot as plt
+    plt.close(fig)
+    return Path(out)
+
+
 def render_rows(rows: list[dict], outdir: str | Path,
                 metrics: tuple[str, ...] = ("R_avg",)) -> list[Path]:
     """Render every figure the artifact supports: policy curves when an
-    intensity axis exists, node frontiers when a nodes axis exists."""
+    intensity axis exists, node frontiers when a nodes axis exists, and
+    autoscaler frontier curves when autoscale rows are present."""
     outdir = Path(outdir)
     outdir.mkdir(parents=True, exist_ok=True)
     written: list[Path] = []
@@ -176,6 +231,11 @@ def render_rows(rows: list[dict], outdir: str | Path,
         try:
             written.append(plot_node_frontier(
                 rows, metric, outdir / f"nodes_{metric}.png"))
+        except ValueError:
+            pass
+        try:
+            written.append(plot_frontier(
+                rows, metric, outdir / f"frontier_{metric}.png"))
         except ValueError:
             pass
     if not written:

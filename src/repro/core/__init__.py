@@ -18,11 +18,14 @@ Simulation backends (``simulate_single_node(..., backend=...)`` and the
     metrics), including cold starts and tight-memory eviction.
   - ``"scan"`` -- batched ``jax.lax.scan`` variant; a whole grid runs as one
     scan over a padded request tensor (``run_cells_scan``).  Requires the
-    always-warm regime (``scan_eligible``) and is float32, so it agrees with
-    the reference to rounding (~1e-6), not bitwise.
-  - ``"auto"`` -- vectorized where eligible, reference elsewhere (baseline
-    mode, clusters, autoscaling and failure injection always run on the
-    reference event loop).
+    always-warm regime (``scan_eligible``); static-capacity cells are
+    float32 (~1e-6 agreement), clusters with **time-varying capacity**
+    (autoscaling via ``ClusterDynamics``, failure injection) run inside the
+    same kernel under float64 with bit-identical lost-request counts and
+    realized ``CapacityTimeline``\\s.
+  - ``"auto"`` -- the best supported engine per ``supports()`` capability
+    matrix, reference elsewhere (baseline mode, cold pools and stragglers
+    always run on the reference event loop).
   - ``SweepSpec(validate="cross-check")`` runs sampled eligible cells on
     both backends and raises :class:`~repro.core.sweep.BackendMismatchError`
     if any reported metric drifts beyond 1%.
@@ -60,8 +63,10 @@ from .simulator import (
     simulate_single_node,
 )
 from .cluster import (
+    CapacityTimeline,
     Cluster,
     ClusterConfig,
+    ClusterDynamics,
     home_invoker_index,
     least_loaded_index,
     most_free_index,
@@ -108,9 +113,11 @@ __all__ = [
     "BackendMismatchError",
     "BaselineNodeSim",
     "CallRecord",
+    "CapacityTimeline",
     "CellResult",
     "Cluster",
     "ClusterConfig",
+    "ClusterDynamics",
     "Container",
     "ContainerPool",
     "EECT",

@@ -27,6 +27,8 @@ Large-scale extensions (beyond the paper, required for 1000+-node operation):
 
 from __future__ import annotations
 
+import math
+
 from dataclasses import dataclass, field
 
 from .estimator import RuntimeEstimator
@@ -39,6 +41,95 @@ from .simulator import (
     RESP_OVERHEAD_S,
     SimResult,
 )
+
+
+# ---------------------------------------------------------------------------
+# time-varying capacity as a first-class object
+# ---------------------------------------------------------------------------
+@dataclass
+class CapacityTimeline:
+    """Per-node activation/deactivation intervals: node ``i`` serves requests
+    during ``[activate[i], deactivate[i])``.
+
+    This is the *realized* capacity of a run -- the initial fleet, every
+    autoscaler provision (recorded at the moment the node comes up, i.e.
+    after the provision delay) and every injected failure.  The reference
+    :class:`Cluster` maintains one as it runs; the scan backend reconstructs
+    the same object from its per-node activation tensors, so the two engines
+    can be compared on *capacity* as well as on latency metrics."""
+
+    activate: list[float] = field(default_factory=list)
+    deactivate: list[float] = field(default_factory=list)
+
+    @classmethod
+    def static(cls, nodes: int,
+               fail: tuple[tuple[int, float], ...] = ()) -> "CapacityTimeline":
+        """A fixed fleet of ``nodes`` machines active from t=0, minus any
+        scheduled ``(node, kill_time)`` failures."""
+        tl = cls(activate=[0.0] * nodes, deactivate=[math.inf] * nodes)
+        for idx, at in fail:
+            tl.kill(idx, at)
+        return tl
+
+    @property
+    def nodes_total(self) -> int:
+        return len(self.activate)
+
+    def add_node(self, at: float) -> int:
+        """Record a node coming up at ``at``; returns its index."""
+        self.activate.append(float(at))
+        self.deactivate.append(math.inf)
+        return len(self.activate) - 1
+
+    def kill(self, idx: int, at: float) -> None:
+        self.deactivate[idx] = min(self.deactivate[idx], float(at))
+
+    def active_at(self, t: float) -> list[bool]:
+        return [a <= t < d
+                for a, d in zip(self.activate, self.deactivate)]
+
+    def count_active(self, t: float) -> int:
+        return sum(self.active_at(t))
+
+    def arrays(self, n_pad: int):
+        """``(activate, deactivate)`` float arrays padded to ``n_pad`` nodes
+        with +inf activations (the scan kernel's never-provisioned value)."""
+        import numpy as np
+        act = np.full(n_pad, np.inf, dtype=np.float64)
+        kill = np.full(n_pad, np.inf, dtype=np.float64)
+        act[: self.nodes_total] = self.activate
+        kill[: self.nodes_total] = self.deactivate
+        return act, kill
+
+
+@dataclass(frozen=True)
+class ClusterDynamics:
+    """Declarative capacity-dynamics of a cluster scenario: injected
+    failures plus the autoscaler rule.  Both engines consume it -- the
+    reference :class:`Cluster` turns it into scheduled events, the scan
+    kernel into per-node activation tensors updated inside the scan step --
+    so a sweep cell means the same thing on either backend."""
+
+    fail: tuple[tuple[int, float], ...] = ()   # (node index, kill time)
+    failure_detect_s: float = 1.0
+    autoscale: bool = False
+    autoscale_interval_s: float = 5.0
+    scale_up_queue_per_slot: float = 4.0
+    provision_delay_s: float = 30.0
+    max_nodes: int = 64
+
+    @property
+    def is_static(self) -> bool:
+        return not self.fail and not self.autoscale
+
+    def capacity_bound(self, nodes: int) -> int:
+        """Largest node count the scenario can ever reach (the scan kernel
+        sizes its node axis with this; the autoscaler never schedules past
+        ``max_nodes``)."""
+        return max(nodes, self.max_nodes) if self.autoscale else nodes
+
+    def initial_timeline(self, nodes: int) -> CapacityTimeline:
+        return CapacityTimeline.static(nodes, fail=self.fail)
 
 
 # ---------------------------------------------------------------------------
@@ -79,6 +170,12 @@ def home_invoker_index(fn: str, free_slots) -> int:
     return start
 
 
+# ClusterDynamics is the single source of the dynamics defaults;
+# ClusterConfig mirrors them below so the reference event loop and the scan
+# kernel can never silently run different autoscaler parameters
+_DYN_DEFAULTS = ClusterDynamics()
+
+
 @dataclass
 class ClusterConfig:
     nodes: int = 4
@@ -90,17 +187,17 @@ class ClusterConfig:
     container_mb: int = 128
     # fault tolerance
     retry_on_failure: bool = True
-    failure_detect_s: float = 1.0
+    failure_detect_s: float = _DYN_DEFAULTS.failure_detect_s
     # stragglers
     backup_requests: bool = False
     straggler_factor: float = 3.0
     straggler_floor_s: float = 0.5
     # elasticity
     autoscale: bool = False
-    autoscale_interval_s: float = 5.0
-    scale_up_queue_per_slot: float = 4.0
-    provision_delay_s: float = 30.0
-    max_nodes: int = 64
+    autoscale_interval_s: float = _DYN_DEFAULTS.autoscale_interval_s
+    scale_up_queue_per_slot: float = _DYN_DEFAULTS.scale_up_queue_per_slot
+    provision_delay_s: float = _DYN_DEFAULTS.provision_delay_s
+    max_nodes: int = _DYN_DEFAULTS.max_nodes
     node_speeds: dict[int, float] = field(default_factory=dict)
 
 
@@ -118,6 +215,8 @@ class Cluster:
         self._global_queue: list[Request] = []   # pull model
         self._estimator = RuntimeEstimator()     # controller-side (stragglers)
         self._watched: dict[int, Request] = {}
+        self.timeline = CapacityTimeline()       # realized capacity intervals
+        self._provisioned = cfg.nodes            # incl. scheduled provisions
         for i in range(cfg.nodes):
             self._add_node(speed=cfg.node_speeds.get(i, 1.0))
 
@@ -136,6 +235,7 @@ class Cluster:
             on_complete=self._on_complete,
         )
         self.nodes.append(node)
+        self.timeline.add_node(self.loop.now)
         return node
 
     def _alive_nodes(self) -> list[OursNodeSim]:
@@ -214,6 +314,7 @@ class Cluster:
         if not node.alive:
             return
         lost = node.kill()
+        self.timeline.kill(idx, self.loop.now)
         self.failures += len(lost)
         if self.cfg.assignment == "pull":
             # queued work is recovered from the global queue semantics; the
@@ -269,8 +370,13 @@ class Cluster:
         slots = sum(n.scheduler.slots for n in alive)
         if (
             queued > self.cfg.scale_up_queue_per_slot * max(slots, 1)
-            and len(self.nodes) < self.cfg.max_nodes
+            and self._provisioned < self.cfg.max_nodes
         ):
+            # pending provisions count toward the cap: with a provision delay
+            # of several tick intervals, counting only *added* nodes would let
+            # a sustained backlog overshoot max_nodes before the first new
+            # node ever comes up
+            self._provisioned += 1
             self.loop.schedule(
                 self.loop.now + self.cfg.provision_delay_s,
                 lambda: (self._add_node(), self._pull_round()),
@@ -303,8 +409,24 @@ class Cluster:
             failures=self.failures,
             backups_issued=self.backups_issued,
             nodes_used=len(self.nodes),
+            timeline=self.timeline,
             meta={"policy": self.cfg.policy, "assignment": self.cfg.assignment},
         )
+
+
+# ClusterConfig knobs that define capacity dynamics; simulate_cluster keeps
+# a cell scan-eligible when only these (plus lb/memory sizing) are customized
+_DYNAMICS_KWARGS = ("autoscale", "autoscale_interval_s",
+                    "scale_up_queue_per_slot", "provision_delay_s",
+                    "max_nodes", "failure_detect_s")
+
+
+def _dynamics_from_kwargs(kwargs: dict,
+                          fail_at: float | None) -> ClusterDynamics:
+    defaults = ClusterConfig()
+    vals = {k: kwargs.get(k, getattr(defaults, k)) for k in _DYNAMICS_KWARGS}
+    fail = ((0, fail_at),) if fail_at is not None else ()
+    return ClusterDynamics(fail=fail, **vals)
 
 
 def simulate_cluster(
@@ -315,6 +437,7 @@ def simulate_cluster(
     assignment: str = "pull",
     warm: bool = True,
     backend: str = "reference",
+    fail_at: float | None = None,
     **kwargs,
 ) -> SimResult:
     """Run one burst on an N-node cluster.
@@ -323,9 +446,11 @@ def simulate_cluster(
     :class:`Cluster` above), ``"scan"`` (the batched multi-node
     ``jax.lax.scan`` kernel -- always-warm regime only, raises ``ValueError``
     when the scenario is outside it) or ``"auto"`` (scan where eligible,
-    reference elsewhere).  Scan eligibility additionally requires default
-    fault/straggler/autoscaler settings -- any extra ``kwargs`` beyond
-    ``lb``/``memory_mb``/``container_mb`` force the reference path."""
+    reference elsewhere).  ``fail_at`` injects a node-0 crash at that time on
+    either engine.  The scan path models capacity dynamics (autoscaling via
+    the ``autoscale*``/``provision_delay_s``/``max_nodes`` knobs, failures
+    via ``fail_at``) natively; kwargs outside that set (stragglers, node
+    speeds, retry tuning) force the reference event loop."""
     if backend not in ("reference", "scan", "auto"):
         raise ValueError(f"unknown cluster backend {backend!r}; "
                          "available: ('reference', 'scan', 'auto')")
@@ -339,7 +464,9 @@ def simulate_cluster(
         lb = kwargs.get("lb", "least_loaded")
         memory_mb = kwargs.get("memory_mb", CLUSTER_MEMORY_MB)
         container_mb = kwargs.get("container_mb", CLUSTER_CONTAINER_MB)
-        extra = set(kwargs) - {"lb", "memory_mb", "container_mb"}
+        extra = (set(kwargs) - {"lb", "memory_mb", "container_mb"}
+                 - set(_DYNAMICS_KWARGS))
+        dynamics = _dynamics_from_kwargs(kwargs, fail_at)
         try:
             import jax  # noqa: F401
             have_jax = True
@@ -348,16 +475,16 @@ def simulate_cluster(
         eligible = (have_jax and not extra and cluster_scan_eligible(
             requests, nodes, cores_per_node, policy, assignment=assignment,
             lb=lb, warm=warm, memory_mb=memory_mb,
-            container_mb=container_mb))
+            container_mb=container_mb, dynamics=dynamics))
         if eligible:
             return simulate_cluster_scan(
                 requests, nodes, cores_per_node, policy,
                 assignment=assignment, lb=lb, memory_mb=memory_mb,
-                container_mb=container_mb)
+                container_mb=container_mb, dynamics=dynamics)
         if backend == "scan":
             raise ValueError(
                 "scan cluster backend requires jax and the always-warm ours "
-                f"regime with default fault settings (policy={policy!r}, "
+                f"regime with supported dynamics (policy={policy!r}, "
                 f"nodes={nodes}, cores={cores_per_node}, "
                 f"assignment={assignment!r}); use backend='auto' to fall "
                 "back to the reference event loop")
@@ -366,7 +493,10 @@ def simulate_cluster(
         assignment=assignment, **kwargs,
     )
     warm_fns = sorted({r.fn for r in requests}) if warm else None
-    return Cluster(cfg, warm_functions=warm_fns).run(requests)
+    cluster = Cluster(cfg, warm_functions=warm_fns)
+    if fail_at is not None:
+        cluster.fail_node(0, at=fail_at)
+    return cluster.run(requests)
 
 
 def simulate_baseline_cluster(

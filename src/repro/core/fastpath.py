@@ -25,14 +25,22 @@ policies) in array form:
   computes the cluster routing decision (pull most-free-slots, push
   least-loaded / home-invoker) inside the scan step, so an entire N-node
   cluster cell is one scan and a whole nodes x intensity x policy grid is a
-  handful of bucketed XLA dispatches.  It assumes the *always-warm* regime --
-  every function has ``cores`` warm containers after warm-up, so the pool
-  never cold-starts or evicts -- which holds for the default 32 GB node up to
-  10 cores (see :func:`scan_eligible`) and the cluster's 40 GB nodes up to
-  ~13 (see :func:`cluster_scan_eligible`).  Arithmetic is float32, so
+  handful of bucketed XLA dispatches.  Capacity is **time-varying**: cells
+  with a :class:`~repro.core.cluster.ClusterDynamics` carry per-node
+  activation masks updated inside the step -- autoscaler ticks provision
+  nodes after the configured delay, scheduled kills wipe a node and re-queue
+  its lost calls after the detection delay (counted exactly like the
+  reference), and push-model FC runs off bounded per-(node, fn) arrival
+  count rings.  It assumes the *always-warm* regime -- every function has
+  ``cores`` warm containers after warm-up, so the pool never cold-starts or
+  evicts -- which holds for the default 32 GB node up to 10 cores (see
+  :func:`scan_eligible`) and the cluster's 40 GB nodes up to ~13 (see
+  :func:`cluster_scan_eligible`).  Static-capacity arithmetic is float32, so
   agreement with the reference is within rounding for single nodes (~1e-6)
   and within the documented cluster tolerance for clusters (near-tie
-  orderings can flip; see ``repro.core.sweep.CLUSTER_XCHECK_RTOL``).
+  orderings can flip; see ``repro.core.sweep.CLUSTER_XCHECK_RTOL``);
+  dynamic-capacity buckets run in float64 so failure/autoscale accounting is
+  order-exact.
 
 Compilations are cached per padded bucket shape (powers of two over requests
 x nodes x slots x functions x batch; :func:`scan_cache_stats`), so repeated
@@ -46,6 +54,7 @@ engine falls back).
 from __future__ import annotations
 
 import heapq
+import os
 from collections import deque
 from dataclasses import dataclass
 from functools import partial
@@ -421,8 +430,10 @@ class VectorizedBackend:
     name = "vectorized"
 
     def supports(self, *, mode: str, policy: str, warm: bool,
-                 nodes: int = 1, assignment: str = "pull") -> bool:
-        return mode == "ours" and policy in POLICY_NAMES and nodes <= 1
+                 nodes: int = 1, assignment: str = "pull",
+                 autoscale: bool = False, failures: bool = False) -> bool:
+        return (mode == "ours" and policy in POLICY_NAMES and nodes <= 1
+                and not autoscale and not failures)
 
     def simulate(
         self,
@@ -476,6 +487,21 @@ _PULL_COEF = {
     "fc":   (0.0, 0.0, 0.0, 1.0),
 }
 
+# Dynamic-capacity pull cells carry a 5th coefficient on the *enqueue clock*:
+# a request re-queued after its node died has a real r' (its first pull
+# time), so the shared-`now` identities above no longer cancel across the
+# queue -- FIFO and EECT rank fresh calls by `now` but re-queued ones by
+# their recorded first-dispatch time (always earlier, exactly like the
+# reference's r'-based priorities).  Heads add coef[4]*now (a shared
+# constant, order-preserving), re-queued candidates add coef[4]*r'.
+_PULL_COEF_DYN = {
+    "fifo": (0.0, 0.0, 0.0, 0.0, 1.0),
+    "sept": (0.0, 0.0, 1.0, 0.0, 0.0),
+    "eect": (0.0, 0.0, 1.0, 0.0, 1.0),
+    "rect": (0.0, 1.0, 1.0, 0.0, 0.0),
+    "fc":   (0.0, 0.0, 0.0, 1.0, 0.0),
+}
+
 # ClusterConfig defaults, mirrored here so scan eligibility is judged against
 # the same node sizing the reference cluster uses (tests assert they agree;
 # cluster.py is only imported lazily to keep this module importable alone)
@@ -505,13 +531,12 @@ def scan_eligible(
     return all(len(pool.free.get(fn, ())) >= cores for fn in fns)
 
 
-def _scan_cell_kernel(t_arr, fnid, p, cost, cnt, home0, coef, cores, nodes,
-                      route, ring0, rsum0, rlen0, rpos0, cumf, fn_ev,
-                      *, n_nodes, n_slots, window, freeze, use_fc,
-                      horizon):
+def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
+                      fc_push, dyn, fc_ring, horizon, n_steps):
     """One cell's event scan over a whole **cluster**: slot-occupancy and
     channel clocks carry a node axis, and the per-event dispatch includes the
-    routing decision.  vmapped over the batch by the caller.
+    routing decision.  vmapped over the batch by the caller; ``inp`` is a
+    dict of per-cell arrays (see ``_run_scan_bucket``).
 
     Two static regimes share the body:
 
@@ -521,7 +546,13 @@ def _scan_cell_kernel(t_arr, fnid, p, cost, cnt, home0, coef, cores, nodes,
       dispatches on the node it touched.  ``route`` selects the push balancer
       per cell: 0 = least-loaded (min busy+queued, first on ties), 1 = home
       invoker (``home0`` carries the per-request CRC32 start index; walk
-      forward to the first node with a free slot).
+      forward to the first node with a free slot).  ``fc_push=True``
+      additionally carries bounded per-(node, fn) **arrival-time count
+      rings**: FC's sliding-window count depends on the dynamic routing
+      history, so each routed arrival is logged in its node's ring and the
+      window count is the number of logged times still inside the horizon --
+      the ring is sized to the workload's worst global per-function window
+      count, so it can never undercount.
     * ``freeze=False`` -- the pull model: queued calls are re-ranked at every
       pull from the *controller's* estimator (rings are ``(1, F)`` and start
       empty, exactly like the reference controller), the dispatch node is the
@@ -538,37 +569,102 @@ def _scan_cell_kernel(t_arr, fnid, p, cost, cnt, home0, coef, cores, nodes,
       queue equals the argmin over the F queue *heads*, with the first-index
       tie-break preserved by taking the smallest head event index among the
       minimum-priority functions.
+
+    ``dyn=True`` compiles the **time-varying capacity** machinery on top:
+    per-node activation times and a dead mask (the cell's
+    :class:`~repro.core.cluster.CapacityTimeline` in tensor form) gate
+    routing, slot admission and the management-channel clocks; scheduled
+    kills wipe a node's slots (and, push, its queue) and re-arrive the lost
+    requests after the detection delay, counted exactly like the reference's
+    ``failures``; autoscaler ticks evaluate the queue-per-slot rule inside
+    the scan step and schedule provisions ``provision_delay`` ahead; a
+    newly-activated node drains the global queue through repeated
+    activation-dispatch events.  Event precedence at equal times is kill,
+    arrival, completion, re-arrival, activation, tick (kills are scheduled
+    before the burst in the reference, ticks after).  The step count
+    ``n_steps`` must cover 2n plus the dynamics budget (see
+    ``_ScanCell.dyn_budget``); the caller verifies the returned completion
+    count.
     """
     import jax
     import jax.numpy as jnp
 
+    t_arr = inp["t"]
+    fnid = inp["fnid"]
+    p = inp["p"]
+    cost = inp["cost"]
+    cnt = inp["cnt"]
+    home0 = inp["home0"]
+    coef = inp["coef"]
+    cores = inp["cores"]
+    nodes = inp["nodes"]
+    route = inp["route"]
+    ring0, rsum0, rlen0, rpos0 = (inp["ring0"], inp["rsum0"],
+                                  inp["rlen0"], inp["rpos0"])
+    cumf = inp["cumf"]
+    fn_ev = inp["fn_ev"]
+
     n = t_arr.shape[0] - 1           # t_arr carries a trailing +inf sentinel
-    inf = jnp.float32(jnp.inf)
+    # float dtype follows the inputs: float32 for static-capacity buckets,
+    # float64 for dynamic ones (dispatched under enable_x64 so that f32
+    # clock drift cannot flip completion-vs-kill/arrival event orderings
+    # that failure accounting depends on)
+    ft = t_arr.dtype
+    inf = jnp.asarray(jnp.inf, dtype=ft)
     node_ids = jnp.arange(n_nodes)
     slot_ids = jnp.arange(n_slots)
     fn_ids_ax = jnp.arange(ring0.shape[1])
     win_ids = jnp.arange(window)
+    req_ids = jnp.arange(n + 1)
+    if dyn:
+        interval, thr, delay, detect, auto_f = (inp["dynp"][k]
+                                                for k in range(5))
 
     # XLA's CPU scatter runs a slow generic per-element path, so every
     # fixed-size state update below is a dense one-hot ``where`` instead of
     # an ``.at[]`` scatter -- the masks are tiny ((F,), (nodes, slots), ...)
     # and the elementwise chains fuse into a handful of kernels per step.
-    def step(state, _):
-        (ai, pend, fprio, node_of, head, fin_s, idx_s,
-         busy, qn, chan, ring, rsum, rlen, rpos, last_t, prev_t, narr) = state
+    def step(st, _):
+        ai = st["ai"]
+        head = st["head"]
+        fin_s, idx_s = st["fin_s"], st["idx_s"]
+        busy, qn, chan = st["busy"], st["qn"], st["chan"]
+        ring, rsum, rlen, rpos = st["ring"], st["rsum"], st["rlen"], st["rpos"]
+        last_t, prev_t, narr = st["last_t"], st["prev_t"], st["narr"]
+        if freeze:
+            pend, fprio, node_of = st["pend"], st["fprio"], st["node_of"]
 
         t_a = t_arr[ai]
         flat = fin_s.reshape(-1)
         kflat = jnp.argmin(flat)
         t_c = flat[kflat]
-        arrival = t_a <= t_c         # arrivals beat completions on ties
-        none_left = jnp.isinf(t_a) & jnp.isinf(t_c)
-        now = jnp.minimum(t_a, t_c)
-        do_arr = arrival & ~none_left
-        do_comp = ~arrival & ~none_left
+        if dyn:
+            act_t, dead, killq = st["act_t"], st["dead"], st["killq"]
+            act_pend, rearr = st["act_pend"], st["rearr"]
+            cand = jnp.stack([jnp.min(killq), t_a, t_c, jnp.min(rearr),
+                              jnp.min(jnp.where(act_pend, act_t, inf)),
+                              st["next_tick"]])
+        else:
+            cand = jnp.stack([t_a, t_c])
+        # argmin takes the *first* minimum: at equal times the stack order is
+        # the event precedence (kill < arrival <= completion < ... < tick)
+        e = jnp.argmin(cand)
+        now = cand[e]
+        none_left = jnp.isinf(now)
+        off = 1 if dyn else 0
+        do_arr = (e == off) & ~none_left
+        do_comp = (e == off + 1) & ~none_left
+        if dyn:
+            do_kill = (e == 0) & ~none_left
+            do_re = (e == 3) & ~none_left
+            do_act = (e == 4) & ~none_left
+            do_tick = (e == 5) & ~none_left
+            active = (act_t <= now) & ~dead
+        else:
+            active = node_ids < nodes
 
         # -- completion: free the slot, feed the estimator ring -------------
-        kn = kflat // n_slots
+        kn = (kflat // n_slots).astype(jnp.int32)
         ks = kflat % n_slots
         j_done = idx_s[kn, ks]
         f_done = fnid[j_done]
@@ -588,58 +684,142 @@ def _scan_cell_kernel(t_arr, fnid, p, cost, cnt, home0, coef, cores, nodes,
         busy = jnp.where(m_kn, busy - 1, busy)
         fin_s = jnp.where(m_kn[:, None] & (slot_ids == ks), inf, fin_s)
 
-        # -- arrival: route (freeze) / enqueue, observe the estimator -------
-        i = jnp.minimum(ai, n)
-        f_i = fnid[i]
+        if dyn:
+            ndone = st["ndone"] + do_comp.astype(jnp.int32)
+
+            # -- kill: wipe the node, schedule the lost for re-arrival ------
+            kk = jnp.argmin(killq)
+            m_kk = (node_ids == kk)
+            lost_slot = jnp.isfinite(fin_s[kk])              # (S,)
+            m_lost = jnp.any((idx_s[kk][None, :] == req_ids[:, None])
+                             & lost_slot[None, :], axis=1) & do_kill
+            if freeze:
+                m_lostq = pend & (node_of == kk) & do_kill
+                pend = pend & ~m_lostq
+                lost_any = m_lost | m_lostq
+            else:
+                lost_any = m_lost
+            rearr = jnp.where(lost_any, now + detect, rearr)
+            nfail = st["nfail"] + jnp.sum(lost_any).astype(jnp.int32)
+            fin_s = jnp.where((m_kk & do_kill)[:, None], inf, fin_s)
+            busy = jnp.where(m_kk & do_kill, 0, busy)
+            if freeze:   # pull: qn[0] is the global queue -- kills keep it
+                qn = jnp.where(m_kk & do_kill, 0, qn)
+            dead = dead | (m_kk & do_kill)
+            killq = jnp.where(m_kk & do_kill, inf, killq)
+
+            # -- autoscaler tick: queue-per-slot rule on the live state -----
+            alldone = ndone >= inp["nreq"]
+            n_alive = jnp.sum(active.astype(jnp.int32))
+            queued = jnp.sum(qn).astype(jnp.float32)
+            prov = st["prov"]
+            fire = (do_tick & ~alldone & (prov < inp["maxn"])
+                    & (queued > thr * jnp.maximum(n_alive * cores,
+                                                  1).astype(jnp.float32)))
+            m_new = (node_ids == prov) & fire
+            act_t = jnp.where(m_new, now + delay, act_t)
+            act_pend = act_pend | m_new
+            prov = prov + fire.astype(jnp.int32)
+            next_tick = jnp.where(
+                do_tick, jnp.where(alldone, inf, now + interval),
+                st["next_tick"])
+
+            # -- re-arrival: a lost request re-enters the system ------------
+            ir = jnp.argmin(rearr).astype(jnp.int32)
+            m_ir = (req_ids == ir) & do_re
+            rearr = jnp.where(m_ir, inf, rearr)
+            if not freeze:
+                xq = st["xq"] | m_ir     # joins the (virtual) global queue
+                enq_t = jnp.where(m_ir, now, st["enq_t"])
+
+        # -- arrival / re-arrival: route (freeze) / enqueue, observe --------
+        i_orig = jnp.minimum(ai, n)
+        if dyn:
+            do_ins = do_arr | do_re
+            i_ins = jnp.where(do_arr, i_orig, ir)
+        else:
+            do_ins = do_arr
+            i_ins = i_orig
+        f_i = fnid[i_ins]
         if freeze:
-            real = node_ids < nodes
             # push least-loaded: min busy+queued over nodes, first on ties
-            load = jnp.where(real, busy + qn, jnp.int32(2 ** 30))
+            load = jnp.where(active, busy + qn, jnp.int32(2 ** 30))
             k_ll = jnp.argmin(load)
-            # push home invoker: hash start, walk to the first free node
-            free_n = (busy < cores) & real
-            walk = (home0[i] + node_ids) % jnp.maximum(nodes, 1)
-            wfree = free_n[walk] & real
-            k_home = jnp.where(jnp.any(wfree), walk[jnp.argmax(wfree)],
-                               home0[i])
-            k_arr = jnp.where(route == 1, k_home, k_ll)
+            if dyn:
+                k_arr = k_ll         # home routing stays static-capacity
+            else:
+                # push home invoker: hash start, walk to the first free node
+                free_n = (busy < cores) & active
+                walk = (home0[i_ins] + node_ids) % jnp.maximum(nodes, 1)
+                wfree = free_n[walk] & active
+                k_home = jnp.where(jnp.any(wfree), walk[jnp.argmax(wfree)],
+                                   home0[i_ins])
+                k_arr = jnp.where(route == 1, k_home, k_ll)
+            k_arr = k_arr.astype(jnp.int32)
         else:
             k_arr = jnp.int32(0)
         en_a = k_arr if freeze else 0
+        # pull re-arrivals skip the estimator: the reference re-queues them
+        # without a second controller observe_arrival; push re-arrivals go
+        # through node.submit -> receive and *are* re-observed
+        do_obs = do_ins if freeze else do_arr
         first = narr[en_a, f_i] == 0
-        prev_used = jnp.where(first, t_a, last_t[en_a, f_i])
+        prev_used = jnp.where(first, now, last_t[en_a, f_i])
         m_ea = (jnp.arange(ring.shape[0]) == en_a)
-        m_af = (m_ea[:, None] & (fn_ids_ax == f_i)[None, :]) & do_arr
+        m_af = (m_ea[:, None] & (fn_ids_ax == f_i)[None, :]) & do_obs
         prev_t = jnp.where(m_af, prev_used, prev_t)
-        last_t = jnp.where(m_af, t_a, last_t)
+        last_t = jnp.where(m_af, now, last_t)
         narr = jnp.where(m_af, narr + 1, narr)
-        qn = jnp.where((node_ids == k_arr) & do_arr, qn + 1, qn)
+        qn = jnp.where((node_ids == k_arr) & do_ins, qn + 1, qn)
         ai = ai + do_arr.astype(jnp.int32)
         if freeze:
+            if fc_push:
+                # bounded per-(node, fn) arrival ring: log, then count the
+                # window (the logged time itself is inside it, matching the
+                # reference's observe-then-rank order)
+                fcr, fcp = st["fcr"], st["fcp"]
+                pos_fc = fcp[k_arr, f_i]
+                m_nf = ((node_ids == k_arr)[:, None]
+                        & (fn_ids_ax == f_i)[None, :]) & do_ins
+                fcr = jnp.where(m_nf[:, :, None]
+                                & (jnp.arange(fc_ring) == pos_fc), now, fcr)
+                fcp = jnp.where(m_nf, (pos_fc + 1) % fc_ring, fcp)
+                cnt_i = jnp.sum(fcr[k_arr, f_i]
+                                > now - horizon).astype(jnp.float32)
+            else:
+                cnt_i = cnt[i_ins]
             est_i = jnp.where(rlen[en_a, f_i] > 0,
                               rsum[en_a, f_i]
                               / jnp.maximum(rlen[en_a, f_i], 1), 0.0)
-            prio_i = (coef[0] * t_a + coef[1] * prev_used
-                      + (coef[2] + coef[3] * cnt[i]) * est_i)
-            pend = pend.at[i].set(jnp.where(do_arr, True, pend[i]))
-            fprio = fprio.at[i].set(jnp.where(do_arr, prio_i, fprio[i]))
-            node_of = node_of.at[i].set(jnp.where(do_arr, k_arr, node_of[i]))
+            prio_i = (coef[0] * now + coef[1] * prev_used
+                      + (coef[2] + coef[3] * cnt_i) * est_i)
+            pend = pend.at[i_ins].set(jnp.where(do_ins, True, pend[i_ins]))
+            fprio = fprio.at[i_ins].set(jnp.where(do_ins, prio_i,
+                                                  fprio[i_ins]))
+            node_of = node_of.at[i_ins].set(jnp.where(do_ins, k_arr,
+                                                      node_of[i_ins]))
 
         # -- dispatch: one launch restores the "queued => saturated"
-        # invariant (always-warm admission never blocks)
+        # invariant (always-warm admission never blocks); a newly-activated
+        # node keeps its activation event pending until it is saturated or
+        # the queue drains, so multi-slot backfill costs one step per launch
+        if dyn:
+            ka = jnp.argmin(jnp.where(act_pend, act_t, inf)).astype(jnp.int32)
         if freeze:
             # an event only changes its own node's queue/slots
-            k_d = jnp.where(do_arr, k_arr, kn)
+            k_d = jnp.where(do_ins, k_arr, kn)
+            if dyn:
+                k_d = jnp.where(do_act, ka, k_d)
             prio_vec = jnp.where(pend & (node_of == k_d), fprio, inf)
-            j = jnp.argmin(prio_vec)
+            j = jnp.argmin(prio_vec).astype(jnp.int32)
             has_q = prio_vec[j] < inf
             prio_j = prio_vec[j]
         else:
             # pull: the invoker with the most free slots pulls the global
             # best head, ranked fresh from the controller estimator --
             # O(F) over the function-queue heads (see the docstring)
-            fs = jnp.where(node_ids < nodes, cores - busy, -1)
-            k_d = jnp.argmax(fs)
+            fs = jnp.where(active, cores - busy, -1)
+            k_d = jnp.argmax(fs).astype(jnp.int32)
             est_f = jnp.where(rlen[0] > 0,
                               rsum[0] / jnp.maximum(rlen[0], 1), 0.0)
             kmax = fn_ev.shape[1] - 1
@@ -652,15 +832,38 @@ def _scan_cell_kernel(t_arr, fnid, p, cost, cnt, home0, coef, cores, nodes,
                 w_est = coef[2] + coef[3] * cnt_f
             else:
                 w_est = coef[2]
-            prio_f = (coef[0] * t_arr[idx_f] + coef[1] * prev_t[0]
-                      + w_est * est_f)
+            base_f = coef[1] * prev_t[0] + w_est * est_f
+            prio_f = coef[0] * t_arr[idx_f] + base_f
+            if dyn:                  # enqueue-clock term (see _PULL_COEF_DYN)
+                prio_f = prio_f + coef[4] * now
             prio_f = jnp.where(valid, prio_f, inf)
             best = jnp.min(prio_f)
             # first-index tie-break over the (virtual) global queue
             j = jnp.min(jnp.where(valid & (prio_f == best), idx_f, n))
             has_q = j < n
             prio_j = best
-        can = ~none_left & (busy[k_d] < cores) & has_q
+            if dyn:
+                # re-queued lost requests live outside the head windows;
+                # same per-function pull formula, but their enqueue clock is
+                # the recorded first-dispatch time (their reference r')
+                prio_x = jnp.where(xq, coef[0] * t_arr + base_f[fnid]
+                                   + coef[4] * st["rq_rt"], inf)
+                j_x = jnp.argmin(prio_x).astype(jnp.int32)
+                best_x = prio_x[j_x]
+                # equal-priority ties resolve by global queue *append* order
+                # (the reference's first-in-queue argmin): a re-queued call
+                # re-enters at its re-queue time, after every fresh call
+                # that was already waiting
+                pick_x = (best_x < prio_j) | ((best_x == prio_j)
+                                              & (st["enq_t"][j_x] < t_arr[j]))
+                j = jnp.where(pick_x, j_x, j)
+                prio_j = jnp.minimum(best_x, prio_j)
+                has_q = prio_j < inf
+        if dyn:
+            allow = do_ins | do_comp | do_act
+            can = allow & active[k_d] & (busy[k_d] < cores) & has_q
+        else:
+            can = ~none_left & (busy[k_d] < cores) & has_q
         exec_start = jnp.maximum(now, chan[k_d]) + cost[j]
         m_kd = (node_ids == k_d)
         chan = jnp.where(m_kd & can, exec_start, chan)
@@ -675,42 +878,100 @@ def _scan_cell_kernel(t_arr, fnid, p, cost, cnt, home0, coef, cores, nodes,
         if freeze:
             pend = pend.at[j].set(jnp.where(can, False, pend[j]))
         else:
-            head = jnp.where((fn_ids_ax == fnid[j]) & can, head + 1, head)
+            if dyn:
+                from_x = can & pick_x
+                xq = jnp.where((req_ids == j) & from_x, False, xq)
+                adv = can & ~pick_x
+                # the reference sets r' at node receive, i.e. the pull moment
+                rq_rt = jnp.where((req_ids == j) & can, now, st["rq_rt"])
+            else:
+                adv = can
+            head = jnp.where((fn_ids_ax == fnid[j]) & adv, head + 1, head)
+        if dyn:
+            # keep the activation event current while the new node can
+            # still absorb queued work
+            still = do_act & can & (jnp.sum(qn) > 0) & (busy[ka] < cores)
+            act_pend = jnp.where((node_ids == ka) & do_act, still, act_pend)
 
         # per-dispatch record: scattered into per-request arrays after the
         # scan, so the carry holds no O(n) output state (the pull carry is
         # O(F + nodes), which is what makes long streams cheap)
         out = (jnp.where(can, j, n), exec_start, fin_j, prio_j, k_d)
-        return (ai, pend, fprio, node_of, head, fin_s, idx_s,
-                busy, qn, chan, ring, rsum, rlen, rpos,
-                last_t, prev_t, narr), out
+        nxt = {"ai": ai, "head": head, "fin_s": fin_s, "idx_s": idx_s,
+               "busy": busy, "qn": qn, "chan": chan,
+               "ring": ring, "rsum": rsum, "rlen": rlen, "rpos": rpos,
+               "last_t": last_t, "prev_t": prev_t, "narr": narr}
+        if freeze:
+            nxt.update(pend=pend, fprio=fprio, node_of=node_of)
+        if fc_push:
+            nxt.update(fcr=fcr, fcp=fcp)
+        if dyn:
+            nxt.update(act_t=act_t, dead=dead, killq=killq,
+                       act_pend=act_pend, rearr=rearr, next_tick=next_tick,
+                       prov=prov, nfail=nfail, ndone=ndone)
+            if not freeze:
+                nxt.update(xq=xq, rq_rt=rq_rt, enq_t=enq_t)
+        return nxt, out
 
     n_est = n_nodes if freeze else 1
     n_fns = ring0.shape[1]
-    state0 = (
-        jnp.int32(0),
-        jnp.zeros(n + 1 if freeze else 1, dtype=bool),
-        jnp.zeros(n + 1 if freeze else 1, dtype=jnp.float32),
-        jnp.zeros(n + 1 if freeze else 1, dtype=jnp.int32),
-        jnp.zeros(n_fns, dtype=jnp.int32),
-        jnp.full((n_nodes, n_slots), inf),
-        jnp.zeros((n_nodes, n_slots), dtype=jnp.int32),
-        jnp.zeros(n_nodes, dtype=jnp.int32),
-        jnp.zeros(n_nodes, dtype=jnp.int32),
-        jnp.zeros(n_nodes, dtype=jnp.float32),
-        ring0, rsum0, rlen0, rpos0,
-        jnp.zeros((n_est, n_fns), dtype=jnp.float32),
-        jnp.zeros((n_est, n_fns), dtype=jnp.float32),
-        jnp.zeros((n_est, n_fns), dtype=jnp.int32),
-    )
+    state0 = {
+        "ai": jnp.int32(0),
+        "head": jnp.zeros(n_fns, dtype=jnp.int32),
+        "fin_s": jnp.full((n_nodes, n_slots), jnp.inf, dtype=ft),
+        "idx_s": jnp.zeros((n_nodes, n_slots), dtype=jnp.int32),
+        "busy": jnp.zeros(n_nodes, dtype=jnp.int32),
+        "qn": jnp.zeros(n_nodes, dtype=jnp.int32),
+        "chan": jnp.zeros(n_nodes, dtype=ft),
+        "ring": ring0, "rsum": rsum0, "rlen": rlen0, "rpos": rpos0,
+        "last_t": jnp.zeros((n_est, n_fns), dtype=ft),
+        "prev_t": jnp.zeros((n_est, n_fns), dtype=ft),
+        "narr": jnp.zeros((n_est, n_fns), dtype=jnp.int32),
+    }
+    if freeze:
+        state0.update(
+            pend=jnp.zeros(n + 1, dtype=bool),
+            fprio=jnp.zeros(n + 1, dtype=ft),
+            node_of=jnp.zeros(n + 1, dtype=jnp.int32),
+        )
+    if fc_push:
+        state0.update(
+            fcr=jnp.full((n_nodes, n_fns, fc_ring), -jnp.inf, dtype=ft),
+            fcp=jnp.zeros((n_nodes, n_fns), dtype=jnp.int32),
+        )
+    if dyn:
+        state0.update(
+            act_t=inp["act0"], dead=jnp.zeros(n_nodes, dtype=bool),
+            killq=inp["killt"],
+            act_pend=jnp.zeros(n_nodes, dtype=bool),
+            rearr=jnp.full(n + 1, jnp.inf, dtype=ft),
+            next_tick=jnp.where(inp["dynp"][4] > 0, inp["dynp"][0], inf),
+            prov=nodes.astype(jnp.int32),
+            nfail=jnp.int32(0), ndone=jnp.int32(0),
+        )
+        if not freeze:
+            state0["xq"] = jnp.zeros(n + 1, dtype=bool)
+            state0["rq_rt"] = jnp.zeros(n + 1, dtype=ft)
+            state0["enq_t"] = t_arr          # fresh calls enqueue at receive
+
     state, (j_s, es_s, fs_s, pj_s, kd_s) = jax.lax.scan(
-        step, state0, None, length=2 * n)
+        step, state0, None, length=n_steps)
+    if dyn:
+        # a lost request is dispatched twice; XLA scatter order over
+        # duplicate indices is undefined, so the last-wins resolution
+        # happens host-side in step order (see _run_scan_bucket)
+        summary = {"nfail": state["nfail"], "ndone": state["ndone"],
+                   "prov": state["prov"], "act_t": state["act_t"],
+                   "dead": state["dead"]}
+        if freeze:
+            summary.update(prio=state["fprio"], node=state["node_of"])
+        return (j_s, es_s, fs_s, pj_s, kd_s), summary
     # one batched scatter per output; can=False steps landed on sentinel n
     start = jnp.zeros(n + 1).at[j_s].set(es_s)
     finish = jnp.zeros(n + 1).at[j_s].set(fs_s)
     if freeze:
-        prio = state[2]              # frozen at arrival, never overwritten
-        node = state[3]
+        prio = state["fprio"]        # frozen at arrival, never overwritten
+        node = state["node_of"]
     else:
         prio = jnp.zeros(n + 1).at[j_s].set(pj_s)
         node = jnp.zeros(n + 1, dtype=jnp.int32).at[j_s].set(kd_s)
@@ -725,7 +986,9 @@ def _scan_cell_kernel(t_arr, fnid, p, cost, cnt, home0, coef, cores, nodes,
 # key holds one jitted vmapped kernel, shared across run_sweep calls, so the
 # XLA compile is paid once per bucket per process.
 SCAN_BATCH_MAX = 256         # cells per dispatched chunk (memory bound)
-SCAN_CACHE_MAX = 32          # resident compiled runners (LRU beyond this)
+# resident compiled runners (LRU beyond this); long sweep sessions over
+# ever-changing shapes can bound their footprint via the environment
+SCAN_CACHE_MAX = int(os.environ.get("REPRO_SCAN_CACHE_MAX", "32"))
 
 _SCAN_CACHE: dict[tuple, object] = {}    # insertion-ordered => LRU
 _SCAN_CACHE_STATS = {"hits": 0, "misses": 0}
@@ -751,7 +1014,8 @@ def scan_cache_clear() -> None:
 
 def _scan_runner(key: tuple):
     """Jitted vmapped kernel for one bucket shape ``key = (freeze, use_fc,
-    n_req, n_nodes, n_slots, n_fns, fn_queue_cap, window, batch)``."""
+    fc_push, dyn, n_req, n_nodes, n_slots, n_fns, fn_queue_cap, window,
+    fc_ring, xtra, batch)``."""
     runner = _SCAN_CACHE.pop(key, None)
     if runner is not None:
         _SCAN_CACHE_STATS["hits"] += 1
@@ -760,11 +1024,14 @@ def _scan_runner(key: tuple):
     _SCAN_CACHE_STATS["misses"] += 1
     import jax
 
-    freeze, use_fc, _, n_nodes, n_slots, _, _, window, _ = key
+    (freeze, use_fc, fc_push, dyn, n_req, n_nodes, n_slots,
+     _, _, window, fc_ring, xtra, _) = key
     runner = jax.jit(jax.vmap(partial(
         _scan_cell_kernel, n_nodes=n_nodes, n_slots=n_slots, window=window,
-        freeze=freeze, use_fc=use_fc, horizon=DEFAULT_FC_HORIZON)))
-    while len(_SCAN_CACHE) >= SCAN_CACHE_MAX:
+        freeze=freeze, use_fc=use_fc, fc_push=fc_push, dyn=dyn,
+        fc_ring=fc_ring, horizon=DEFAULT_FC_HORIZON,
+        n_steps=2 * n_req + xtra)))
+    while len(_SCAN_CACHE) > max(SCAN_CACHE_MAX - 1, 0):
         # bound resident XLA executables in long-lived processes that sweep
         # ever-changing shapes; dict order makes this LRU eviction
         _SCAN_CACHE.pop(next(iter(_SCAN_CACHE)))
@@ -783,122 +1050,246 @@ class _ScanCell:
     policy: str
     assignment: str      # "single" | "pull" | "push"
     lb: str = "least_loaded"
+    dynamics: object | None = None      # ClusterDynamics | None
+
+    @property
+    def dyn(self) -> bool:
+        return self.dynamics is not None and not self.dynamics.is_static
+
+    def node_cap(self) -> int:
+        """Largest node count the cell can reach (autoscaler headroom)."""
+        return (self.dynamics.capacity_bound(self.nodes)
+                if self.dynamics is not None else self.nodes)
+
+    def dyn_budget(self) -> int:
+        """Upper bound on the extra scan steps capacity dynamics consume:
+        kill events, lost-request re-arrivals, autoscaler ticks (bounded by
+        a work-conserving makespan bound over the tick interval) and
+        activation backfill dispatches."""
+        if not self.dyn:
+            return 0
+        d = self.dynamics
+        n = len(self.feats.t)
+        kills = len(d.fail)
+        lost = kills * self.cores
+        if self.assignment == "push" and kills:
+            lost += n                # queued-on-node calls are lost too
+        extra = kills + lost
+        if d.autoscale:
+            grow = max(0, d.capacity_bound(self.nodes) - self.nodes)
+            work = 0.0
+            if n:
+                per_req = self.feats.p + self.feats.chan_cost
+                work = (float(self.feats.t[-1]) + float(per_req.sum())
+                        + kills * d.failure_detect_s
+                        + lost * float(per_req.max()))
+            ticks = int(np.ceil(work / max(d.autoscale_interval_s, 1e-6))) + 2
+            extra += ticks + grow * (1 + self.cores)
+        return extra
 
     def bucket(self) -> tuple:
         freeze = self.assignment != "pull"
+        dyn = self.dyn
         use_fc = not freeze and self.policy == "fc"
+        fc_push = freeze and self.policy == "fc" and (self.nodes > 1 or dyn)
         if freeze:
             kq = 1                   # fn_ev unused in frozen-priority mode
         else:                        # per-function queue capacity
             kq = _pow2(int(np.bincount(self.feats.fn_ids).max())
                        if len(self.feats.fn_ids) else 1)
-        return (freeze, use_fc, _pow2(len(self.feats.t)), _pow2(self.nodes),
-                _pow2(self.cores), _pow2(len(self.feats.fns)), kq,
-                DEFAULT_WINDOW)
+        # the per-(node, fn) ring is sized to the worst *global* window
+        # count, which bounds any node-local count from above
+        fc_ring = (_pow2(int(self.feats.count.max()))
+                   if fc_push and len(self.feats.count) else 1)
+        xtra = _pow2(self.dyn_budget()) if dyn else 0
+        return (freeze, use_fc, fc_push, dyn, _pow2(len(self.feats.t)),
+                _pow2(self.node_cap()), _pow2(self.cores),
+                _pow2(len(self.feats.fns)), kq, DEFAULT_WINDOW,
+                fc_ring, xtra)
 
 
 def _run_scan_bucket(key: tuple, cells: list[_ScanCell]) -> list[tuple]:
     """Dispatch one shape bucket (possibly in SCAN_BATCH_MAX chunks, each
     padded to a power-of-two batch) and return per-cell
-    ``(start, finish, prio, node)`` arrays in event order."""
+    ``(start, finish, prio, node, extras)`` arrays in event order; ``extras``
+    is ``None`` for static-capacity cells and a dict (failures, nodes_used,
+    activation/dead vectors) for dynamic ones."""
+    import jax
     import jax.numpy as jnp
 
-    freeze, use_fc, n_b, nodes_b, slots_b, f_b, kq, window = key
+    (freeze, use_fc, fc_push, dyn, n_b, nodes_b, slots_b, f_b, kq,
+     window, fc_ring, xtra) = key
     n1 = n_b + 1
     out: list[tuple] = []
+    # dynamic-capacity buckets compute in float64 (enable_x64 below), so
+    # their inputs must be *built* in float64 -- quantizing kill/arrival
+    # times through float32 first would merge distinct event times and
+    # reintroduce exactly the ordering flips the promotion prevents
+    fdt = np.float64 if dyn else np.float32
     for lo in range(0, len(cells), SCAN_BATCH_MAX):
         chunk = cells[lo:lo + SCAN_BATCH_MAX]
         bsz = _pow2(len(chunk))
         n_est = nodes_b if freeze else 1
 
-        t_arr = np.full((bsz, n1), np.inf, dtype=np.float32)
-        fnid = np.zeros((bsz, n1), dtype=np.int32)
-        p = np.zeros((bsz, n1), dtype=np.float32)
-        cost = np.zeros((bsz, n1), dtype=np.float32)
-        cnt = np.zeros((bsz, n1), dtype=np.float32)
-        home0 = np.zeros((bsz, n1), dtype=np.int32)
-        coef = np.zeros((bsz, 4), dtype=np.float32)
-        cores_v = np.zeros(bsz, dtype=np.int32)
-        nodes_v = np.ones(bsz, dtype=np.int32)
-        route_v = np.zeros(bsz, dtype=np.int32)
-        ring0 = np.zeros((bsz, n_est, f_b, window), dtype=np.float32)
-        rsum0 = np.zeros((bsz, n_est, f_b), dtype=np.float32)
-        rlen0 = np.zeros((bsz, n_est, f_b), dtype=np.int32)
-        rpos0 = np.zeros((bsz, n_est, f_b), dtype=np.int32)
-        # FC pull counts and the per-function queue sequences come from the
-        # static arrival stream; freeze buckets get dummy rows (the kernel
-        # never traces those branches there)
-        cumf = np.zeros((bsz, n1 if use_fc else 1, f_b),
-                        dtype=np.float32)
-        fn_ev = (np.full((bsz, f_b, kq), n_b, dtype=np.int32)
-                 if not freeze else np.zeros((bsz, 1, 1), dtype=np.int32))
+        inp: dict[str, np.ndarray] = {
+            "t": np.full((bsz, n1), np.inf, dtype=fdt),
+            "fnid": np.zeros((bsz, n1), dtype=np.int32),
+            "p": np.zeros((bsz, n1), dtype=fdt),
+            "cost": np.zeros((bsz, n1), dtype=fdt),
+            "cnt": np.zeros((bsz, n1), dtype=fdt),
+            "home0": np.zeros((bsz, n1), dtype=np.int32),
+            "coef": np.zeros((bsz, 5), dtype=fdt),
+            "cores": np.zeros(bsz, dtype=np.int32),
+            "nodes": np.ones(bsz, dtype=np.int32),
+            "route": np.zeros(bsz, dtype=np.int32),
+            "ring0": np.zeros((bsz, n_est, f_b, window), dtype=fdt),
+            "rsum0": np.zeros((bsz, n_est, f_b), dtype=fdt),
+            "rlen0": np.zeros((bsz, n_est, f_b), dtype=np.int32),
+            "rpos0": np.zeros((bsz, n_est, f_b), dtype=np.int32),
+            # FC pull counts and the per-function queue sequences come from
+            # the static arrival stream; freeze buckets get dummy rows (the
+            # kernel never traces those branches there)
+            "cumf": np.zeros((bsz, n1 if use_fc else 1, f_b), dtype=fdt),
+            "fn_ev": (np.full((bsz, f_b, kq), n_b, dtype=np.int32)
+                      if not freeze
+                      else np.zeros((bsz, 1, 1), dtype=np.int32)),
+        }
+        if dyn:
+            inp["act0"] = np.full((bsz, nodes_b), np.inf, dtype=fdt)
+            inp["killt"] = np.full((bsz, nodes_b), np.inf, dtype=fdt)
+            # [autoscale_interval, scale_up_threshold, provision_delay,
+            #  failure_detect, autoscale_flag]
+            inp["dynp"] = np.zeros((bsz, 5), dtype=fdt)
+            inp["maxn"] = np.zeros(bsz, dtype=np.int32)
+            inp["nreq"] = np.zeros(bsz, dtype=np.int32)
 
         for b, cell in enumerate(chunk):
             f = cell.feats
             n = len(f.t)
-            t_arr[b, :n] = f.t
-            fnid[b, :n] = f.fn_ids
-            p[b, :n] = f.p
-            cost[b, :n] = f.chan_cost
-            cnt[b, :n] = f.count
-            cores_v[b] = cell.cores
-            nodes_v[b] = cell.nodes
+            inp["t"][b, :n] = f.t
+            inp["fnid"][b, :n] = f.fn_ids
+            inp["p"][b, :n] = f.p
+            inp["cost"][b, :n] = f.chan_cost
+            inp["cnt"][b, :n] = f.count
+            inp["cores"][b] = cell.cores
+            inp["nodes"][b] = cell.nodes
+            if dyn:
+                d = cell.dynamics
+                inp["act0"][b, :cell.nodes] = 0.0
+                for idx, at in d.fail:
+                    # duplicate kills of one node: the earliest wins, like
+                    # the reference's _do_fail no-op on an already-dead node
+                    inp["killt"][b, idx] = min(inp["killt"][b, idx], at)
+                inp["dynp"][b] = (d.autoscale_interval_s,
+                                  d.scale_up_queue_per_slot,
+                                  d.provision_delay_s,
+                                  d.failure_detect_s,
+                                  1.0 if d.autoscale else 0.0)
+                inp["maxn"][b] = cell.node_cap()
+                inp["nreq"][b] = n
             if cell.assignment == "pull":
-                coef[b] = _PULL_COEF[cell.policy]
+                if dyn:
+                    inp["coef"][b] = _PULL_COEF_DYN[cell.policy]
+                else:
+                    inp["coef"][b, :4] = _PULL_COEF[cell.policy]
                 if use_fc:
                     onehot = np.zeros((n, f_b), dtype=np.float32)
                     onehot[np.arange(n), f.fn_ids] = 1.0
-                    cumf[b, 1:n + 1] = np.cumsum(onehot, axis=0)
-                    cumf[b, n + 1:] = cumf[b, n]
+                    inp["cumf"][b, 1:n + 1] = np.cumsum(onehot, axis=0)
+                    inp["cumf"][b, n + 1:] = inp["cumf"][b, n]
                 for fi in range(len(f.fns)):
                     idx = np.nonzero(f.fn_ids == fi)[0]
-                    fn_ev[b, fi, :idx.size] = idx
+                    inp["fn_ev"][b, fi, :idx.size] = idx
                 continue
-            coef[b] = _POLICY_COEF[cell.policy]
+            inp["coef"][b, :4] = _POLICY_COEF[cell.policy]
             if cell.assignment == "push" and cell.lb == "home":
                 from .traces import stable_hash
-                route_v[b] = 1
+                inp["route"][b] = 1
                 hashes = np.array([stable_hash(fn) for fn in f.fns],
                                   dtype=np.int64)
-                home0[b, :n] = (hashes % cell.nodes)[f.fn_ids]
+                inp["home0"][b, :n] = (hashes % cell.nodes)[f.fn_ids]
             # §V-A warm-up seeds every node's estimator with the profile
-            # median (single-node semantics at nodes=1)
+            # median (single-node semantics at nodes=1); autoscaled nodes
+            # warm up the same way the moment they are provisioned
             seed_n = min(cell.cores, window)
             for fi, fn in enumerate(f.fns):
                 w = PROFILES[fn].median_s if fn in PROFILES else 0.1
-                ring0[b, :, fi, :seed_n] = w
-                rsum0[b, :, fi] = seed_n * w
-                rlen0[b, :, fi] = seed_n
-                rpos0[b, :, fi] = seed_n % window
+                inp["ring0"][b, :, fi, :seed_n] = w
+                inp["rsum0"][b, :, fi] = seed_n * w
+                inp["rlen0"][b, :, fi] = seed_n
+                inp["rpos0"][b, :, fi] = seed_n % window
 
-        run = _scan_runner((freeze, use_fc, n_b, nodes_b, slots_b, f_b,
-                            kq, window, bsz))
-        start_b, finish_b, prio_b, node_b = run(
-            jnp.asarray(t_arr), jnp.asarray(fnid), jnp.asarray(p),
-            jnp.asarray(cost), jnp.asarray(cnt), jnp.asarray(home0),
-            jnp.asarray(coef), jnp.asarray(cores_v), jnp.asarray(nodes_v),
-            jnp.asarray(route_v), jnp.asarray(ring0), jnp.asarray(rsum0),
-            jnp.asarray(rlen0), jnp.asarray(rpos0), jnp.asarray(cumf),
-            jnp.asarray(fn_ev))
-        start_b = np.asarray(start_b, dtype=np.float64)
-        finish_b = np.asarray(finish_b, dtype=np.float64)
-        prio_b = np.asarray(prio_b, dtype=np.float64)
-        node_b = np.asarray(node_b)
-        out.extend((start_b[b], finish_b[b], prio_b[b], node_b[b])
-                   for b in range(len(chunk)))
+        run = _scan_runner((freeze, use_fc, fc_push, dyn, n_b, nodes_b,
+                            slots_b, f_b, kq, window, fc_ring, xtra, bsz))
+        if dyn:
+            # dynamic-capacity buckets run in float64 (enable_x64): failure
+            # accounting and autoscaler decisions depend on exact
+            # completion-vs-kill/arrival event ordering, which float32
+            # channel-clock drift can flip under heavy backlog
+            from jax.experimental import enable_x64
+            with enable_x64():
+                res = run({k: jnp.asarray(v) for k, v in inp.items()})
+                res = jax.tree_util.tree_map(np.asarray, res)
+        else:
+            res = run({k: jnp.asarray(v) for k, v in inp.items()})
+        if not dyn:
+            start_b, finish_b, prio_b, node_b = (np.asarray(a) for a in res)
+            out.extend((start_b[b].astype(np.float64),
+                        finish_b[b].astype(np.float64),
+                        prio_b[b].astype(np.float64), node_b[b], None)
+                       for b in range(len(chunk)))
+            continue
+        (j_s, es_s, fs_s, pj_s, kd_s), summary = res
+        j_s = np.asarray(j_s)
+        es_s = np.asarray(es_s, dtype=np.float64)
+        fs_s = np.asarray(fs_s, dtype=np.float64)
+        pj_s = np.asarray(pj_s, dtype=np.float64)
+        kd_s = np.asarray(kd_s)
+        summary = {k: np.asarray(v) for k, v in summary.items()}
+        for b, cell in enumerate(chunk):
+            n = len(cell.feats.t)
+            if int(summary["ndone"][b]) != n:
+                raise RuntimeError(
+                    f"scan dynamics step budget exhausted: cell completed "
+                    f"{int(summary['ndone'][b])}/{n} requests "
+                    f"(bucket xtra={xtra}); this is a kernel budget bug")
+            # a re-dispatched lost request appears twice in the step record;
+            # numpy fancy assignment resolves duplicates last-wins in step
+            # order, which is exactly the re-dispatch overriding the lost one
+            start = np.zeros(n1)
+            finish = np.zeros(n1)
+            start[j_s[b]] = es_s[b]
+            finish[j_s[b]] = fs_s[b]
+            if freeze:
+                prio = summary["prio"][b].astype(np.float64)
+                node = summary["node"][b]
+            else:
+                prio = np.zeros(n1)
+                node = np.zeros(n1, dtype=np.int64)
+                prio[j_s[b]] = pj_s[b]
+                node[j_s[b]] = kd_s[b]
+            extras = {
+                "failures": int(summary["nfail"][b]),
+                "nodes_used": int(summary["prov"][b]),
+                "act_t": summary["act_t"][b],
+                "dead": summary["dead"][b],
+                "killt": inp["killt"][b],
+            }
+            out.append((start, finish, prio, node, extras))
     return out
 
 
 def _run_scan_cells(cells: list[_ScanCell]) -> list[SimResult]:
     """Bucket, dispatch and write back a list of prepared cells (any mix of
-    single-node / pull / push), preserving input order."""
+    single-node / pull / push, static or dynamic capacity), preserving input
+    order."""
     buckets: dict[tuple, list[int]] = {}
     for i, cell in enumerate(cells):
         buckets.setdefault(cell.bucket(), []).append(i)
     results: list[SimResult | None] = [None] * len(cells)
     for key, idxs in buckets.items():
         arrays = _run_scan_bucket(key, [cells[i] for i in idxs])
-        for i, (start, finish, prio, node) in zip(idxs, arrays):
+        for i, (start, finish, prio, node, extras) in zip(idxs, arrays):
             cell = cells[i]
             f = cell.feats
             order = f.order.tolist()
@@ -917,9 +1308,23 @@ def _run_scan_cells(cells: list[_ScanCell]) -> list[SimResult]:
             if cell.assignment != "single":
                 meta["nodes"] = cell.nodes
                 meta["assignment"] = cell.assignment
+            failures = 0
+            nodes_used = cell.nodes
+            timeline = None
+            if extras is not None:
+                from .cluster import CapacityTimeline
+                failures = extras["failures"]
+                nodes_used = extras["nodes_used"]
+                timeline = CapacityTimeline(
+                    activate=[float(a)
+                              for a in extras["act_t"][:nodes_used]],
+                    deactivate=[float(extras["killt"][k])
+                                if bool(extras["dead"][k]) else float("inf")
+                                for k in range(nodes_used)])
             results[i] = SimResult(
                 requests=cell.requests, cold_starts=0, evictions=0,
-                creations=0, nodes_used=cell.nodes, meta=meta)
+                creations=0, failures=failures, nodes_used=nodes_used,
+                timeline=timeline, meta=meta)
     return results  # type: ignore[return-value]
 
 
@@ -968,6 +1373,7 @@ def cluster_scan_eligible(
     warm: bool = True,
     memory_mb: int = CLUSTER_MEMORY_MB,
     container_mb: int = CLUSTER_CONTAINER_MB,
+    dynamics=None,
 ) -> bool:
     """True when the scan kernel reproduces the reference cluster within
     float32 rounding: ours mode, known policy, always-warm nodes (the §V-A
@@ -977,16 +1383,32 @@ def cluster_scan_eligible(
     * ``assignment="pull"`` -- any policy (priorities are re-ranked at pull
       time from the controller estimator, exactly like the reference), or
     * ``assignment="push"`` with ``lb`` least_loaded/home -- any policy
-      except FC, whose per-node sliding-window count depends on the dynamic
-      routing history and cannot be reconstructed statically.
+      including FC, whose per-node sliding-window count is modelled with
+      bounded per-(node, fn) arrival-time rings.
+
+    ``dynamics`` (a :class:`~repro.core.cluster.ClusterDynamics`) extends
+    eligibility to **time-varying capacity**: autoscaling and scheduled node
+    failures run inside the scan step.  Dynamic cells additionally require
+    the least-loaded balancer for push (the home walk depends on the alive
+    fleet size), failures confined to the initial fleet with at least one
+    initial survivor, and -- for failures -- at least two initial nodes, so
+    lost requests always have somewhere to go when they re-arrive.
     """
     if policy not in POLICY_NAMES or not warm or nodes < 1:
         return False
     if assignment == "push":
-        if policy == "fc" or lb not in ("least_loaded", "home"):
+        if lb not in ("least_loaded", "home"):
             return False
     elif assignment != "pull":
         return False
+    if dynamics is not None and not dynamics.is_static:
+        if assignment == "push" and lb != "least_loaded":
+            return False
+        if dynamics.fail:
+            failed = {idx for idx, _ in dynamics.fail}
+            if (max(failed) >= nodes or len(failed) >= nodes
+                    or any(at < 0 for _, at in dynamics.fail)):
+                return False
     fns = sorted({r.fn for r in requests})
     pool = _FastPool(memory_mb=memory_mb, container_mb=container_mb,
                      cores=cores, fn_memory=SEBS_MEMORY_MB)
@@ -1000,16 +1422,20 @@ def simulate_cluster_cells_scan(
     container_mb: int = CLUSTER_CONTAINER_MB,
     validate: bool = True,
 ) -> list[SimResult]:
-    """Run a batch of ``(requests, nodes, cores, policy[, assignment[, lb]])``
-    ours-mode cluster scenarios as bucketed vmapped scans -- an entire
-    nodes x intensity x policy grid becomes a handful of XLA dispatches.
+    """Run a batch of ``(requests, nodes, cores, policy[, assignment[, lb[,
+    dynamics]]])`` ours-mode cluster scenarios as bucketed vmapped scans --
+    an entire nodes x intensity x policy grid becomes a handful of XLA
+    dispatches.  ``dynamics`` (a
+    :class:`~repro.core.cluster.ClusterDynamics`, or ``None``) adds
+    autoscaling and scheduled failures, modelled inside the scan step.
 
     Every cell must satisfy :func:`cluster_scan_eligible` (raises
     ``ValueError`` otherwise; ``validate=False`` skips the re-check for
     callers that already ran it).  Semantics follow the reference
     :class:`~repro.core.cluster.Cluster` in the always-warm regime; agreement
     is within the documented cluster cross-check tolerance (float32 clocks,
-    index-order tie-breaking), see ``repro.core.sweep.CLUSTER_XCHECK_RTOL``.
+    index-order tie-breaking), see ``repro.core.sweep.CLUSTER_XCHECK_RTOL``;
+    lost-request counts under failure injection are exact.
     """
     if not batch:
         return []
@@ -1018,17 +1444,21 @@ def simulate_cluster_cells_scan(
         requests, nodes, cores, policy = item[:4]
         assignment = item[4] if len(item) > 4 else "pull"
         lb = item[5] if len(item) > 5 else "least_loaded"
+        dynamics = item[6] if len(item) > 6 else None
         if validate and not cluster_scan_eligible(
                 requests, nodes, cores, policy, assignment=assignment,
-                lb=lb, memory_mb=memory_mb, container_mb=container_mb):
+                lb=lb, memory_mb=memory_mb, container_mb=container_mb,
+                dynamics=dynamics):
             raise ValueError(
                 "scan cluster backend requires the always-warm ours regime "
                 f"(policy={policy!r}, nodes={nodes}, cores={cores}, "
-                f"assignment={assignment!r}); use backend='reference'")
+                f"assignment={assignment!r}, dynamics={dynamics!r}); "
+                "use backend='reference'")
         cells.append(_ScanCell(requests=requests,
                                feats=_arrival_features(requests),
                                cores=cores, nodes=nodes, policy=policy,
-                               assignment=assignment, lb=lb))
+                               assignment=assignment, lb=lb,
+                               dynamics=dynamics))
     return _run_scan_cells(cells)
 
 
@@ -1041,32 +1471,36 @@ def simulate_cluster_scan(
     lb: str = "least_loaded",
     memory_mb: int = CLUSTER_MEMORY_MB,
     container_mb: int = CLUSTER_CONTAINER_MB,
+    dynamics=None,
 ) -> SimResult:
     """Single-cell convenience wrapper over
     :func:`simulate_cluster_cells_scan`."""
     return simulate_cluster_cells_scan(
-        [(requests, nodes, cores_per_node, policy, assignment, lb)],
+        [(requests, nodes, cores_per_node, policy, assignment, lb,
+          dynamics)],
         memory_mb=memory_mb, container_mb=container_mb)[0]
 
 
 class ScanBackend:
     """Batched jax.lax.scan variant (always-warm ours regime, float32).
 
-    Supports single nodes *and* clusters: ``nodes > 1`` with the pull
-    assignment (any policy) or the push assignment (any policy but FC)."""
+    Supports single nodes *and* clusters: any of the five policies under the
+    pull assignment or the push assignment (FC via per-(node, fn) count
+    rings), plus time-varying capacity -- autoscaling and failure
+    injection -- for pull and push-least-loaded clusters."""
 
     name = "scan"
 
     def supports(self, *, mode: str, policy: str, warm: bool,
-                 nodes: int = 1, assignment: str = "pull") -> bool:
+                 nodes: int = 1, assignment: str = "pull",
+                 autoscale: bool = False, failures: bool = False) -> bool:
         if mode != "ours" or policy not in POLICY_NAMES or not warm:
             return False
-        if nodes > 1:
-            if assignment == "push":
-                if policy == "fc":
-                    return False
-            elif assignment != "pull":
+        if nodes > 1 or autoscale or failures:
+            if assignment not in ("pull", "push"):
                 return False
+        if failures and nodes < 2:
+            return False             # lost calls need a surviving node
         try:
             import jax  # noqa: F401
         except ImportError:

@@ -427,6 +427,9 @@ class SimResult:
     failures: int = 0
     backups_issued: int = 0
     nodes_used: int = 1
+    # realized per-node capacity intervals (cluster runs only); typed loosely
+    # to keep this module import-independent of .cluster
+    timeline: object | None = None
     meta: dict = field(default_factory=dict)
 
 
@@ -442,16 +445,20 @@ class SimBackend(Protocol):
     semantics, alternative backends must agree with it on every metric the
     sweep engine reports (see ``SweepSpec(validate="cross-check")``).
 
-    ``supports`` also answers for *cluster* scenarios: callers pass
-    ``nodes``/``assignment`` and a backend declares whether it can run the
-    N-node system (the scan backend runs always-warm ours clusters; the
-    single-node fast paths say no for ``nodes > 1``).
+    ``supports`` is a **capability matrix**: callers pass the full scenario
+    shape -- ``nodes``/``assignment`` for clusters, ``autoscale``/``failures``
+    for capacity dynamics -- and a backend declares whether it can run it.
+    The scan backend runs always-warm ours clusters including autoscaling and
+    failure injection; the single-node fast paths say no for ``nodes > 1``
+    and for any capacity dynamics.  The sweep engine routes cells by asking
+    this matrix rather than hard-coding per-backend rules.
     """
 
     name: str
 
     def supports(self, *, mode: str, policy: str, warm: bool,
-                 nodes: int = 1, assignment: str = "pull") -> bool:
+                 nodes: int = 1, assignment: str = "pull",
+                 autoscale: bool = False, failures: bool = False) -> bool:
         """Can this backend run the scenario exactly?"""
         ...
 
@@ -475,7 +482,8 @@ class ReferenceBackend:
     name = "reference"
 
     def supports(self, *, mode: str, policy: str, warm: bool,
-                 nodes: int = 1, assignment: str = "pull") -> bool:
+                 nodes: int = 1, assignment: str = "pull",
+                 autoscale: bool = False, failures: bool = False) -> bool:
         return True
 
     def simulate(

@@ -49,7 +49,8 @@ from .workload import (
 
 # grid axes that identify a cell up to its seed (aggregation groups by these)
 GRID_FIELDS = ("policy", "mode", "assignment", "arrival", "intensity",
-               "cores", "nodes", "autoscale", "fail_at", "backend")
+               "cores", "nodes", "autoscale", "provision_delay", "scale_up",
+               "max_nodes", "fail_at", "backend")
 
 # simulation-backend selectors accepted by SweepCell.backend; the SweepSpec
 # backends axis additionally accepts "cross-check" as sugar for
@@ -94,6 +95,11 @@ class SweepCell:
     cores: int = 10               # per node
     nodes: int = 1
     autoscale: bool = False
+    # autoscaler knobs (None = ClusterConfig defaults); first-class grid
+    # axes so provision-delay x scale-up-threshold frontiers are sweepable
+    provision_delay: float | None = None
+    scale_up: float | None = None
+    max_nodes: int | None = None
     fail_at: float | None = None  # inject: node 0 dies at this time
     seed: int = 0
     duration_s: float = 60.0
@@ -124,6 +130,10 @@ class SweepCell:
             parts.append(self.arrival)
         if self.autoscale:
             parts.append("autoscale")
+            if self.provision_delay is not None:
+                parts.append(f"pd{self.provision_delay:g}")
+            if self.scale_up is not None:
+                parts.append(f"su{self.scale_up:g}")
         if self.fail_at is not None:
             parts.append(f"fail{self.fail_at:g}")
         if self.backend != "reference":
@@ -143,6 +153,9 @@ class SweepSpec:
     cores: Sequence[int] = (10,)
     nodes: Sequence[int] = (1,)
     autoscale: Sequence[bool] = (False,)
+    provision_delays: Sequence[float | None] = (None,)
+    scale_ups: Sequence[float | None] = (None,)
+    max_nodes: int | None = None         # autoscaler headroom (all cells)
     failures: Sequence[float | None] = (None,)
     seeds: int | Sequence[int] = 3
     base_seed: int = 0
@@ -185,14 +198,18 @@ class SweepSpec:
             if b not in backends:
                 backends.append(b)
         out = []
-        for (pol, mode, asg, arr, inten, c, n, auto, fail, be, seed) in \
-                itertools.product(self.policies, self.modes, self.assignments,
-                                  self.arrivals, self.intensities, self.cores,
-                                  self.nodes, self.autoscale, self.failures,
-                                  backends, self.seed_list()):
+        for (pol, mode, asg, arr, inten, c, n, auto, pd, su, fail, be,
+             seed) in itertools.product(
+                self.policies, self.modes, self.assignments,
+                self.arrivals, self.intensities, self.cores,
+                self.nodes, self.autoscale, self.provision_delays,
+                self.scale_ups, self.failures, backends, self.seed_list()):
             cell = SweepCell(
                 policy=pol, mode=mode, assignment=asg, arrival=arr,
                 intensity=inten, cores=c, nodes=n, autoscale=auto,
+                provision_delay=pd if auto else None,
+                scale_up=su if auto else None,
+                max_nodes=self.max_nodes if auto else None,
                 fail_at=fail, seed=seed, duration_s=self.duration_s,
                 workload_cores=self.workload_cores,
                 per_function=self.per_function, trace_path=self.trace_path,
@@ -202,6 +219,18 @@ class SweepSpec:
             )
             if self.cell_filter is None or self.cell_filter(cell):
                 out.append(cell)
+        # autoscaler knobs only mean something on autoscale cells; collapsing
+        # them to None elsewhere would otherwise duplicate static cells
+        if (len(self.provision_delays) > 1 or len(self.scale_ups) > 1):
+            seen: set = set()
+            dedup = []
+            for cell in out:
+                key = (cell.key(), cell.seed)
+                if key in seen:
+                    continue
+                seen.add(key)
+                dedup.append(cell)
+            out = dedup
         if validate == "cross-check":
             stride = max(1, self.validate_stride)
             # Cross-checking dual-runs a cell's own engine against a
@@ -274,19 +303,42 @@ def _vectorized_eligible(cell: SweepCell) -> bool:
             and cell.fail_at is None)
 
 
+def _cell_dynamics(cell: SweepCell):
+    """The cell's :class:`~repro.core.cluster.ClusterDynamics`, or ``None``
+    for a fixed fleet.  Defaults resolve through the same
+    ``_dynamics_from_kwargs`` path ``simulate_cluster`` uses, so both
+    engines see identical autoscaler parameters."""
+    if not cell.autoscale and cell.fail_at is None:
+        return None
+    from .cluster import _dynamics_from_kwargs
+    kwargs: dict = {"autoscale": cell.autoscale}
+    if cell.provision_delay is not None:
+        kwargs["provision_delay_s"] = cell.provision_delay
+    if cell.scale_up is not None:
+        kwargs["scale_up_queue_per_slot"] = cell.scale_up
+    if cell.max_nodes is not None:
+        kwargs["max_nodes"] = cell.max_nodes
+    return _dynamics_from_kwargs(kwargs, cell.fail_at)
+
+
 def _cluster_scan_capable(cell: SweepCell) -> bool:
-    """Static (workload-independent) part of scan-cluster eligibility: ours
-    mode, >1 node, pull (any policy) or push (any but FC), no autoscaling or
-    failure injection, warm.  The always-warm check needs the workload and
+    """Static (workload-independent) part of scan-cluster eligibility,
+    answered by the scan backend's **capability matrix**: ours mode, a
+    cluster-shaped scenario (>1 node, autoscaling, or failure injection),
+    and ``supports(...)`` saying yes for the cell's policy / assignment /
+    dynamics combination.  The always-warm check needs the workload and
     happens in :func:`run_cells_scan` / ``cluster_scan_eligible``."""
     mode = "baseline" if (cell.mode == "baseline"
                           or cell.policy == "baseline") else "ours"
-    if (mode != "ours" or cell.nodes <= 1 or cell.autoscale
-            or cell.fail_at is not None or not cell.warm):
+    cluster_shaped = (cell.nodes > 1 or cell.autoscale
+                      or cell.fail_at is not None)
+    if mode != "ours" or not cluster_shaped or not cell.warm:
         return False
-    if cell.assignment == "push":
-        return cell.policy != "fc"
-    return cell.assignment == "pull"
+    from .simulator import get_backend
+    return get_backend("scan").supports(
+        mode=mode, policy=cell.policy, warm=cell.warm, nodes=cell.nodes,
+        assignment=cell.assignment, autoscale=cell.autoscale,
+        failures=cell.fail_at is not None)
 
 
 def _scan_batchable(cell: SweepCell) -> bool:
@@ -375,18 +427,14 @@ def _cluster_scan_ok(cell: SweepCell, reqs: list[Request],
         return False
     from .fastpath import cluster_scan_eligible
     return cluster_scan_eligible(reqs, cell.nodes, cell.cores, policy,
-                                 assignment=cell.assignment, warm=cell.warm)
+                                 assignment=cell.assignment, warm=cell.warm,
+                                 dynamics=_cell_dynamics(cell))
 
 
 def run_cell(cell: SweepCell) -> dict[str, float]:
     """Run one scenario end-to-end; pure function of the cell (bit-identical
     metrics for identical cells, in any process)."""
-    from .cluster import (
-        Cluster,
-        ClusterConfig,
-        simulate_baseline_cluster,
-        simulate_cluster,
-    )
+    from .cluster import simulate_baseline_cluster, simulate_cluster
     from .simulator import simulate_single_node
 
     reqs = make_workload(cell)
@@ -416,7 +464,11 @@ def run_cell(cell: SweepCell) -> dict[str, float]:
             metrics["xcheck_err"] = _cross_check(cell, metrics, other_m,
                                                  other)
             return metrics
-        done, cold = res.requests, res.cold_starts
+        metrics = _cell_metrics(cell, res.requests, res.cold_starts,
+                                0, 0, nodes_used)
+        if cell.backend == "scan" and backend != "scan":
+            metrics["degraded"] = 1.0
+        return metrics
     elif mode == "baseline":
         if cell.fail_at is not None:
             raise ValueError("failure injection unsupported for the stock "
@@ -425,40 +477,47 @@ def run_cell(cell: SweepCell) -> dict[str, float]:
                                         cores_per_node=cell.cores,
                                         warm=cell.warm)
         done, cold = res.requests, res.cold_starts
+        if cell.backend == "scan":     # stock system never runs on scan
+            metrics = _cell_metrics(cell, done, cold, 0, 0, nodes_used)
+            metrics["degraded"] = 1.0
+            return metrics
     else:
         # scan-backend cluster cells run the multi-node kernel (per-cell
         # here; run_sweep batches whole buckets instead where it can);
         # cross-checked cells keep their own engine as primary and dual-run
         # the counterpart, asserting CLUSTER_XCHECK_RTOL agreement
+        dynamics = _cell_dynamics(cell)
         scan_ok = (cell.backend == "scan" or cell.cross_check) \
             and _cluster_scan_capable(cell) \
             and _cluster_scan_ok(cell, reqs, policy)
+        ref_kw = dict(nodes=cell.nodes, cores_per_node=cell.cores,
+                      policy=policy, assignment=cell.assignment,
+                      warm=cell.warm, fail_at=cell.fail_at,
+                      autoscale=cell.autoscale)
+        if cell.provision_delay is not None:
+            ref_kw["provision_delay_s"] = cell.provision_delay
+        if cell.scale_up is not None:
+            ref_kw["scale_up_queue_per_slot"] = cell.scale_up
+        if cell.max_nodes is not None:
+            ref_kw["max_nodes"] = cell.max_nodes
         if cell.backend == "scan" and scan_ok:
             from .fastpath import simulate_cluster_cells_scan
             res = simulate_cluster_cells_scan(
-                [(reqs, cell.nodes, cell.cores, policy, cell.assignment)])[0]
+                [(reqs, cell.nodes, cell.cores, policy, cell.assignment,
+                  "least_loaded", dynamics)])[0]
             metrics = _cell_metrics(cell, res.requests, res.cold_starts,
-                                    0, 0, res.nodes_used)
+                                    res.failures, 0, res.nodes_used)
             if cell.cross_check:
-                other = simulate_cluster(
-                    make_workload(cell), nodes=cell.nodes,
-                    cores_per_node=cell.cores, policy=policy,
-                    assignment=cell.assignment, warm=cell.warm)
+                other = simulate_cluster(make_workload(cell), **ref_kw)
                 other_m = _cell_metrics(cell, other.requests,
-                                        other.cold_starts, 0, 0,
+                                        other.cold_starts, other.failures,
+                                        other.backups_issued,
                                         other.nodes_used)
                 metrics["xcheck_err"] = _cross_check(
                     cell, other_m, metrics, "scan",
                     rtol=CLUSTER_XCHECK_RTOL)
             return metrics
-        cfg = ClusterConfig(nodes=cell.nodes, cores_per_node=cell.cores,
-                            policy=policy, assignment=cell.assignment,
-                            autoscale=cell.autoscale)
-        warm_fns = sorted({r.fn for r in reqs}) if cell.warm else None
-        cluster = Cluster(cfg, warm_functions=warm_fns)
-        if cell.fail_at is not None:
-            cluster.fail_node(0, at=cell.fail_at)
-        res = cluster.run(reqs)
+        res = simulate_cluster(reqs, **ref_kw)
         done, cold = res.requests, res.cold_starts
         failures, backups = res.failures, res.backups_issued
         nodes_used = res.nodes_used
@@ -468,11 +527,18 @@ def run_cell(cell: SweepCell) -> dict[str, float]:
                                     nodes_used)
             other = simulate_cluster_cells_scan(
                 [(make_workload(cell), cell.nodes, cell.cores, policy,
-                  cell.assignment)])[0]
+                  cell.assignment, "least_loaded", dynamics)])[0]
             other_m = _cell_metrics(cell, other.requests, other.cold_starts,
-                                    0, 0, other.nodes_used)
+                                    other.failures, 0, other.nodes_used)
             metrics["xcheck_err"] = _cross_check(
                 cell, metrics, other_m, "scan", rtol=CLUSTER_XCHECK_RTOL)
+            return metrics
+        if cell.backend == "scan":
+            # a scan-requested cluster cell outside the kernel's regime ran
+            # on the reference event loop: count it (satellite contract)
+            metrics = _cell_metrics(cell, done, cold, failures, backups,
+                                    nodes_used)
+            metrics["degraded"] = 1.0
             return metrics
 
     return _cell_metrics(cell, done, cold, failures, backups, nodes_used)
@@ -522,11 +588,12 @@ def _run_cells_scan_partial(
                                          0, 0, cell.nodes)
     if clusters:
         results = simulate_cluster_cells_scan(
-            [(reqs, cell.nodes, cell.cores, cell.policy, cell.assignment)
+            [(reqs, cell.nodes, cell.cores, cell.policy, cell.assignment,
+              "least_loaded", _cell_dynamics(cell))
              for _, cell, reqs in clusters], validate=False)
         for (pos, cell, _), res in zip(clusters, results):
             metrics[pos] = _cell_metrics(cell, res.requests, res.cold_starts,
-                                         0, 0, res.nodes_used)
+                                         res.failures, 0, res.nodes_used)
     return metrics
 
 
@@ -538,18 +605,23 @@ def run_cells_scan(cells: Sequence[SweepCell],
 
     Handles single-node *and* cluster cells: single-node cells must satisfy
     :func:`repro.core.fastpath.scan_eligible`, cluster cells
-    :func:`repro.core.fastpath.cluster_scan_eligible`.  With ``strict=True``
-    (default) an ineligible cell raises ``ValueError``; with
-    ``strict=False`` ineligible cells quietly run through :func:`run_cell`
-    instead.  Unlike :func:`run_sweep` this executes in-process: the batch
-    IS the parallelism."""
+    :func:`repro.core.fastpath.cluster_scan_eligible` -- both including
+    autoscale / failure-injection dynamics.  With ``strict=True`` (default)
+    an ineligible cell raises ``ValueError``; with ``strict=False``
+    ineligible cells run through :func:`run_cell` instead and are *counted*:
+    their metrics carry ``degraded=1.0`` (surfaced as a ``degraded`` column
+    in ``SweepResult`` aggregates) rather than silently folding into
+    scan-path timings.  Unlike :func:`run_sweep` this executes in-process:
+    the batch IS the parallelism."""
     metrics = _run_cells_scan_partial(cells)
     for pos, m in enumerate(metrics):
         if m is None:
             if strict:
                 raise ValueError(
                     f"cell {cells[pos].label()} is not scan-eligible")
-            metrics[pos] = run_cell(cells[pos])
+            fallback = dict(run_cell(cells[pos]))
+            fallback["degraded"] = 1.0
+            metrics[pos] = fallback
     return metrics  # type: ignore[return-value]
 
 
@@ -586,7 +658,13 @@ class SweepResult:
             row["seeds"] = len(crs)
             metric_keys = sorted({k for cr in crs for k in cr.metrics})
             for mk in metric_keys:
-                vals = [cr.metrics[mk] for cr in crs if mk in cr.metrics]
+                if mk == "degraded":
+                    # fallback *fraction*: cells that ran on their requested
+                    # engine simply lack the key and count as 0, so a group
+                    # where 1 of 5 seeds degraded reads 0.2, not 1.0
+                    vals = [cr.metrics.get(mk, 0.0) for cr in crs]
+                else:
+                    vals = [cr.metrics[mk] for cr in crs if mk in cr.metrics]
                 row[mk] = float(np.mean(vals))
             row["R_avg_std"] = float(np.std(
                 [cr.metrics["R_avg"] for cr in crs]))
@@ -702,6 +780,10 @@ def run_sweep(
         if done and progress is not None:
             progress(done, len(cells))
 
+    # scan-requested cells the batched path could not take (no jax, cold
+    # pool, unsupported dynamics) degrade to run_cell below -- count them
+    degraded_pos = {i for i in scan_pos if metrics[i] is None}
+
     rest = [i for i in range(len(cells)) if metrics[i] is None]
     pool_workers = max(1, min(workers, len(rest)))
     if rest and (pool_workers == 1 or len(rest) == 1):
@@ -733,11 +815,16 @@ def run_sweep(
                 done += 1
                 if progress is not None:
                     progress(done, len(cells))
+    for i in degraded_pos:
+        if metrics[i] is not None and "degraded" not in metrics[i]:
+            metrics[i] = {**metrics[i], "degraded": 1.0}
     wall = time.monotonic() - t0
     return SweepResult(
         results=[CellResult(c, m) for c, m in zip(cells, metrics)],
         wall_s=wall, workers=workers,
-        meta={"cells": len(cells), "scan_batched": scan_batched},
+        meta={"cells": len(cells), "scan_batched": scan_batched,
+              "degraded": sum(1 for m in metrics
+                              if m is not None and m.get("degraded"))},
     )
 
 

@@ -1,0 +1,407 @@
+"""Dynamic-capacity engine core: CapacityTimeline, the backend capability
+matrix, and autoscale / failure-injection parity between the reference event
+loop and the scan kernel.
+
+Contracts under test:
+
+* :class:`CapacityTimeline` describes per-node activation/deactivation
+  intervals; the reference :class:`Cluster` records one as it runs and the
+  scan kernel reconstructs the *same* realized timeline from its activation
+  tensors (activation times equal, kills equal).
+* lost-request counts under ``fail_at`` are **bit-identical** between the
+  two engines; metrics agree within ``CLUSTER_XCHECK_RTOL`` (dynamic
+  buckets run in float64, so typical agreement is ~1e-6).
+* the autoscaler respects ``max_nodes`` *including scheduled provisions*
+  (no overshoot when the provision delay spans several tick intervals), and
+  both engines provision identical fleets.
+* ``supports(autoscale=, failures=)`` -- the capability matrix -- routes
+  cells: the scan backend accepts dynamics on pull / push clusters, the
+  single-node fast paths refuse them.
+* the scan compile cache's LRU cap is env-tunable and eviction does not
+  break batch dispatch.
+"""
+
+import math
+
+import pytest
+
+from repro.core import (
+    CapacityTimeline,
+    Cluster,
+    ClusterConfig,
+    ClusterDynamics,
+    SweepCell,
+    SweepSpec,
+    cluster_scan_eligible,
+    generate_burst,
+    get_backend,
+    run_cell,
+    run_cells_scan,
+    run_sweep,
+    scan_cache_clear,
+    scan_cache_stats,
+    simulate_cluster,
+    summarize,
+)
+from repro.core.sweep import CLUSTER_XCHECK_RTOL
+
+from tests._hypothesis_shim import given, settings, st
+
+try:
+    import jax  # noqa: F401
+    HAVE_JAX = True
+except ImportError:
+    HAVE_JAX = False
+
+needs_jax = pytest.mark.skipif(not HAVE_JAX, reason="jax not installed")
+
+
+def _burst(cores=12, intensity=15, seed=0):
+    return generate_burst(cores=cores, intensity=intensity, seed=seed)
+
+
+def _metrics(res):
+    s = summarize(res.requests)
+    return {"R_avg": s.response_avg, "R_p95": s.response_pct[95],
+            "S_avg": s.stretch_avg, "max_c": s.max_completion, "n": s.n}
+
+
+def _worst_rel(a, b):
+    return max(abs(a[k] - b[k]) / max(abs(a[k]), abs(b[k]), 1e-9) for k in a)
+
+
+class TestCapacityTimeline:
+    def test_static_fleet(self):
+        tl = CapacityTimeline.static(3)
+        assert tl.nodes_total == 3
+        assert tl.activate == [0.0, 0.0, 0.0]
+        assert tl.active_at(0.0) == [True, True, True]
+        assert tl.count_active(100.0) == 3
+
+    def test_fail_interval(self):
+        tl = CapacityTimeline.static(2, fail=((0, 10.0),))
+        assert tl.active_at(9.99) == [True, True]
+        assert tl.active_at(10.0) == [False, True]   # [a, d) half-open
+        assert tl.count_active(20.0) == 1
+
+    def test_add_node_and_kill(self):
+        tl = CapacityTimeline.static(1)
+        idx = tl.add_node(25.0)
+        assert idx == 1 and tl.count_active(20.0) == 1
+        assert tl.count_active(25.0) == 2
+        tl.kill(idx, 30.0)
+        assert tl.active_at(30.0) == [True, False]
+
+    def test_arrays_pad_with_inf(self):
+        import numpy as np
+        act, kill = CapacityTimeline.static(2, fail=((1, 5.0),)).arrays(4)
+        assert act.tolist() == [0.0, 0.0, np.inf, np.inf]
+        assert kill.tolist() == [np.inf, 5.0, np.inf, np.inf]
+
+    def test_dynamics_capacity_bound(self):
+        d = ClusterDynamics(autoscale=True, max_nodes=8)
+        assert d.capacity_bound(2) == 8
+        assert ClusterDynamics().capacity_bound(3) == 3
+        assert ClusterDynamics().is_static
+        assert not ClusterDynamics(fail=((0, 1.0),)).is_static
+
+
+class TestReferenceTimeline:
+    def test_cluster_records_static_timeline(self):
+        res = simulate_cluster(_burst(), nodes=2, cores_per_node=6,
+                               policy="fc")
+        assert res.timeline.activate == [0.0, 0.0]
+        assert res.timeline.deactivate == [math.inf, math.inf]
+
+    def test_cluster_records_failure(self):
+        res = simulate_cluster(_burst(), nodes=2, cores_per_node=6,
+                               policy="fc", fail_at=10.0)
+        assert res.timeline.deactivate[0] == 10.0
+        assert res.failures > 0
+        assert len(res.requests) == len(_burst())   # pull re-queues the lost
+
+    def test_autoscaler_records_provisions(self):
+        res = simulate_cluster(_burst(cores=10, intensity=90), nodes=1,
+                               cores_per_node=10, policy="fc",
+                               autoscale=True, provision_delay_s=15.0,
+                               scale_up_queue_per_slot=1.0, max_nodes=4)
+        tl = res.timeline
+        assert tl.nodes_total == res.nodes_used > 1
+        assert tl.activate[0] == 0.0
+        assert all(a >= 15.0 for a in tl.activate[1:])  # provision delay
+        assert tl.activate == sorted(tl.activate)
+
+    def test_autoscaler_cap_counts_scheduled_provisions(self):
+        """provision_delay spanning many tick intervals must not overshoot
+        max_nodes: pending provisions count toward the cap."""
+        res = simulate_cluster(_burst(cores=10, intensity=120), nodes=1,
+                               cores_per_node=10, policy="fc",
+                               autoscale=True, provision_delay_s=60.0,
+                               autoscale_interval_s=2.0,
+                               scale_up_queue_per_slot=0.5, max_nodes=3)
+        assert res.nodes_used <= 3
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(min_value=20, max_value=90),
+           st.floats(min_value=5.0, max_value=40.0),
+           st.floats(min_value=0.5, max_value=4.0),
+           st.integers(min_value=2, max_value=6))
+    def test_autoscaler_invariants(self, intensity, delay, thr, max_nodes):
+        """Property sweep (hypothesis or the deterministic shim): the
+        autoscaled reference cluster never exceeds max_nodes, never shrinks
+        below the initial fleet, serves every request, and its timeline is
+        monotone with the provision delay respected."""
+        reqs = _burst(cores=10, intensity=intensity, seed=intensity)
+        res = simulate_cluster(reqs, nodes=1, cores_per_node=10, policy="fc",
+                               autoscale=True, provision_delay_s=delay,
+                               scale_up_queue_per_slot=thr,
+                               max_nodes=max_nodes)
+        assert 1 <= res.nodes_used <= max_nodes
+        assert len(res.requests) == len(reqs)
+        tl = res.timeline
+        assert tl.nodes_total == res.nodes_used
+        assert tl.activate == sorted(tl.activate)
+        assert all(a >= delay for a in tl.activate[1:])
+
+
+class TestCapabilityMatrix:
+    def test_reference_supports_everything(self):
+        be = get_backend("reference")
+        assert be.supports(mode="baseline", policy="fifo", warm=False,
+                           nodes=8, autoscale=True, failures=True)
+
+    def test_vectorized_rejects_dynamics(self):
+        be = get_backend("vectorized")
+        assert be.supports(mode="ours", policy="fc", warm=True)
+        assert not be.supports(mode="ours", policy="fc", warm=True,
+                               autoscale=True)
+        assert not be.supports(mode="ours", policy="fc", warm=True,
+                               failures=True)
+
+    @needs_jax
+    def test_scan_capability_matrix(self):
+        be = get_backend("scan")
+        for assignment in ("pull", "push"):
+            for policy in ("fifo", "sept", "eect", "rect", "fc"):
+                assert be.supports(mode="ours", policy=policy, warm=True,
+                                   nodes=4, assignment=assignment,
+                                   autoscale=True, failures=True)
+        # failures need a surviving node
+        assert not be.supports(mode="ours", policy="fc", warm=True,
+                               nodes=1, failures=True)
+        assert not be.supports(mode="baseline", policy="fifo", warm=True,
+                               nodes=4, autoscale=True)
+        assert not be.supports(mode="ours", policy="fc", warm=False, nodes=4)
+
+    @needs_jax
+    def test_eligibility_rejects_unsupported_dynamics(self):
+        reqs = _burst()
+        dyn = ClusterDynamics(fail=((0, 5.0), (1, 6.0)))
+        # killing the whole initial fleet leaves nowhere to re-queue
+        assert not cluster_scan_eligible(reqs, 2, 6, "fc", dynamics=dyn)
+        # dynamic home routing depends on the alive fleet size
+        assert not cluster_scan_eligible(
+            reqs, 2, 6, "sept", assignment="push", lb="home",
+            dynamics=ClusterDynamics(fail=((0, 5.0),)))
+        assert cluster_scan_eligible(
+            reqs, 2, 6, "sept", assignment="push", lb="home")
+
+
+@needs_jax
+class TestFailureParity:
+    """fail_at cells: lost counts bit-identical, metrics within the cluster
+    budget, timelines equal between engines."""
+
+    @pytest.mark.parametrize("policy", ("fifo", "sept", "eect", "rect",
+                                        "fc"))
+    def test_pull_failure_parity(self, policy):
+        ref = simulate_cluster(_burst(), nodes=2, cores_per_node=6,
+                               policy=policy, fail_at=10.0)
+        scan = simulate_cluster(_burst(), nodes=2, cores_per_node=6,
+                                policy=policy, fail_at=10.0, backend="scan")
+        assert scan.failures == ref.failures          # bit-identical
+        assert scan.failures > 0
+        assert scan.timeline.deactivate[0] == ref.timeline.deactivate[0]
+        assert _worst_rel(_metrics(ref), _metrics(scan)) \
+            < CLUSTER_XCHECK_RTOL
+
+    @pytest.mark.parametrize("policy", ("fifo", "fc"))
+    def test_push_failure_parity(self, policy):
+        """Push kills lose queued calls too; both engines count and retry
+        them identically (incl. FC via the per-(node, fn) count rings)."""
+        ref = simulate_cluster(_burst(), nodes=2, cores_per_node=6,
+                               policy=policy, assignment="push",
+                               fail_at=8.0)
+        scan = simulate_cluster(_burst(), nodes=2, cores_per_node=6,
+                                policy=policy, assignment="push",
+                                fail_at=8.0, backend="scan")
+        assert scan.failures == ref.failures
+        assert scan.failures > 0
+        assert _worst_rel(_metrics(ref), _metrics(scan)) \
+            < CLUSTER_XCHECK_RTOL
+
+    def test_all_requests_complete_after_failure(self):
+        reqs = _burst()
+        scan = simulate_cluster(reqs, nodes=2, cores_per_node=6,
+                                policy="fc", fail_at=10.0, backend="scan")
+        assert len(scan.requests) == len(reqs)
+        assert all(r.c is not None for r in reqs)
+
+    def test_failure_after_drain_loses_nothing(self):
+        ref = simulate_cluster(_burst(), nodes=2, cores_per_node=6,
+                               policy="fc", fail_at=1e6)
+        scan = simulate_cluster(_burst(), nodes=2, cores_per_node=6,
+                                policy="fc", fail_at=1e6, backend="scan")
+        assert ref.failures == scan.failures == 0
+
+    def test_duplicate_kills_keep_the_earliest(self):
+        """The reference no-ops a second kill of a dead node; the scan must
+        honor the earliest time too, not the last-listed one."""
+        from repro.core.fastpath import simulate_cluster_cells_scan
+        dyn = ClusterDynamics(fail=((0, 20.0), (0, 5.0)))
+        scan = simulate_cluster_cells_scan(
+            [(_burst(), 3, 6, "fc", "pull", "least_loaded", dyn)])[0]
+        cfg = ClusterConfig(nodes=3, cores_per_node=6, policy="fc")
+        cl = Cluster(cfg, warm_functions=sorted({r.fn for r in _burst()}))
+        cl.fail_node(0, at=20.0)
+        cl.fail_node(0, at=5.0)
+        ref = cl.run(_burst())
+        assert scan.timeline.deactivate[0] == 5.0
+        assert scan.failures == ref.failures
+
+    def test_fail_time_not_quantized_to_float32(self):
+        """Dynamic buckets build inputs in float64: a kill time that is not
+        float32-representable must survive into the realized timeline."""
+        scan = simulate_cluster(_burst(), nodes=2, cores_per_node=6,
+                                policy="fc", fail_at=7.3, backend="scan")
+        assert scan.timeline.deactivate[0] == 7.3
+
+
+@needs_jax
+class TestAutoscaleParity:
+    def test_pull_autoscale_parity(self):
+        kw = dict(nodes=1, cores_per_node=10, policy="fc", autoscale=True,
+                  provision_delay_s=15.0, scale_up_queue_per_slot=2.0,
+                  max_nodes=6)
+        ref = simulate_cluster(_burst(cores=10, intensity=90), **kw)
+        scan = simulate_cluster(_burst(cores=10, intensity=90),
+                                backend="scan", **kw)
+        assert scan.nodes_used == ref.nodes_used > 1
+        assert scan.timeline.activate == ref.timeline.activate
+        assert _worst_rel(_metrics(ref), _metrics(scan)) \
+            < CLUSTER_XCHECK_RTOL
+
+    def test_combined_autoscale_and_failure(self):
+        kw = dict(nodes=2, cores_per_node=8, policy="sept", autoscale=True,
+                  provision_delay_s=12.0, scale_up_queue_per_slot=2.0,
+                  max_nodes=5, fail_at=20.0)
+        ref = simulate_cluster(_burst(cores=16, intensity=60), **kw)
+        scan = simulate_cluster(_burst(cores=16, intensity=60),
+                                backend="scan", **kw)
+        assert scan.failures == ref.failures > 0
+        assert scan.nodes_used == ref.nodes_used
+        assert _worst_rel(_metrics(ref), _metrics(scan)) \
+            < CLUSTER_XCHECK_RTOL
+
+    def test_sweep_batches_dynamic_cells(self):
+        """run_sweep routes autoscale/failure scan cells through the
+        bucketed batch dispatch, none degraded."""
+        spec = SweepSpec(policies=("fc",), nodes=(2,), cores=(6,),
+                         intensities=(20,), autoscale=(False, True),
+                         provision_delays=(10.0,), scale_ups=(2.0,),
+                         max_nodes=4, failures=(None, 10.0), seeds=2,
+                         backends=("scan",))
+        res = run_sweep(spec, workers=1)
+        assert res.meta["scan_batched"] == len(res)
+        assert res.meta["degraded"] == 0
+        ref = run_sweep(SweepSpec(
+            policies=("fc",), nodes=(2,), cores=(6,), intensities=(20,),
+            autoscale=(False, True), provision_delays=(10.0,),
+            scale_ups=(2.0,), max_nodes=4, failures=(None, 10.0), seeds=2,
+            backends=("reference",)), workers=1)
+        for a, b in zip(res.results, ref.results):
+            assert a.metrics["failures"] == b.metrics["failures"]
+            assert a.metrics["nodes_used"] == b.metrics["nodes_used"]
+            assert abs(a.metrics["R_avg"] - b.metrics["R_avg"]) \
+                <= CLUSTER_XCHECK_RTOL * b.metrics["R_avg"]
+
+    def test_cross_check_covers_dynamic_cells(self):
+        spec = SweepSpec(policies=("fc",), nodes=(2,), cores=(6,),
+                         intensities=(15,), failures=(10.0,), seeds=2,
+                         backends=("scan",), validate="cross-check")
+        cells = spec.cells()
+        assert all(c.cross_check for c in cells)
+        res = run_sweep(spec, workers=1)
+        errs = [cr.metrics["xcheck_err"] for cr in res.results]
+        assert len(errs) == 2 and max(errs) <= CLUSTER_XCHECK_RTOL
+
+
+@needs_jax
+class TestPushFcRings:
+    """Push-FC runs on the scan kernel via bounded per-(node, fn) count
+    rings -- completing 5-policy x 3-assignment coverage."""
+
+    @pytest.mark.parametrize("lb", ("least_loaded", "home"))
+    def test_static_push_fc_parity(self, lb):
+        ref = simulate_cluster(_burst(seed=3), nodes=3, cores_per_node=6,
+                               policy="fc", assignment="push", lb=lb)
+        scan = simulate_cluster(_burst(seed=3), nodes=3, cores_per_node=6,
+                                policy="fc", assignment="push", lb=lb,
+                                backend="scan")
+        assert scan.meta["backend"] == "scan"
+        assert _worst_rel(_metrics(ref), _metrics(scan)) \
+            < CLUSTER_XCHECK_RTOL
+
+
+@needs_jax
+class TestScanCacheLimit:
+    def test_cache_cap_is_env_tunable(self, monkeypatch):
+        import importlib
+        monkeypatch.setenv("REPRO_SCAN_CACHE_MAX", "7")
+        import repro.core.fastpath as fp
+        importlib.reload(fp)
+        try:
+            assert fp.SCAN_CACHE_MAX == 7
+        finally:
+            monkeypatch.delenv("REPRO_SCAN_CACHE_MAX")
+            importlib.reload(fp)
+
+    def test_eviction_keeps_batch_dispatch_correct(self, monkeypatch):
+        """With the cap forced to 1, every new bucket shape evicts the
+        previous runner; sweeps still produce correct (identical) metrics
+        and the resident size stays bounded."""
+        import repro.core.fastpath as fp
+        monkeypatch.setattr(fp, "SCAN_CACHE_MAX", 1)
+        scan_cache_clear()
+        cells = [SweepCell(policy="fifo", nodes=2, cores=6, intensity=12,
+                           backend="scan"),
+                 SweepCell(policy="fifo", nodes=2, cores=6, intensity=12,
+                           assignment="push", backend="scan"),
+                 SweepCell(policy="fc", nodes=2, cores=6, intensity=12,
+                           backend="scan")]
+        first = run_cells_scan(cells)
+        stats = scan_cache_stats()
+        assert stats["size"] <= 1 and stats["misses"] >= 2
+        second = run_cells_scan(cells)          # all buckets re-compiled
+        assert first == second
+        for m, cell in zip(first, cells):
+            assert m == run_cell(cell)
+
+
+class TestDegradedAccounting:
+    def test_run_sweep_counts_degraded(self):
+        """A scan-axis grid mixing eligible cluster cells with stock
+        baseline cells surfaces the fallback count instead of silently
+        folding reference timings into the scan path."""
+        spec = SweepSpec(policies=("fc", "baseline"), nodes=(2,), cores=(6,),
+                         intensities=(12,), seeds=2, backends=("scan",))
+        res = run_sweep(spec, workers=1)
+        n_baseline = sum(1 for cr in res.results
+                         if cr.cell.policy == "baseline")
+        assert n_baseline == 2
+        assert res.meta["degraded"] == (n_baseline if HAVE_JAX
+                                        else len(res))
+        agg = {r["policy"]: r for r in res.aggregate()}
+        assert agg["baseline"].get("degraded") == 1.0
+        assert "degraded" not in agg["fc"] or agg["fc"]["degraded"] in (
+            0.0, None) or not HAVE_JAX

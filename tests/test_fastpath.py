@@ -326,22 +326,29 @@ class TestScanBackend:
 
     def test_scan_falls_back_when_ineligible(self):
         """cores=20 is outside the always-warm regime: the sweep engine
-        silently degrades scan -> vectorized (which is exact)."""
+        degrades scan -> vectorized (which is exact) and *marks* the cell."""
         ref = run_cell(SweepCell(policy="sept", cores=20, intensity=20))
         scn = run_cell(SweepCell(policy="sept", cores=20, intensity=20,
                                  backend="scan"))
+        assert scn.pop("degraded") == 1.0
         assert ref == scn
 
     def test_run_cells_scan_rejects_ineligible(self):
-        """Pull clusters are scan-eligible since the multi-node kernel, but
-        autoscaling cells (dynamic node count) still are not."""
+        """Autoscaling cells run on the scan kernel since the
+        dynamic-capacity engine; a cold pool (warm=False) is still outside
+        the regime and strict mode refuses it."""
+        auto = run_cells_scan([SweepCell(policy="fc", nodes=2, cores=5,
+                                         intensity=10, autoscale=True)])
+        assert auto[0]["n"] > 0 and "degraded" not in auto[0]
         with pytest.raises(ValueError, match="not scan-eligible"):
             run_cells_scan([SweepCell(policy="fc", nodes=2, cores=5,
-                                      intensity=10, autoscale=True)])
-        # ...and strict=False degrades them to run_cell instead of raising
+                                      intensity=10, warm=False)])
+        # ...and strict=False degrades cold cells to run_cell instead
         cell = SweepCell(policy="fc", nodes=2, cores=5, intensity=10,
-                         autoscale=True)
-        assert run_cells_scan([cell], strict=False)[0] == run_cell(cell)
+                         warm=False)
+        got = run_cells_scan([cell], strict=False)[0]
+        assert got.pop("degraded") == 1.0
+        assert got == run_cell(cell)
 
     def test_run_cells_scan_rejects_cold_cells(self):
         """warm=False has cold starts the always-warm scan cannot model;

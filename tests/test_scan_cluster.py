@@ -75,10 +75,11 @@ class TestEligibility:
         for policy in POLICIES:
             assert cluster_scan_eligible(reqs, 2, 6, policy)
 
-    def test_push_rejects_fc_accepts_rest(self):
+    def test_push_accepts_all_policies(self):
+        """Push-FC is modelled with per-(node, fn) count rings, so the full
+        5-policy x {pull, push-LL, push-home} matrix is scan-eligible."""
         reqs = _burst()
-        assert not cluster_scan_eligible(reqs, 2, 6, "fc", assignment="push")
-        for policy in ("fifo", "sept", "eect", "rect"):
+        for policy in POLICIES:
             for lb in ("least_loaded", "home"):
                 assert cluster_scan_eligible(reqs, 2, 6, policy,
                                              assignment="push", lb=lb)
@@ -174,7 +175,8 @@ class TestClusterScanParity:
 
     def test_ineligible_batch_raises(self):
         with pytest.raises(ValueError, match="always-warm"):
-            simulate_cluster_cells_scan([(_burst(), 2, 6, "fc", "push")])
+            simulate_cluster_cells_scan(
+                [(_burst(), 2, 6, "fc", "push", "round_robin")])
 
 
 @needs_jax
@@ -244,13 +246,17 @@ class TestSweepBatching:
         assert ref["R_avg"] > 0
 
     def test_run_cells_scan_strict_false_degrades(self):
+        """Cold-pool cells degrade to run_cell and are *counted*: the
+        degraded column marks them, eligible cells carry none."""
         cells = [SweepCell(policy="fc", nodes=2, cores=6, intensity=15,
-                           autoscale=True, seed=0),
+                           warm=False, seed=0),
                  SweepCell(policy="fc", nodes=2, cores=6, intensity=15,
                            seed=0)]
         ms = run_cells_scan(cells, strict=False)
+        assert ms[0].pop("degraded") == 1.0
         assert ms[0] == run_cell(cells[0])
         assert ms[1]["n"] > 0
+        assert "degraded" not in ms[1]
 
 
 @needs_jax
@@ -275,8 +281,10 @@ class TestCompileCache:
         reqs = _burst()
         cell = _ScanCell(requests=reqs, feats=_arrival_features(reqs),
                          cores=6, nodes=3, policy="fc", assignment="pull")
-        freeze, use_fc, n_b, nodes_b, slots_b, f_b, kq, window = cell.bucket()
-        assert not freeze and use_fc
+        (freeze, use_fc, fc_push, dyn, n_b, nodes_b, slots_b, f_b, kq,
+         window, fc_ring, xtra) = cell.bucket()
+        assert not freeze and use_fc and not fc_push
+        assert not dyn and xtra == 0
         for v in (n_b, nodes_b, slots_b, f_b, kq):
             assert v & (v - 1) == 0                   # powers of two
         assert n_b >= len(reqs) and nodes_b >= 3 and slots_b >= 6
