@@ -169,6 +169,53 @@ def frontier_spec(quick: bool = False) -> SweepSpec:
     )
 
 
+def _timed_scan_sweep(spec, sample_div: int, keys=("R_avg", "R_p95",
+                                                   "max_c"),
+                      exact: bool = False, name: str = "scan"):
+    """Shared scaffold for the frontier/straggler rows: run the sweep twice
+    (cold = compiles, warm = cache hits), estimate the reference wall from a
+    stratified cell sample that doubles as the cross-check (``keys`` within
+    ``CLUSTER_XCHECK_RTOL``; with ``exact``, the ``CROSS_CHECK_EXACT`` count
+    metrics must match bit-identically).  Returns
+    ``(result, cells, timings: dict)``."""
+    from repro.core.sweep import CLUSTER_XCHECK_RTOL, CROSS_CHECK_EXACT
+
+    cells = spec.cells()
+    t0 = time.perf_counter()
+    run_sweep(spec, workers=1)
+    t_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    result = run_sweep(spec, workers=1)
+    t_scan = time.perf_counter() - t0
+
+    stride = max(1, len(cells) // sample_div)
+    sample = cells[::stride]
+    worst_err = 0.0
+    t0 = time.perf_counter()
+    for cell in sample:
+        ref_m = run_cell(replace(cell, backend="reference",
+                                 cross_check=False))
+        scan_m = next(cr.metrics for cr in result.results
+                      if cr.cell == cell)
+        cell_err = max(abs(ref_m[k] - scan_m[k]) / max(abs(ref_m[k]), 1e-9)
+                       for k in keys)
+        worst_err = max(worst_err, cell_err)
+        if cell_err > CLUSTER_XCHECK_RTOL:
+            raise AssertionError(
+                f"{name} cross-check breach on {cell.label()}: "
+                f"{cell_err:.3f}")
+        if exact:
+            for k in CROSS_CHECK_EXACT:
+                if ref_m.get(k) != scan_m.get(k):
+                    raise AssertionError(
+                        f"{name} count mismatch on {cell.label()}: "
+                        f"{k} scan={scan_m.get(k)} ref={ref_m.get(k)}")
+    t_ref = (time.perf_counter() - t0) / len(sample) * len(cells)
+    return result, cells, {"scan_s": t_scan, "scan_cold_s": t_cold,
+                           "ref_est_s": t_ref, "worst_err": worst_err,
+                           "n_sample": len(sample)}
+
+
 def frontier_rows(quick: bool = False,
                   artifacts: str | None = None) -> list[dict]:
     """Sweep the frontier grid on the scan backend, cross-check a sample
@@ -180,37 +227,9 @@ def frontier_rows(quick: bool = False,
     except ImportError:
         return [{"name": "engine/frontier", "us_per_call": 0.0,
                  "derived": "skipped=no-jax"}]
-    from repro.core.sweep import CLUSTER_XCHECK_RTOL
-
-    spec = frontier_spec(quick)
-    cells = spec.cells()
-    t0 = time.perf_counter()
-    run_sweep(spec, workers=1)             # compiles the dyn buckets (cold)
-    t_cold = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    result = run_sweep(spec, workers=1)    # post-compile, cache hits only
-    t_scan = time.perf_counter() - t0
-
-    # reference cost estimated from a stratified sample; the same sample
-    # doubles as the cross-check (scan vs event loop within the documented
-    # cluster tolerance -- failures/nodes_used must agree exactly)
-    stride = max(1, len(cells) // (4 if quick else 8))
-    sample = cells[::stride]
-    worst_err = 0.0
-    t0 = time.perf_counter()
-    for cell in sample:
-        ref_m = run_cell(replace(cell, backend="reference",
-                                 cross_check=False))
-        scan_m = next(cr.metrics for cr in result.results
-                      if cr.cell == cell)
-        cell_err = max(abs(ref_m[k] - scan_m[k]) / max(abs(ref_m[k]), 1e-9)
-                       for k in ("R_avg", "R_p95", "max_c"))
-        worst_err = max(worst_err, cell_err)
-        if cell_err > CLUSTER_XCHECK_RTOL:
-            raise AssertionError(
-                f"frontier cross-check breach on {cell.label()}: "
-                f"{cell_err:.3f}")
-    t_ref = (time.perf_counter() - t0) / len(sample) * len(cells)
+    result, cells, t = _timed_scan_sweep(
+        frontier_spec(quick), sample_div=4 if quick else 8,
+        name="frontier")
 
     # the claim: best autoscaled config at N nodes vs static fleet at N+1
     agg = result.aggregate()
@@ -246,13 +265,141 @@ def frontier_rows(quick: bool = False,
         except Exception as e:  # noqa: BLE001  (matplotlib optional)
             print(f"# frontier plot skipped: {e}")
 
-    derived = (f"{claim};scan_s={t_scan:.2f};scan_cold_s={t_cold:.2f};"
-               f"ref_est_s={t_ref:.1f};"
-               f"speedup={t_ref / max(t_scan, 1e-9):.1f}x;"
-               f"cells={len(cells)};xcheck_n={len(sample)};"
-               f"xcheck_worst={worst_err:.2e}")
+    derived = (f"{claim};scan_s={t['scan_s']:.2f};"
+               f"scan_cold_s={t['scan_cold_s']:.2f};"
+               f"ref_est_s={t['ref_est_s']:.1f};"
+               f"speedup={t['ref_est_s'] / max(t['scan_s'], 1e-9):.1f}x;"
+               f"cells={len(cells)};xcheck_n={t['n_sample']};"
+               f"xcheck_worst={t['worst_err']:.2e}")
     return [{"name": "engine/frontier",
-             "us_per_call": t_scan / len(cells) * 1e6,
+             "us_per_call": t["scan_s"] / len(cells) * 1e6,
+             "derived": derived}]
+
+
+# straggler grid intensity tiers: the hedging-recovery claim lives at
+# moderate load (healthy peers have slack to absorb steals; all push cells
+# run here); the pull severity curves continue into sustained backlog,
+# where the reference event loop is O(queue) per pull and the scan kernel
+# is not -- that asymmetry is where the grid's speedup comes from
+STRAGGLER_V = {"claim": 18, "mid": 45, "heavy": 96}
+STRAGGLER_V_QUICK = {"claim": 15, "mid": 15, "heavy": 15}
+
+
+def straggler_spec(quick: bool = False) -> SweepSpec:
+    """The straggler frontier grid: degradation severity x hedged/unhedged x
+    pull vs push through the scan kernel.  One node runs ``sev`` x slow for
+    most of the burst; the push model uses the OpenWhisk home-invoker
+    balancer (blind hash routing -- the regime where a slow node actually
+    accumulates a queue; least-loaded already self-corrects), the pull model
+    is the late-binding alternative whose global queue needs no hedging.
+    Tiered intensities (:data:`STRAGGLER_V`): hedged cells run at the claim
+    tier, push-unhedged up to mid, pull severity curves through heavy
+    backlog -- the regime the scan backend exists for."""
+    severities = (2.0, 8.0) if quick else (2.0, 4.0, 6.0, 8.0)
+    degrades = (None,) + tuple(((0, 2.0, 300.0, s),) for s in severities)
+    tiers = STRAGGLER_V_QUICK if quick else STRAGGLER_V
+    return SweepSpec(
+        policies=("fc",),
+        nodes=(4,),
+        cores=(8,),
+        intensities=tuple(sorted(set(tiers.values()))),
+        assignments=("pull", "push"),
+        lbs=("home",),
+        degrades=degrades,
+        hedge_multiples=(None, 3.0),
+        seeds=2 if quick else 5,
+        workload_cores=32,
+        backends=("scan",),
+        cell_filter=(_straggler_cell_filter_quick if quick
+                     else _straggler_cell_filter),
+    )
+
+
+def _straggler_cell_filter(cell: SweepCell) -> bool:
+    """Tiered ragged grid: hedging is a structural no-op under pull and
+    pointless on a healthy fleet (dropped); push cells (hedged or not) run
+    at the claim intensity; pull severity curves run at every tier."""
+    if cell.hedge_multiple is not None:
+        return (cell.assignment == "push" and cell.degrade is not None
+                and cell.intensity == STRAGGLER_V["claim"])
+    if cell.assignment == "push":
+        return cell.intensity == STRAGGLER_V["claim"]
+    return True
+
+
+def _straggler_cell_filter_quick(cell: SweepCell) -> bool:
+    if cell.hedge_multiple is None:
+        return True
+    return cell.assignment == "push" and cell.degrade is not None
+
+
+def _severity(row: dict) -> float:
+    from .plots import row_severity
+    return row_severity(row)
+
+
+def straggler_rows(quick: bool = False,
+                   artifacts: str | None = None) -> list[dict]:
+    """Sweep the straggler frontier on the scan backend, cross-check a
+    sample against the reference event loop (metrics within
+    ``CLUSTER_XCHECK_RTOL``; ``backups``/``steals``/``failures`` must match
+    exactly), report the measured scan speedup, and extract the claim:
+    hedging recovers most of the p95 a degraded node costs the push model,
+    while the pull model rides it out structurally."""
+    try:
+        import jax  # noqa: F401
+    except ImportError:
+        return [{"name": "engine/straggler", "us_per_call": 0.0,
+                 "derived": "skipped=no-jax"}]
+    result, cells, t = _timed_scan_sweep(
+        straggler_spec(quick), sample_div=4 if quick else 10,
+        exact=True, name="straggler")
+
+    # the claim, at the worst swept severity and the claim intensity tier:
+    # hedging recovers most of the p95 the slow node cost the push model
+    agg = result.aggregate()
+    sev_max = max(_severity(r) for r in agg)
+    v_claim = min(r["intensity"] for r in agg)
+    def _find(assignment, sev, hedged):
+        for r in agg:
+            if (r["assignment"] == assignment and _severity(r) == sev
+                    and r["intensity"] == v_claim
+                    and (r["hedge_multiple"] is not None) == hedged):
+                return r
+        return None
+    healthy = _find("push", 1.0, False)
+    degraded = _find("push", sev_max, False)
+    hedged = _find("push", sev_max, True)
+    pull_deg = _find("pull", sev_max, False)
+    claim = "no-straggler-point"
+    if healthy and degraded and hedged:
+        lost = degraded["R_p95"] - healthy["R_p95"]
+        rec = (degraded["R_p95"] - hedged["R_p95"]) / max(lost, 1e-9)
+        claim = (f"sev{sev_max:g}: push p95 {healthy['R_p95']:.1f}->"
+                 f"{degraded['R_p95']:.1f}, hedged {hedged['R_p95']:.1f} "
+                 f"(recovered {rec:.0%}, {hedged['backups']:.0f} backups)")
+        if pull_deg is not None:
+            claim += f", pull {pull_deg['R_p95']:.1f}"
+
+    if artifacts:
+        import os
+        os.makedirs(artifacts, exist_ok=True)
+        result.to_csv(f"{artifacts}/straggler.csv")
+        try:
+            from .plots import plot_straggler
+            plot_straggler(agg, "R_p95",
+                           f"{artifacts}/straggler_R_p95.png")
+        except Exception as e:  # noqa: BLE001  (matplotlib optional)
+            print(f"# straggler plot skipped: {e}")
+
+    derived = (f"{claim};scan_s={t['scan_s']:.2f};"
+               f"scan_cold_s={t['scan_cold_s']:.2f};"
+               f"ref_est_s={t['ref_est_s']:.1f};"
+               f"speedup={t['ref_est_s'] / max(t['scan_s'], 1e-9):.1f}x;"
+               f"cells={len(cells)};xcheck_n={t['n_sample']};"
+               f"xcheck_worst={t['worst_err']:.2e}")
+    return [{"name": "engine/straggler",
+             "us_per_call": t["scan_s"] / len(cells) * 1e6,
              "derived": derived}]
 
 
@@ -285,7 +432,8 @@ def _engine_cell(cell: SweepCell, quick: bool = False) -> dict:
             "n": float(s["n"])}
 
 
-ROW_GROUPS = ("all", "engine", "backend", "cluster", "frontier")
+ROW_GROUPS = ("all", "engine", "backend", "cluster", "frontier",
+              "straggler")
 
 
 def run(quick: bool = False, backend: str = "vectorized",
@@ -313,6 +461,8 @@ def run(quick: bool = False, backend: str = "vectorized",
         rows.extend(cluster_speedup_rows(quick))
     if rows_group in ("all", "frontier"):
         rows.extend(frontier_rows(quick, artifacts=artifacts))
+    if rows_group in ("all", "straggler"):
+        rows.extend(straggler_rows(quick, artifacts=artifacts))
     return rows
 
 

@@ -31,7 +31,8 @@ if str(SRC) not in sys.path:
     sys.path.insert(0, str(SRC))
 
 # numeric columns in aggregate rows (everything else stays a string)
-_STR_COLS = {"policy", "mode", "assignment", "arrival", "backend", "label"}
+_STR_COLS = {"policy", "mode", "assignment", "lb", "arrival", "backend",
+             "label", "fail_spec", "node_speeds", "degrade"}
 
 
 def _coerce(key: str, val):
@@ -214,11 +215,97 @@ def plot_frontier(rows: list[dict], metric: str = "R_p95",
     return Path(out)
 
 
+def _parse_tuple(val):
+    """A tuple-valued sweep column (in-memory or its CSV string form)."""
+    if val in (None, "", "None"):
+        return None
+    if isinstance(val, str):
+        import ast
+        try:
+            val = ast.literal_eval(val)
+        except (SyntaxError, ValueError):
+            return None
+    return val
+
+
+def row_severity(row: dict) -> float:
+    """Worst effective slowdown a sweep row declares (1.0 = healthy fleet),
+    delegating to :meth:`NodeSpeedProfile.max_slowdown` so static
+    ``node_speeds`` heterogeneity and ``degrade`` episodes both count --
+    this is the x-axis of the straggler frontier."""
+    from repro.core import NodeSpeedProfile
+    try:
+        prof = NodeSpeedProfile.from_any(
+            _parse_tuple(row.get("node_speeds")),
+            _parse_tuple(row.get("degrade")) or ())
+    except (ValueError, TypeError):
+        # malformed column (flat or scalar episode): healthy, not a crash
+        return 1.0
+    return prof.max_slowdown() if prof is not None else 1.0
+
+
+def plot_straggler(rows: list[dict], metric: str = "R_p95",
+                   out: str | Path = "sweep_straggler.png") -> Path:
+    """Straggler frontier: ``metric`` (a tail percentile) vs degradation
+    severity (the worst episode slowdown), one line per
+    assignment/balancer x hedged-or-not series -- "hedging recovers most of
+    the p95 a slow node costs the push model, pull rides it out" as a
+    figure.  Panels per (policy, intensity) slice."""
+    panels: dict[tuple, list[dict]] = {}
+    for r in rows:
+        if r.get(metric) is None:
+            continue
+        key = (str(r.get("policy")), r.get("intensity"))
+        panels.setdefault(key, []).append(r)
+    panels = {k: v for k, v in panels.items()
+              if len({row_severity(r) for r in v}) > 1}
+    if not panels:
+        raise ValueError(
+            f"artifact has no straggler rows for {metric} "
+            "(needs a degrade axis)")
+    fig, axes = _fig(len(panels))
+    for ax, (key, prows) in zip(axes, sorted(panels.items(),
+                                             key=lambda kv: str(kv[0]))):
+        policy, intensity = key
+        series: dict[str, list[dict]] = {}
+        for r in prows:
+            name = str(r.get("assignment", "pull"))
+            if name == "push" and r.get("lb") not in (None, "least_loaded"):
+                name = f"push-{r['lb']}"
+            if r.get("hedge_multiple") not in (None, ""):
+                name += f" hedge{r['hedge_multiple']:g}"
+            series.setdefault(name, []).append(r)
+        for name, srows in sorted(series.items()):
+            pts = sorted(srows, key=row_severity)
+            style = dict(marker="o", markersize=3.5, linewidth=1.4)
+            if "hedge" in name:
+                style.update(linestyle="-")
+            elif name.startswith("pull"):
+                style.update(linestyle=":", marker="^")
+            else:
+                style.update(linestyle="--", marker="s")
+            ax.plot([row_severity(p) for p in pts],
+                    [p[metric] for p in pts], label=name, **style)
+        ax.set_title(f"{policy}, v={intensity:g}", fontsize=10)
+        ax.set_xlabel("degradation severity (x slow)")
+        ax.set_ylabel(f"{metric} (s)" if metric.startswith("R") else metric)
+        ax.grid(alpha=0.3)
+        ax.legend(fontsize=8)
+    for ax in axes[len(panels):]:
+        ax.set_visible(False)
+    fig.tight_layout()
+    fig.savefig(out, dpi=120)
+    import matplotlib.pyplot as plt
+    plt.close(fig)
+    return Path(out)
+
+
 def render_rows(rows: list[dict], outdir: str | Path,
                 metrics: tuple[str, ...] = ("R_avg",)) -> list[Path]:
     """Render every figure the artifact supports: policy curves when an
-    intensity axis exists, node frontiers when a nodes axis exists, and
-    autoscaler frontier curves when autoscale rows are present."""
+    intensity axis exists, node frontiers when a nodes axis exists,
+    autoscaler frontier curves when autoscale rows are present, and
+    straggler frontiers when a degrade axis exists."""
     outdir = Path(outdir)
     outdir.mkdir(parents=True, exist_ok=True)
     written: list[Path] = []
@@ -236,6 +323,11 @@ def render_rows(rows: list[dict], outdir: str | Path,
         try:
             written.append(plot_frontier(
                 rows, metric, outdir / f"frontier_{metric}.png"))
+        except ValueError:
+            pass
+        try:
+            written.append(plot_straggler(
+                rows, metric, outdir / f"straggler_{metric}.png"))
         except ValueError:
             pass
     if not written:

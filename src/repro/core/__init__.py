@@ -73,6 +73,11 @@ from .cluster import (
     simulate_baseline_cluster,
     simulate_cluster,
 )
+from .stragglers import (
+    HedgingSpec,
+    NodeSpeedProfile,
+    rolling_restart,
+)
 from .sweep import (
     BACKEND_CHOICES,
     BackendMismatchError,
@@ -125,8 +130,10 @@ __all__ = [
     "FIFO",
     "FUNCTIONS",
     "FairChoice",
+    "HedgingSpec",
     "MEAN_IDLE_RESPONSE_S",
     "NodeScheduler",
+    "NodeSpeedProfile",
     "OursNodeSim",
     "PROFILES",
     "Policy",
@@ -165,6 +172,7 @@ __all__ = [
     "poisson_arrivals",
     "register_backend",
     "requests_from_trace",
+    "rolling_restart",
     "run_cell",
     "run_cells_scan",
     "run_sweep",

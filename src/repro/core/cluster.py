@@ -31,8 +31,11 @@ import math
 
 from dataclasses import dataclass, field
 
+from dataclasses import replace as _dc_replace
+
 from .estimator import RuntimeEstimator
 from .request import Request
+from .stragglers import HedgingSpec, NodeSpeedProfile
 from .traces import stable_hash
 from .simulator import (
     EventLoop,
@@ -188,10 +191,17 @@ class ClusterConfig:
     # fault tolerance
     retry_on_failure: bool = True
     failure_detect_s: float = _DYN_DEFAULTS.failure_detect_s
-    # stragglers
+    # stragglers: ``hedging`` is the full spec (multiple/floor/max/mode);
+    # the three legacy knobs below survive as sugar -- ``backup_requests=True``
+    # without a spec resolves to HedgingSpec(straggler_factor,
+    # straggler_floor_s) in steal mode, the historical behavior
+    hedging: HedgingSpec | None = None
     backup_requests: bool = False
     straggler_factor: float = 3.0
     straggler_floor_s: float = 0.5
+    # heterogeneity: static speeds + degradation episodes; the legacy
+    # ``node_speeds`` dict keeps working and folds into the profile
+    speed_profile: NodeSpeedProfile | None = None
     # elasticity
     autoscale: bool = False
     autoscale_interval_s: float = _DYN_DEFAULTS.autoscale_interval_s
@@ -210,19 +220,38 @@ class Cluster:
         self.completed: dict[int, Request] = {}
         self.failures = 0
         self.backups_issued = 0
+        self.steals_won = 0
         self._rr = 0
         self._expected = 0
         self._global_queue: list[Request] = []   # pull model
         self._estimator = RuntimeEstimator()     # controller-side (stragglers)
         self._watched: dict[int, Request] = {}
+        # hedging spec: explicit > legacy boolean sugar > off
+        self.hedging = cfg.hedging
+        if self.hedging is None and cfg.backup_requests:
+            self.hedging = HedgingSpec(multiple=cfg.straggler_factor,
+                                       floor_s=cfg.straggler_floor_s)
+        self._stolen_ids: set[int] = set()       # steal mode
+        self._dup_copies: dict[int, Request] = {}  # duplicate mode: id -> copy
+        # heterogeneity: explicit profile > legacy node_speeds dict > uniform
+        self.profile = cfg.speed_profile
+        if self.profile is None and cfg.node_speeds:
+            self.profile = NodeSpeedProfile.from_any(cfg.node_speeds)
         self.timeline = CapacityTimeline()       # realized capacity intervals
         self._provisioned = cfg.nodes            # incl. scheduled provisions
         for i in range(cfg.nodes):
-            self._add_node(speed=cfg.node_speeds.get(i, 1.0))
+            self._add_node()
 
     # ---------------------------------------------------------------- nodes
-    def _add_node(self, speed: float = 1.0) -> OursNodeSim:
-        name = f"node{len(self.nodes)}"
+    def _add_node(self) -> OursNodeSim:
+        idx = len(self.nodes)
+        name = f"node{idx}"
+        speed, speed_fn = 1.0, None
+        if self.profile is not None:
+            if self.profile.episodes:
+                speed_fn = lambda t, i=idx: self.profile.speed_at(i, t)  # noqa: E731
+            else:
+                speed = self.profile.base_speed(idx)
         node = OursNodeSim(
             self.loop,
             cores=self.cfg.cores_per_node,
@@ -231,6 +260,7 @@ class Cluster:
             container_mb=self.cfg.container_mb,
             name=name,
             speed=speed,
+            speed_fn=speed_fn,
             warm_functions=self.warm_functions,
             on_complete=self._on_complete,
         )
@@ -248,7 +278,7 @@ class Cluster:
 
     def _route(self, req: Request) -> None:
         self._estimator.observe_arrival(req.fn, self.loop.now)
-        if self.cfg.backup_requests:
+        if self.hedging is not None:
             self._arm_straggler_watch(req)
         if self.cfg.assignment == "push":
             node = self._pick_node(req)
@@ -321,6 +351,10 @@ class Cluster:
             # running calls are re-queued after failure detection
             for req in lost:
                 req.attempts += 1
+                # a failure re-route voids any earlier hedge credit: if the
+                # call completes now, the winning run is the failure retry,
+                # not the steal (it may be stolen again and re-counted)
+                self._stolen_ids.discard(req.id)
                 self.loop.schedule(
                     self.loop.now + self.cfg.failure_detect_s,
                     lambda r=req: (self._global_queue.append(r), self._pull_round()),
@@ -328,6 +362,7 @@ class Cluster:
         elif self.cfg.retry_on_failure:
             for req in lost:
                 req.attempts += 1
+                self._stolen_ids.discard(req.id)
                 self.loop.schedule(
                     self.loop.now + self.cfg.failure_detect_s,
                     lambda r=req: self._route(r),
@@ -335,30 +370,51 @@ class Cluster:
 
     # ------------------------------------------------------------- stragglers
     def _arm_straggler_watch(self, req: Request) -> None:
-        est = max(self._estimator.estimate(req.fn), self.cfg.straggler_floor_s)
-        deadline = self.loop.now + self.cfg.straggler_factor * est
+        deadline = self.hedging.deadline(self.loop.now,
+                                         self._estimator.estimate(req.fn))
         self._watched[req.id] = req
         self.loop.schedule(deadline, lambda: self._maybe_backup(req))
 
     def _maybe_backup(self, req: Request) -> None:
-        """Straggler mitigation by *work stealing*: a call still queued past
-        its deadline is cancelled on its (slow/overloaded) node and
-        re-submitted to the least-loaded peer.  Executing calls are left
-        alone -- the system is non-preemptive by design (paper §IV-A), and
-        duplicating running work floods healthy nodes under overload."""
+        """Straggler mitigation on a hedging deadline.  ``mode="steal"``
+        (default): a call still queued past its deadline is cancelled on its
+        (slow/overloaded) node and re-submitted to the least-loaded peer.
+        Executing calls are left alone -- the system is non-preemptive by
+        design (paper §IV-A), and duplicating running work floods healthy
+        nodes under overload.  ``mode="duplicate"``: the original stays
+        queued and a backup copy races it on the least-loaded peer; the
+        first completion wins (``_on_complete`` keeps the min-c run)."""
+        h = self.hedging
         if req.id not in self._watched or req.id in self.completed:
             return
-        if req.start is not None or req.attempts >= 3:
+        if req.start is not None or req.attempts >= h.max_backups:
             return                                  # already executing
         node = next((n for n in self.nodes
                      if n.name == req.node and n.alive), None)
-        if node is None or not node.scheduler.cancel(req):
-            return                                  # gone or about to run
-        others = [n for n in self._alive_nodes() if n is not node]
-        target = min(others, key=lambda n: n.load) if others else node
-        req.attempts += 1
-        self.backups_issued += 1
-        target.submit(req)
+        if node is None:
+            return                                  # still globally queued
+        if h.mode == "steal":
+            if not node.scheduler.cancel(req):
+                return                              # gone or about to run
+            others = [n for n in self._alive_nodes() if n is not node]
+            target = min(others, key=lambda n: n.load) if others else node
+            req.attempts += 1
+            self.backups_issued += 1
+            self._stolen_ids.add(req.id)
+            target.submit(req)
+        else:                                       # duplicate
+            others = [n for n in self._alive_nodes() if n is not node]
+            if not others:
+                return                              # nowhere to race
+            target = min(others, key=lambda n: n.load)
+            dup = _dc_replace(req, r_prime=None, start=None, finish=None,
+                              c=None, priority=None, node=None,
+                              cold_start=False, attempts=req.attempts + 1,
+                              is_backup=True)
+            req.attempts += 1
+            self.backups_issued += 1
+            self._dup_copies[req.id] = dup
+            target.submit(dup)
         self._arm_straggler_watch(req)              # keep watching
 
     # ------------------------------------------------------------- autoscaler
@@ -400,7 +456,25 @@ class Cluster:
                 r.c = w.c
                 r.finish = w.finish
                 r.start = w.start if r.start is None else r.start
+            elif w is not None and w is not r and w.c is not None:
+                # duplicate-mode: the original also ran to completion, but
+                # the racing backup copy won (completed keeps the min-c run)
+                # -- the client saw the winner's response, so report it
+                if r.c is None or w.c < r.c:
+                    r.c = w.c
+                    r.finish = w.finish
+                    r.start = w.start
+                    r.node = w.node
         cold = sum(getattr(n.scheduler.pool, "cold_starts", 0) for n in self.nodes)
+        # steals_won: hedged calls whose *winning* run was the hedge action --
+        # in steal mode every completed stolen call won (the original queue
+        # entry was cancelled), in duplicate mode the backup copy must have
+        # beaten the original to completion
+        self.steals_won = sum(
+            1 for rid in self._stolen_ids if rid in self.completed)
+        self.steals_won += sum(
+            1 for rid in self._dup_copies
+            if getattr(self.completed.get(rid), "is_backup", False))
         return SimResult(
             requests=done,
             cold_starts=cold,
@@ -408,6 +482,7 @@ class Cluster:
             creations=sum(n.scheduler.pool.creations for n in self.nodes),
             failures=self.failures,
             backups_issued=self.backups_issued,
+            steals_won=self.steals_won,
             nodes_used=len(self.nodes),
             timeline=self.timeline,
             meta={"policy": self.cfg.policy, "assignment": self.cfg.assignment},
@@ -421,11 +496,14 @@ _DYNAMICS_KWARGS = ("autoscale", "autoscale_interval_s",
                     "max_nodes", "failure_detect_s")
 
 
-def _dynamics_from_kwargs(kwargs: dict,
-                          fail_at: float | None) -> ClusterDynamics:
+def _dynamics_from_kwargs(kwargs: dict, fail_at: float | None,
+                          fail_spec=()) -> ClusterDynamics:
     defaults = ClusterConfig()
     vals = {k: kwargs.get(k, getattr(defaults, k)) for k in _DYNAMICS_KWARGS}
-    fail = ((0, fail_at),) if fail_at is not None else ()
+    if fail_spec:
+        fail = tuple((int(i), float(t)) for i, t in fail_spec)
+    else:
+        fail = ((0, fail_at),) if fail_at is not None else ()
     return ClusterDynamics(fail=fail, **vals)
 
 
@@ -438,6 +516,10 @@ def simulate_cluster(
     warm: bool = True,
     backend: str = "reference",
     fail_at: float | None = None,
+    fail_spec=(),
+    node_speeds=None,
+    degrade=(),
+    hedging: HedgingSpec | None = None,
     **kwargs,
 ) -> SimResult:
     """Run one burst on an N-node cluster.
@@ -446,14 +528,29 @@ def simulate_cluster(
     :class:`Cluster` above), ``"scan"`` (the batched multi-node
     ``jax.lax.scan`` kernel -- always-warm regime only, raises ``ValueError``
     when the scenario is outside it) or ``"auto"`` (scan where eligible,
-    reference elsewhere).  ``fail_at`` injects a node-0 crash at that time on
-    either engine.  The scan path models capacity dynamics (autoscaling via
-    the ``autoscale*``/``provision_delay_s``/``max_nodes`` knobs, failures
-    via ``fail_at``) natively; kwargs outside that set (stragglers, node
-    speeds, retry tuning) force the reference event loop."""
+    reference elsewhere).  ``fail_at`` injects a node-0 crash at that time;
+    ``fail_spec`` a whole ``((node, time), ...)`` kill schedule (see
+    :func:`~repro.core.stragglers.rolling_restart`) -- both run natively on
+    either engine.  ``node_speeds`` (dict or per-node sequence of speed
+    multipliers) and ``degrade`` (``(node, t0, t1, slowdown)`` episodes)
+    declare a heterogeneous fleet; ``hedging`` (a
+    :class:`~repro.core.stragglers.HedgingSpec`) arms estimate-multiple
+    straggler deadlines.  The scan path models capacity dynamics,
+    heterogeneous static-capacity fleets and steal-mode hedging natively;
+    kwargs outside that set (duplicate-mode hedging, legacy
+    ``backup_requests`` sugar, retry tuning) force the reference event
+    loop."""
     if backend not in ("reference", "scan", "auto"):
         raise ValueError(f"unknown cluster backend {backend!r}; "
                          "available: ('reference', 'scan', 'auto')")
+    kills = (tuple((int(i), float(t)) for i, t in fail_spec) if fail_spec
+             else (((0, float(fail_at)),) if fail_at is not None else ()))
+    for idx, at in kills:
+        if not 0 <= idx < nodes:
+            raise ValueError(
+                f"fail_spec kills node {idx} at t={at:g}, outside the "
+                f"{nodes}-node initial fleet")
+    profile = NodeSpeedProfile.from_any(node_speeds, degrade)
     if backend in ("scan", "auto"):
         from .fastpath import (
             CLUSTER_CONTAINER_MB,
@@ -466,7 +563,7 @@ def simulate_cluster(
         container_mb = kwargs.get("container_mb", CLUSTER_CONTAINER_MB)
         extra = (set(kwargs) - {"lb", "memory_mb", "container_mb"}
                  - set(_DYNAMICS_KWARGS))
-        dynamics = _dynamics_from_kwargs(kwargs, fail_at)
+        dynamics = _dynamics_from_kwargs(kwargs, fail_at, fail_spec)
         try:
             import jax  # noqa: F401
             have_jax = True
@@ -475,27 +572,30 @@ def simulate_cluster(
         eligible = (have_jax and not extra and cluster_scan_eligible(
             requests, nodes, cores_per_node, policy, assignment=assignment,
             lb=lb, warm=warm, memory_mb=memory_mb,
-            container_mb=container_mb, dynamics=dynamics))
+            container_mb=container_mb, dynamics=dynamics,
+            profile=profile, hedging=hedging))
         if eligible:
             return simulate_cluster_scan(
                 requests, nodes, cores_per_node, policy,
                 assignment=assignment, lb=lb, memory_mb=memory_mb,
-                container_mb=container_mb, dynamics=dynamics)
+                container_mb=container_mb, dynamics=dynamics,
+                profile=profile, hedging=hedging)
         if backend == "scan":
             raise ValueError(
                 "scan cluster backend requires jax and the always-warm ours "
-                f"regime with supported dynamics (policy={policy!r}, "
-                f"nodes={nodes}, cores={cores_per_node}, "
-                f"assignment={assignment!r}); use backend='auto' to fall "
-                "back to the reference event loop")
+                f"regime with supported dynamics/heterogeneity "
+                f"(policy={policy!r}, nodes={nodes}, cores={cores_per_node}, "
+                f"assignment={assignment!r}, hedging={hedging!r}); use "
+                "backend='auto' to fall back to the reference event loop")
     cfg = ClusterConfig(
         nodes=nodes, cores_per_node=cores_per_node, policy=policy,
-        assignment=assignment, **kwargs,
+        assignment=assignment, speed_profile=profile, hedging=hedging,
+        **kwargs,
     )
     warm_fns = sorted({r.fn for r in requests}) if warm else None
     cluster = Cluster(cfg, warm_functions=warm_fns)
-    if fail_at is not None:
-        cluster.fail_node(0, at=fail_at)
+    for idx, at in kills:
+        cluster.fail_node(idx, at=at)
     return cluster.run(requests)
 
 

@@ -431,9 +431,11 @@ class VectorizedBackend:
 
     def supports(self, *, mode: str, policy: str, warm: bool,
                  nodes: int = 1, assignment: str = "pull",
-                 autoscale: bool = False, failures: bool = False) -> bool:
+                 autoscale: bool = False, failures: bool = False,
+                 hedging: bool = False, hetero: bool = False) -> bool:
         return (mode == "ours" and policy in POLICY_NAMES and nodes <= 1
-                and not autoscale and not failures)
+                and not autoscale and not failures
+                and not hedging and not hetero)
 
     def simulate(
         self,
@@ -532,7 +534,8 @@ def scan_eligible(
 
 
 def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
-                      fc_push, dyn, fc_ring, horizon, n_steps):
+                      fc_push, dyn, het, hedge, n_ep, fc_ring, horizon,
+                      n_steps):
     """One cell's event scan over a whole **cluster**: slot-occupancy and
     channel clocks carry a node axis, and the per-event dispatch includes the
     routing decision.  vmapped over the batch by the caller; ``inp`` is a
@@ -569,6 +572,28 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
       queue equals the argmin over the F queue *heads*, with the first-index
       tie-break preserved by taking the smallest head event index among the
       minimum-priority functions.
+
+    ``het=True`` compiles the **heterogeneity** machinery: per-node base
+    speeds plus a padded ``(node, t0, t1, slowdown)`` episode table (a
+    :class:`~repro.core.stragglers.NodeSpeedProfile` in tensor form).  The
+    routed node's *effective speed at dispatch time* divides both the
+    management-op cost and the execution time, exactly like the reference
+    ``OursNodeSim._launch``; in push mode the node estimator rings log the
+    *measured* (speed-scaled) service while the controller ring keeps raw
+    ``p_true``, mirroring the reference's node-vs-controller asymmetry.
+
+    ``hedge=True`` (push/freeze only -- the pull model's late binding makes
+    hedging a structural no-op) compiles **straggler hedging**: per-request
+    deadline events armed at arrival from a controller-side estimator ring
+    (``now + multiple x max(E[p], floor)``), which -- when the call is still
+    queued and under its backup budget -- cancel it on its node and re-route
+    it to the least-loaded peer with a freshly computed priority, exactly
+    the reference ``Cluster._maybe_backup`` steal.  ``backups_issued`` /
+    ``steals_won`` counts replicate the reference bit-exactly; a dispatched
+    call's watch is cleared so no-op fires do not consume scan steps.
+    Both flags force the bucket into float64 (like ``dyn``): deadline-vs-
+    start and episode-boundary orderings decide integer counts that must
+    not flip under float32 clock drift.
 
     ``dyn=True`` compiles the **time-varying capacity** machinery on top:
     per-node activation times and a dead mask (the cell's
@@ -644,6 +669,10 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
             cand = jnp.stack([jnp.min(killq), t_a, t_c, jnp.min(rearr),
                               jnp.min(jnp.where(act_pend, act_t, inf)),
                               st["next_tick"]])
+        elif hedge:
+            # hedge deadlines rank after completions at exact ties (a
+            # measure-zero case: deadlines are estimate multiples)
+            cand = jnp.stack([t_a, t_c, jnp.min(st["hedge_t"])])
         else:
             cand = jnp.stack([t_a, t_c])
         # argmin takes the *first* minimum: at equal times the stack order is
@@ -654,6 +683,8 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
         off = 1 if dyn else 0
         do_arr = (e == off) & ~none_left
         do_comp = (e == off + 1) & ~none_left
+        if hedge:
+            do_hedge = (e == 2) & ~none_left
         if dyn:
             do_kill = (e == 0) & ~none_left
             do_re = (e == 3) & ~none_left
@@ -674,15 +705,42 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
         m_cf = (m_en[:, None] & m_fd[None, :]) & do_comp     # (NE, F)
         pos = rpos[en_c, f_done]
         v = p[j_done]
+        if het and freeze:
+            # node estimators log the *measured* (speed-scaled) service; the
+            # controller ring (pull mode / hedging below) keeps raw p_true
+            v = v / st["sspd"][kn, ks]
         old = ring[en_c, f_done, pos]
         full = rlen[en_c, f_done] == window
         rsum = jnp.where(m_cf, rsum + v - jnp.where(full, old, 0.0), rsum)
         ring = jnp.where(m_cf[:, :, None] & (win_ids == pos), v, ring)
         rlen = jnp.where(m_cf & ~full, rlen + 1, rlen)
         rpos = jnp.where(m_cf, (rpos + 1) % window, rpos)
+        if hedge:
+            # controller-side estimator (hedging deadlines): observes every
+            # completion's p_true, like the reference Cluster._on_complete
+            cpos = st["crpos"][f_done]
+            cfull = st["crlen"][f_done] == window
+            cold_v = st["cring"][f_done, cpos]
+            m_cfd = (fn_ids_ax == f_done) & do_comp
+            crsum = jnp.where(m_cfd, st["crsum"] + p[j_done]
+                              - jnp.where(cfull, cold_v, 0.0), st["crsum"])
+            cring = jnp.where(m_cfd[:, None] & (win_ids == cpos),
+                              p[j_done], st["cring"])
+            crlen = jnp.where(m_cfd & ~cfull, st["crlen"] + 1, st["crlen"])
+            crpos = jnp.where(m_cfd, (cpos + 1) % window, st["crpos"])
         m_kn = (node_ids == kn) & do_comp
         busy = jnp.where(m_kn, busy - 1, busy)
         fin_s = jnp.where(m_kn[:, None] & (slot_ids == ks), inf, fin_s)
+        if hedge:
+            # -- hedge deadline fires: eligible when the call is still
+            # queued on its node and under the backup budget (mirrors
+            # Cluster._maybe_backup: completed/started/attempt-capped
+            # fires are no-ops and do not re-arm)
+            att, hedge_t = st["att"], st["hedge_t"]
+            jh = jnp.argmin(hedge_t).astype(jnp.int32)
+            steal_ok = do_hedge & pend[jh] & (att[jh] < inp["hmax"])
+            hedge_t = jnp.where((req_ids == jh) & do_hedge, inf, hedge_t)
+            old_node = node_of[jh]
 
         if dyn:
             ndone = st["ndone"] + do_comp.astype(jnp.int32)
@@ -737,6 +795,11 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
         if dyn:
             do_ins = do_arr | do_re
             i_ins = jnp.where(do_arr, i_orig, ir)
+        elif hedge:
+            # a steal re-enters the system like an arrival on the target
+            # node (reference: target.submit -> receive -> observe_arrival)
+            do_ins = do_arr | steal_ok
+            i_ins = jnp.where(do_arr, i_orig, jh)
         else:
             do_ins = do_arr
             i_ins = i_orig
@@ -755,6 +818,12 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
                 k_home = jnp.where(jnp.any(wfree), walk[jnp.argmax(wfree)],
                                    home0[i_ins])
                 k_arr = jnp.where(route == 1, k_home, k_ll)
+            if hedge:
+                # steal target: least-loaded peer, the slow node excluded
+                # (reference: min(others, key=load), first on ties)
+                load_x = jnp.where(active & (node_ids != old_node),
+                                   busy + qn, jnp.int32(2 ** 30))
+                k_arr = jnp.where(steal_ok, jnp.argmin(load_x), k_arr)
             k_arr = k_arr.astype(jnp.int32)
         else:
             k_arr = jnp.int32(0)
@@ -770,6 +839,9 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
         prev_t = jnp.where(m_af, prev_used, prev_t)
         last_t = jnp.where(m_af, now, last_t)
         narr = jnp.where(m_af, narr + 1, narr)
+        if hedge:
+            # the stolen call leaves its old node's queue (scheduler.cancel)
+            qn = jnp.where((node_ids == old_node) & steal_ok, qn - 1, qn)
         qn = jnp.where((node_ids == k_arr) & do_ins, qn + 1, qn)
         ai = ai + do_arr.astype(jnp.int32)
         if freeze:
@@ -798,6 +870,24 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
                                                   fprio[i_ins]))
             node_of = node_of.at[i_ins].set(jnp.where(do_ins, k_arr,
                                                       node_of[i_ins]))
+            if hedge:
+                # (re-)arm the watch from the controller estimate -- both
+                # fresh arrivals and just-stolen calls keep being watched
+                est_h = jnp.where(crlen[f_i] > 0,
+                                  crsum[f_i] / jnp.maximum(crlen[f_i], 1),
+                                  0.0)
+                arm = now + inp["hmult"] * jnp.maximum(est_h, inp["hfloor"])
+                hedge_t = jnp.where((req_ids == i_ins) & do_ins, arm,
+                                    hedge_t)
+                att = jnp.where((req_ids == jh) & steal_ok, att + 1, att)
+                nbk = st["nbk"] + steal_ok.astype(jnp.int32)
+                stolen = st["stolen"] | ((req_ids == jh) & steal_ok)
+                ndone = st["ndone"] + do_comp.astype(jnp.int32)
+                # queue-push sequence: a steal re-pushes the call on its
+                # target, so push order decouples from event-index order --
+                # the reference's stable queue breaks priority ties by it
+                qseq = jnp.where((req_ids == i_ins) & do_ins, st["stepc"],
+                                 st["qseq"])
 
         # -- dispatch: one launch restores the "queued => saturated"
         # invariant (always-warm admission never blocks); a newly-activated
@@ -811,9 +901,19 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
             if dyn:
                 k_d = jnp.where(do_act, ka, k_d)
             prio_vec = jnp.where(pend & (node_of == k_d), fprio, inf)
-            j = jnp.argmin(prio_vec).astype(jnp.int32)
-            has_q = prio_vec[j] < inf
-            prio_j = prio_vec[j]
+            if hedge:
+                # exact priority ties (common under SEPT/FC: same fn, same
+                # estimate) resolve by queue push order, like the
+                # reference's stable per-node PriorityQueue
+                best = jnp.min(prio_vec)
+                qv = jnp.where(prio_vec == best, qseq, jnp.int32(2 ** 30))
+                j = jnp.argmin(qv).astype(jnp.int32)
+                has_q = best < inf
+                prio_j = best
+            else:
+                j = jnp.argmin(prio_vec).astype(jnp.int32)
+                has_q = prio_vec[j] < inf
+                prio_j = prio_vec[j]
         else:
             # pull: the invoker with the most free slots pulls the global
             # best head, ranked fresh from the controller estimator --
@@ -862,21 +962,41 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
         if dyn:
             allow = do_ins | do_comp | do_act
             can = allow & active[k_d] & (busy[k_d] < cores) & has_q
+        elif hedge:
+            # an ineligible hedge fire is a pure no-op event: no dispatch
+            can = (do_ins | do_comp) & (busy[k_d] < cores) & has_q
         else:
             can = ~none_left & (busy[k_d] < cores) & has_q
-        exec_start = jnp.maximum(now, chan[k_d]) + cost[j]
+        if het:
+            # effective speed of the routed node at dispatch time divides
+            # the management cost and the execution (OursNodeSim._launch);
+            # padding episodes carry node -1 / factor 1 and never match
+            slow = jnp.prod(jnp.where((inp["epn"] == k_d)
+                                      & (inp["ept0"] <= now)
+                                      & (now < inp["ept1"]),
+                                      inp["epf"], 1.0))
+            eff = inp["spd"][k_d] / slow
+            exec_start = jnp.maximum(now, chan[k_d]) + cost[j] / eff
+        else:
+            exec_start = jnp.maximum(now, chan[k_d]) + cost[j]
         m_kd = (node_ids == k_d)
         chan = jnp.where(m_kd & can, exec_start, chan)
-        fin_j = exec_start + p[j]
+        fin_j = exec_start + (p[j] / eff if het else p[j])
         slot_free = jnp.isinf(fin_s[k_d]) & (slot_ids < cores)
         s = jnp.argmax(slot_free)
         m_ds = (m_kd[:, None] & (slot_ids == s)[None, :]) & can
         fin_s = jnp.where(m_ds, fin_j, fin_s)
         idx_s = jnp.where(m_ds, j, idx_s)
+        if het and freeze:
+            sspd = jnp.where(m_ds, eff, st["sspd"])
         busy = jnp.where(m_kd & can, busy + 1, busy)
         qn = jnp.where(m_kd & can, qn - 1, qn)
         if freeze:
             pend = pend.at[j].set(jnp.where(can, False, pend[j]))
+            if hedge:
+                # a dispatched call's watch can never act again: clear it so
+                # no-op fires do not consume scan steps
+                hedge_t = jnp.where((req_ids == j) & can, inf, hedge_t)
         else:
             if dyn:
                 from_x = can & pick_x
@@ -905,6 +1025,12 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
             nxt.update(pend=pend, fprio=fprio, node_of=node_of)
         if fc_push:
             nxt.update(fcr=fcr, fcp=fcp)
+        if hedge:
+            nxt.update(hedge_t=hedge_t, att=att, nbk=nbk, stolen=stolen,
+                       cring=cring, crsum=crsum, crlen=crlen, crpos=crpos,
+                       qseq=qseq, stepc=st["stepc"] + 1, ndone=ndone)
+        if het and freeze:
+            nxt.update(sspd=sspd)
         if dyn:
             nxt.update(act_t=act_t, dead=dead, killq=killq,
                        act_pend=act_pend, rearr=rearr, next_tick=next_tick,
@@ -939,6 +1065,25 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
             fcr=jnp.full((n_nodes, n_fns, fc_ring), -jnp.inf, dtype=ft),
             fcp=jnp.zeros((n_nodes, n_fns), dtype=jnp.int32),
         )
+    if hedge:
+        state0.update(
+            hedge_t=jnp.full(n + 1, jnp.inf, dtype=ft),
+            att=jnp.zeros(n + 1, dtype=jnp.int32),
+            nbk=jnp.int32(0),
+            stolen=jnp.zeros(n + 1, dtype=bool),
+            # controller estimator starts EMPTY, like the reference
+            # Cluster's _estimator (nodes get the §V-A warm seed, the
+            # controller does not)
+            cring=jnp.zeros((n_fns, window), dtype=ft),
+            crsum=jnp.zeros(n_fns, dtype=ft),
+            crlen=jnp.zeros(n_fns, dtype=jnp.int32),
+            crpos=jnp.zeros(n_fns, dtype=jnp.int32),
+            qseq=jnp.zeros(n + 1, dtype=jnp.int32),
+            stepc=jnp.int32(0),
+            ndone=jnp.int32(0),
+        )
+    if het and freeze:
+        state0["sspd"] = jnp.ones((n_nodes, n_slots), dtype=ft)
     if dyn:
         state0.update(
             act_t=inp["act0"], dead=jnp.zeros(n_nodes, dtype=bool),
@@ -975,6 +1120,13 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
     else:
         prio = jnp.zeros(n + 1).at[j_s].set(pj_s)
         node = jnp.zeros(n + 1, dtype=jnp.int32).at[j_s].set(kd_s)
+    if hedge:
+        # steal mode: every stolen call completes on its hedge target, so
+        # distinct-stolen == steals won (accounting parity with Cluster).
+        # ndone lets the caller detect an exhausted optimistic step budget.
+        return (start, finish, prio, node, state["nbk"],
+                jnp.sum(state["stolen"].astype(jnp.int32)), state["att"],
+                state["ndone"])
     return start, finish, prio, node
 
 
@@ -1014,8 +1166,8 @@ def scan_cache_clear() -> None:
 
 def _scan_runner(key: tuple):
     """Jitted vmapped kernel for one bucket shape ``key = (freeze, use_fc,
-    fc_push, dyn, n_req, n_nodes, n_slots, n_fns, fn_queue_cap, window,
-    fc_ring, xtra, batch)``."""
+    fc_push, dyn, het, hedge, n_req, n_nodes, n_slots, n_fns, fn_queue_cap,
+    window, fc_ring, n_ep, xtra, batch)``."""
     runner = _SCAN_CACHE.pop(key, None)
     if runner is not None:
         _SCAN_CACHE_STATS["hits"] += 1
@@ -1024,11 +1176,12 @@ def _scan_runner(key: tuple):
     _SCAN_CACHE_STATS["misses"] += 1
     import jax
 
-    (freeze, use_fc, fc_push, dyn, n_req, n_nodes, n_slots,
-     _, _, window, fc_ring, xtra, _) = key
+    (freeze, use_fc, fc_push, dyn, het, hedge, n_req, n_nodes, n_slots,
+     _, _, window, fc_ring, n_ep, xtra, _) = key
     runner = jax.jit(jax.vmap(partial(
         _scan_cell_kernel, n_nodes=n_nodes, n_slots=n_slots, window=window,
         freeze=freeze, use_fc=use_fc, fc_push=fc_push, dyn=dyn,
+        het=het, hedge=hedge, n_ep=n_ep,
         fc_ring=fc_ring, horizon=DEFAULT_FC_HORIZON,
         n_steps=2 * n_req + xtra)))
     while len(_SCAN_CACHE) > max(SCAN_CACHE_MAX - 1, 0):
@@ -1051,10 +1204,23 @@ class _ScanCell:
     assignment: str      # "single" | "pull" | "push"
     lb: str = "least_loaded"
     dynamics: object | None = None      # ClusterDynamics | None
+    profile: object | None = None       # NodeSpeedProfile | None
+    hedging: object | None = None       # HedgingSpec | None
 
     @property
     def dyn(self) -> bool:
         return self.dynamics is not None and not self.dynamics.is_static
+
+    @property
+    def het(self) -> bool:
+        return self.profile is not None and not self.profile.is_uniform
+
+    @property
+    def hedge(self) -> bool:
+        # hedging only ever acts on queued-on-node calls, which the pull
+        # model never has (late binding): pull cells run without the hedge
+        # machinery and report backups_issued == 0, like the reference
+        return self.hedging is not None and self.assignment == "push"
 
     def node_cap(self) -> int:
         """Largest node count the cell can reach (autoscaler headroom)."""
@@ -1087,6 +1253,24 @@ class _ScanCell:
             extra += ticks + grow * (1 + self.cores)
         return extra
 
+    def hedge_budget(self) -> int:
+        """*Optimistic* extra scan steps for hedging: a watch is cleared the
+        moment its call dispatches, so realized deadline fires are only the
+        steals plus attempt-capped no-ops -- empirically well under ``n``.
+        ``_run_scan_bucket`` verifies completion (``ndone``) and re-runs a
+        chunk at :meth:`hedge_budget_full` when this guess was short, so
+        the bound is a performance knob, never a correctness one."""
+        if not self.hedge:
+            return 0
+        return len(self.feats.t)
+
+    def hedge_budget_full(self) -> int:
+        """Strict upper bound on hedge fires: every arm fires at most once
+        and arms = arrivals + steals <= n * (1 + max_backups)."""
+        if not self.hedge:
+            return 0
+        return len(self.feats.t) * (1 + int(self.hedging.max_backups))
+
     def bucket(self) -> tuple:
         freeze = self.assignment != "pull"
         dyn = self.dyn
@@ -1098,14 +1282,21 @@ class _ScanCell:
             kq = _pow2(int(np.bincount(self.feats.fn_ids).max())
                        if len(self.feats.fn_ids) else 1)
         # the per-(node, fn) ring is sized to the worst *global* window
-        # count, which bounds any node-local count from above
-        fc_ring = (_pow2(int(self.feats.count.max()))
+        # count, which bounds any node-local count from above; hedged cells
+        # additionally re-log each steal on its target node, so every
+        # arrival can contribute up to 1 + max_backups entries in-window
+        fc_mult = 1 + int(self.hedging.max_backups) if self.hedge else 1
+        fc_ring = (_pow2(int(self.feats.count.max()) * fc_mult)
                    if fc_push and len(self.feats.count) else 1)
-        xtra = _pow2(self.dyn_budget()) if dyn else 0
-        return (freeze, use_fc, fc_push, dyn, _pow2(len(self.feats.t)),
+        n_ep = (_pow2(max(1, len(self.profile.episodes)))
+                if self.het else 1)
+        extra = self.dyn_budget() + self.hedge_budget()
+        xtra = _pow2(extra) if extra else 0
+        return (freeze, use_fc, fc_push, dyn, self.het, self.hedge,
+                _pow2(len(self.feats.t)),
                 _pow2(self.node_cap()), _pow2(self.cores),
                 _pow2(len(self.feats.fns)), kq, DEFAULT_WINDOW,
-                fc_ring, xtra)
+                fc_ring, n_ep, xtra)
 
 
 def _run_scan_bucket(key: tuple, cells: list[_ScanCell]) -> list[tuple]:
@@ -1117,15 +1308,17 @@ def _run_scan_bucket(key: tuple, cells: list[_ScanCell]) -> list[tuple]:
     import jax
     import jax.numpy as jnp
 
-    (freeze, use_fc, fc_push, dyn, n_b, nodes_b, slots_b, f_b, kq,
-     window, fc_ring, xtra) = key
+    (freeze, use_fc, fc_push, dyn, het, hedge, n_b, nodes_b, slots_b, f_b,
+     kq, window, fc_ring, n_ep, xtra) = key
     n1 = n_b + 1
     out: list[tuple] = []
-    # dynamic-capacity buckets compute in float64 (enable_x64 below), so
-    # their inputs must be *built* in float64 -- quantizing kill/arrival
-    # times through float32 first would merge distinct event times and
-    # reintroduce exactly the ordering flips the promotion prevents
-    fdt = np.float64 if dyn else np.float32
+    # dynamic-capacity, heterogeneous and hedged buckets compute in float64
+    # (enable_x64 below), so their inputs must be *built* in float64 --
+    # quantizing kill/arrival/deadline times through float32 first would
+    # merge distinct event times and reintroduce exactly the ordering flips
+    # the promotion prevents
+    use64 = dyn or het or hedge
+    fdt = np.float64 if use64 else np.float32
     for lo in range(0, len(cells), SCAN_BATCH_MAX):
         chunk = cells[lo:lo + SCAN_BATCH_MAX]
         bsz = _pow2(len(chunk))
@@ -1162,6 +1355,16 @@ def _run_scan_bucket(key: tuple, cells: list[_ScanCell]) -> list[tuple]:
             inp["dynp"] = np.zeros((bsz, 5), dtype=fdt)
             inp["maxn"] = np.zeros(bsz, dtype=np.int32)
             inp["nreq"] = np.zeros(bsz, dtype=np.int32)
+        if het:
+            inp["spd"] = np.ones((bsz, nodes_b), dtype=fdt)
+            inp["epn"] = np.full((bsz, n_ep), -1, dtype=np.int32)
+            inp["ept0"] = np.zeros((bsz, n_ep), dtype=fdt)
+            inp["ept1"] = np.zeros((bsz, n_ep), dtype=fdt)
+            inp["epf"] = np.ones((bsz, n_ep), dtype=fdt)
+        if hedge:
+            inp["hmult"] = np.ones(bsz, dtype=fdt)
+            inp["hfloor"] = np.zeros(bsz, dtype=fdt)
+            inp["hmax"] = np.zeros(bsz, dtype=np.int32)
 
         for b, cell in enumerate(chunk):
             f = cell.feats
@@ -1187,6 +1390,19 @@ def _run_scan_bucket(key: tuple, cells: list[_ScanCell]) -> list[tuple]:
                                   1.0 if d.autoscale else 0.0)
                 inp["maxn"][b] = cell.node_cap()
                 inp["nreq"][b] = n
+            if het:
+                spd, epn, ept0, ept1, epf = cell.profile.arrays(nodes_b,
+                                                                n_ep)
+                inp["spd"][b] = spd
+                inp["epn"][b] = epn
+                inp["ept0"][b] = ept0
+                inp["ept1"][b] = ept1
+                inp["epf"][b] = epf
+            if hedge:
+                h = cell.hedging
+                inp["hmult"][b] = h.multiple
+                inp["hfloor"][b] = h.floor_s
+                inp["hmax"][b] = h.max_backups
             if cell.assignment == "pull":
                 if dyn:
                     inp["coef"][b] = _PULL_COEF_DYN[cell.policy]
@@ -1219,12 +1435,13 @@ def _run_scan_bucket(key: tuple, cells: list[_ScanCell]) -> list[tuple]:
                 inp["rlen0"][b, :, fi] = seed_n
                 inp["rpos0"][b, :, fi] = seed_n % window
 
-        run = _scan_runner((freeze, use_fc, fc_push, dyn, n_b, nodes_b,
-                            slots_b, f_b, kq, window, fc_ring, xtra, bsz))
-        if dyn:
-            # dynamic-capacity buckets run in float64 (enable_x64): failure
-            # accounting and autoscaler decisions depend on exact
-            # completion-vs-kill/arrival event ordering, which float32
+        run = _scan_runner((freeze, use_fc, fc_push, dyn, het, hedge, n_b,
+                            nodes_b, slots_b, f_b, kq, window, fc_ring,
+                            n_ep, xtra, bsz))
+        if use64:
+            # dynamic-capacity / hetero / hedged buckets run in float64
+            # (enable_x64): failure and backup accounting depend on exact
+            # completion-vs-kill/deadline event orderings, which float32
             # channel-clock drift can flip under heavy backlog
             from jax.experimental import enable_x64
             with enable_x64():
@@ -1233,11 +1450,47 @@ def _run_scan_bucket(key: tuple, cells: list[_ScanCell]) -> list[tuple]:
         else:
             res = run({k: jnp.asarray(v) for k, v in inp.items()})
         if not dyn:
-            start_b, finish_b, prio_b, node_b = (np.asarray(a) for a in res)
-            out.extend((start_b[b].astype(np.float64),
-                        finish_b[b].astype(np.float64),
-                        prio_b[b].astype(np.float64), node_b[b], None)
-                       for b in range(len(chunk)))
+            if hedge:
+                (start_b, finish_b, prio_b, node_b, nbk_b, nwon_b,
+                 att_b, ndone_b) = (np.asarray(a) for a in res)
+                if any(int(ndone_b[b]) != len(chunk[b].feats.t)
+                       for b in range(len(chunk))):
+                    # the optimistic hedge step budget fell short (a cell
+                    # fired far more deadlines than requests): re-run the
+                    # chunk at the strict worst-case bound, which cannot
+                    # fall short by construction
+                    full = max(c.dyn_budget() + c.hedge_budget_full()
+                               for c in chunk)
+                    run = _scan_runner((freeze, use_fc, fc_push, dyn, het,
+                                        hedge, n_b, nodes_b, slots_b, f_b,
+                                        kq, window, fc_ring, n_ep,
+                                        _pow2(full), bsz))
+                    with enable_x64():
+                        res = run({k: jnp.asarray(v)
+                                   for k, v in inp.items()})
+                        res = jax.tree_util.tree_map(np.asarray, res)
+                    (start_b, finish_b, prio_b, node_b, nbk_b, nwon_b,
+                     att_b, ndone_b) = (np.asarray(a) for a in res)
+                    for b, cell in enumerate(chunk):
+                        if int(ndone_b[b]) != len(cell.feats.t):
+                            raise RuntimeError(
+                                "hedge scan step budget exhausted at the "
+                                f"strict bound ({full}); this is a kernel "
+                                "budget bug")
+                out.extend((start_b[b].astype(np.float64),
+                            finish_b[b].astype(np.float64),
+                            prio_b[b].astype(np.float64), node_b[b],
+                            {"backups": int(nbk_b[b]),
+                             "steals": int(nwon_b[b]),
+                             "attempts": att_b[b]})
+                           for b in range(len(chunk)))
+            else:
+                start_b, finish_b, prio_b, node_b = (np.asarray(a)
+                                                     for a in res)
+                out.extend((start_b[b].astype(np.float64),
+                            finish_b[b].astype(np.float64),
+                            prio_b[b].astype(np.float64), node_b[b], None)
+                           for b in range(len(chunk)))
             continue
         (j_s, es_s, fs_s, pj_s, kd_s), summary = res
         j_s = np.asarray(j_s)
@@ -1294,6 +1547,7 @@ def _run_scan_cells(cells: list[_ScanCell]) -> list[SimResult]:
             f = cell.feats
             order = f.order.tolist()
             t_list = f.t.tolist()
+            att = extras.get("attempts") if extras is not None else None
             for e, ridx in enumerate(order):
                 req = cell.requests[ridx]
                 req.node = f"node{int(node[e])}"
@@ -1303,27 +1557,34 @@ def _run_scan_cells(cells: list[_ScanCell]) -> list[SimResult]:
                 req.start = float(start[e])
                 req.finish = float(finish[e])
                 req.c = req.finish + RESP_OVERHEAD_S
+                if att is not None:              # hedged cell: steal count
+                    req.attempts = int(att[e])
             meta = {"mode": "ours", "policy": cell.policy,
                     "cores": cell.cores, "backend": "scan"}
             if cell.assignment != "single":
                 meta["nodes"] = cell.nodes
                 meta["assignment"] = cell.assignment
-            failures = 0
+            failures = backups = steals = 0
             nodes_used = cell.nodes
             timeline = None
             if extras is not None:
-                from .cluster import CapacityTimeline
-                failures = extras["failures"]
-                nodes_used = extras["nodes_used"]
-                timeline = CapacityTimeline(
-                    activate=[float(a)
-                              for a in extras["act_t"][:nodes_used]],
-                    deactivate=[float(extras["killt"][k])
-                                if bool(extras["dead"][k]) else float("inf")
-                                for k in range(nodes_used)])
+                failures = extras.get("failures", 0)
+                backups = extras.get("backups", 0)
+                steals = extras.get("steals", 0)
+                if "act_t" in extras:        # dynamic-capacity cell
+                    from .cluster import CapacityTimeline
+                    nodes_used = extras["nodes_used"]
+                    timeline = CapacityTimeline(
+                        activate=[float(a)
+                                  for a in extras["act_t"][:nodes_used]],
+                        deactivate=[float(extras["killt"][k])
+                                    if bool(extras["dead"][k])
+                                    else float("inf")
+                                    for k in range(nodes_used)])
             results[i] = SimResult(
                 requests=cell.requests, cold_starts=0, evictions=0,
-                creations=0, failures=failures, nodes_used=nodes_used,
+                creations=0, failures=failures, backups_issued=backups,
+                steals_won=steals, nodes_used=nodes_used,
                 timeline=timeline, meta=meta)
     return results  # type: ignore[return-value]
 
@@ -1374,6 +1635,8 @@ def cluster_scan_eligible(
     memory_mb: int = CLUSTER_MEMORY_MB,
     container_mb: int = CLUSTER_CONTAINER_MB,
     dynamics=None,
+    profile=None,
+    hedging=None,
 ) -> bool:
     """True when the scan kernel reproduces the reference cluster within
     float32 rounding: ours mode, known policy, always-warm nodes (the §V-A
@@ -1393,6 +1656,17 @@ def cluster_scan_eligible(
     fleet size), failures confined to the initial fleet with at least one
     initial survivor, and -- for failures -- at least two initial nodes, so
     lost requests always have somewhere to go when they re-arrive.
+
+    ``profile`` (a :class:`~repro.core.stragglers.NodeSpeedProfile`) and
+    ``hedging`` (a :class:`~repro.core.stragglers.HedgingSpec`) extend
+    eligibility to **heterogeneous fleets and straggler hedging**: per-node
+    effective speeds scale slot completion times inside the step, hedging
+    deadlines steal still-queued calls to the least-loaded peer.  Both
+    require static capacity (no autoscale/failures -- such combinations run
+    on the reference loop); hedging additionally requires steal mode and,
+    under push, at least two nodes (a single node cannot steal from
+    itself; the reference can, so it stays eligible there only via the
+    event loop).
     """
     if policy not in POLICY_NAMES or not warm or nodes < 1:
         return False
@@ -1401,6 +1675,17 @@ def cluster_scan_eligible(
             return False
     elif assignment != "pull":
         return False
+    straggler = ((profile is not None and not profile.is_uniform)
+                 or hedging is not None)
+    if straggler and dynamics is not None and not dynamics.is_static:
+        return False
+    if hedging is not None:
+        if hedging.mode != "steal":
+            return False             # duplicate racing stays reference-only
+        if assignment == "push" and nodes < 2:
+            return False
+    if profile is not None and len(profile.speeds) > nodes:
+        return False                 # speeds beyond the fleet: misconfigured
     if dynamics is not None and not dynamics.is_static:
         if assignment == "push" and lb != "least_loaded":
             return False
@@ -1423,11 +1708,15 @@ def simulate_cluster_cells_scan(
     validate: bool = True,
 ) -> list[SimResult]:
     """Run a batch of ``(requests, nodes, cores, policy[, assignment[, lb[,
-    dynamics]]])`` ours-mode cluster scenarios as bucketed vmapped scans --
-    an entire nodes x intensity x policy grid becomes a handful of XLA
-    dispatches.  ``dynamics`` (a
+    dynamics[, profile[, hedging]]]]])`` ours-mode cluster scenarios as
+    bucketed vmapped scans -- an entire nodes x intensity x policy grid
+    becomes a handful of XLA dispatches.  ``dynamics`` (a
     :class:`~repro.core.cluster.ClusterDynamics`, or ``None``) adds
-    autoscaling and scheduled failures, modelled inside the scan step.
+    autoscaling and scheduled failures, ``profile`` (a
+    :class:`~repro.core.stragglers.NodeSpeedProfile`) heterogeneous node
+    speeds, and ``hedging`` (a
+    :class:`~repro.core.stragglers.HedgingSpec`) straggler work stealing --
+    all modelled inside the scan step.
 
     Every cell must satisfy :func:`cluster_scan_eligible` (raises
     ``ValueError`` otherwise; ``validate=False`` skips the re-check for
@@ -1445,20 +1734,23 @@ def simulate_cluster_cells_scan(
         assignment = item[4] if len(item) > 4 else "pull"
         lb = item[5] if len(item) > 5 else "least_loaded"
         dynamics = item[6] if len(item) > 6 else None
+        profile = item[7] if len(item) > 7 else None
+        hedging = item[8] if len(item) > 8 else None
         if validate and not cluster_scan_eligible(
                 requests, nodes, cores, policy, assignment=assignment,
                 lb=lb, memory_mb=memory_mb, container_mb=container_mb,
-                dynamics=dynamics):
+                dynamics=dynamics, profile=profile, hedging=hedging):
             raise ValueError(
                 "scan cluster backend requires the always-warm ours regime "
                 f"(policy={policy!r}, nodes={nodes}, cores={cores}, "
-                f"assignment={assignment!r}, dynamics={dynamics!r}); "
-                "use backend='reference'")
+                f"assignment={assignment!r}, dynamics={dynamics!r}, "
+                f"hedging={hedging!r}); use backend='reference'")
         cells.append(_ScanCell(requests=requests,
                                feats=_arrival_features(requests),
                                cores=cores, nodes=nodes, policy=policy,
                                assignment=assignment, lb=lb,
-                               dynamics=dynamics))
+                               dynamics=dynamics, profile=profile,
+                               hedging=hedging))
     return _run_scan_cells(cells)
 
 
@@ -1472,12 +1764,14 @@ def simulate_cluster_scan(
     memory_mb: int = CLUSTER_MEMORY_MB,
     container_mb: int = CLUSTER_CONTAINER_MB,
     dynamics=None,
+    profile=None,
+    hedging=None,
 ) -> SimResult:
     """Single-cell convenience wrapper over
     :func:`simulate_cluster_cells_scan`."""
     return simulate_cluster_cells_scan(
         [(requests, nodes, cores_per_node, policy, assignment, lb,
-          dynamics)],
+          dynamics, profile, hedging)],
         memory_mb=memory_mb, container_mb=container_mb)[0]
 
 
@@ -1487,13 +1781,16 @@ class ScanBackend:
     Supports single nodes *and* clusters: any of the five policies under the
     pull assignment or the push assignment (FC via per-(node, fn) count
     rings), plus time-varying capacity -- autoscaling and failure
-    injection -- for pull and push-least-loaded clusters."""
+    injection -- for pull and push-least-loaded clusters, plus
+    static-capacity straggler scenarios -- heterogeneous node speeds
+    (``hetero``) and steal-mode hedging (``hedging``)."""
 
     name = "scan"
 
     def supports(self, *, mode: str, policy: str, warm: bool,
                  nodes: int = 1, assignment: str = "pull",
-                 autoscale: bool = False, failures: bool = False) -> bool:
+                 autoscale: bool = False, failures: bool = False,
+                 hedging: bool = False, hetero: bool = False) -> bool:
         if mode != "ours" or policy not in POLICY_NAMES or not warm:
             return False
         if nodes > 1 or autoscale or failures:
@@ -1501,6 +1798,12 @@ class ScanBackend:
                 return False
         if failures and nodes < 2:
             return False             # lost calls need a surviving node
+        if (hedging or hetero) and (autoscale or failures):
+            return False             # straggler cells need static capacity
+        if (hedging or hetero) and assignment not in ("pull", "push"):
+            return False
+        if hedging and assignment == "push" and nodes < 2:
+            return False             # stealing needs a peer
         try:
             import jax  # noqa: F401
         except ImportError:

@@ -146,6 +146,7 @@ class OursNodeSim:
         container_mb: int = 128,
         name: str = "node0",
         speed: float = 1.0,
+        speed_fn: Callable[[float], float] | None = None,
         warm_functions: list[str] | None = None,
         on_complete: Callable[[Request], None] | None = None,
         fn_memory: dict | None = None,
@@ -155,6 +156,9 @@ class OursNodeSim:
         self.loop = loop
         self.name = name
         self.speed = speed
+        # time-varying effective speed (heterogeneity episodes): sampled at
+        # dispatch time, overriding the static ``speed`` when provided
+        self.speed_fn = speed_fn
         self.alive = True
         self.on_complete = on_complete
         self.channel = ManagementChannel(loop, servers=1)
@@ -183,24 +187,31 @@ class OursNodeSim:
 
     def _launch(self, dec: StartDecision) -> None:
         req = dec.request
-        self.in_flight[req.id] = req
+        # keyed by *object* identity: duplicate-mode hedging can race two
+        # copies sharing one request id onto the same node, and each
+        # launched execution must complete (and free its slot) on its own
+        self.in_flight[id(req)] = req
         # serialized management: cpu pin + unpause (+ init when not warm);
-        # a degraded node (speed < 1) is slow at management too
+        # a degraded node (speed < 1) is slow at management too.  The
+        # effective speed is sampled once, at dispatch -- non-preemptive
+        # execution never changes rate mid-run.
+        speed = (self.speed_fn(self.loop.now) if self.speed_fn is not None
+                 else self.speed)
         cost = OURS_BASE + OURS_SCALE * container_weight(req.fn, req.p_true)
         if dec.acquire.cold_start:
             cost += (OURS_COLD_EXTRA if dec.acquire.startup_delay > 1.0
                      else OURS_PREWARM_EXTRA)
-        exec_start = self.channel.occupy(cost / self.speed)
+        exec_start = self.channel.occupy(cost / speed)
         req.start = exec_start
-        service = req.p_true / self.speed
+        service = req.p_true / speed
         finish = exec_start + service
         self.loop.schedule(finish, lambda d=dec, s=service: self._finish(d, s))
 
     def _finish(self, dec: StartDecision, service: float) -> None:
         req = dec.request
-        if not self.alive or req.id not in self.in_flight:
-            return  # node died mid-flight / request superseded by a backup
-        del self.in_flight[req.id]
+        if not self.alive or id(req) not in self.in_flight:
+            return  # node died mid-flight
+        del self.in_flight[id(req)]
         req.finish = self.loop.now
         req.c = self.loop.now + RESP_OVERHEAD_S
         self.completed.append(req)
@@ -426,6 +437,7 @@ class SimResult:
     creations: int
     failures: int = 0
     backups_issued: int = 0
+    steals_won: int = 0       # hedged calls whose winning run was the backup
     nodes_used: int = 1
     # realized per-node capacity intervals (cluster runs only); typed loosely
     # to keep this module import-independent of .cluster
@@ -447,18 +459,21 @@ class SimBackend(Protocol):
 
     ``supports`` is a **capability matrix**: callers pass the full scenario
     shape -- ``nodes``/``assignment`` for clusters, ``autoscale``/``failures``
-    for capacity dynamics -- and a backend declares whether it can run it.
-    The scan backend runs always-warm ours clusters including autoscaling and
-    failure injection; the single-node fast paths say no for ``nodes > 1``
-    and for any capacity dynamics.  The sweep engine routes cells by asking
-    this matrix rather than hard-coding per-backend rules.
+    for capacity dynamics, ``hedging``/``hetero`` for straggler scenarios --
+    and a backend declares whether it can run it.  The scan backend runs
+    always-warm ours clusters including autoscaling, failure injection,
+    heterogeneous node speeds and steal-mode hedging; the single-node fast
+    paths say no for ``nodes > 1`` and for any capacity dynamics.  The sweep
+    engine routes cells by asking this matrix rather than hard-coding
+    per-backend rules.
     """
 
     name: str
 
     def supports(self, *, mode: str, policy: str, warm: bool,
                  nodes: int = 1, assignment: str = "pull",
-                 autoscale: bool = False, failures: bool = False) -> bool:
+                 autoscale: bool = False, failures: bool = False,
+                 hedging: bool = False, hetero: bool = False) -> bool:
         """Can this backend run the scenario exactly?"""
         ...
 
@@ -483,7 +498,8 @@ class ReferenceBackend:
 
     def supports(self, *, mode: str, policy: str, warm: bool,
                  nodes: int = 1, assignment: str = "pull",
-                 autoscale: bool = False, failures: bool = False) -> bool:
+                 autoscale: bool = False, failures: bool = False,
+                 hedging: bool = False, hetero: bool = False) -> bool:
         return True
 
     def simulate(

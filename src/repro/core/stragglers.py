@@ -1,0 +1,217 @@
+"""Heterogeneity & straggler mitigation (beyond-paper subsystem).
+
+The paper's method assumes identical invokers; its weakest regime is a fleet
+where one node is degraded -- a single slow machine turns short calls into
+tail catastrophes, exactly where per-core late binding (Kaffes et al.) and
+pull-based scheduling (Hiku) claim robustness.  This module makes that
+regime a first-class, *declarative* scenario consumed by both engines:
+
+* :class:`NodeSpeedProfile` -- per-node static speed multipliers plus
+  time-windowed degradation episodes ("node 2 runs 4x slow from t=100 to
+  t=300").  A node's *effective speed* is sampled at dispatch time and
+  scales both the management-channel cost and the execution time; the
+  reference :class:`~repro.core.cluster.Cluster` consults it through the
+  node's ``speed_fn``, the scan kernel through per-node speed tensors and a
+  padded episode table evaluated inside the scan step.
+* :class:`HedgingSpec` -- estimate-multiple straggler deadlines
+  (generalizing the old boolean ``ClusterConfig.backup_requests``): a call
+  still *queued* past ``multiple x max(E[p], floor_s)`` is either **stolen**
+  (cancelled on its slow node, re-submitted to the least-loaded peer -- the
+  non-preemptive-safe default) or **duplicated** (a backup copy races the
+  original; first completion wins).  Both engines report
+  ``backups_issued`` / ``steals_won`` with accounting parity; the scan
+  kernel models steal mode only (duplicates stay on the reference loop).
+* :func:`rolling_restart` -- a multi-failure helper: staggered per-node
+  kills for availability sweeps (``SweepCell.fail_spec``).
+
+Pure data + arithmetic: no simulator imports, so both engines (and the
+sweep layer) can depend on it without cycles.
+"""
+
+from __future__ import annotations
+
+import math
+
+from dataclasses import dataclass
+
+# (node index, window start, window end, slowdown factor >= strictly 0)
+Episode = tuple[int, float, float, float]
+
+
+@dataclass(frozen=True)
+class NodeSpeedProfile:
+    """Per-node speed model: static multipliers + degradation episodes.
+
+    ``speeds[i]`` is node ``i``'s base speed multiplier (1.0 = nominal,
+    0.25 = a machine running at quarter speed); nodes beyond the tuple --
+    including autoscaler-provisioned ones -- run at 1.0.  ``episodes`` are
+    ``(node, t0, t1, slowdown)`` windows: during ``[t0, t1)`` the node's
+    effective speed is ``base / slowdown`` (slowdown 4.0 = "runs 4x slow").
+    Episodes of one node must not overlap; the effective speed is sampled
+    at *dispatch time* and fixed for the call (non-preemptive execution
+    never changes rate mid-run, matching the reference node model).
+    """
+
+    speeds: tuple[float, ...] = ()
+    episodes: tuple[Episode, ...] = ()
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "speeds",
+                           tuple(float(s) for s in self.speeds))
+        object.__setattr__(self, "episodes",
+                           tuple((int(n), float(t0), float(t1), float(f))
+                                 for n, t0, t1, f in self.episodes))
+        for s in self.speeds:
+            if not (s > 0.0 and math.isfinite(s)):
+                raise ValueError(f"node speed must be finite > 0, got {s}")
+        per_node: dict[int, list[tuple[float, float]]] = {}
+        for n, t0, t1, f in self.episodes:
+            if n < 0:
+                raise ValueError(f"episode node index must be >= 0, got {n}")
+            if not (t1 > t0):
+                raise ValueError(f"episode window must satisfy t1 > t0, "
+                                 f"got [{t0}, {t1})")
+            if not (f > 0.0 and math.isfinite(f)):
+                raise ValueError(f"episode slowdown must be finite > 0, "
+                                 f"got {f}")
+            per_node.setdefault(n, []).append((t0, t1))
+        for n, wins in per_node.items():
+            wins.sort()
+            for (a0, a1), (b0, b1) in zip(wins, wins[1:]):
+                if b0 < a1:
+                    raise ValueError(
+                        f"episodes of node {n} overlap: "
+                        f"[{a0}, {a1}) and [{b0}, {b1})")
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def from_any(cls, node_speeds=None,
+                 degrade=None) -> "NodeSpeedProfile | None":
+        """Build a profile from loose inputs: ``node_speeds`` may be a
+        ``{node: speed}`` dict (the legacy ``ClusterConfig.node_speeds``
+        shape) or a per-node sequence; ``degrade`` an episode sequence.
+        Returns ``None`` when the result would be uniform (no profile)."""
+        speeds: tuple[float, ...] = ()
+        if isinstance(node_speeds, dict):
+            if node_speeds:
+                n = max(node_speeds) + 1
+                speeds = tuple(float(node_speeds.get(i, 1.0))
+                               for i in range(n))
+        elif node_speeds:
+            speeds = tuple(float(s) for s in node_speeds)
+        prof = cls(speeds=speeds,
+                   episodes=tuple(tuple(e) for e in (degrade or ())))
+        return prof if not prof.is_uniform else None
+
+    # -- queries -------------------------------------------------------------
+    @property
+    def is_uniform(self) -> bool:
+        """True when every node runs at nominal speed the whole time."""
+        return not self.episodes and all(s == 1.0 for s in self.speeds)
+
+    def base_speed(self, node: int) -> float:
+        return self.speeds[node] if node < len(self.speeds) else 1.0
+
+    def slowdown_at(self, node: int, t: float) -> float:
+        for n, t0, t1, f in self.episodes:
+            if n == node and t0 <= t < t1:
+                return f
+        return 1.0
+
+    def speed_at(self, node: int, t: float) -> float:
+        """Effective speed of ``node`` at time ``t`` (dispatch-time rate)."""
+        return self.base_speed(node) / self.slowdown_at(node, t)
+
+    def max_slowdown(self) -> float:
+        """Worst effective slowdown anywhere in the profile (1.0 = uniform);
+        the 'degradation severity' axis of the straggler frontier plots."""
+        worst = 1.0
+        for i, s in enumerate(self.speeds):
+            worst = max(worst, 1.0 / s)
+            for n, _, _, f in self.episodes:
+                if n == i:
+                    worst = max(worst, f / s)
+        for n, _, _, f in self.episodes:
+            if n >= len(self.speeds):
+                worst = max(worst, f)
+        return worst
+
+    # -- tensor form (scan kernel) -------------------------------------------
+    def arrays(self, n_pad: int, ep_pad: int):
+        """``(speeds, ep_node, ep_t0, ep_t1, ep_factor)`` numpy arrays padded
+        to ``n_pad`` nodes / ``ep_pad`` episodes; padding episodes carry node
+        ``-1`` (never matched by the kernel) and factor 1."""
+        import numpy as np
+        if len(self.episodes) > ep_pad:
+            raise ValueError(f"{len(self.episodes)} episodes > pad {ep_pad}")
+        spd = np.ones(n_pad, dtype=np.float64)
+        spd[: len(self.speeds)] = self.speeds[:n_pad]
+        epn = np.full(ep_pad, -1, dtype=np.int32)
+        ept0 = np.zeros(ep_pad, dtype=np.float64)
+        ept1 = np.zeros(ep_pad, dtype=np.float64)
+        epf = np.ones(ep_pad, dtype=np.float64)
+        for i, (n, t0, t1, f) in enumerate(self.episodes):
+            epn[i], ept0[i], ept1[i], epf[i] = n, t0, t1, f
+        return spd, epn, ept0, ept1, epf
+
+
+HEDGE_MODES = ("steal", "duplicate")
+
+
+@dataclass(frozen=True)
+class HedgingSpec:
+    """Estimate-driven straggler hedging (generalizes the reference's
+    boolean ``backup_requests``).
+
+    A watch armed at controller receive fires at
+    ``now + multiple x max(E[p], floor_s)`` (controller-side last-10
+    estimate); a call still queued on its node past the deadline is hedged,
+    at most ``max_backups`` times:
+
+    * ``mode="steal"`` -- cancel on the slow node, re-submit to the
+      least-loaded peer (never duplicates running work; safe under
+      non-preemptive execution).  Scan-kernel eligible.
+    * ``mode="duplicate"`` -- leave the original queued and race a backup
+      copy on the least-loaded peer; the first completion wins (the loser's
+      work is wasted -- classic request hedging).  Reference engine only.
+
+    Hedging only ever acts on *queued* calls, so under the pull model --
+    where a call is late-bound and dispatched the moment a slot frees -- it
+    is a structural no-op (``backups_issued == 0``): pull's global queue is
+    already the robustness mechanism hedging retrofits onto push.
+    """
+
+    multiple: float = 3.0
+    floor_s: float = 0.5
+    max_backups: int = 3
+    mode: str = "steal"
+
+    def __post_init__(self) -> None:
+        if not (self.multiple > 0):
+            raise ValueError(f"hedge multiple must be > 0, got {self.multiple}")
+        if self.floor_s < 0:
+            raise ValueError(f"hedge floor must be >= 0, got {self.floor_s}")
+        if self.max_backups < 0:
+            raise ValueError(f"max_backups must be >= 0, "
+                             f"got {self.max_backups}")
+        if self.mode not in HEDGE_MODES:
+            raise ValueError(f"unknown hedge mode {self.mode!r}; "
+                             f"available: {HEDGE_MODES}")
+
+    def deadline(self, now: float, estimate: float) -> float:
+        """When the watch armed at ``now`` fires."""
+        return now + self.multiple * max(estimate, self.floor_s)
+
+
+def rolling_restart(node_count: int, start: float = 30.0,
+                    every: float = 30.0) -> tuple[tuple[int, float], ...]:
+    """Staggered kill schedule for availability sweeps: node ``i`` goes down
+    at ``start + i * every`` -- the shape of a rolling fleet restart.  Kills
+    are permanent in this model, so either roll through fewer nodes than the
+    fleet holds or pair it with the autoscaler to re-provision capacity
+    (``SweepCell(fail_spec=rolling_restart(2), autoscale=True)``)."""
+    if node_count < 1:
+        raise ValueError(f"node_count must be >= 1, got {node_count}")
+    if every < 0 or start < 0:
+        raise ValueError("start/every must be >= 0")
+    return tuple((i, start + i * every) for i in range(node_count))

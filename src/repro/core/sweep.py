@@ -48,9 +48,10 @@ from .workload import (
 )
 
 # grid axes that identify a cell up to its seed (aggregation groups by these)
-GRID_FIELDS = ("policy", "mode", "assignment", "arrival", "intensity",
+GRID_FIELDS = ("policy", "mode", "assignment", "lb", "arrival", "intensity",
                "cores", "nodes", "autoscale", "provision_delay", "scale_up",
-               "max_nodes", "fail_at", "backend")
+               "max_nodes", "fail_at", "fail_spec", "node_speeds", "degrade",
+               "hedge_multiple", "backend")
 
 # simulation-backend selectors accepted by SweepCell.backend; the SweepSpec
 # backends axis additionally accepts "cross-check" as sugar for
@@ -80,7 +81,12 @@ class BackendMismatchError(AssertionError):
 # metrics averaged across seeds in aggregate()
 METRIC_KEYS = ("R_avg", "R_p50", "R_p75", "R_p95", "R_p99",
                "S_avg", "S_p50", "S_p75", "S_p95", "S_p99",
-               "max_c", "cold", "n", "failures", "backups", "nodes_used")
+               "max_c", "cold", "n", "failures", "backups", "steals",
+               "nodes_used")
+# count-like metrics the cross-check requires to match *exactly* -- a fast
+# backend miscounting backups or lost calls is a hard failure regardless of
+# how small the relative error looks (ISSUE: accounting parity)
+CROSS_CHECK_EXACT = ("failures", "backups", "steals")
 
 
 @dataclass(frozen=True)
@@ -90,6 +96,7 @@ class SweepCell:
     policy: str = "fifo"          # fifo|sept|eect|rect|fc|baseline (sentinel)
     mode: str = "ours"            # ours | baseline
     assignment: str = "pull"      # cluster request-assignment model
+    lb: str = "least_loaded"      # push balancer: least_loaded|home|round_robin
     arrival: str = "uniform"      # uniform|poisson|diurnal|mmpp|fairness|trace
     intensity: int = 30
     cores: int = 10               # per node
@@ -101,6 +108,18 @@ class SweepCell:
     scale_up: float | None = None
     max_nodes: int | None = None
     fail_at: float | None = None  # inject: node 0 dies at this time
+    # multi-failure schedule ((node, time), ...) -- see stragglers.
+    # rolling_restart; overrides fail_at when set
+    fail_spec: tuple[tuple[int, float], ...] | None = None
+    # heterogeneity: per-node speed multipliers + degradation episodes
+    node_speeds: tuple[float, ...] | None = None
+    degrade: tuple[tuple[int, float, float, float], ...] | None = None
+    # straggler hedging: the estimate-multiple deadline (None = off); the
+    # non-axis knobs below fill out the HedgingSpec
+    hedge_multiple: float | None = None
+    hedge_floor_s: float = 0.5
+    hedge_max_backups: int = 3
+    hedge_mode: str = "steal"
     seed: int = 0
     duration_s: float = 60.0
     workload_cores: int | None = None  # burst sized for this many cores
@@ -126,6 +145,8 @@ class SweepCell:
                  f"v{self.intensity}"]
         if self.nodes != 1:
             parts.append(f"n{self.nodes}")
+        if self.assignment == "push" and self.lb != "least_loaded":
+            parts.append(self.lb)
         if self.arrival != "uniform":
             parts.append(self.arrival)
         if self.autoscale:
@@ -136,6 +157,15 @@ class SweepCell:
                 parts.append(f"su{self.scale_up:g}")
         if self.fail_at is not None:
             parts.append(f"fail{self.fail_at:g}")
+        if self.fail_spec:
+            parts.append(f"fails{len(self.fail_spec)}")
+        if self.node_speeds or self.degrade:
+            from .stragglers import NodeSpeedProfile
+            prof = NodeSpeedProfile.from_any(self.node_speeds, self.degrade)
+            if prof is not None:
+                parts.append(f"deg{prof.max_slowdown():g}")
+        if self.hedge_multiple is not None:
+            parts.append(f"hedge{self.hedge_multiple:g}")
         if self.backend != "reference":
             parts.append(self.backend)
         return "_".join(parts)
@@ -148,6 +178,7 @@ class SweepSpec:
     policies: Sequence[str] = ("fifo",)
     modes: Sequence[str] = ("ours",)
     assignments: Sequence[str] = ("pull",)
+    lbs: Sequence[str] = ("least_loaded",)   # push balancer axis
     arrivals: Sequence[str] = ("uniform",)
     intensities: Sequence[int] = (30,)
     cores: Sequence[int] = (10,)
@@ -157,6 +188,15 @@ class SweepSpec:
     scale_ups: Sequence[float | None] = (None,)
     max_nodes: int | None = None         # autoscaler headroom (all cells)
     failures: Sequence[float | None] = (None,)
+    # straggler / availability axes: multi-failure schedules, per-node speed
+    # multipliers, degradation episodes, hedging deadline multiples
+    fail_specs: Sequence[tuple | None] = (None,)
+    node_speeds: Sequence[tuple | None] = (None,)
+    degrades: Sequence[tuple | None] = (None,)
+    hedge_multiples: Sequence[float | None] = (None,)
+    hedge_floor_s: float = 0.5           # HedgingSpec knobs (all hedged cells)
+    hedge_max_backups: int = 3
+    hedge_mode: str = "steal"
     seeds: int | Sequence[int] = 3
     base_seed: int = 0
     duration_s: float = 60.0
@@ -198,19 +238,31 @@ class SweepSpec:
             if b not in backends:
                 backends.append(b)
         out = []
-        for (pol, mode, asg, arr, inten, c, n, auto, pd, su, fail, be,
-             seed) in itertools.product(
-                self.policies, self.modes, self.assignments,
+        for (pol, mode, asg, lb, arr, inten, c, n, auto, pd, su, fail,
+             fspec, spd, deg, hedge, be, seed) in itertools.product(
+                self.policies, self.modes, self.assignments, self.lbs,
                 self.arrivals, self.intensities, self.cores,
                 self.nodes, self.autoscale, self.provision_delays,
-                self.scale_ups, self.failures, backends, self.seed_list()):
+                self.scale_ups, self.failures, self.fail_specs,
+                self.node_speeds, self.degrades, self.hedge_multiples,
+                backends, self.seed_list()):
             cell = SweepCell(
-                policy=pol, mode=mode, assignment=asg, arrival=arr,
+                policy=pol, mode=mode, assignment=asg,
+                lb=lb if asg == "push" else "least_loaded",
+                arrival=arr,
                 intensity=inten, cores=c, nodes=n, autoscale=auto,
                 provision_delay=pd if auto else None,
                 scale_up=su if auto else None,
                 max_nodes=self.max_nodes if auto else None,
-                fail_at=fail, seed=seed, duration_s=self.duration_s,
+                fail_at=fail,
+                fail_spec=tuple(tuple(f) for f in fspec) if fspec else None,
+                node_speeds=tuple(spd) if spd else None,
+                degrade=tuple(tuple(e) for e in deg) if deg else None,
+                hedge_multiple=hedge,
+                hedge_floor_s=self.hedge_floor_s,
+                hedge_max_backups=self.hedge_max_backups,
+                hedge_mode=self.hedge_mode,
+                seed=seed, duration_s=self.duration_s,
                 workload_cores=self.workload_cores,
                 per_function=self.per_function, trace_path=self.trace_path,
                 trace_repeat=self.trace_repeat,
@@ -219,9 +271,11 @@ class SweepSpec:
             )
             if self.cell_filter is None or self.cell_filter(cell):
                 out.append(cell)
-        # autoscaler knobs only mean something on autoscale cells; collapsing
-        # them to None elsewhere would otherwise duplicate static cells
-        if (len(self.provision_delays) > 1 or len(self.scale_ups) > 1):
+        # autoscaler knobs only mean something on autoscale cells (and lb on
+        # push cells); collapsing them to None elsewhere would otherwise
+        # duplicate static cells
+        if (len(self.provision_delays) > 1 or len(self.scale_ups) > 1
+                or len(self.lbs) > 1):
             seen: set = set()
             dedup = []
             for cell in out:
@@ -295,12 +349,39 @@ def make_workload(cell: SweepCell) -> list[Request]:
                                 duration_s=cell.duration_s)
 
 
+def _cell_straggler(cell: SweepCell) -> bool:
+    """Does the cell declare any heterogeneity / hedging / multi-failure?"""
+    return (cell.fail_spec is not None or cell.node_speeds is not None
+            or cell.degrade is not None or cell.hedge_multiple is not None)
+
+
+def _cell_profile(cell: SweepCell):
+    """The cell's :class:`~repro.core.stragglers.NodeSpeedProfile`, or
+    ``None`` for a uniform fleet."""
+    if cell.node_speeds is None and cell.degrade is None:
+        return None
+    from .stragglers import NodeSpeedProfile
+    return NodeSpeedProfile.from_any(cell.node_speeds, cell.degrade)
+
+
+def _cell_hedging(cell: SweepCell):
+    """The cell's :class:`~repro.core.stragglers.HedgingSpec`, or ``None``
+    when hedging is off."""
+    if cell.hedge_multiple is None:
+        return None
+    from .stragglers import HedgingSpec
+    return HedgingSpec(multiple=cell.hedge_multiple,
+                       floor_s=cell.hedge_floor_s,
+                       max_backups=cell.hedge_max_backups,
+                       mode=cell.hedge_mode)
+
+
 def _vectorized_eligible(cell: SweepCell) -> bool:
     """Can the cell run on the vectorized (ours-node) fast path?"""
     mode = "baseline" if (cell.mode == "baseline"
                           or cell.policy == "baseline") else "ours"
     return (mode == "ours" and cell.nodes <= 1 and not cell.autoscale
-            and cell.fail_at is None)
+            and cell.fail_at is None and not _cell_straggler(cell))
 
 
 def _cell_dynamics(cell: SweepCell):
@@ -308,7 +389,8 @@ def _cell_dynamics(cell: SweepCell):
     for a fixed fleet.  Defaults resolve through the same
     ``_dynamics_from_kwargs`` path ``simulate_cluster`` uses, so both
     engines see identical autoscaler parameters."""
-    if not cell.autoscale and cell.fail_at is None:
+    if (not cell.autoscale and cell.fail_at is None
+            and cell.fail_spec is None):
         return None
     from .cluster import _dynamics_from_kwargs
     kwargs: dict = {"autoscale": cell.autoscale}
@@ -318,27 +400,41 @@ def _cell_dynamics(cell: SweepCell):
         kwargs["scale_up_queue_per_slot"] = cell.scale_up
     if cell.max_nodes is not None:
         kwargs["max_nodes"] = cell.max_nodes
-    return _dynamics_from_kwargs(kwargs, cell.fail_at)
+    return _dynamics_from_kwargs(kwargs, cell.fail_at,
+                                 cell.fail_spec or ())
 
 
 def _cluster_scan_capable(cell: SweepCell) -> bool:
     """Static (workload-independent) part of scan-cluster eligibility,
     answered by the scan backend's **capability matrix**: ours mode, a
-    cluster-shaped scenario (>1 node, autoscaling, or failure injection),
-    and ``supports(...)`` saying yes for the cell's policy / assignment /
-    dynamics combination.  The always-warm check needs the workload and
-    happens in :func:`run_cells_scan` / ``cluster_scan_eligible``."""
+    cluster-shaped scenario (>1 node, autoscaling, failure injection, or a
+    straggler scenario), and ``supports(...)`` saying yes for the cell's
+    policy / assignment / dynamics / hedging / heterogeneity combination.
+    The always-warm check needs the workload and happens in
+    :func:`run_cells_scan` / ``cluster_scan_eligible``."""
     mode = "baseline" if (cell.mode == "baseline"
                           or cell.policy == "baseline") else "ours"
     cluster_shaped = (cell.nodes > 1 or cell.autoscale
-                      or cell.fail_at is not None)
+                      or cell.fail_at is not None or _cell_straggler(cell))
     if mode != "ours" or not cluster_shaped or not cell.warm:
         return False
+    if cell.hedge_multiple is not None and cell.hedge_mode != "steal":
+        return False                 # duplicate racing stays reference-only
+    if cell.assignment == "push":
+        if cell.lb not in ("least_loaded", "home"):
+            return False             # round_robin push stays on the reference
+        dyn_cap = (cell.autoscale or cell.fail_at is not None
+                   or cell.fail_spec is not None)
+        if dyn_cap and cell.lb != "least_loaded":
+            return False             # dynamic home walk needs the event loop
+    profile = _cell_profile(cell)
     from .simulator import get_backend
     return get_backend("scan").supports(
         mode=mode, policy=cell.policy, warm=cell.warm, nodes=cell.nodes,
         assignment=cell.assignment, autoscale=cell.autoscale,
-        failures=cell.fail_at is not None)
+        failures=cell.fail_at is not None or cell.fail_spec is not None,
+        hedging=cell.hedge_multiple is not None,
+        hetero=profile is not None)
 
 
 def _scan_batchable(cell: SweepCell) -> bool:
@@ -379,13 +475,13 @@ def _resolve_backend(cell: SweepCell, reqs, mode: str, policy: str) -> str:
 
 
 def _cell_metrics(cell: SweepCell, done, cold, failures, backups,
-                  nodes_used) -> dict[str, float]:
+                  nodes_used, steals: int = 0) -> dict[str, float]:
     s = summarize(done, per_function=bool(cell.per_function))
     metrics: dict[str, float] = {
         "R_avg": s.response_avg, "S_avg": s.stretch_avg,
         "max_c": s.max_completion, "cold": float(cold), "n": float(s.n),
         "failures": float(failures), "backups": float(backups),
-        "nodes_used": float(nodes_used),
+        "steals": float(steals), "nodes_used": float(nodes_used),
     }
     for p, v in s.response_pct.items():
         metrics[f"R_p{p}"] = v
@@ -402,7 +498,9 @@ def _cell_metrics(cell: SweepCell, done, cold, failures, backups,
 def _cross_check(cell: SweepCell, ref: dict[str, float],
                  fast: dict[str, float], backend: str,
                  rtol: float = CROSS_CHECK_RTOL) -> float:
-    """Max relative disagreement over CROSS_CHECK_KEYS; raises on breach."""
+    """Max relative disagreement over CROSS_CHECK_KEYS; raises on breach.
+    Count-like metrics (CROSS_CHECK_EXACT: failures / backups / steals)
+    must match *bit-identically* -- any difference is a hard failure."""
     worst = 0.0
     for k in CROSS_CHECK_KEYS:
         a, b = ref.get(k), fast.get(k)
@@ -415,6 +513,15 @@ def _cross_check(cell: SweepCell, ref: dict[str, float],
                 f"backend {backend!r} disagrees with reference on "
                 f"{cell.label()} seed={cell.seed}: {k} {b!r} vs {a!r} "
                 f"(rel err {err:.2e} > {rtol})")
+    for k in CROSS_CHECK_EXACT:
+        a, b = ref.get(k), fast.get(k)
+        if a is None or b is None:
+            continue
+        if a != b:
+            raise BackendMismatchError(
+                f"backend {backend!r} miscounts {k} on {cell.label()} "
+                f"seed={cell.seed}: {b!r} vs reference {a!r} "
+                "(count metrics must match exactly)")
     return worst
 
 
@@ -427,8 +534,11 @@ def _cluster_scan_ok(cell: SweepCell, reqs: list[Request],
         return False
     from .fastpath import cluster_scan_eligible
     return cluster_scan_eligible(reqs, cell.nodes, cell.cores, policy,
-                                 assignment=cell.assignment, warm=cell.warm,
-                                 dynamics=_cell_dynamics(cell))
+                                 assignment=cell.assignment, lb=cell.lb,
+                                 warm=cell.warm,
+                                 dynamics=_cell_dynamics(cell),
+                                 profile=_cell_profile(cell),
+                                 hedging=_cell_hedging(cell))
 
 
 def run_cell(cell: SweepCell) -> dict[str, float]:
@@ -441,11 +551,12 @@ def run_cell(cell: SweepCell) -> dict[str, float]:
     mode = "baseline" if (cell.mode == "baseline"
                           or cell.policy == "baseline") else "ours"
     policy = "fifo" if cell.policy == "baseline" else cell.policy
-    failures = backups = 0
+    failures = backups = steals = 0
     nodes_used = cell.nodes
     cold = 0
 
-    if cell.nodes <= 1 and not cell.autoscale and cell.fail_at is None:
+    if (cell.nodes <= 1 and not cell.autoscale and cell.fail_at is None
+            and not _cell_straggler(cell)):
         backend = _resolve_backend(cell, reqs, mode, policy)
         res = simulate_single_node(reqs, cores=cell.cores, policy=policy,
                                    mode=mode, warm=cell.warm,
@@ -470,9 +581,13 @@ def run_cell(cell: SweepCell) -> dict[str, float]:
             metrics["degraded"] = 1.0
         return metrics
     elif mode == "baseline":
-        if cell.fail_at is not None:
-            raise ValueError("failure injection unsupported for the stock "
-                             "baseline cluster (no retry semantics)")
+        if cell.fail_at is not None or _cell_straggler(cell):
+            raise ValueError(
+                "failure injection and straggler axes (fail_spec, "
+                "node_speeds, degrade, hedge_multiple) are unsupported for "
+                "the stock baseline cluster (no retry/hedging/speed "
+                "semantics) -- silently dropping them would mislabel "
+                "healthy runs as degraded scenarios")
         res = simulate_baseline_cluster(reqs, nodes=cell.nodes,
                                         cores_per_node=cell.cores,
                                         warm=cell.warm)
@@ -487,12 +602,19 @@ def run_cell(cell: SweepCell) -> dict[str, float]:
         # cross-checked cells keep their own engine as primary and dual-run
         # the counterpart, asserting CLUSTER_XCHECK_RTOL agreement
         dynamics = _cell_dynamics(cell)
+        profile = _cell_profile(cell)
+        hedging = _cell_hedging(cell)
         scan_ok = (cell.backend == "scan" or cell.cross_check) \
             and _cluster_scan_capable(cell) \
             and _cluster_scan_ok(cell, reqs, policy)
         ref_kw = dict(nodes=cell.nodes, cores_per_node=cell.cores,
                       policy=policy, assignment=cell.assignment,
+                      lb=cell.lb,
                       warm=cell.warm, fail_at=cell.fail_at,
+                      fail_spec=cell.fail_spec or (),
+                      node_speeds=cell.node_speeds,
+                      degrade=cell.degrade or (),
+                      hedging=hedging,
                       autoscale=cell.autoscale)
         if cell.provision_delay is not None:
             ref_kw["provision_delay_s"] = cell.provision_delay
@@ -504,15 +626,17 @@ def run_cell(cell: SweepCell) -> dict[str, float]:
             from .fastpath import simulate_cluster_cells_scan
             res = simulate_cluster_cells_scan(
                 [(reqs, cell.nodes, cell.cores, policy, cell.assignment,
-                  "least_loaded", dynamics)])[0]
+                  cell.lb, dynamics, profile, hedging)])[0]
             metrics = _cell_metrics(cell, res.requests, res.cold_starts,
-                                    res.failures, 0, res.nodes_used)
+                                    res.failures, res.backups_issued,
+                                    res.nodes_used, steals=res.steals_won)
             if cell.cross_check:
                 other = simulate_cluster(make_workload(cell), **ref_kw)
                 other_m = _cell_metrics(cell, other.requests,
                                         other.cold_starts, other.failures,
                                         other.backups_issued,
-                                        other.nodes_used)
+                                        other.nodes_used,
+                                        steals=other.steals_won)
                 metrics["xcheck_err"] = _cross_check(
                     cell, other_m, metrics, "scan",
                     rtol=CLUSTER_XCHECK_RTOL)
@@ -520,16 +644,19 @@ def run_cell(cell: SweepCell) -> dict[str, float]:
         res = simulate_cluster(reqs, **ref_kw)
         done, cold = res.requests, res.cold_starts
         failures, backups = res.failures, res.backups_issued
-        nodes_used = res.nodes_used
+        steals, nodes_used = res.steals_won, res.nodes_used
         if cell.cross_check and scan_ok:
             from .fastpath import simulate_cluster_cells_scan
             metrics = _cell_metrics(cell, done, cold, failures, backups,
-                                    nodes_used)
+                                    nodes_used, steals=steals)
             other = simulate_cluster_cells_scan(
                 [(make_workload(cell), cell.nodes, cell.cores, policy,
-                  cell.assignment, "least_loaded", dynamics)])[0]
+                  cell.assignment, cell.lb, dynamics, profile,
+                  hedging)])[0]
             other_m = _cell_metrics(cell, other.requests, other.cold_starts,
-                                    other.failures, 0, other.nodes_used)
+                                    other.failures, other.backups_issued,
+                                    other.nodes_used,
+                                    steals=other.steals_won)
             metrics["xcheck_err"] = _cross_check(
                 cell, metrics, other_m, "scan", rtol=CLUSTER_XCHECK_RTOL)
             return metrics
@@ -537,11 +664,12 @@ def run_cell(cell: SweepCell) -> dict[str, float]:
             # a scan-requested cluster cell outside the kernel's regime ran
             # on the reference event loop: count it (satellite contract)
             metrics = _cell_metrics(cell, done, cold, failures, backups,
-                                    nodes_used)
+                                    nodes_used, steals=steals)
             metrics["degraded"] = 1.0
             return metrics
 
-    return _cell_metrics(cell, done, cold, failures, backups, nodes_used)
+    return _cell_metrics(cell, done, cold, failures, backups, nodes_used,
+                         steals=steals)
 
 
 def _run_cells_scan_partial(
@@ -589,11 +717,14 @@ def _run_cells_scan_partial(
     if clusters:
         results = simulate_cluster_cells_scan(
             [(reqs, cell.nodes, cell.cores, cell.policy, cell.assignment,
-              "least_loaded", _cell_dynamics(cell))
+              cell.lb, _cell_dynamics(cell), _cell_profile(cell),
+              _cell_hedging(cell))
              for _, cell, reqs in clusters], validate=False)
         for (pos, cell, _), res in zip(clusters, results):
             metrics[pos] = _cell_metrics(cell, res.requests, res.cold_starts,
-                                         res.failures, 0, res.nodes_used)
+                                         res.failures, res.backups_issued,
+                                         res.nodes_used,
+                                         steals=res.steals_won)
     return metrics
 
 

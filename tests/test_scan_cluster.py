@@ -281,10 +281,10 @@ class TestCompileCache:
         reqs = _burst()
         cell = _ScanCell(requests=reqs, feats=_arrival_features(reqs),
                          cores=6, nodes=3, policy="fc", assignment="pull")
-        (freeze, use_fc, fc_push, dyn, n_b, nodes_b, slots_b, f_b, kq,
-         window, fc_ring, xtra) = cell.bucket()
+        (freeze, use_fc, fc_push, dyn, het, hedge, n_b, nodes_b, slots_b,
+         f_b, kq, window, fc_ring, n_ep, xtra) = cell.bucket()
         assert not freeze and use_fc and not fc_push
-        assert not dyn and xtra == 0
+        assert not dyn and not het and not hedge and xtra == 0
         for v in (n_b, nodes_b, slots_b, f_b, kq):
             assert v & (v - 1) == 0                   # powers of two
         assert n_b >= len(reqs) and nodes_b >= 3 and slots_b >= 6

@@ -1,0 +1,611 @@
+"""Heterogeneity & straggler-mitigation subsystem.
+
+Contracts under test:
+
+* :class:`NodeSpeedProfile` / :class:`HedgingSpec` / ``rolling_restart``
+  validate and evaluate correctly (speed sampling, episode windows, tensor
+  form, deadline arithmetic);
+* the reference ``Cluster`` consumes them: degraded nodes slow completions,
+  steal-mode hedging cuts the tail and counts ``backups_issued`` /
+  ``steals_won``, duplicate mode races copies and the first completion
+  wins, the legacy ``backup_requests`` boolean maps onto the same spec;
+* the scan kernel reproduces the reference on a policy x hetero stress
+  grid: metrics to float64 rounding and ``backups``/``steals``/``failures``
+  **bit-identically** (the ISSUE acceptance bar), including multi-failure
+  schedules (``fail_spec`` / rolling restarts);
+* ``PriorityQueue.remove`` is tombstone-based and behaviorally identical to
+  the old linear-scan version (pop order, ties, len, iteration);
+* ``RuntimeEstimator`` cold-start edges: zero-completion estimates, floor
+  domination, and hedging determinism across repeated runs;
+* the capability matrix (``supports(hedging=, hetero=)``) and the sweep
+  axes route straggler cells to the right engine.
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Cluster,
+    ClusterConfig,
+    HedgingSpec,
+    NodeSpeedProfile,
+    PriorityQueue,
+    Request,
+    RuntimeEstimator,
+    SweepCell,
+    SweepSpec,
+    cluster_scan_eligible,
+    generate_burst,
+    get_backend,
+    rolling_restart,
+    run_cell,
+    run_sweep,
+    simulate_cluster,
+    summarize,
+)
+from repro.core.cluster import ClusterDynamics
+from repro.core.sweep import CROSS_CHECK_EXACT, CLUSTER_XCHECK_RTOL
+
+try:
+    import jax  # noqa: F401
+    HAVE_JAX = True
+except ImportError:
+    HAVE_JAX = False
+
+needs_jax = pytest.mark.skipif(not HAVE_JAX, reason="jax not installed")
+
+POLICIES = ("fifo", "sept", "eect", "rect", "fc")
+
+
+def _burst(nodes=2, cores=4, intensity=12, seed=0):
+    return generate_burst(cores=nodes * cores, intensity=intensity,
+                          seed=seed)
+
+
+def _metrics(res):
+    s = summarize(res.requests)
+    return {"R_avg": s.response_avg, "R_p95": s.response_pct[95],
+            "max_c": s.max_completion, "n": s.n}
+
+
+# ---------------------------------------------------------------------------
+# NodeSpeedProfile
+# ---------------------------------------------------------------------------
+class TestNodeSpeedProfile:
+    def test_speed_sampling(self):
+        prof = NodeSpeedProfile(speeds=(1.0, 0.5),
+                                episodes=((1, 10.0, 20.0, 4.0),))
+        assert prof.speed_at(0, 15.0) == 1.0
+        assert prof.speed_at(1, 5.0) == 0.5
+        assert prof.speed_at(1, 10.0) == 0.5 / 4.0   # t0 inclusive
+        assert prof.speed_at(1, 20.0) == 0.5         # t1 exclusive
+        assert prof.speed_at(7, 15.0) == 1.0         # beyond speeds: nominal
+
+    def test_uniform_detection(self):
+        assert NodeSpeedProfile().is_uniform
+        assert NodeSpeedProfile(speeds=(1.0, 1.0)).is_uniform
+        assert not NodeSpeedProfile(speeds=(1.0, 0.5)).is_uniform
+        assert not NodeSpeedProfile(
+            episodes=((0, 0.0, 1.0, 2.0),)).is_uniform
+
+    def test_from_any_shapes(self):
+        assert NodeSpeedProfile.from_any(None, None) is None
+        assert NodeSpeedProfile.from_any((1.0, 1.0)) is None
+        d = NodeSpeedProfile.from_any({1: 0.2})
+        assert d is not None and d.speeds == (1.0, 0.2)
+        s = NodeSpeedProfile.from_any([0.5, 1.0])
+        assert s.base_speed(0) == 0.5
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            NodeSpeedProfile(speeds=(0.0,))
+        with pytest.raises(ValueError):
+            NodeSpeedProfile(episodes=((0, 5.0, 5.0, 2.0),))   # empty window
+        with pytest.raises(ValueError):
+            NodeSpeedProfile(episodes=((0, 0.0, 10.0, 2.0),
+                                       (0, 5.0, 15.0, 3.0)))  # overlap
+        # distinct nodes may overlap in time
+        NodeSpeedProfile(episodes=((0, 0.0, 10.0, 2.0),
+                                   (1, 5.0, 15.0, 3.0)))
+
+    def test_max_slowdown(self):
+        assert NodeSpeedProfile().max_slowdown() == 1.0
+        assert NodeSpeedProfile(speeds=(0.25,)).max_slowdown() == 4.0
+        prof = NodeSpeedProfile(speeds=(0.5,),
+                                episodes=((0, 0.0, 1.0, 3.0),))
+        assert prof.max_slowdown() == 6.0            # 3x on a half-speed node
+
+    def test_arrays_padding(self):
+        prof = NodeSpeedProfile(speeds=(0.5,),
+                                episodes=((0, 1.0, 2.0, 3.0),))
+        spd, epn, t0, t1, f = prof.arrays(4, 2)
+        assert spd.tolist() == [0.5, 1.0, 1.0, 1.0]
+        assert epn.tolist() == [0, -1]
+        assert f.tolist() == [3.0, 1.0]
+        with pytest.raises(ValueError):
+            prof.arrays(4, 0)
+
+
+# ---------------------------------------------------------------------------
+# HedgingSpec / rolling_restart
+# ---------------------------------------------------------------------------
+class TestHedgingSpec:
+    def test_deadline(self):
+        h = HedgingSpec(multiple=3.0, floor_s=0.5)
+        assert h.deadline(10.0, 0.0) == 10.0 + 1.5   # floor dominates cold
+        assert h.deadline(10.0, 2.0) == 16.0
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            HedgingSpec(multiple=0.0)
+        with pytest.raises(ValueError):
+            HedgingSpec(mode="preempt")
+        with pytest.raises(ValueError):
+            HedgingSpec(max_backups=-1)
+
+    def test_defaults_match_legacy_cluster_knobs(self):
+        """backup_requests=True must keep meaning what it meant: the old
+        straggler_factor/floor defaults, 3 attempts, steal mode."""
+        cfg = ClusterConfig()
+        h = HedgingSpec()
+        assert h.multiple == cfg.straggler_factor
+        assert h.floor_s == cfg.straggler_floor_s
+        assert h.max_backups == 3 and h.mode == "steal"
+
+
+class TestRollingRestart:
+    def test_schedule(self):
+        assert rolling_restart(3, 10.0, 20.0) == ((0, 10.0), (1, 30.0),
+                                                  (2, 50.0))
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            rolling_restart(0)
+        with pytest.raises(ValueError):
+            rolling_restart(2, start=-1.0)
+
+
+# ---------------------------------------------------------------------------
+# PriorityQueue: tombstone remove, behavior parity
+# ---------------------------------------------------------------------------
+class _LinearQueue:
+    """The old O(n)-remove implementation, kept as the parity oracle."""
+
+    def __init__(self):
+        import heapq
+        import itertools
+        self._heapq = heapq
+        self._heap = []
+        self._seq = itertools.count()
+
+    def push(self, req, priority):
+        self._heapq.heappush(self._heap, (float(priority), next(self._seq),
+                                          req))
+
+    def pop(self):
+        return self._heapq.heappop(self._heap)[2]
+
+    def remove(self, req):
+        for i, (_, _, r) in enumerate(self._heap):
+            if r.id == req.id:
+                self._heap[i] = self._heap[-1]
+                self._heap.pop()
+                if i < len(self._heap):
+                    self._heapq._siftup(self._heap, i)
+                    self._heapq._siftdown(self._heap, 0, i)
+                return True
+        return False
+
+    def __len__(self):
+        return len(self._heap)
+
+
+class TestPriorityQueue:
+    def test_fifo_on_ties(self):
+        q = PriorityQueue()
+        reqs = [Request(fn=f"f{i}", r=0.0) for i in range(5)]
+        for r in reqs:
+            q.push(r, 1.0)
+        assert [q.pop().fn for _ in range(5)] == [r.fn for r in reqs]
+
+    def test_remove_then_pop_and_len(self):
+        q = PriorityQueue()
+        a, b, c = (Request(fn=x, r=0.0) for x in "abc")
+        q.push(a, 2.0)
+        q.push(b, 1.0)
+        q.push(c, 3.0)
+        assert q.remove(b) and len(q) == 2
+        assert not q.remove(b)                  # already gone
+        assert q.peek() is a                    # tombstone scrubbed lazily
+        assert sorted(r.fn for r in q) == ["a", "c"]
+        assert q.pop() is a and q.pop() is c
+        assert not q and len(q) == 0
+        with pytest.raises(IndexError):
+            q.pop()
+
+    def test_randomized_parity_with_linear_scan(self):
+        """Same op sequence -> same pop order as the old implementation."""
+        rng = random.Random(7)
+        fast, slow = PriorityQueue(), _LinearQueue()
+        live: list[Request] = []
+        out_fast, out_slow = [], []
+        for step in range(2000):
+            op = rng.random()
+            if op < 0.5 or not live:
+                req = Request(fn=f"f{step}", r=0.0)
+                prio = rng.choice([0.5, 1.0, 2.0])   # force frequent ties
+                fast.push(req, prio)
+                slow.push(req, prio)
+                live.append(req)
+            elif op < 0.75:
+                victim = rng.choice(live)
+                assert fast.remove(victim) == slow.remove(victim)
+                live.remove(victim)
+            else:
+                out_fast.append(fast.pop().id)
+                out_slow.append(slow.pop().id)
+                live = [r for r in live if r.id != out_fast[-1]]
+            assert len(fast) == len(slow)
+        while live:
+            out_fast.append(fast.pop().id)
+            out_slow.append(slow.pop().id)
+            live = [r for r in live if r.id != out_fast[-1]]
+        assert out_fast == out_slow
+
+
+# ---------------------------------------------------------------------------
+# reference engine: hetero + hedging semantics
+# ---------------------------------------------------------------------------
+class TestReferenceHedging:
+    def test_degraded_node_slows_tail(self):
+        reqs_a = _burst(seed=1)
+        reqs_b = _burst(seed=1)
+        healthy = simulate_cluster(reqs_a, nodes=2, cores_per_node=4,
+                                   policy="fc", assignment="push", lb="home")
+        degraded = simulate_cluster(reqs_b, nodes=2, cores_per_node=4,
+                                    policy="fc", assignment="push", lb="home",
+                                    degrade=((0, 2.0, 300.0, 8.0),))
+        assert (_metrics(degraded)["R_p95"] > _metrics(healthy)["R_p95"])
+
+    def test_steal_hedging_recovers_tail_and_counts(self):
+        kw = dict(nodes=2, cores_per_node=4, policy="fc", assignment="push",
+                  lb="home", degrade=((0, 2.0, 300.0, 8.0),))
+        plain = simulate_cluster(_burst(seed=2), **kw)
+        hedged = simulate_cluster(_burst(seed=2),
+                                  hedging=HedgingSpec(multiple=3.0), **kw)
+        assert hedged.backups_issued > 0
+        assert 0 < hedged.steals_won <= hedged.backups_issued
+        assert _metrics(hedged)["R_p95"] < _metrics(plain)["R_p95"]
+        assert _metrics(hedged)["n"] == _metrics(plain)["n"]
+
+    def test_duplicate_mode_races_and_wins(self):
+        reqs = _burst(seed=3)
+        res = simulate_cluster(
+            reqs, nodes=2, cores_per_node=4, policy="fc",
+            assignment="push", lb="home",
+            degrade=((0, 2.0, 300.0, 8.0),),
+            hedging=HedgingSpec(multiple=2.0, mode="duplicate"))
+        assert res.backups_issued > 0
+        assert 0 < res.steals_won <= res.backups_issued
+        assert len(res.requests) == len(reqs)
+        # winners propagate onto the original request objects
+        assert all(r.c is not None for r in reqs)
+
+    def test_duplicate_copies_never_leak_slots(self):
+        """Two same-id copies racing on one node must each complete and
+        free their slot (in_flight is keyed by object identity)."""
+        reqs = _burst(seed=7, intensity=20)
+        cluster = Cluster(
+            ClusterConfig(nodes=2, cores_per_node=4, policy="fc",
+                          assignment="push",
+                          speed_profile=NodeSpeedProfile(speeds=(0.1, 1.0)),
+                          hedging=HedgingSpec(mode="duplicate",
+                                              max_backups=3, multiple=1.5,
+                                              floor_s=0.1)),
+            warm_functions=sorted({r.fn for r in reqs}))
+        cluster.run(reqs)
+        assert sum(n.scheduler.busy for n in cluster.nodes) == 0
+        assert all(len(n.in_flight) == 0 for n in cluster.nodes)
+
+    def test_duplicate_wins_are_reported_latencies(self):
+        """When the backup copy wins the race, the client saw *its*
+        response: the original request must report the winner's earlier
+        completion, so duplicate hedging shows up in the metrics."""
+        kw = dict(nodes=3, cores_per_node=4, policy="fc",
+                  assignment="push", lb="home", node_speeds=(0.2, 1.0, 1.0))
+        plain = simulate_cluster(_burst(nodes=3, seed=8, intensity=16), **kw)
+        dup = simulate_cluster(_burst(nodes=3, seed=8, intensity=16),
+                               hedging=HedgingSpec(mode="duplicate",
+                                                   max_backups=2), **kw)
+        assert dup.steals_won > 0
+        assert (summarize(dup.requests).response_avg
+                < summarize(plain.requests).response_avg)
+
+    def test_legacy_backup_requests_equals_explicit_spec(self):
+        kw = dict(nodes=2, cores_per_node=4, policy="fc", assignment="push",
+                  lb="round_robin", node_speeds={1: 0.2})
+        legacy = simulate_cluster(_burst(seed=4), backup_requests=True,
+                                  straggler_factor=3.0, **kw)
+        spec = simulate_cluster(_burst(seed=4),
+                                hedging=HedgingSpec(multiple=3.0), **kw)
+        assert legacy.backups_issued == spec.backups_issued
+        assert legacy.steals_won == spec.steals_won
+        assert _metrics(legacy) == _metrics(spec)
+
+    def test_pull_model_hedging_is_noop(self):
+        """Late binding leaves nothing queued on a node to steal: the watch
+        machinery runs but never fires a backup (structural robustness)."""
+        res = simulate_cluster(_burst(seed=5), nodes=2, cores_per_node=4,
+                               policy="fc", assignment="pull",
+                               node_speeds=(0.2, 1.0),
+                               hedging=HedgingSpec(multiple=2.0))
+        assert res.backups_issued == 0 and res.steals_won == 0
+
+    def test_hedged_runs_are_deterministic(self):
+        kw = dict(nodes=2, cores_per_node=4, policy="sept",
+                  assignment="push", lb="home",
+                  degrade=((0, 2.0, 300.0, 6.0),),
+                  hedging=HedgingSpec(multiple=3.0))
+        a = simulate_cluster(_burst(seed=6), **kw)
+        b = simulate_cluster(_burst(seed=6), **kw)
+        assert a.backups_issued == b.backups_issued
+        assert _metrics(a) == _metrics(b)
+
+
+# ---------------------------------------------------------------------------
+# RuntimeEstimator cold-start / degradation edges (satellite)
+# ---------------------------------------------------------------------------
+class TestEstimatorEdges:
+    def test_zero_completions_estimate_is_default(self):
+        est = RuntimeEstimator()
+        assert est.estimate("unseen-fn") == 0.0
+        assert est.sample_count("unseen-fn") == 0
+        est.observe_arrival("unseen-fn", 1.0)       # arrivals don't estimate
+        assert est.estimate("unseen-fn") == 0.0
+
+    def test_floor_dominates_cold_controller(self):
+        """The cluster controller's estimator starts empty (unlike the
+        warm-seeded node estimators), so early hedging deadlines are pure
+        floor multiples."""
+        reqs = _burst(seed=0)
+        cluster = Cluster(
+            ClusterConfig(nodes=2, cores_per_node=4, policy="fc",
+                          hedging=HedgingSpec(multiple=3.0, floor_s=0.5)),
+            warm_functions=sorted({r.fn for r in reqs}))
+        # node estimators are seeded by warm-up, the controller is not
+        assert cluster.nodes[0].scheduler.estimator.sample_count(
+            reqs[0].fn) > 0
+        assert cluster._estimator.sample_count(reqs[0].fn) == 0
+        h = cluster.hedging
+        assert h.deadline(0.0, cluster._estimator.estimate(reqs[0].fn)) \
+            == 3.0 * 0.5
+
+    def test_window_truncates_degraded_history(self):
+        est = RuntimeEstimator(window=3)
+        for v in (8.0, 8.0, 8.0, 1.0, 1.0, 1.0):
+            est.observe_completion("f", v)
+        assert est.estimate("f") == 1.0             # slow samples aged out
+
+
+# ---------------------------------------------------------------------------
+# capability matrix + eligibility
+# ---------------------------------------------------------------------------
+class TestCapabilityMatrix:
+    def test_reference_supports_everything(self):
+        ref = get_backend("reference")
+        assert ref.supports(mode="ours", policy="fc", warm=True, nodes=4,
+                            assignment="push", hedging=True, hetero=True)
+
+    def test_vectorized_rejects_stragglers(self):
+        vec = get_backend("vectorized")
+        assert vec.supports(mode="ours", policy="fc", warm=True)
+        assert not vec.supports(mode="ours", policy="fc", warm=True,
+                                hedging=True)
+        assert not vec.supports(mode="ours", policy="fc", warm=True,
+                                hetero=True)
+
+    @needs_jax
+    def test_scan_straggler_rows(self):
+        scan = get_backend("scan")
+        ok = dict(mode="ours", policy="fc", warm=True, nodes=4,
+                  assignment="push")
+        assert scan.supports(**ok, hedging=True, hetero=True)
+        # straggler scenarios need static capacity
+        assert not scan.supports(**ok, hedging=True, autoscale=True)
+        assert not scan.supports(**ok, hetero=True, failures=True)
+        # stealing needs a peer under push
+        assert not scan.supports(mode="ours", policy="fc", warm=True,
+                                 nodes=1, assignment="push", hedging=True)
+        # pull hedging (a structural no-op) is fine at any node count
+        assert scan.supports(mode="ours", policy="fc", warm=True, nodes=1,
+                             assignment="pull", hedging=True)
+
+    def test_eligibility_gates(self):
+        reqs = _burst()
+        prof = NodeSpeedProfile(speeds=(0.5, 1.0))
+        assert cluster_scan_eligible(reqs, 2, 4, "fc", assignment="push",
+                                     profile=prof,
+                                     hedging=HedgingSpec())
+        # duplicate-mode racing stays reference-only
+        assert not cluster_scan_eligible(
+            reqs, 2, 4, "fc", assignment="push",
+            hedging=HedgingSpec(mode="duplicate"))
+        # speeds beyond the fleet are a misconfiguration
+        assert not cluster_scan_eligible(
+            reqs, 1, 4, "fc", profile=NodeSpeedProfile(speeds=(1.0, 0.5)))
+        # straggler + dynamics combinations fall back to the reference
+        dyn = ClusterDynamics(autoscale=True)
+        assert not cluster_scan_eligible(reqs, 2, 4, "fc", dynamics=dyn,
+                                         profile=prof)
+
+
+# ---------------------------------------------------------------------------
+# scan-kernel parity: the ISSUE acceptance stress grid
+# ---------------------------------------------------------------------------
+def _assert_parity(kw, seed=0, nodes=2, cores=4, intensity=12):
+    ref = simulate_cluster(_burst(nodes, cores, intensity, seed),
+                           nodes=nodes, cores_per_node=cores,
+                           backend="reference", **kw)
+    scan = simulate_cluster(_burst(nodes, cores, intensity, seed),
+                            nodes=nodes, cores_per_node=cores,
+                            backend="scan", **kw)
+    mr, ms = _metrics(ref), _metrics(scan)
+    for k in ("R_avg", "R_p95", "max_c"):
+        assert abs(mr[k] - ms[k]) <= CLUSTER_XCHECK_RTOL * max(abs(mr[k]),
+                                                               1e-9), (
+            f"{k}: scan {ms[k]} vs reference {mr[k]} under {kw}")
+    assert mr["n"] == ms["n"]
+    # the acceptance bar: count metrics bit-identical
+    assert scan.backups_issued == ref.backups_issued, kw
+    assert scan.steals_won == ref.steals_won, kw
+    assert scan.failures == ref.failures, kw
+    return ref, scan
+
+
+@needs_jax
+class TestScanStragglerParity:
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_hedged_degraded_push_all_policies(self, policy):
+        ref, scan = _assert_parity(dict(
+            policy=policy, assignment="push",
+            degrade=((0, 2.0, 300.0, 6.0),),
+            hedging=HedgingSpec(multiple=3.0)))
+        assert scan.backups_issued > 0      # the scenario actually hedges
+
+    @pytest.mark.parametrize("assignment", ("pull", "push"))
+    def test_static_speeds(self, assignment):
+        _assert_parity(dict(policy="fc", assignment=assignment,
+                            node_speeds=(1.0, 0.25)))
+
+    def test_episode_windows_pull(self):
+        _assert_parity(dict(policy="sept", assignment="pull",
+                            degrade=((0, 5.0, 40.0, 4.0),
+                                     (1, 20.0, 60.0, 2.0))))
+
+    def test_home_lb_hedged(self):
+        ref, scan = _assert_parity(dict(
+            policy="fc", assignment="push", lb="home",
+            node_speeds=(0.2, 1.0), hedging=HedgingSpec(multiple=2.0,
+                                                        max_backups=2)))
+        assert scan.backups_issued > 0
+
+    def test_pull_hedging_noop_parity(self):
+        ref, scan = _assert_parity(dict(
+            policy="fc", assignment="pull", node_speeds=(0.2, 1.0),
+            hedging=HedgingSpec(multiple=2.0)))
+        assert scan.backups_issued == 0
+
+    def test_scan_writes_back_attempts(self):
+        reqs = _burst(seed=1)
+        res = simulate_cluster(reqs, nodes=2, cores_per_node=4, policy="fc",
+                               assignment="push", backend="scan",
+                               degrade=((0, 2.0, 300.0, 8.0),),
+                               hedging=HedgingSpec(multiple=2.0))
+        assert res.backups_issued > 0
+        assert sum(r.attempts for r in reqs) == res.backups_issued
+
+
+@needs_jax
+class TestScanMultiFailure:
+    def test_fail_spec_parity_exact_losses(self):
+        _assert_parity(dict(policy="fc", assignment="pull",
+                            fail_spec=((0, 8.0), (1, 16.0))),
+                       nodes=4, intensity=15)
+
+    def test_rolling_restart_parity(self):
+        ref, scan = _assert_parity(dict(policy="fc", assignment="pull",
+                                        fail_spec=rolling_restart(2, 8.0,
+                                                                  10.0)),
+                                   nodes=4, intensity=15)
+        assert scan.failures > 0
+
+    def test_fail_spec_out_of_fleet_raises_upfront(self):
+        reqs = _burst()
+        for be in ("reference", "auto"):
+            with pytest.raises(ValueError, match="outside the 2-node"):
+                simulate_cluster(reqs, nodes=2, cores_per_node=4,
+                                 policy="fifo", backend=be,
+                                 fail_spec=rolling_restart(3, 5.0, 5.0))
+
+    def test_fail_spec_overrides_fail_at(self):
+        reqs = _burst(nodes=4, intensity=15)
+        res = simulate_cluster(reqs, nodes=4, cores_per_node=4, policy="fc",
+                               fail_at=5.0, fail_spec=((2, 9.0),))
+        # only node 2 dies (fail_spec wins); node0 keeps serving
+        assert res.timeline.deactivate[0] == float("inf")
+        assert res.timeline.deactivate[2] == 9.0
+
+
+# ---------------------------------------------------------------------------
+# sweep integration
+# ---------------------------------------------------------------------------
+class TestSweepAxes:
+    def test_axes_expand_and_label(self):
+        spec = SweepSpec(policies=("fc",), nodes=(2,), cores=(4,),
+                         intensities=(12,), assignments=("push",),
+                         lbs=("home",),
+                         degrades=(None, ((0, 1.0, 50.0, 4.0),)),
+                         hedge_multiples=(None, 3.0), seeds=1)
+        cells = spec.cells()
+        assert len(cells) == 4
+        labels = {c.label() for c in cells}
+        assert any("deg4" in lab and "hedge3" in lab for lab in labels)
+        assert any("home" in lab for lab in labels)
+
+    def test_pull_cells_collapse_lb(self):
+        spec = SweepSpec(policies=("fc",), assignments=("pull", "push"),
+                         lbs=("least_loaded", "home"), nodes=(2,),
+                         cores=(4,), intensities=(12,), seeds=1)
+        cells = spec.cells()
+        pull = [c for c in cells if c.assignment == "pull"]
+        assert len(pull) == 1 and pull[0].lb == "least_loaded"
+        assert len([c for c in cells if c.assignment == "push"]) == 2
+
+    def test_baseline_rejects_straggler_axes(self):
+        """Silently dropping a declared outage/slow-node axis would mislabel
+        healthy baseline runs as degraded scenarios."""
+        for kw in (dict(fail_spec=((0, 10.0),)),
+                   dict(node_speeds=(0.5, 1.0)),
+                   dict(degrade=((0, 1.0, 50.0, 4.0),)),
+                   dict(hedge_multiple=3.0)):
+            with pytest.raises(ValueError):
+                run_cell(SweepCell(policy="baseline", mode="baseline",
+                                   nodes=2, cores=4, intensity=12, **kw))
+
+    def test_failure_reroute_voids_steal_credit(self):
+        """A call stolen to a node that later dies completes via the
+        failure retry, not the hedge: steals_won must not count it."""
+        res = simulate_cluster(
+            _burst(seed=9, intensity=20), nodes=2, cores_per_node=4,
+            policy="fc", assignment="push", lb="home",
+            node_speeds=(0.2, 1.0), fail_spec=((1, 6.0),),
+            hedging=HedgingSpec(multiple=2.0))
+        assert res.failures > 0
+        assert 0 <= res.steals_won <= res.backups_issued
+
+    def test_run_cell_reference_straggler(self):
+        m = run_cell(SweepCell(policy="fc", assignment="push", lb="home",
+                               nodes=2, cores=4, intensity=12,
+                               degrade=((0, 2.0, 300.0, 8.0),),
+                               hedge_multiple=3.0, seed=0))
+        assert m["backups"] > 0
+        assert m["steals"] <= m["backups"]
+
+    @needs_jax
+    def test_cross_check_hedged_cells_counts_exact(self):
+        """The ISSUE satellite: hedged scan cells sampled under
+        validate='cross-check' with backups mismatches as hard failures
+        (CROSS_CHECK_EXACT) -- a passing sweep proves the counts agree."""
+        assert "backups" in CROSS_CHECK_EXACT
+        spec = SweepSpec(policies=("sept",), nodes=(2,), cores=(4,),
+                         intensities=(12,), assignments=("push",),
+                         degrades=(((0, 2.0, 300.0, 6.0),),),
+                         hedge_multiples=(3.0,), seeds=2,
+                         backends=("scan",), validate="cross-check")
+        res = run_sweep(spec, workers=1)
+        rows = res.aggregate()
+        assert rows and all(r.get("xcheck_err", 0.0) <= CLUSTER_XCHECK_RTOL
+                            for r in rows)
+        assert all(r["backups"] > 0 for r in rows)
