@@ -21,7 +21,13 @@ nodes x intensity x policy x seed grid through the bucketed multi-node scan
 path (one XLA dispatch per padded bucket shape) against the reference
 event-loop Cluster, whose cost is estimated from a stratified cell sample.
 The scan wall is measured post-compile (a warm-up pass populates the bucket
-cache first); the cold wall and the bucket count are reported alongside."""
+cache first); the cold wall and the bucket count are reported alongside.
+
+``matrix_rows`` (``--rows matrix``) sweeps the closed capability-matrix
+rows -- hedging x autoscale x failure schedules, duplicate-mode racing,
+and the cold (``warm=False``) regime -- entirely on the scan backend,
+asserting zero degraded cells and exact backup/steal/failure counts
+against a stratified reference sample."""
 
 import json
 import time
@@ -33,6 +39,7 @@ from .common import emit
 from repro.core import (
     SweepCell,
     SweepSpec,
+    rolling_restart,
     run_cells_scan,
     run_sweep,
     scan_cache_stats,
@@ -403,6 +410,115 @@ def straggler_rows(quick: bool = False,
              "derived": derived}]
 
 
+def _dup_matrix_filter(cell: SweepCell) -> bool:
+    """Duplicate-mode x failure schedules x push is the matrix's one
+    documented value-dependent rejection (racing copies of a single id
+    across dying nodes); every other combination in the grid runs."""
+    return not (cell.assignment == "push" and cell.fail_spec is not None)
+
+
+def _cold_matrix_filter(cell: SweepCell) -> bool:
+    """Tiered cold grid (same shape as the straggler tiers): the push
+    model runs at the claim intensity; the pull severity curve continues
+    into sustained backlog, where the reference event loop is O(queue)
+    per pull and the scan kernel is not."""
+    return cell.assignment == "pull" or cell.intensity == 18
+
+
+def matrix_specs(quick: bool = False) -> list[tuple[str, SweepSpec]]:
+    """The newly-closed capability-matrix rows as three scan sub-grids:
+    ``steal`` (hedging x autoscale x failure schedules, including kills
+    that lose queued calls), ``dup`` (duplicate-mode racing, static and
+    under pull-side failures), and ``cold`` (the ``warm=False`` regime on
+    both assignment models, with a heavy-backlog pull tier)."""
+    steal = SweepSpec(
+        policies=("fc",) if quick else ("fc", "sept"),
+        nodes=(3,), cores=(6,),
+        intensities=(16,) if quick else (16, 25),
+        assignments=("push",),
+        degrades=(((0, 1.0, 300.0, 5.0),),),
+        hedge_multiples=(2.0,),
+        fail_specs=(None, rolling_restart(1, start=8.0)),
+        autoscale=(False, True),
+        scale_ups=(1.0,), provision_delays=(2.0,), max_nodes=5,
+        seeds=1 if quick else 2, backends=("scan",),
+    )
+    dup = SweepSpec(
+        policies=("fc",),
+        nodes=(3,), cores=(6,),
+        intensities=(16,) if quick else (16, 45),
+        assignments=("pull", "push"),
+        degrades=(((0, 1.0, 300.0, 5.0),),),
+        hedge_multiples=(2.0,), hedge_mode="duplicate",
+        fail_specs=(None, rolling_restart(1, start=8.0)),
+        seeds=1 if quick else 4, backends=("scan",),
+        cell_filter=_dup_matrix_filter,
+    )
+    cold = SweepSpec(
+        policies=("fc",) if quick else ("fc", "sept"),
+        nodes=(4,), cores=(8,), workload_cores=32,
+        intensities=(18,) if quick else (18, 96, 140),
+        assignments=("pull", "push"), warm=False,
+        seeds=1 if quick else 5, backends=("scan",),
+        cell_filter=None if quick else _cold_matrix_filter,
+    )
+    return [("steal", steal), ("dup", dup), ("cold", cold)]
+
+
+def matrix_rows(quick: bool = False,
+                artifacts: str | None = None) -> list[dict]:
+    """Run the closed capability rows end-to-end on the scan backend:
+    every cell must stay on the scan path (zero degraded), the stratified
+    reference cross-check must hold with ``backups``/``steals``/
+    ``failures`` bit-identical, and the summary row reports the combined
+    scan-vs-reference speedup."""
+    try:
+        import jax  # noqa: F401
+    except ImportError:
+        return [{"name": "engine/matrix", "us_per_call": 0.0,
+                 "derived": "skipped=no-jax"}]
+    rows: list[dict] = []
+    tot_scan = tot_ref = 0.0
+    tot_cells = 0
+    for name, mspec in matrix_specs(quick):
+        result, cells, t = _timed_scan_sweep(
+            mspec, sample_div=4 if quick else 8, exact=True,
+            name=f"matrix/{name}")
+        degraded = sum(1 for cr in result.results
+                       if cr.metrics.get("degraded"))
+        if degraded:
+            raise AssertionError(
+                f"matrix/{name}: {degraded} degraded cell(s) -- a "
+                "supports()=True row fell off the scan path")
+        tot_scan += t["scan_s"]
+        tot_ref += t["ref_est_s"]
+        tot_cells += len(cells)
+        if artifacts:
+            import os
+            os.makedirs(artifacts, exist_ok=True)
+            result.to_csv(f"{artifacts}/matrix_{name}.csv")
+        rows.append({
+            "name": f"engine/matrix_{name}",
+            "us_per_call": t["scan_s"] / len(cells) * 1e6,
+            "derived": (
+                f"cells={len(cells)};degraded=0;"
+                f"scan_s={t['scan_s']:.2f};"
+                f"scan_cold_s={t['scan_cold_s']:.2f};"
+                f"ref_est_s={t['ref_est_s']:.1f};"
+                f"speedup={t['ref_est_s'] / max(t['scan_s'], 1e-9):.1f}x;"
+                f"xcheck_n={t['n_sample']};"
+                f"xcheck_worst={t['worst_err']:.2e}"),
+        })
+    rows.append({
+        "name": "engine/matrix",
+        "us_per_call": tot_scan / max(tot_cells, 1) * 1e6,
+        "derived": (f"cells={tot_cells};degraded=0;"
+                    f"scan_s={tot_scan:.2f};ref_est_s={tot_ref:.1f};"
+                    f"speedup={tot_ref / max(tot_scan, 1e-9):.1f}x"),
+    })
+    return rows
+
+
 def _engine_cell(cell: SweepCell, quick: bool = False) -> dict:
     """One policy on the live engine; returns sweep-shaped metrics."""
     from repro.configs import get_config
@@ -433,7 +549,7 @@ def _engine_cell(cell: SweepCell, quick: bool = False) -> dict:
 
 
 ROW_GROUPS = ("all", "engine", "backend", "cluster", "frontier",
-              "straggler")
+              "straggler", "matrix")
 
 
 def run(quick: bool = False, backend: str = "vectorized",
@@ -463,6 +579,8 @@ def run(quick: bool = False, backend: str = "vectorized",
         rows.extend(frontier_rows(quick, artifacts=artifacts))
     if rows_group in ("all", "straggler"):
         rows.extend(straggler_rows(quick, artifacts=artifacts))
+    if rows_group in ("all", "matrix"):
+        rows.extend(matrix_rows(quick, artifacts=artifacts))
     return rows
 
 

@@ -17,15 +17,16 @@ Simulation backends (``simulate_single_node(..., backend=...)`` and the
     (``core/fastpath.py``); ~10x faster and **exact** (bit-identical
     metrics), including cold starts and tight-memory eviction.
   - ``"scan"`` -- batched ``jax.lax.scan`` variant; a whole grid runs as one
-    scan over a padded request tensor (``run_cells_scan``).  Requires the
-    always-warm regime (``scan_eligible``); static-capacity cells are
-    float32 (~1e-6 agreement), clusters with **time-varying capacity**
-    (autoscaling via ``ClusterDynamics``, failure injection) run inside the
-    same kernel under float64 with bit-identical lost-request counts and
-    realized ``CapacityTimeline``\\s.
+    scan over a padded request tensor (``run_cells_scan``).  Covers every
+    ours-mode regime: always-warm cells (``scan_eligible``) in float32
+    (~1e-6 agreement), ``warm=False`` cells with per-(node, fn) container
+    tensors, and clusters with **time-varying capacity** (autoscaling via
+    ``ClusterDynamics``, failure injection) plus straggler hedging inside
+    the same kernel under float64 with bit-identical lost/backup/steal
+    counts and realized ``CapacityTimeline``\\s.
   - ``"auto"`` -- the best supported engine per ``supports()`` capability
-    matrix, reference elsewhere (baseline mode, cold pools and stragglers
-    always run on the reference event loop).
+    matrix, reference elsewhere (the stock baseline and the documented
+    duplicate-hedging x failures x push rejection).
   - ``SweepSpec(validate="cross-check")`` runs sampled eligible cells on
     both backends and raises :class:`~repro.core.sweep.BackendMismatchError`
     if any reported metric drifts beyond 1%.

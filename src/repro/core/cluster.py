@@ -526,20 +526,21 @@ def simulate_cluster(
 
     ``backend`` selects the engine: ``"reference"`` (the event-loop
     :class:`Cluster` above), ``"scan"`` (the batched multi-node
-    ``jax.lax.scan`` kernel -- always-warm regime only, raises ``ValueError``
-    when the scenario is outside it) or ``"auto"`` (scan where eligible,
-    reference elsewhere).  ``fail_at`` injects a node-0 crash at that time;
-    ``fail_spec`` a whole ``((node, time), ...)`` kill schedule (see
-    :func:`~repro.core.stragglers.rolling_restart`) -- both run natively on
-    either engine.  ``node_speeds`` (dict or per-node sequence of speed
-    multipliers) and ``degrade`` (``(node, t0, t1, slowdown)`` episodes)
-    declare a heterogeneous fleet; ``hedging`` (a
+    ``jax.lax.scan`` kernel -- raises ``ValueError`` when the scenario is
+    outside its envelope, see
+    :func:`~repro.core.fastpath.cluster_scan_eligible`) or ``"auto"`` (scan
+    where eligible, reference elsewhere).  ``fail_at`` injects a node-0
+    crash at that time; ``fail_spec`` a whole ``((node, time), ...)`` kill
+    schedule (see :func:`~repro.core.stragglers.rolling_restart`) -- both
+    run natively on either engine.  ``node_speeds`` (dict or per-node
+    sequence of speed multipliers) and ``degrade`` (``(node, t0, t1,
+    slowdown)`` episodes) declare a heterogeneous fleet; ``hedging`` (a
     :class:`~repro.core.stragglers.HedgingSpec`) arms estimate-multiple
-    straggler deadlines.  The scan path models capacity dynamics,
-    heterogeneous static-capacity fleets and steal-mode hedging natively;
-    kwargs outside that set (duplicate-mode hedging, legacy
-    ``backup_requests`` sugar, retry tuning) force the reference event
-    loop."""
+    straggler deadlines in steal or duplicate mode.  The scan path models
+    capacity dynamics, heterogeneous fleets, both hedging modes and the
+    cold-start regime (``warm=False``) natively, in any eligible
+    combination; kwargs outside that set (legacy ``backup_requests`` sugar,
+    retry tuning) force the reference event loop."""
     if backend not in ("reference", "scan", "auto"):
         raise ValueError(f"unknown cluster backend {backend!r}; "
                          "available: ('reference', 'scan', 'auto')")
@@ -577,16 +578,18 @@ def simulate_cluster(
         if eligible:
             return simulate_cluster_scan(
                 requests, nodes, cores_per_node, policy,
-                assignment=assignment, lb=lb, memory_mb=memory_mb,
-                container_mb=container_mb, dynamics=dynamics,
-                profile=profile, hedging=hedging)
+                assignment=assignment, lb=lb, warm=warm,
+                memory_mb=memory_mb, container_mb=container_mb,
+                dynamics=dynamics, profile=profile, hedging=hedging)
         if backend == "scan":
             raise ValueError(
-                "scan cluster backend requires jax and the always-warm ours "
-                f"regime with supported dynamics/heterogeneity "
+                "scan cluster backend requires jax and the ours regime with "
+                "supported dynamics/heterogeneity/hedging (and, for cold "
+                "cells, ample container memory) "
                 f"(policy={policy!r}, nodes={nodes}, cores={cores_per_node}, "
-                f"assignment={assignment!r}, hedging={hedging!r}); use "
-                "backend='auto' to fall back to the reference event loop")
+                f"assignment={assignment!r}, warm={warm}, "
+                f"hedging={hedging!r}); use backend='auto' to fall back to "
+                "the reference event loop")
     cfg = ClusterConfig(
         nodes=nodes, cores_per_node=cores_per_node, policy=policy,
         assignment=assignment, speed_profile=profile, hedging=hedging,

@@ -31,11 +31,14 @@ policies) in array form:
   nodes after the configured delay, scheduled kills wipe a node and re-queue
   its lost calls after the detection delay (counted exactly like the
   reference), and push-model FC runs off bounded per-(node, fn) arrival
-  count rings.  It assumes the *always-warm* regime -- every function has
-  ``cores`` warm containers after warm-up, so the pool never cold-starts or
-  evicts -- which holds for the default 32 GB node up to 10 cores (see
+  count rings.  Warm cells run the *always-warm* regime -- every function
+  has ``cores`` warm containers after warm-up, so the pool never cold-starts
+  or evicts -- which holds for the default 32 GB node up to 10 cores (see
   :func:`scan_eligible`) and the cluster's 40 GB nodes up to ~13 (see
-  :func:`cluster_scan_eligible`).  Static-capacity arithmetic is float32, so
+  :func:`cluster_scan_eligible`); ``warm=False`` cells instead carry
+  per-(node, fn) container tensors (MRU reuse, LRU eviction,
+  prewarm/create/evict costs) matching the reference pool
+  decision-for-decision.  Static-capacity arithmetic is float32, so
   agreement with the reference is within rounding for single nodes (~1e-6)
   and within the documented cluster tolerance for clusters (near-tie
   orderings can flip; see ``repro.core.sweep.CLUSTER_XCHECK_RTOL``);
@@ -452,6 +455,11 @@ class VectorizedBackend:
             raise ValueError(
                 "the vectorized backend models the ours-mode node only; "
                 "baseline (processor sharing) runs on backend='reference'")
+        if kappa != PS_KAPPA:
+            raise ValueError(
+                "kappa parameterizes the baseline processor-sharing node, "
+                "which the vectorized backend does not model; use "
+                "backend='reference' for non-default kappa")
         return simulate_ours_vectorized(
             requests, cores, policy=policy, memory_mb=memory_mb,
             container_mb=container_mb, warm=warm)
@@ -511,6 +519,35 @@ CLUSTER_MEMORY_MB = 40 * 1024
 CLUSTER_CONTAINER_MB = 128
 
 
+def _cold_regime_ok(
+    requests: list[Request],
+    cores: int,
+    memory_mb: int,
+    container_mb: int,
+    prewarm_count: int = 2,
+) -> bool:
+    """True when a ``warm=False`` run is inside the *ample-memory prewarm*
+    regime the scan kernel models exactly.
+
+    With no warm-up, every container is born from the prewarm pool
+    (``PREWARM_INIT_S`` <= 1s, so every cold start pays exactly
+    ``OURS_PREWARM_EXTRA``) and keeps the generic ``container_mb``
+    reservation -- function-sized containers only ever appear via warm-up or
+    the create path.  If the prewarm pool can always replenish, the create /
+    evict-for-memory / head-of-line-block paths of ``ContainerPool.acquire``
+    are provably unreachable, which is what lets the kernel track the pool
+    as per-(node, fn) free *counts*: the MRU-vs-LRU container choice has no
+    timing or accounting effect when all containers are interchangeable.
+
+    Worst-case resident containers per node: ``prewarm_count`` prewarms +
+    ``cores`` busy + ``cores`` free per function (the release trim bound),
+    plus one transient during the release-then-trim and replenish windows
+    each.  Ample memory means that bound times ``container_mb`` fits."""
+    n_fns = len({r.fn for r in requests})
+    bound = container_mb * (prewarm_count + cores * (1 + n_fns) + 2)
+    return bound <= memory_mb
+
+
 def scan_eligible(
     requests: list[Request],
     cores: int,
@@ -521,11 +558,17 @@ def scan_eligible(
     warm: bool = True,
 ) -> bool:
     """True when the scan backend reproduces the reference exactly (modulo
-    float32): ours mode, known policy, and the always-warm regime where the
-    §V-A warm-up provisions ``cores`` containers for *every* function, so the
-    container pool never cold-starts, evicts or blocks."""
-    if mode != "ours" or policy not in POLICY_NAMES or not warm:
+    float32): ours mode, known policy, and a container regime the kernel
+    models -- either the always-warm regime where the §V-A warm-up provisions
+    ``cores`` containers for *every* function (the pool never cold-starts,
+    evicts or blocks), or the ``warm=False`` ample-memory prewarm regime
+    (every cold start is a prewarm hit; see :func:`_cold_regime_ok`), where
+    the kernel carries per-(node, fn) container counts and charges the
+    prewarm management extra on cold dispatches."""
+    if mode != "ours" or policy not in POLICY_NAMES:
         return False
+    if not warm:
+        return _cold_regime_ok(requests, cores, memory_mb, container_mb)
     fns = sorted({r.fn for r in requests})
     pool = _FastPool(memory_mb=memory_mb, container_mb=container_mb,
                      cores=cores, fn_memory=SEBS_MEMORY_MB)
@@ -533,13 +576,29 @@ def scan_eligible(
     return all(len(pool.free.get(fn, ())) >= cores for fn in fns)
 
 
+# re-route rank sentinel: ex-queued kill losses order after every
+# ex-running one (launch-sequence stamps stay far below this)
+_RORD_Q = 2 ** 30
+
+
 def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
-                      fc_push, dyn, het, hedge, n_ep, fc_ring, horizon,
-                      n_steps):
+                      fc_push, dyn, het, hedge, cold, dup, n_copies, n_ep,
+                      fc_ring, horizon, n_steps):
     """One cell's event scan over a whole **cluster**: slot-occupancy and
     channel clocks carry a node axis, and the per-event dispatch includes the
     routing decision.  vmapped over the batch by the caller; ``inp`` is a
     dict of per-cell arrays (see ``_run_scan_bucket``).
+
+    The carry is assembled as an **ordered pipeline of feature-flagged
+    segments** (see ``_CARRY_SEGMENTS``): base slots/queue/channel state,
+    frozen-priority queue entries (``freeze``), per-(node, fn) push-FC
+    arrival rings (``fc_push``), container free-counts (``cold``), hedge
+    watches + controller ring (``hedge``), racing-copy winner state
+    (``dup``), per-slot effective speeds (``het``) and capacity-dynamics
+    masks (``dyn``).  Each enabled segment contributes its slice of the
+    carry dict and its update inside the step below (the banner comments
+    mark the segment boundaries); the compile-cache key carries the enabled
+    set as a feature bitmask (:func:`_feature_mask`).
 
     Two static regimes share the body:
 
@@ -588,12 +647,37 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
     (``now + multiple x max(E[p], floor)``), which -- when the call is still
     queued and under its backup budget -- cancel it on its node and re-route
     it to the least-loaded peer with a freshly computed priority, exactly
-    the reference ``Cluster._maybe_backup`` steal.  ``backups_issued`` /
-    ``steals_won`` counts replicate the reference bit-exactly; a dispatched
-    call's watch is cleared so no-op fires do not consume scan steps.
-    Both flags force the bucket into float64 (like ``dyn``): deadline-vs-
-    start and episode-boundary orderings decide integer counts that must
-    not flip under float32 clock drift.
+    the reference ``Cluster._maybe_backup`` steal.  When no live peer
+    exists the steal re-submits to the call's own node (the reference's
+    ``min(others) if others else node`` self-steal), so single-node push
+    hedging is modelled too.  ``backups_issued`` / ``steals_won`` counts
+    replicate the reference bit-exactly; a dispatched call's watch is
+    cleared so no-op fires do not consume scan steps.  Both flags force the
+    bucket into float64 (like ``dyn``): deadline-vs-start and
+    episode-boundary orderings decide integer counts that must not flip
+    under float32 clock drift.
+
+    ``dup=True`` (requires ``hedge``) switches the hedge action to
+    **duplicate-mode racing copies**: the queue state grows a copy axis --
+    entry ``q = c*(n+1) + j`` is copy ``c`` of request ``j``, with
+    ``n_copies = 1 + max_backups`` -- and a deadline fire on a still-queued
+    original issues copy ``attempts+1`` on the least-loaded live peer
+    (no-op without re-arm when no peer exists, like the reference's ``if
+    not others: return``).  Copies race: the first completion of any copy
+    records the winner's start/finish/node (the reference ``_on_complete``
+    min-c rule with first-wins ties), pops the watch, and ``steals_won``
+    counts originals whose winner was a backup copy.  The original is never
+    cancelled -- both runs occupy slots and feed the estimators, exactly
+    like the reference.
+
+    ``cold=True`` compiles the ``warm=False`` **ample-memory prewarm
+    regime** (:func:`_cold_regime_ok`): estimator rings start empty, the
+    carry tracks per-(node, fn) free-container counts, a dispatch with no
+    free container is a prewarm cold start charging ``OURS_PREWARM_EXTRA``
+    on the management channel, and a release that would exceed the
+    ``cores`` per-function bound counts an eviction -- matching
+    ``ContainerPool`` exactly, where creations are provably zero and the
+    MRU/LRU container choice has no observable effect.
 
     ``dyn=True`` compiles the **time-varying capacity** machinery on top:
     per-node activation times and a dead mask (the cell's
@@ -640,7 +724,22 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
     slot_ids = jnp.arange(n_slots)
     fn_ids_ax = jnp.arange(ring0.shape[1])
     win_ids = jnp.arange(window)
-    req_ids = jnp.arange(n + 1)
+    oreq_ids = jnp.arange(n + 1)     # one entry per *original* request
+    if dup:
+        # duplicate-mode copy axis, flattened into the request axis: queue
+        # entry q = c*(n+1) + j is copy c of request j, so every frozen-
+        # queue structure below (pend/fprio/node_of/qseq, slot back-refs)
+        # works unchanged on the widened axis.  Static per-entry features
+        # are shared across a request's copies by tiling.
+        nq = n_copies * (n + 1)
+        fnid = jnp.tile(fnid, n_copies)
+        p = jnp.tile(p, n_copies)
+        cost = jnp.tile(cost, n_copies)
+        cnt = jnp.tile(cnt, n_copies)
+        home0 = jnp.tile(home0, n_copies)
+    else:
+        nq = n + 1
+    req_ids = jnp.arange(nq)
     if dyn:
         interval, thr, delay, detect, auto_f = (inp["dynp"][k]
                                                 for k in range(5))
@@ -666,9 +765,14 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
         if dyn:
             act_t, dead, killq = st["act_t"], st["dead"], st["killq"]
             act_pend, rearr = st["act_pend"], st["rearr"]
-            cand = jnp.stack([jnp.min(killq), t_a, t_c, jnp.min(rearr),
-                              jnp.min(jnp.where(act_pend, act_t, inf)),
-                              st["next_tick"]])
+            cand_l = [jnp.min(killq), t_a, t_c, jnp.min(rearr),
+                      jnp.min(jnp.where(act_pend, act_t, inf)),
+                      st["next_tick"]]
+            if hedge:
+                # hedge deadlines rank last at exact ties (measure-zero:
+                # deadlines are estimate multiples)
+                cand_l.append(jnp.min(st["hedge_t"]))
+            cand = jnp.stack(cand_l)
         elif hedge:
             # hedge deadlines rank after completions at exact ties (a
             # measure-zero case: deadlines are estimate multiples)
@@ -684,7 +788,7 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
         do_arr = (e == off) & ~none_left
         do_comp = (e == off + 1) & ~none_left
         if hedge:
-            do_hedge = (e == 2) & ~none_left
+            do_hedge = (e == (6 if dyn else 2)) & ~none_left
         if dyn:
             do_kill = (e == 0) & ~none_left
             do_re = (e == 3) & ~none_left
@@ -731,16 +835,78 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
         m_kn = (node_ids == kn) & do_comp
         busy = jnp.where(m_kn, busy - 1, busy)
         fin_s = jnp.where(m_kn[:, None] & (slot_ids == ks), inf, fin_s)
+        if cold:
+            # -- container segment, release half (ContainerPool.release +
+            # _trim_ours): the freed container re-enters its (node, fn) free
+            # pool unless the fn already holds ``cores`` free ones, in which
+            # case the LRU free container is evicted instead (which one is
+            # unobservable here: all prewarm-born containers are identical)
+            freec = st["freec"]
+            rel_cap = freec[kn, f_done] >= cores
+            m_rel = (((node_ids == kn)[:, None]
+                      & (fn_ids_ax == f_done)[None, :])
+                     & do_comp & ~rel_cap)
+            freec = jnp.where(m_rel, freec + 1, freec)
+            nevt = st["nevt"] + (do_comp & rel_cap).astype(jnp.int32)
+        if dup:
+            # -- racing-copy winner: the first completion among a request's
+            # copies is the reference's min-c winner (_on_complete keeps the
+            # strictly smaller c, so ties go to the earlier completion
+            # event); later copies still release their slot and feed the
+            # estimators but change nothing the client sees
+            orig_done = (j_done % (n + 1)).astype(jnp.int32)
+            take = do_comp & ~st["done0"][orig_done]
+            m_win = (oreq_ids == orig_done) & take
+            done0 = st["done0"] | m_win
+            win_start = jnp.where(m_win, st["start_q"][j_done],
+                                  st["win_start"])
+            win_fin = jnp.where(m_win, now, st["win_fin"])
+            win_node = jnp.where(m_win, kn.astype(jnp.int32),
+                                 st["win_node"])
         if hedge:
             # -- hedge deadline fires: eligible when the call is still
             # queued on its node and under the backup budget (mirrors
             # Cluster._maybe_backup: completed/started/attempt-capped
             # fires are no-ops and do not re-arm)
-            att, hedge_t = st["att"], st["hedge_t"]
+            att, hedge_t, stolen = st["att"], st["hedge_t"], st["stolen"]
+            if dyn and freeze:
+                # second watch slot (sorted: hedge_t <= hedge_t2): the
+                # reference never cancels scheduled watch fires, so a
+                # queued-at-kill call keeps its old deadline pending
+                # alongside the one re-armed at re-arrival
+                hedge_t2 = st["hedge_t2"]
+            if dup:
+                # any copy's completion pops the watch (_watched.pop in
+                # _on_complete): a raced request never hedges again.  In
+                # dup mode ``stolen`` records *won* races -- originals whose
+                # first completion was a backup copy (steals_won parity)
+                hedge_t = jnp.where(m_win, inf, hedge_t)
+                stolen = stolen | (m_win & (j_done >= n + 1))
             jh = jnp.argmin(hedge_t).astype(jnp.int32)
-            steal_ok = do_hedge & pend[jh] & (att[jh] < inp["hmax"])
-            hedge_t = jnp.where((req_ids == jh) & do_hedge, inf, hedge_t)
+            act_able = do_hedge & pend[jh] & (att[jh] < inp["hmax"])
+            if dyn:
+                # a call lost *mid-execution* keeps its stale req.start
+                # after the failure re-route, so every later watch fire is
+                # a reference no-op (_maybe_backup's started check) -- it
+                # never hedges again; queued-at-kill calls keep hedging
+                act_able = act_able & ~st["unhedge"][jh]
+            if dyn and freeze:
+                # a fire consumes the earliest pending deadline; any later
+                # one (a kill survivor) shifts down and stays armed
+                m_jh = (oreq_ids == jh) & do_hedge
+                hedge_t = jnp.where(m_jh, hedge_t2, hedge_t)
+                hedge_t2 = jnp.where(m_jh, inf, hedge_t2)
+            else:
+                hedge_t = jnp.where((oreq_ids == jh) & do_hedge, inf,
+                                    hedge_t)
             old_node = node_of[jh]
+            peer_ok = active & (node_ids != old_node)
+            if dup:
+                # duplicate issue additionally needs a live peer (reference:
+                # ``if not others: return`` -- a no-op *without* re-arm)
+                steal_ok = act_able & jnp.any(peer_ok)
+            else:
+                steal_ok = act_able
 
         if dyn:
             ndone = st["ndone"] + do_comp.astype(jnp.int32)
@@ -755,10 +921,47 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
                 m_lostq = pend & (node_of == kk) & do_kill
                 pend = pend & ~m_lostq
                 lost_any = m_lost | m_lostq
+                # record the _do_fail re-route rank: ex-running keep their
+                # launch sequence, ex-queued sort after them (by their
+                # enqueue-time priority, resolved at re-arrival)
+                rval = jnp.sum(jnp.where(
+                    (idx_s[kk][None, :] == req_ids[:, None])
+                    & lost_slot[None, :], st["dseq"][kk][None, :], 0),
+                    axis=1).astype(jnp.int32)
+                rord = jnp.where(m_lost, rval,
+                                 jnp.where(m_lostq, jnp.int32(_RORD_Q),
+                                           st["rord"]))
             else:
                 lost_any = m_lost
             rearr = jnp.where(lost_any, now + detect, rearr)
             nfail = st["nfail"] + jnp.sum(lost_any).astype(jnp.int32)
+            if hedge:
+                # _do_fail on a hedged cell: the failure retry bumps
+                # attempts and voids any earlier hedge credit
+                # (_stolen_ids.discard); the re-arrival below re-arms the
+                # watch through the insert path, like the reference's
+                # _route -> _arm_straggler_watch
+                att = jnp.where(lost_any, att + 1, att)
+                stolen = stolen & ~lost_any
+                if freeze:
+                    # queued-at-kill: pending watch fires survive (the
+                    # reference's loop callbacks are never cancelled).
+                    # Fires landing inside the outage window [kill,
+                    # re-arrival] are dead-node no-ops without re-arm, so
+                    # only deadlines past it are kept (re-sorted)
+                    h1k = jnp.where(hedge_t > now + detect, hedge_t, inf)
+                    h2k = jnp.where(hedge_t2 > now + detect, hedge_t2, inf)
+                    hedge_t = jnp.where(m_lostq, jnp.minimum(h1k, h2k),
+                                        hedge_t)
+                    hedge_t2 = jnp.where(m_lostq, jnp.maximum(h1k, h2k),
+                                         hedge_t2)
+                    # lost mid-execution: the stale req.start makes every
+                    # later fire a no-op -- drop both slots outright
+                    hedge_t = jnp.where(m_lost, inf, hedge_t)
+                    hedge_t2 = jnp.where(m_lost, inf, hedge_t2)
+                else:
+                    hedge_t = jnp.where(lost_any, inf, hedge_t)
+                unhedge = st["unhedge"] | m_lost
             fin_s = jnp.where((m_kk & do_kill)[:, None], inf, fin_s)
             busy = jnp.where(m_kk & do_kill, 0, busy)
             if freeze:   # pull: qn[0] is the global queue -- kills keep it
@@ -783,7 +986,26 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
                 st["next_tick"])
 
             # -- re-arrival: a lost request re-enters the system ------------
-            ir = jnp.argmin(rearr).astype(jnp.int32)
+            if freeze:
+                # same-instant re-arrivals replay the reference _do_fail
+                # order -- node.kill() returns the in-flight dict (launch
+                # order) first, then the queue popped in (priority, push
+                # seq) order, and _route callbacks run in that sequence;
+                # the order decides least-loaded targets and FC counts
+                tie = rearr <= jnp.min(rearr)
+                ib31 = jnp.int32(2 ** 31 - 1)
+                run_k = jnp.where(tie & (rord < _RORD_Q), rord, ib31)
+                ir_run = jnp.argmin(run_k).astype(jnp.int32)
+                any_run = run_k[ir_run] < ib31
+                qp = jnp.where(tie & (rord >= _RORD_Q), fprio, inf)
+                if hedge:
+                    qk = jnp.where(qp <= jnp.min(qp), st["qseq"], ib31)
+                    ir_q = jnp.argmin(qk).astype(jnp.int32)
+                else:
+                    ir_q = jnp.argmin(qp).astype(jnp.int32)
+                ir = jnp.where(any_run, ir_run, ir_q).astype(jnp.int32)
+            else:
+                ir = jnp.argmin(rearr).astype(jnp.int32)
             m_ir = (req_ids == ir) & do_re
             rearr = jnp.where(m_ir, inf, rearr)
             if not freeze:
@@ -792,14 +1014,25 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
 
         # -- arrival / re-arrival: route (freeze) / enqueue, observe --------
         i_orig = jnp.minimum(ai, n)
-        if dyn:
+        if dyn and hedge:
+            # arrivals, failure re-arrivals and hedge steals all enter the
+            # queue through the same insert path (each is an exclusive
+            # event type, so the selection chain below is unambiguous)
+            do_ins = do_arr | do_re | steal_ok
+            i_ins = jnp.where(do_arr, i_orig, jnp.where(do_re, ir, jh))
+        elif dyn:
             do_ins = do_arr | do_re
             i_ins = jnp.where(do_arr, i_orig, ir)
         elif hedge:
             # a steal re-enters the system like an arrival on the target
-            # node (reference: target.submit -> receive -> observe_arrival)
+            # node (reference: target.submit -> receive -> observe_arrival);
+            # a dup issue enqueues copy ``attempts + 1`` of request jh
             do_ins = do_arr | steal_ok
-            i_ins = jnp.where(do_arr, i_orig, jh)
+            if dup:
+                i_dup = ((att[jh] + 1) * (n + 1) + jh).astype(jnp.int32)
+                i_ins = jnp.where(do_arr, i_orig, i_dup)
+            else:
+                i_ins = jnp.where(do_arr, i_orig, jh)
         else:
             do_ins = do_arr
             i_ins = i_orig
@@ -819,11 +1052,15 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
                                    home0[i_ins])
                 k_arr = jnp.where(route == 1, k_home, k_ll)
             if hedge:
-                # steal target: least-loaded peer, the slow node excluded
-                # (reference: min(others, key=load), first on ties)
-                load_x = jnp.where(active & (node_ids != old_node),
-                                   busy + qn, jnp.int32(2 ** 30))
-                k_arr = jnp.where(steal_ok, jnp.argmin(load_x), k_arr)
+                # steal/copy target: least-loaded *live* peer, the slow node
+                # excluded (reference: min(others, key=load), first on
+                # ties); with no live peer a steal re-submits to the call's
+                # own node (the reference's ``if others else node``) -- dup
+                # never reaches the fallback, its steal_ok requires a peer
+                load_x = jnp.where(peer_ok, busy + qn, jnp.int32(2 ** 30))
+                k_tgt = jnp.where(jnp.any(peer_ok), jnp.argmin(load_x),
+                                  old_node)
+                k_arr = jnp.where(steal_ok, k_tgt, k_arr)
             k_arr = k_arr.astype(jnp.int32)
         else:
             k_arr = jnp.int32(0)
@@ -839,8 +1076,10 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
         prev_t = jnp.where(m_af, prev_used, prev_t)
         last_t = jnp.where(m_af, now, last_t)
         narr = jnp.where(m_af, narr + 1, narr)
-        if hedge:
-            # the stolen call leaves its old node's queue (scheduler.cancel)
+        if hedge and not dup:
+            # the stolen call leaves its old node's queue (scheduler.cancel);
+            # duplicate mode races a fresh copy instead -- the original
+            # stays queued on its own node
             qn = jnp.where((node_ids == old_node) & steal_ok, qn - 1, qn)
         qn = jnp.where((node_ids == k_arr) & do_ins, qn + 1, qn)
         ai = ai + do_arr.astype(jnp.int32)
@@ -872,17 +1111,37 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
                                                       node_of[i_ins]))
             if hedge:
                 # (re-)arm the watch from the controller estimate -- both
-                # fresh arrivals and just-stolen calls keep being watched
+                # fresh arrivals and just-stolen/raced calls keep being
+                # watched (the watch always tracks the *original* request)
                 est_h = jnp.where(crlen[f_i] > 0,
                                   crsum[f_i] / jnp.maximum(crlen[f_i], 1),
                                   0.0)
                 arm = now + inp["hmult"] * jnp.maximum(est_h, inp["hfloor"])
-                hedge_t = jnp.where((req_ids == i_ins) & do_ins, arm,
-                                    hedge_t)
-                att = jnp.where((req_ids == jh) & steal_ok, att + 1, att)
+                w_ins = (i_ins % (n + 1)).astype(jnp.int32)
+                m_w = (oreq_ids == w_ins) & do_ins
+                if dyn:
+                    # merge the new deadline into the sorted slot pair: a
+                    # failure re-arrival may find the pre-kill deadline
+                    # still pending (see the kill handler above), and both
+                    # keep firing in the reference
+                    lo1 = jnp.minimum(hedge_t, hedge_t2)
+                    hi1 = jnp.maximum(hedge_t, hedge_t2)
+                    hedge_t = jnp.where(m_w, jnp.minimum(lo1, arm), hedge_t)
+                    hedge_t2 = jnp.where(
+                        m_w, jnp.minimum(hi1, jnp.maximum(lo1, arm)),
+                        hedge_t2)
+                else:
+                    hedge_t = jnp.where(m_w, arm, hedge_t)
+                att = jnp.where((oreq_ids == jh) & steal_ok, att + 1, att)
                 nbk = st["nbk"] + steal_ok.astype(jnp.int32)
-                stolen = st["stolen"] | ((req_ids == jh) & steal_ok)
-                ndone = st["ndone"] + do_comp.astype(jnp.int32)
+                if dup:
+                    # dup ``stolen`` (won races) is set at completion above;
+                    # ndone counts first completions only -- once every
+                    # request has a winner no event can change the outputs
+                    ndone = st["ndone"] + take.astype(jnp.int32)
+                else:
+                    stolen = stolen | ((oreq_ids == jh) & steal_ok)
+                    ndone = st["ndone"] + do_comp.astype(jnp.int32)
                 # queue-push sequence: a steal re-pushes the call on its
                 # target, so push order decouples from event-index order --
                 # the reference's stable queue breaks priority ties by it
@@ -967,6 +1226,25 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
             can = (do_ins | do_comp) & (busy[k_d] < cores) & has_q
         else:
             can = ~none_left & (busy[k_d] < cores) & has_q
+        if cold:
+            # container acquire at dispatch (ContainerPool.acquire): a free
+            # (node, fn) container is a warm hit; otherwise the prewarm pool
+            # serves -- the ample-memory eligibility bound guarantees the
+            # pool never creates from scratch, so every miss charges exactly
+            # OURS_PREWARM_EXTRA on the management channel
+            f_j = fnid[j]
+            warm_hit = freec[k_d, f_j] > 0
+            cost_j = cost[j] + jnp.where(warm_hit, 0.0, OURS_PREWARM_EXTRA)
+            m_acq = (((node_ids == k_d)[:, None]
+                      & (fn_ids_ax == f_j)[None, :]) & can & warm_hit)
+            freec = jnp.where(m_acq, freec - 1, freec)
+            ncold = st["ncold"] + (can & ~warm_hit).astype(jnp.int32)
+            # per-request cold flag: the *original's own* dispatch decides
+            # it (dup copies never set it; winner propagation does not copy
+            # cold_start in the reference); last-wins across re-dispatches
+            coldq = jnp.where((oreq_ids == j) & can, ~warm_hit, st["coldq"])
+        else:
+            cost_j = cost[j]
         if het:
             # effective speed of the routed node at dispatch time divides
             # the management cost and the execution (OursNodeSim._launch);
@@ -976,9 +1254,9 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
                                       & (now < inp["ept1"]),
                                       inp["epf"], 1.0))
             eff = inp["spd"][k_d] / slow
-            exec_start = jnp.maximum(now, chan[k_d]) + cost[j] / eff
+            exec_start = jnp.maximum(now, chan[k_d]) + cost_j / eff
         else:
-            exec_start = jnp.maximum(now, chan[k_d]) + cost[j]
+            exec_start = jnp.maximum(now, chan[k_d]) + cost_j
         m_kd = (node_ids == k_d)
         chan = jnp.where(m_kd & can, exec_start, chan)
         fin_j = exec_start + (p[j] / eff if het else p[j])
@@ -987,6 +1265,11 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
         m_ds = (m_kd[:, None] & (slot_ids == s)[None, :]) & can
         fin_s = jnp.where(m_ds, fin_j, fin_s)
         idx_s = jnp.where(m_ds, j, idx_s)
+        if dyn and freeze:
+            # launch-sequence stamp: orders the in-flight half of a kill's
+            # lost set (the reference in_flight dict is insertion-ordered)
+            dseq = jnp.where(m_ds, st["dcnt"], st["dseq"])
+            dcnt = st["dcnt"] + can.astype(jnp.int32)
         if het and freeze:
             sspd = jnp.where(m_ds, eff, st["sspd"])
         busy = jnp.where(m_kd & can, busy + 1, busy)
@@ -994,9 +1277,20 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
         if freeze:
             pend = pend.at[j].set(jnp.where(can, False, pend[j]))
             if hedge:
-                # a dispatched call's watch can never act again: clear it so
-                # no-op fires do not consume scan steps
-                hedge_t = jnp.where((req_ids == j) & can, inf, hedge_t)
+                # a dispatched call's watch can never act again (steal: the
+                # call left the queue; dup: a started original makes fires
+                # no-ops without re-arm): clear it so no-op fires do not
+                # consume scan steps.  Under dup the oreq mask is all-False
+                # for copy dispatches (j >= n+1), which keep the watch live.
+                hedge_t = jnp.where((oreq_ids == j) & can, inf, hedge_t)
+                if dyn:
+                    hedge_t2 = jnp.where((oreq_ids == j) & can, inf,
+                                         hedge_t2)
+            if dup:
+                # winner recording at completion needs the copy's own
+                # exec_start, so it is carried per queue entry
+                start_q = jnp.where((req_ids == j) & can, exec_start,
+                                    st["start_q"])
         else:
             if dyn:
                 from_x = can & pick_x
@@ -1025,16 +1319,27 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
             nxt.update(pend=pend, fprio=fprio, node_of=node_of)
         if fc_push:
             nxt.update(fcr=fcr, fcp=fcp)
+        if cold:
+            nxt.update(freec=freec, ncold=ncold, nevt=nevt, coldq=coldq)
         if hedge:
             nxt.update(hedge_t=hedge_t, att=att, nbk=nbk, stolen=stolen,
                        cring=cring, crsum=crsum, crlen=crlen, crpos=crpos,
                        qseq=qseq, stepc=st["stepc"] + 1, ndone=ndone)
+        if dup:
+            nxt.update(done0=done0, win_start=win_start, win_fin=win_fin,
+                       win_node=win_node, start_q=start_q)
         if het and freeze:
             nxt.update(sspd=sspd)
         if dyn:
+            if freeze:
+                nxt.update(dseq=dseq, dcnt=dcnt, rord=rord)
             nxt.update(act_t=act_t, dead=dead, killq=killq,
                        act_pend=act_pend, rearr=rearr, next_tick=next_tick,
                        prov=prov, nfail=nfail, ndone=ndone)
+            if hedge:
+                nxt.update(unhedge=unhedge)
+                if freeze:
+                    nxt.update(hedge_t2=hedge_t2)
             if not freeze:
                 nxt.update(xq=xq, rq_rt=rq_rt, enq_t=enq_t)
         return nxt, out
@@ -1056,14 +1361,23 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
     }
     if freeze:
         state0.update(
-            pend=jnp.zeros(n + 1, dtype=bool),
-            fprio=jnp.zeros(n + 1, dtype=ft),
-            node_of=jnp.zeros(n + 1, dtype=jnp.int32),
+            pend=jnp.zeros(nq, dtype=bool),
+            fprio=jnp.zeros(nq, dtype=ft),
+            node_of=jnp.zeros(nq, dtype=jnp.int32),
         )
     if fc_push:
         state0.update(
             fcr=jnp.full((n_nodes, n_fns, fc_ring), -jnp.inf, dtype=ft),
             fcp=jnp.zeros((n_nodes, n_fns), dtype=jnp.int32),
+        )
+    if cold:
+        state0.update(
+            # every pool starts empty in the warm=False regime (reference:
+            # warm_functions=None skips warm_up); ample memory keeps the
+            # prewarm pool inexhaustible, so only free-counts need carrying
+            freec=jnp.zeros((n_nodes, n_fns), dtype=jnp.int32),
+            ncold=jnp.int32(0), nevt=jnp.int32(0),
+            coldq=jnp.zeros(n + 1, dtype=bool),
         )
     if hedge:
         state0.update(
@@ -1078,9 +1392,21 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
             crsum=jnp.zeros(n_fns, dtype=ft),
             crlen=jnp.zeros(n_fns, dtype=jnp.int32),
             crpos=jnp.zeros(n_fns, dtype=jnp.int32),
-            qseq=jnp.zeros(n + 1, dtype=jnp.int32),
+            qseq=jnp.zeros(nq, dtype=jnp.int32),
             stepc=jnp.int32(0),
             ndone=jnp.int32(0),
+        )
+        if dyn:
+            state0.update(unhedge=jnp.zeros(n + 1, dtype=bool))
+            if freeze:
+                state0.update(hedge_t2=jnp.full(n + 1, jnp.inf, dtype=ft))
+    if dup:
+        state0.update(
+            done0=jnp.zeros(n + 1, dtype=bool),
+            win_start=jnp.zeros(n + 1, dtype=ft),
+            win_fin=jnp.zeros(n + 1, dtype=ft),
+            win_node=jnp.zeros(n + 1, dtype=jnp.int32),
+            start_q=jnp.zeros(nq, dtype=ft),
         )
     if het and freeze:
         state0["sspd"] = jnp.ones((n_nodes, n_slots), dtype=ft)
@@ -1094,6 +1420,12 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
             prov=nodes.astype(jnp.int32),
             nfail=jnp.int32(0), ndone=jnp.int32(0),
         )
+        if freeze:
+            state0.update(
+                dseq=jnp.zeros((n_nodes, n_slots), dtype=jnp.int32),
+                dcnt=jnp.int32(0),
+                rord=jnp.zeros(n + 1, dtype=jnp.int32),
+            )
         if not freeze:
             state0["xq"] = jnp.zeros(n + 1, dtype=bool)
             state0["rq_rt"] = jnp.zeros(n + 1, dtype=ft)
@@ -1101,16 +1433,36 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
 
     state, (j_s, es_s, fs_s, pj_s, kd_s) = jax.lax.scan(
         step, state0, None, length=n_steps)
+    aux = {}
+    if cold:
+        aux.update(ncold=state["ncold"], nevt=state["nevt"],
+                   coldq=state["coldq"])
+    if hedge:
+        # steal mode: every stolen call completes on its hedge target, so
+        # distinct-stolen == steals won; dup mode: ``stolen`` marks
+        # originals whose race was won by a backup copy (accounting parity
+        # with Cluster either way).  ndone lets the caller detect an
+        # exhausted optimistic step budget.
+        aux.update(nbk=state["nbk"],
+                   nstl=jnp.sum(state["stolen"].astype(jnp.int32)),
+                   att=state["att"], ndone=state["ndone"])
     if dyn:
         # a lost request is dispatched twice; XLA scatter order over
         # duplicate indices is undefined, so the last-wins resolution
         # happens host-side in step order (see _run_scan_bucket)
         summary = {"nfail": state["nfail"], "ndone": state["ndone"],
                    "prov": state["prov"], "act_t": state["act_t"],
-                   "dead": state["dead"]}
+                   "dead": state["dead"], **aux}
         if freeze:
             summary.update(prio=state["fprio"], node=state["node_of"])
         return (j_s, es_s, fs_s, pj_s, kd_s), summary
+    if dup:
+        # a raced request's client-visible outcome is its first-completed
+        # copy (the reference run() back-copies the winner's
+        # start/finish/node onto the original); copy-0 keeps the frozen
+        # arrival priority, which winner propagation never overwrites
+        return (state["win_start"], state["win_fin"],
+                state["fprio"][:n + 1], state["win_node"], aux)
     # one batched scatter per output; can=False steps landed on sentinel n
     start = jnp.zeros(n + 1).at[j_s].set(es_s)
     finish = jnp.zeros(n + 1).at[j_s].set(fs_s)
@@ -1120,14 +1472,7 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
     else:
         prio = jnp.zeros(n + 1).at[j_s].set(pj_s)
         node = jnp.zeros(n + 1, dtype=jnp.int32).at[j_s].set(kd_s)
-    if hedge:
-        # steal mode: every stolen call completes on its hedge target, so
-        # distinct-stolen == steals won (accounting parity with Cluster).
-        # ndone lets the caller detect an exhausted optimistic step budget.
-        return (start, finish, prio, node, state["nbk"],
-                jnp.sum(state["stolen"].astype(jnp.int32)), state["att"],
-                state["ndone"])
-    return start, finish, prio, node
+    return start, finish, prio, node, aux
 
 
 # ---------------------------------------------------------------------------
@@ -1164,10 +1509,52 @@ def scan_cache_clear() -> None:
     _SCAN_CACHE_STATS["misses"] = 0
 
 
+# The carry of ``_scan_cell_kernel`` is an ordered pipeline of feature-flagged
+# segments: each entry names a compile flag and the carry keys the segment
+# contributes when enabled (always-on base state -- slots, queues, channel
+# clocks, estimator rings -- is not listed).  Bit i of a bucket key's leading
+# feature mask enables segment i, so the compile cache distinguishes exactly
+# the distinct enabled-segment sets and nothing else.
+_CARRY_SEGMENTS: tuple[tuple[str, tuple[str, ...]], ...] = (
+    ("freeze", ("pend", "fprio", "node_of")),
+    ("use_fc", ()),                       # static-stream lookup, carry-free
+    ("fc_push", ("fcr", "fcp")),
+    ("cold", ("freec", "ncold", "nevt", "coldq")),
+    ("hedge", ("hedge_t", "att", "nbk", "stolen", "cring", "crsum", "crlen",
+               "crpos", "qseq", "stepc", "ndone", "unhedge", "hedge_t2")),
+    ("dup", ("done0", "win_start", "win_fin", "win_node", "start_q")),
+    ("het", ("sspd",)),
+    ("dyn", ("act_t", "dead", "killq", "act_pend", "rearr", "next_tick",
+             "prov", "nfail", "ndone", "xq", "rq_rt", "enq_t",
+             "dseq", "dcnt", "rord")),
+)
+
+
+def _feature_mask(**flags: bool) -> int:
+    """Pack kernel compile flags into the bucket key's leading bitmask
+    (bit i = segment i of ``_CARRY_SEGMENTS``)."""
+    mask = 0
+    for bit, (name, _) in enumerate(_CARRY_SEGMENTS):
+        if flags.pop(name):
+            mask |= 1 << bit
+    if flags:
+        raise TypeError(f"unknown feature flags: {sorted(flags)}")
+    return mask
+
+
+def _mask_features(mask: int) -> dict[str, bool]:
+    """Decode a bucket key's feature bitmask back into kernel flag kwargs."""
+    if mask >> len(_CARRY_SEGMENTS):
+        raise ValueError(f"feature mask {mask:#x} has unknown bits")
+    return {name: bool(mask >> bit & 1)
+            for bit, (name, _) in enumerate(_CARRY_SEGMENTS)}
+
+
 def _scan_runner(key: tuple):
-    """Jitted vmapped kernel for one bucket shape ``key = (freeze, use_fc,
-    fc_push, dyn, het, hedge, n_req, n_nodes, n_slots, n_fns, fn_queue_cap,
-    window, fc_ring, n_ep, xtra, batch)``."""
+    """Jitted vmapped kernel for one bucket shape ``key = (feature_mask,
+    n_req, n_nodes, n_slots, n_fns, fn_queue_cap, window, fc_ring, n_ep,
+    n_copies, xtra, batch)`` -- the leading element is the
+    :func:`_feature_mask` bitmask of enabled carry segments."""
     runner = _SCAN_CACHE.pop(key, None)
     if runner is not None:
         _SCAN_CACHE_STATS["hits"] += 1
@@ -1176,14 +1563,13 @@ def _scan_runner(key: tuple):
     _SCAN_CACHE_STATS["misses"] += 1
     import jax
 
-    (freeze, use_fc, fc_push, dyn, het, hedge, n_req, n_nodes, n_slots,
-     _, _, window, fc_ring, n_ep, xtra, _) = key
+    (mask, n_req, n_nodes, n_slots, _, _, window, fc_ring, n_ep, n_copies,
+     xtra, _) = key
     runner = jax.jit(jax.vmap(partial(
         _scan_cell_kernel, n_nodes=n_nodes, n_slots=n_slots, window=window,
-        freeze=freeze, use_fc=use_fc, fc_push=fc_push, dyn=dyn,
-        het=het, hedge=hedge, n_ep=n_ep,
-        fc_ring=fc_ring, horizon=DEFAULT_FC_HORIZON,
-        n_steps=2 * n_req + xtra)))
+        n_copies=n_copies, n_ep=n_ep, fc_ring=fc_ring,
+        horizon=DEFAULT_FC_HORIZON, n_steps=2 * n_req + xtra,
+        **_mask_features(mask))))
     while len(_SCAN_CACHE) > max(SCAN_CACHE_MAX - 1, 0):
         # bound resident XLA executables in long-lived processes that sweep
         # ever-changing shapes; dict order makes this LRU eviction
@@ -1203,6 +1589,7 @@ class _ScanCell:
     policy: str
     assignment: str      # "single" | "pull" | "push"
     lb: str = "least_loaded"
+    warm: bool = True
     dynamics: object | None = None      # ClusterDynamics | None
     profile: object | None = None       # NodeSpeedProfile | None
     hedging: object | None = None       # HedgingSpec | None
@@ -1221,6 +1608,20 @@ class _ScanCell:
         # model never has (late binding): pull cells run without the hedge
         # machinery and report backups_issued == 0, like the reference
         return self.hedging is not None and self.assignment == "push"
+
+    @property
+    def cold(self) -> bool:
+        return not self.warm
+
+    @property
+    def dup(self) -> bool:
+        return self.hedge and self.hedging.mode == "duplicate"
+
+    @property
+    def n_copies(self) -> int:
+        # duplicate-mode queue width: the original plus one racing copy per
+        # allowed backup (see the kernel's flattened copy axis)
+        return 1 + int(self.hedging.max_backups) if self.dup else 1
 
     def node_cap(self) -> int:
         """Largest node count the cell can reach (autoscaler headroom)."""
@@ -1265,17 +1666,31 @@ class _ScanCell:
         return len(self.feats.t)
 
     def hedge_budget_full(self) -> int:
-        """Strict upper bound on hedge fires: every arm fires at most once
-        and arms = arrivals + steals <= n * (1 + max_backups)."""
+        """Strict upper bound on the extra scan steps hedging consumes.
+        Steal mode: every arm fires at most once and arms = arrivals +
+        steals <= n * (1 + max_backups).  Duplicate mode: fires are bounded
+        the same way, and each issued copy additionally costs one extra
+        completion event, <= n * max_backups more."""
         if not self.hedge:
             return 0
-        return len(self.feats.t) * (1 + int(self.hedging.max_backups))
+        n = len(self.feats.t)
+        hmax = int(self.hedging.max_backups)
+        full = n * (1 + 2 * hmax) if self.dup else n * (1 + hmax)
+        if self.dyn and self.assignment == "push":
+            # each queued-at-kill loss can leave one extra pending deadline
+            # (the uncancelled pre-kill watch) that fires once
+            full += len(self.dynamics.fail) * self.cores + n
+        return full
 
     def bucket(self) -> tuple:
         freeze = self.assignment != "pull"
         dyn = self.dyn
         use_fc = not freeze and self.policy == "fc"
-        fc_push = freeze and self.policy == "fc" and (self.nodes > 1 or dyn)
+        # single-node static push-FC can use the precomputed global window
+        # counts -- unless hedging re-logs steal/copy re-submissions on the
+        # node, which only the live per-(node, fn) rings can track
+        fc_push = (freeze and self.policy == "fc"
+                   and (self.nodes > 1 or dyn or self.hedge))
         if freeze:
             kq = 1                   # fn_ev unused in frozen-priority mode
         else:                        # per-function queue capacity
@@ -1283,7 +1698,7 @@ class _ScanCell:
                        if len(self.feats.fn_ids) else 1)
         # the per-(node, fn) ring is sized to the worst *global* window
         # count, which bounds any node-local count from above; hedged cells
-        # additionally re-log each steal on its target node, so every
+        # additionally re-log each steal/copy on its target node, so every
         # arrival can contribute up to 1 + max_backups entries in-window
         fc_mult = 1 + int(self.hedging.max_backups) if self.hedge else 1
         fc_ring = (_pow2(int(self.feats.count.max()) * fc_mult)
@@ -1292,32 +1707,41 @@ class _ScanCell:
                 if self.het else 1)
         extra = self.dyn_budget() + self.hedge_budget()
         xtra = _pow2(extra) if extra else 0
-        return (freeze, use_fc, fc_push, dyn, self.het, self.hedge,
-                _pow2(len(self.feats.t)),
+        mask = _feature_mask(freeze=freeze, use_fc=use_fc, fc_push=fc_push,
+                             cold=self.cold, hedge=self.hedge, dup=self.dup,
+                             het=self.het, dyn=dyn)
+        return (mask, _pow2(len(self.feats.t)),
                 _pow2(self.node_cap()), _pow2(self.cores),
                 _pow2(len(self.feats.fns)), kq, DEFAULT_WINDOW,
-                fc_ring, n_ep, xtra)
+                fc_ring, n_ep, self.n_copies, xtra)
 
 
 def _run_scan_bucket(key: tuple, cells: list[_ScanCell]) -> list[tuple]:
     """Dispatch one shape bucket (possibly in SCAN_BATCH_MAX chunks, each
     padded to a power-of-two batch) and return per-cell
     ``(start, finish, prio, node, extras)`` arrays in event order; ``extras``
-    is ``None`` for static-capacity cells and a dict (failures, nodes_used,
-    activation/dead vectors) for dynamic ones."""
+    is ``None`` for plain static-capacity cells and a dict (failure/backup
+    counters, cold-start flags, activation/dead vectors as applicable)
+    otherwise."""
     import jax
     import jax.numpy as jnp
 
-    (freeze, use_fc, fc_push, dyn, het, hedge, n_b, nodes_b, slots_b, f_b,
-     kq, window, fc_ring, n_ep, xtra) = key
+    (mask, n_b, nodes_b, slots_b, f_b, kq, window, fc_ring, n_ep, n_copies,
+     xtra) = key
+    flags = _mask_features(mask)
+    freeze, use_fc, fc_push = (flags["freeze"], flags["use_fc"],
+                               flags["fc_push"])
+    dyn, het, hedge = flags["dyn"], flags["het"], flags["hedge"]
+    cold, dup = flags["cold"], flags["dup"]
     n1 = n_b + 1
     out: list[tuple] = []
-    # dynamic-capacity, heterogeneous and hedged buckets compute in float64
-    # (enable_x64 below), so their inputs must be *built* in float64 --
-    # quantizing kill/arrival/deadline times through float32 first would
+    # dynamic-capacity, heterogeneous, hedged and cold buckets compute in
+    # float64 (enable_x64 below), so their inputs must be *built* in float64
+    # -- quantizing kill/arrival/deadline times through float32 first would
     # merge distinct event times and reintroduce exactly the ordering flips
-    # the promotion prevents
-    use64 = dyn or het or hedge
+    # the promotion prevents (cold cells' warm-vs-miss decisions are
+    # order-dependent integer counts in the same way)
+    use64 = dyn or het or hedge or cold
     fdt = np.float64 if use64 else np.float32
     for lo in range(0, len(cells), SCAN_BATCH_MAX):
         chunk = cells[lo:lo + SCAN_BATCH_MAX]
@@ -1426,71 +1850,70 @@ def _run_scan_bucket(key: tuple, cells: list[_ScanCell]) -> list[tuple]:
                 inp["home0"][b, :n] = (hashes % cell.nodes)[f.fn_ids]
             # §V-A warm-up seeds every node's estimator with the profile
             # median (single-node semantics at nodes=1); autoscaled nodes
-            # warm up the same way the moment they are provisioned
-            seed_n = min(cell.cores, window)
-            for fi, fn in enumerate(f.fns):
-                w = PROFILES[fn].median_s if fn in PROFILES else 0.1
-                inp["ring0"][b, :, fi, :seed_n] = w
-                inp["rsum0"][b, :, fi] = seed_n * w
-                inp["rlen0"][b, :, fi] = seed_n
-                inp["rpos0"][b, :, fi] = seed_n % window
+            # warm up the same way the moment they are provisioned.  The
+            # warm=False regime skips the seed: the reference only seeds
+            # estimators alongside container warm-up (warm_functions)
+            if cell.warm:
+                seed_n = min(cell.cores, window)
+                for fi, fn in enumerate(f.fns):
+                    w = PROFILES[fn].median_s if fn in PROFILES else 0.1
+                    inp["ring0"][b, :, fi, :seed_n] = w
+                    inp["rsum0"][b, :, fi] = seed_n * w
+                    inp["rlen0"][b, :, fi] = seed_n
+                    inp["rpos0"][b, :, fi] = seed_n % window
 
-        run = _scan_runner((freeze, use_fc, fc_push, dyn, het, hedge, n_b,
-                            nodes_b, slots_b, f_b, kq, window, fc_ring,
-                            n_ep, xtra, bsz))
-        if use64:
-            # dynamic-capacity / hetero / hedged buckets run in float64
-            # (enable_x64): failure and backup accounting depend on exact
-            # completion-vs-kill/deadline event orderings, which float32
-            # channel-clock drift can flip under heavy backlog
-            from jax.experimental import enable_x64
-            with enable_x64():
-                res = run({k: jnp.asarray(v) for k, v in inp.items()})
-                res = jax.tree_util.tree_map(np.asarray, res)
-        else:
-            res = run({k: jnp.asarray(v) for k, v in inp.items()})
+        def _dispatch(xtra_now: int):
+            run = _scan_runner((mask, n_b, nodes_b, slots_b, f_b, kq,
+                                window, fc_ring, n_ep, n_copies, xtra_now,
+                                bsz))
+            if use64:
+                # dynamic-capacity / hetero / hedged / cold buckets run in
+                # float64 (enable_x64): failure, backup and cold-start
+                # accounting depend on exact completion-vs-kill/deadline
+                # event orderings, which float32 channel-clock drift can
+                # flip under heavy backlog
+                from jax.experimental import enable_x64
+                with enable_x64():
+                    r = run({k: jnp.asarray(v) for k, v in inp.items()})
+                    return jax.tree_util.tree_map(np.asarray, r)
+            r = run({k: jnp.asarray(v) for k, v in inp.items()})
+            return jax.tree_util.tree_map(np.asarray, r)
+
+        res = _dispatch(xtra)
+        if hedge:
+            ndone_b = (res[1] if dyn else res[4])["ndone"]
+            if any(int(ndone_b[b]) != len(chunk[b].feats.t)
+                   for b in range(len(chunk))):
+                # the optimistic hedge step budget fell short (a cell fired
+                # far more deadlines than requests): re-run the chunk at
+                # the strict worst-case bound, which cannot fall short by
+                # construction
+                full = max(c.dyn_budget() + c.hedge_budget_full()
+                           for c in chunk)
+                res = _dispatch(_pow2(full))
+                ndone_b = (res[1] if dyn else res[4])["ndone"]
+                for b, cell in enumerate(chunk):
+                    if int(ndone_b[b]) != len(cell.feats.t):
+                        raise RuntimeError(
+                            "hedge scan step budget exhausted at the "
+                            f"strict bound ({full}); this is a kernel "
+                            "budget bug")
         if not dyn:
-            if hedge:
-                (start_b, finish_b, prio_b, node_b, nbk_b, nwon_b,
-                 att_b, ndone_b) = (np.asarray(a) for a in res)
-                if any(int(ndone_b[b]) != len(chunk[b].feats.t)
-                       for b in range(len(chunk))):
-                    # the optimistic hedge step budget fell short (a cell
-                    # fired far more deadlines than requests): re-run the
-                    # chunk at the strict worst-case bound, which cannot
-                    # fall short by construction
-                    full = max(c.dyn_budget() + c.hedge_budget_full()
-                               for c in chunk)
-                    run = _scan_runner((freeze, use_fc, fc_push, dyn, het,
-                                        hedge, n_b, nodes_b, slots_b, f_b,
-                                        kq, window, fc_ring, n_ep,
-                                        _pow2(full), bsz))
-                    with enable_x64():
-                        res = run({k: jnp.asarray(v)
-                                   for k, v in inp.items()})
-                        res = jax.tree_util.tree_map(np.asarray, res)
-                    (start_b, finish_b, prio_b, node_b, nbk_b, nwon_b,
-                     att_b, ndone_b) = (np.asarray(a) for a in res)
-                    for b, cell in enumerate(chunk):
-                        if int(ndone_b[b]) != len(cell.feats.t):
-                            raise RuntimeError(
-                                "hedge scan step budget exhausted at the "
-                                f"strict bound ({full}); this is a kernel "
-                                "budget bug")
-                out.extend((start_b[b].astype(np.float64),
-                            finish_b[b].astype(np.float64),
-                            prio_b[b].astype(np.float64), node_b[b],
-                            {"backups": int(nbk_b[b]),
-                             "steals": int(nwon_b[b]),
-                             "attempts": att_b[b]})
-                           for b in range(len(chunk)))
-            else:
-                start_b, finish_b, prio_b, node_b = (np.asarray(a)
-                                                     for a in res)
-                out.extend((start_b[b].astype(np.float64),
-                            finish_b[b].astype(np.float64),
-                            prio_b[b].astype(np.float64), node_b[b], None)
-                           for b in range(len(chunk)))
+            start_b, finish_b, prio_b, node_b, aux = res
+            for b in range(len(chunk)):
+                ex: dict | None = {}
+                if hedge:
+                    ex.update(backups=int(aux["nbk"][b]),
+                              steals=int(aux["nstl"][b]),
+                              attempts=aux["att"][b])
+                if cold:
+                    ex.update(cold_starts=int(aux["ncold"][b]),
+                              evictions=int(aux["nevt"][b]),
+                              coldq=aux["coldq"][b])
+                out.append((np.asarray(start_b[b], dtype=np.float64),
+                            np.asarray(finish_b[b], dtype=np.float64),
+                            np.asarray(prio_b[b], dtype=np.float64),
+                            node_b[b], ex or None))
             continue
         (j_s, es_s, fs_s, pj_s, kd_s), summary = res
         j_s = np.asarray(j_s)
@@ -1528,6 +1951,14 @@ def _run_scan_bucket(key: tuple, cells: list[_ScanCell]) -> list[tuple]:
                 "dead": summary["dead"][b],
                 "killt": inp["killt"][b],
             }
+            if hedge:
+                extras.update(backups=int(summary["nbk"][b]),
+                              steals=int(summary["nstl"][b]),
+                              attempts=summary["att"][b])
+            if cold:
+                extras.update(cold_starts=int(summary["ncold"][b]),
+                              evictions=int(summary["nevt"][b]),
+                              coldq=summary["coldq"][b])
             out.append((start, finish, prio, node, extras))
     return out
 
@@ -1548,16 +1979,19 @@ def _run_scan_cells(cells: list[_ScanCell]) -> list[SimResult]:
             order = f.order.tolist()
             t_list = f.t.tolist()
             att = extras.get("attempts") if extras is not None else None
+            coldq = extras.get("coldq") if extras is not None else None
             for e, ridx in enumerate(order):
                 req = cell.requests[ridx]
                 req.node = f"node{int(node[e])}"
                 req.r_prime = t_list[e]
                 req.priority = float(prio[e])    # float32-rounded
-                req.cold_start = False           # always-warm regime
+                # warm cells never cold-start; cold cells carry the
+                # original's own dispatch decision per request
+                req.cold_start = bool(coldq[e]) if coldq is not None else False
                 req.start = float(start[e])
                 req.finish = float(finish[e])
                 req.c = req.finish + RESP_OVERHEAD_S
-                if att is not None:              # hedged cell: steal count
+                if att is not None:              # hedged cell: backup count
                     req.attempts = int(att[e])
             meta = {"mode": "ours", "policy": cell.policy,
                     "cores": cell.cores, "backend": "scan"}
@@ -1565,12 +1999,15 @@ def _run_scan_cells(cells: list[_ScanCell]) -> list[SimResult]:
                 meta["nodes"] = cell.nodes
                 meta["assignment"] = cell.assignment
             failures = backups = steals = 0
+            cold_starts = evictions = 0
             nodes_used = cell.nodes
             timeline = None
             if extras is not None:
                 failures = extras.get("failures", 0)
                 backups = extras.get("backups", 0)
                 steals = extras.get("steals", 0)
+                cold_starts = extras.get("cold_starts", 0)
+                evictions = extras.get("evictions", 0)
                 if "act_t" in extras:        # dynamic-capacity cell
                     from .cluster import CapacityTimeline
                     nodes_used = extras["nodes_used"]
@@ -1582,22 +2019,26 @@ def _run_scan_cells(cells: list[_ScanCell]) -> list[SimResult]:
                                     else float("inf")
                                     for k in range(nodes_used)])
             results[i] = SimResult(
-                requests=cell.requests, cold_starts=0, evictions=0,
-                creations=0, failures=failures, backups_issued=backups,
-                steals_won=steals, nodes_used=nodes_used,
-                timeline=timeline, meta=meta)
+                requests=cell.requests, cold_starts=cold_starts,
+                evictions=evictions, creations=0, failures=failures,
+                backups_issued=backups, steals_won=steals,
+                nodes_used=nodes_used, timeline=timeline, meta=meta)
     return results  # type: ignore[return-value]
 
 
 def simulate_cells_scan(
-    batch: list[tuple[list[Request], int, str]],
+    batch: list[tuple],
     memory_mb: int = 32 * 1024,
     container_mb: int = 128,
     validate: bool = True,
 ) -> list[SimResult]:
-    """Run a batch of (requests, cores, policy) ours-mode **single-node**
-    scenarios through the bucketed scan path (cells vmapped, one XLA compile
-    per padded bucket shape, shared across calls).
+    """Run a batch of ``(requests, cores, policy[, warm])`` ours-mode
+    **single-node** scenarios through the bucketed scan path (cells vmapped,
+    one XLA compile per padded bucket shape, shared across calls).
+
+    ``warm`` defaults to ``True``; ``warm=False`` cells run the cold-start /
+    eviction regime (prewarm-pool misses and per-function trim evictions
+    modelled inside the step, see :func:`_cold_regime_ok`).
 
     Every cell must satisfy :func:`scan_eligible`; this is checked and raises
     ``ValueError`` otherwise (callers that already checked pass
@@ -1606,18 +2047,21 @@ def simulate_cells_scan(
     if not batch:
         return []
     cells = []
-    for requests, cores, policy in batch:
+    for item in batch:
+        requests, cores, policy = item[:3]
+        warm = item[3] if len(item) > 3 else True
         if validate and not scan_eligible(requests, cores, policy,
-                                          memory_mb=memory_mb,
+                                          warm=warm, memory_mb=memory_mb,
                                           container_mb=container_mb):
             raise ValueError(
-                "scan backend requires the always-warm ours regime "
-                f"(policy={policy!r}, cores={cores}); use "
+                "scan backend requires the ours regime, a known policy and "
+                "(cold cells) ample container memory "
+                f"(policy={policy!r}, cores={cores}, warm={warm}); use "
                 "backend='vectorized' for the general exact fast path")
         cells.append(_ScanCell(requests=requests,
                                feats=_arrival_features(requests),
                                cores=cores, nodes=1, policy=policy,
-                               assignment="single"))
+                               assignment="single", warm=warm))
     return _run_scan_cells(cells)
 
 
@@ -1639,9 +2083,11 @@ def cluster_scan_eligible(
     hedging=None,
 ) -> bool:
     """True when the scan kernel reproduces the reference cluster within
-    float32 rounding: ours mode, known policy, always-warm nodes (the §V-A
-    warm-up provisions ``cores`` containers per function on the cluster's
-    40 GB nodes, so up to ~13 cores for the full SeBS set), and
+    float32 rounding: ours mode, known policy, a container regime the kernel
+    models (always-warm -- the §V-A warm-up provisions ``cores`` containers
+    per function on the cluster's 40 GB nodes, so up to ~13 cores for the
+    full SeBS set -- or the ``warm=False`` ample-memory prewarm regime, see
+    :func:`_cold_regime_ok`), and
 
     * ``assignment="pull"`` -- any policy (priorities are re-ranked at pull
       time from the controller estimator, exactly like the reference), or
@@ -1659,34 +2105,35 @@ def cluster_scan_eligible(
 
     ``profile`` (a :class:`~repro.core.stragglers.NodeSpeedProfile`) and
     ``hedging`` (a :class:`~repro.core.stragglers.HedgingSpec`) extend
-    eligibility to **heterogeneous fleets and straggler hedging**: per-node
-    effective speeds scale slot completion times inside the step, hedging
-    deadlines steal still-queued calls to the least-loaded peer.  Both
-    require static capacity (no autoscale/failures -- such combinations run
-    on the reference loop); hedging additionally requires steal mode and,
-    under push, at least two nodes (a single node cannot steal from
-    itself; the reference can, so it stays eligible there only via the
-    event loop).
+    eligibility to **heterogeneous fleets and straggler hedging**, composing
+    freely with capacity dynamics: per-node effective speeds scale slot
+    completion times inside the step (profile indices cover autoscaled
+    nodes, like the reference's index-based ``_add_node``), steal-mode
+    deadlines re-route still-queued calls to the least-loaded live peer (or
+    back onto their own node when no peer exists, the reference's
+    self-steal) and kills void in-flight watches, and duplicate-mode
+    deadlines race copies with winner propagation.  The one remaining
+    rejection: **duplicate-mode hedging under push with non-static
+    capacity** -- racing copies of re-arrived lost requests have no
+    reference-documented semantics, so such cells stay on the event loop.
     """
-    if policy not in POLICY_NAMES or not warm or nodes < 1:
+    if policy not in POLICY_NAMES or nodes < 1:
         return False
     if assignment == "push":
         if lb not in ("least_loaded", "home"):
             return False
     elif assignment != "pull":
         return False
-    straggler = ((profile is not None and not profile.is_uniform)
-                 or hedging is not None)
-    if straggler and dynamics is not None and not dynamics.is_static:
-        return False
+    dyn = dynamics is not None and not dynamics.is_static
     if hedging is not None:
-        if hedging.mode != "steal":
-            return False             # duplicate racing stays reference-only
-        if assignment == "push" and nodes < 2:
+        if hedging.mode not in ("steal", "duplicate"):
             return False
-    if profile is not None and len(profile.speeds) > nodes:
+        if hedging.mode == "duplicate" and dyn and assignment == "push":
+            return False             # racing copies under churn: reference
+    cap = dynamics.capacity_bound(nodes) if dynamics is not None else nodes
+    if profile is not None and len(profile.speeds) > cap:
         return False                 # speeds beyond the fleet: misconfigured
-    if dynamics is not None and not dynamics.is_static:
+    if dyn:
         if assignment == "push" and lb != "least_loaded":
             return False
         if dynamics.fail:
@@ -1694,6 +2141,8 @@ def cluster_scan_eligible(
             if (max(failed) >= nodes or len(failed) >= nodes
                     or any(at < 0 for _, at in dynamics.fail)):
                 return False
+    if not warm:
+        return _cold_regime_ok(requests, cores, memory_mb, container_mb)
     fns = sorted({r.fn for r in requests})
     pool = _FastPool(memory_mb=memory_mb, container_mb=container_mb,
                      cores=cores, fn_memory=SEBS_MEMORY_MB)
@@ -1708,23 +2157,24 @@ def simulate_cluster_cells_scan(
     validate: bool = True,
 ) -> list[SimResult]:
     """Run a batch of ``(requests, nodes, cores, policy[, assignment[, lb[,
-    dynamics[, profile[, hedging]]]]])`` ours-mode cluster scenarios as
-    bucketed vmapped scans -- an entire nodes x intensity x policy grid
+    dynamics[, profile[, hedging[, warm]]]]]])`` ours-mode cluster scenarios
+    as bucketed vmapped scans -- an entire nodes x intensity x policy grid
     becomes a handful of XLA dispatches.  ``dynamics`` (a
     :class:`~repro.core.cluster.ClusterDynamics`, or ``None``) adds
     autoscaling and scheduled failures, ``profile`` (a
     :class:`~repro.core.stragglers.NodeSpeedProfile`) heterogeneous node
-    speeds, and ``hedging`` (a
-    :class:`~repro.core.stragglers.HedgingSpec`) straggler work stealing --
-    all modelled inside the scan step.
+    speeds, ``hedging`` (a :class:`~repro.core.stragglers.HedgingSpec`)
+    straggler work stealing or duplicate racing, and ``warm=False`` the
+    cold-start/eviction regime -- all modelled inside the scan step, in any
+    combination :func:`cluster_scan_eligible` accepts.
 
     Every cell must satisfy :func:`cluster_scan_eligible` (raises
     ``ValueError`` otherwise; ``validate=False`` skips the re-check for
     callers that already ran it).  Semantics follow the reference
-    :class:`~repro.core.cluster.Cluster` in the always-warm regime; agreement
-    is within the documented cluster cross-check tolerance (float32 clocks,
-    index-order tie-breaking), see ``repro.core.sweep.CLUSTER_XCHECK_RTOL``;
-    lost-request counts under failure injection are exact.
+    :class:`~repro.core.cluster.Cluster`; agreement is within the documented
+    cluster cross-check tolerance (float32 clocks, index-order
+    tie-breaking), see ``repro.core.sweep.CLUSTER_XCHECK_RTOL``; lost
+    request, backup/steal and cold-start/eviction counts are exact.
     """
     if not batch:
         return []
@@ -1736,19 +2186,24 @@ def simulate_cluster_cells_scan(
         dynamics = item[6] if len(item) > 6 else None
         profile = item[7] if len(item) > 7 else None
         hedging = item[8] if len(item) > 8 else None
+        warm = item[9] if len(item) > 9 else True
         if validate and not cluster_scan_eligible(
                 requests, nodes, cores, policy, assignment=assignment,
-                lb=lb, memory_mb=memory_mb, container_mb=container_mb,
-                dynamics=dynamics, profile=profile, hedging=hedging):
+                lb=lb, warm=warm, memory_mb=memory_mb,
+                container_mb=container_mb, dynamics=dynamics,
+                profile=profile, hedging=hedging):
             raise ValueError(
-                "scan cluster backend requires the always-warm ours regime "
+                "scan cluster backend requires the ours regime with "
+                "supported dynamics/heterogeneity/hedging and, for cold "
+                "cells, ample container memory "
                 f"(policy={policy!r}, nodes={nodes}, cores={cores}, "
-                f"assignment={assignment!r}, dynamics={dynamics!r}, "
-                f"hedging={hedging!r}); use backend='reference'")
+                f"assignment={assignment!r}, warm={warm}, "
+                f"dynamics={dynamics!r}, hedging={hedging!r}); use "
+                "backend='reference'")
         cells.append(_ScanCell(requests=requests,
                                feats=_arrival_features(requests),
                                cores=cores, nodes=nodes, policy=policy,
-                               assignment=assignment, lb=lb,
+                               assignment=assignment, lb=lb, warm=warm,
                                dynamics=dynamics, profile=profile,
                                hedging=hedging))
     return _run_scan_cells(cells)
@@ -1761,6 +2216,7 @@ def simulate_cluster_scan(
     policy: str = "fc",
     assignment: str = "pull",
     lb: str = "least_loaded",
+    warm: bool = True,
     memory_mb: int = CLUSTER_MEMORY_MB,
     container_mb: int = CLUSTER_CONTAINER_MB,
     dynamics=None,
@@ -1771,19 +2227,29 @@ def simulate_cluster_scan(
     :func:`simulate_cluster_cells_scan`."""
     return simulate_cluster_cells_scan(
         [(requests, nodes, cores_per_node, policy, assignment, lb,
-          dynamics, profile, hedging)],
+          dynamics, profile, hedging, warm)],
         memory_mb=memory_mb, container_mb=container_mb)[0]
 
 
 class ScanBackend:
-    """Batched jax.lax.scan variant (always-warm ours regime, float32).
+    """Batched jax.lax.scan variant of the ours-mode simulator.
 
     Supports single nodes *and* clusters: any of the five policies under the
     pull assignment or the push assignment (FC via per-(node, fn) count
-    rings), plus time-varying capacity -- autoscaling and failure
-    injection -- for pull and push-least-loaded clusters, plus
-    static-capacity straggler scenarios -- heterogeneous node speeds
-    (``hetero``) and steal-mode hedging (``hedging``)."""
+    rings), time-varying capacity -- autoscaling and failure injection --
+    heterogeneous node speeds (``hetero``), hedging in both steal and
+    duplicate (racing-copy) modes, and the cold-start/eviction regime
+    (``warm=False``) -- composable in any combination; the per-event scan
+    step is an ordered pipeline of feature-flagged carry segments, so each
+    combination compiles only the segments it enables.
+
+    The one feature the scan kernel does not model is the stock baseline
+    (``mode="baseline"``): processor sharing gives every in-flight call a
+    state-dependent service rate that changes at each arrival/departure,
+    which does not fit the fixed-slot one-core step; baseline cells run on
+    ``backend='reference'``.  Per-cell restrictions that depend on *values*
+    rather than flags (degenerate dynamics schedules, cold-regime memory
+    bounds) live in :func:`cluster_scan_eligible`."""
 
     name = "scan"
 
@@ -1791,19 +2257,12 @@ class ScanBackend:
                  nodes: int = 1, assignment: str = "pull",
                  autoscale: bool = False, failures: bool = False,
                  hedging: bool = False, hetero: bool = False) -> bool:
-        if mode != "ours" or policy not in POLICY_NAMES or not warm:
+        if mode != "ours" or policy not in POLICY_NAMES:
             return False
-        if nodes > 1 or autoscale or failures:
-            if assignment not in ("pull", "push"):
-                return False
+        if assignment not in ("pull", "push"):
+            return False
         if failures and nodes < 2:
             return False             # lost calls need a surviving node
-        if (hedging or hetero) and (autoscale or failures):
-            return False             # straggler cells need static capacity
-        if (hedging or hetero) and assignment not in ("pull", "push"):
-            return False
-        if hedging and assignment == "push" and nodes < 2:
-            return False             # stealing needs a peer
         try:
             import jax  # noqa: F401
         except ImportError:
@@ -1821,10 +2280,15 @@ class ScanBackend:
         warm: bool = True,
         kappa: float = PS_KAPPA,
     ) -> SimResult:
-        if mode != "ours" or not warm:
-            raise ValueError("scan backend requires ours mode with warm=True")
+        if mode != "ours":
+            raise ValueError("scan backend requires ours mode")
+        if kappa != PS_KAPPA:
+            raise ValueError(
+                "kappa parameterizes the baseline processor-sharing node, "
+                "which the scan backend does not model; use "
+                "backend='reference' for non-default kappa")
         return simulate_cells_scan(
-            [(requests, cores, policy)], memory_mb=memory_mb,
+            [(requests, cores, policy, warm)], memory_mb=memory_mb,
             container_mb=container_mb)[0]
 
 

@@ -461,9 +461,12 @@ class SimBackend(Protocol):
     shape -- ``nodes``/``assignment`` for clusters, ``autoscale``/``failures``
     for capacity dynamics, ``hedging``/``hetero`` for straggler scenarios --
     and a backend declares whether it can run it.  The scan backend runs
-    always-warm ours clusters including autoscaling, failure injection,
-    heterogeneous node speeds and steal-mode hedging; the single-node fast
-    paths say no for ``nodes > 1`` and for any capacity dynamics.  The sweep
+    every ours-mode scenario -- clusters (warm or cold-start) including
+    autoscaling, failure injection, heterogeneous node speeds and hedging
+    in both steal and duplicate modes -- and says no only to the stock
+    baseline and to failure injection without a surviving peer; the
+    vectorized fast path says no for ``nodes > 1`` and for any capacity
+    dynamics.  The sweep
     engine routes cells by asking this matrix rather than hard-coding
     per-backend rules.
     """

@@ -20,7 +20,9 @@ regime a first-class, *declarative* scenario consumed by both engines:
   non-preemptive-safe default) or **duplicated** (a backup copy races the
   original; first completion wins).  Both engines report
   ``backups_issued`` / ``steals_won`` with accounting parity; the scan
-  kernel models steal mode only (duplicates stay on the reference loop).
+  kernel models both modes (duplicate racing carries a copy axis in the
+  queue state), with one value-dependent rejection -- duplicate mode x
+  failure schedules x push assignment stays on the reference loop.
 * :func:`rolling_restart` -- a multi-failure helper: staggered per-node
   kills for availability sweeps (``SweepCell.fail_spec``).
 

@@ -227,6 +227,7 @@ class SweepSpec:
             raise ValueError(f"unknown validate mode {self.validate!r}; "
                              "expected None or 'cross-check'")
         validate = self.validate
+        self._xcheck_skipped_degraded = 0
         backends: list[str] = []
         for b in self.backends:
             if b == "cross-check":      # axis sugar used by --backend flags
@@ -314,11 +315,30 @@ class SweepSpec:
                     if (_vectorized_eligible(cell)
                             and cell.backend == sample_be):
                         groups.setdefault(cell.key(), []).append(i)
+            # A statically-capable scan group can still be outside the
+            # kernel's regime for its actual workload (e.g. partial
+            # warm-up): at run time such a cell degrades to the event loop
+            # and the dual-run silently never happens, so sampling it would
+            # read as validation coverage that never ran.  Skip those
+            # groups here -- the next eligible group takes the sampling
+            # slot -- and count the skipped cells (surfaced as
+            # ``meta["xcheck_skipped_degraded"]`` by run_sweep).
             for gdict in (groups, cluster_groups):
-                for g, key in enumerate(gdict):
+                g = 0
+                for key, idxs in gdict.items():
+                    if g % stride == 0 and gdict is cluster_groups:
+                        def _ok(c):
+                            policy = ("fifo" if c.policy == "baseline"
+                                      else c.policy)
+                            return _cluster_scan_ok(c, make_workload(c),
+                                                    policy)
+                        if not all(_ok(out[i]) for i in idxs):
+                            self._xcheck_skipped_degraded += len(idxs)
+                            continue   # g unchanged: sample the next group
                     if g % stride == 0:
-                        for i in gdict[key]:
+                        for i in idxs:
                             out[i] = replace(out[i], cross_check=True)
+                    g += 1
         return out
 
 
@@ -410,21 +430,23 @@ def _cluster_scan_capable(cell: SweepCell) -> bool:
     cluster-shaped scenario (>1 node, autoscaling, failure injection, or a
     straggler scenario), and ``supports(...)`` saying yes for the cell's
     policy / assignment / dynamics / hedging / heterogeneity combination.
-    The always-warm check needs the workload and happens in
+    Both hedging modes and the cold (``warm=False``) regime are in-matrix;
+    the workload-dependent half (warm-up / ample-memory checks) happens in
     :func:`run_cells_scan` / ``cluster_scan_eligible``."""
     mode = "baseline" if (cell.mode == "baseline"
                           or cell.policy == "baseline") else "ours"
     cluster_shaped = (cell.nodes > 1 or cell.autoscale
                       or cell.fail_at is not None or _cell_straggler(cell))
-    if mode != "ours" or not cluster_shaped or not cell.warm:
+    if mode != "ours" or not cluster_shaped:
         return False
-    if cell.hedge_multiple is not None and cell.hedge_mode != "steal":
-        return False                 # duplicate racing stays reference-only
+    dyn_cap = (cell.autoscale or cell.fail_at is not None
+               or cell.fail_spec is not None)
+    if (cell.hedge_multiple is not None and cell.hedge_mode == "duplicate"
+            and dyn_cap and cell.assignment == "push"):
+        return False                 # racing copies under churn: reference
     if cell.assignment == "push":
         if cell.lb not in ("least_loaded", "home"):
             return False             # round_robin push stays on the reference
-        dyn_cap = (cell.autoscale or cell.fail_at is not None
-                   or cell.fail_spec is not None)
         if dyn_cap and cell.lb != "least_loaded":
             return False             # dynamic home walk needs the event loop
     profile = _cell_profile(cell)
@@ -442,8 +464,7 @@ def _scan_batchable(cell: SweepCell) -> bool:
     Cross-checked cells stay on the per-cell path (they dual-run)."""
     if cell.backend != "scan" or cell.cross_check:
         return False
-    return ((_vectorized_eligible(cell) and cell.warm)
-            or _cluster_scan_capable(cell))
+    return _vectorized_eligible(cell) or _cluster_scan_capable(cell)
 
 
 def _resolve_backend(cell: SweepCell, reqs, mode: str, policy: str) -> str:
@@ -626,7 +647,7 @@ def run_cell(cell: SweepCell) -> dict[str, float]:
             from .fastpath import simulate_cluster_cells_scan
             res = simulate_cluster_cells_scan(
                 [(reqs, cell.nodes, cell.cores, policy, cell.assignment,
-                  cell.lb, dynamics, profile, hedging)])[0]
+                  cell.lb, dynamics, profile, hedging, cell.warm)])[0]
             metrics = _cell_metrics(cell, res.requests, res.cold_starts,
                                     res.failures, res.backups_issued,
                                     res.nodes_used, steals=res.steals_won)
@@ -652,7 +673,7 @@ def run_cell(cell: SweepCell) -> dict[str, float]:
             other = simulate_cluster_cells_scan(
                 [(make_workload(cell), cell.nodes, cell.cores, policy,
                   cell.assignment, cell.lb, dynamics, profile,
-                  hedging)])[0]
+                  hedging, cell.warm)])[0]
             other_m = _cell_metrics(cell, other.requests, other.cold_starts,
                                     other.failures, other.backups_issued,
                                     other.nodes_used,
@@ -702,14 +723,15 @@ def _run_cells_scan_partial(
             reqs = make_workload(cell)
             if _cluster_scan_ok(cell, reqs, policy):
                 clusters.append((pos, cell, reqs))
-        elif _vectorized_eligible(cell) and cell.warm and mode == "ours":
+        elif _vectorized_eligible(cell) and mode == "ours":
             reqs = make_workload(cell)
-            if scan_eligible(reqs, cell.cores, policy):
+            if scan_eligible(reqs, cell.cores, policy, warm=cell.warm):
                 singles.append((pos, cell, reqs))
 
     if singles:
         results = simulate_cells_scan(
-            [(reqs, cell.cores, cell.policy) for _, cell, reqs in singles],
+            [(reqs, cell.cores, cell.policy, cell.warm)
+             for _, cell, reqs in singles],
             validate=False)
         for (pos, cell, _), res in zip(singles, results):
             metrics[pos] = _cell_metrics(cell, res.requests, res.cold_starts,
@@ -718,7 +740,7 @@ def _run_cells_scan_partial(
         results = simulate_cluster_cells_scan(
             [(reqs, cell.nodes, cell.cores, cell.policy, cell.assignment,
               cell.lb, _cell_dynamics(cell), _cell_profile(cell),
-              _cell_hedging(cell))
+              _cell_hedging(cell), cell.warm)
              for _, cell, reqs in clusters], validate=False)
         for (pos, cell, _), res in zip(clusters, results):
             metrics[pos] = _cell_metrics(cell, res.requests, res.cold_starts,
@@ -787,7 +809,11 @@ class SweepResult:
             row: dict = dict(zip(GRID_FIELDS, key))
             row["label"] = crs[0].cell.label()
             row["seeds"] = len(crs)
-            metric_keys = sorted({k for cr in crs for k in cr.metrics})
+            # "degraded" is always a column -- a fully-eligible sweep reads
+            # degraded=0.0 rather than omitting it, so downstream consumers
+            # can assert on it unconditionally
+            metric_keys = sorted({k for cr in crs
+                                  for k in cr.metrics} | {"degraded"})
             for mk in metric_keys:
                 if mk == "degraded":
                     # fallback *fraction*: cells that ran on their requested
@@ -955,7 +981,10 @@ def run_sweep(
         wall_s=wall, workers=workers,
         meta={"cells": len(cells), "scan_batched": scan_batched,
               "degraded": sum(1 for m in metrics
-                              if m is not None and m.get("degraded"))},
+                              if m is not None and m.get("degraded")),
+              "xcheck_sampled": sum(1 for c in cells if c.cross_check),
+              "xcheck_skipped_degraded": getattr(
+                  spec, "_xcheck_skipped_degraded", 0)},
     )
 
 

@@ -1,0 +1,46 @@
+"""The README capability table is generated, not hand-written.
+
+``tools/gen_capability_table.py`` renders the backend-capability matrix by
+querying every registered backend's ``supports()`` over a canonical
+scenario grid and splices it between README markers.  This test regenerates
+the table and diffs it against the README, so either editing the table by
+hand or regressing a previously-green ``supports()`` row fails the suite.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def test_readme_capability_table_in_sync():
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "gen_capability_table.py"),
+         "--check"],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 0, (
+        f"README capability table drifted from supports():\n"
+        f"{proc.stdout}{proc.stderr}")
+
+
+def test_generator_marks_scan_rows_green():
+    """The tentpole rows must render as supported for the scan backend --
+    a supports() regression flips the rendered cell and trips the README
+    check, but assert it directly too so the failure names the row."""
+    sys.path.insert(0, str(REPO / "tools"))
+    try:
+        import gen_capability_table as gen
+    finally:
+        sys.path.pop(0)
+    table = gen.render_table()
+    closed = (
+        "ours, single node, cold starts",
+        "hedging x failures",
+        "hedging x autoscaling",
+        "hetero x failures x hedging",
+    )
+    for row in table.splitlines():
+        if any(label in row for label in closed):
+            assert row.rstrip().endswith("| yes |"), row

@@ -300,7 +300,11 @@ class TestScanBackend:
         reqs = generate_burst(cores=10, intensity=20, seed=0)
         assert scan_eligible(reqs, cores=10, policy="sept")
         assert not scan_eligible(reqs, cores=20, policy="sept")  # partial warm
-        assert not scan_eligible(reqs, cores=10, policy="sept", warm=False)
+        # the cold regime is in-matrix when memory is ample...
+        assert scan_eligible(reqs, cores=10, policy="sept", warm=False)
+        # ...but a tight pool (evict-for-memory reachable) stays reference
+        assert not scan_eligible(reqs, cores=10, policy="sept", warm=False,
+                                 memory_mb=512)
         assert not scan_eligible(reqs, cores=10, policy="sept",
                                  mode="baseline")
 
@@ -334,28 +338,35 @@ class TestScanBackend:
         assert ref == scn
 
     def test_run_cells_scan_rejects_ineligible(self):
-        """Autoscaling cells run on the scan kernel since the
-        dynamic-capacity engine; a cold pool (warm=False) is still outside
-        the regime and strict mode refuses it."""
+        """Autoscaling and cold-pool cells run on the scan kernel since the
+        capability-matrix close; duplicate racing under push churn is a
+        documented rejection and strict mode refuses it."""
         auto = run_cells_scan([SweepCell(policy="fc", nodes=2, cores=5,
                                          intensity=10, autoscale=True)])
         assert auto[0]["n"] > 0 and "degraded" not in auto[0]
+        cold = run_cells_scan([SweepCell(policy="fc", nodes=2, cores=5,
+                                         intensity=10, warm=False)])
+        assert cold[0]["n"] > 0 and "degraded" not in cold[0]
+        bad = SweepCell(policy="fc", nodes=2, cores=5, intensity=10,
+                        autoscale=True, assignment="push",
+                        hedge_multiple=2.0, hedge_mode="duplicate")
         with pytest.raises(ValueError, match="not scan-eligible"):
-            run_cells_scan([SweepCell(policy="fc", nodes=2, cores=5,
-                                      intensity=10, warm=False)])
-        # ...and strict=False degrades cold cells to run_cell instead
-        cell = SweepCell(policy="fc", nodes=2, cores=5, intensity=10,
-                         warm=False)
-        got = run_cells_scan([cell], strict=False)[0]
+            run_cells_scan([bad])
+        # ...and strict=False degrades such cells to run_cell instead
+        got = run_cells_scan([bad], strict=False)[0]
         assert got.pop("degraded") == 1.0
-        assert got == run_cell(cell)
+        assert got == run_cell(bad)
 
-    def test_run_cells_scan_rejects_cold_cells(self):
-        """warm=False has cold starts the always-warm scan cannot model;
-        it must refuse rather than return silently-too-fast metrics."""
-        with pytest.raises(ValueError, match="not scan-eligible"):
-            run_cells_scan([SweepCell(policy="sept", cores=5, intensity=20,
-                                      warm=False)])
+    def test_run_cells_scan_runs_cold_cells(self):
+        """warm=False is in-matrix now: the ample-memory prewarm regime
+        runs on the scan kernel with exact cold-start accounting."""
+        cell = SweepCell(policy="sept", cores=5, intensity=20, warm=False)
+        got = run_cells_scan([cell])[0]
+        ref = run_cell(cell)
+        assert "degraded" not in got
+        assert got["cold"] == ref["cold"] > 0
+        for k in ("R_avg", "R_p95", "S_avg", "n"):
+            assert got[k] == pytest.approx(ref[k], rel=1e-2)
 
 
 @pytest.mark.slow

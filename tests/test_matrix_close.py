@@ -1,0 +1,370 @@
+"""Capability-matrix close: every ``mode="ours"`` cross-product runs on
+the scan kernel, and the silent-fallback / dropped-parameter bugs around
+the matrix are fixed.
+
+Contracts under test:
+
+* parity at the established tolerances for the newly-closed rows --
+  hedging x autoscale, hedging x failure schedules (kills void in-flight
+  watches), duplicate-mode racing (static, under failures, under pull-side
+  autoscale), heterogeneity x dynamics, the cold (``warm=False``) regime
+  single-node and cluster, and single-node push self-steal -- with
+  ``failures`` / ``backups_issued`` / ``steals_won`` and cold-start /
+  eviction counts **bit-identical**;
+* ``ScanBackend.simulate`` / ``VectorizedBackend.simulate`` refuse a
+  non-default ``kappa`` instead of silently dropping it (the parameter
+  only parameterizes the baseline PS node neither kernel models);
+* ``supports()`` <-> ``run_cells_scan`` consistency: combinations the
+  matrix rejects raise under ``strict=True`` and degrade (counted, with
+  ``degraded=1.0``) under ``strict=False``;
+* ``validate="cross-check"`` sampling skips cells that would degrade at
+  run time (their dual-run would silently never happen -- false parity)
+  and counts them in ``meta["xcheck_skipped_degraded"]``;
+* seed-mean ``degraded`` aggregation: 1 degraded seed of 5 reads 0.2,
+  and a fully-eligible sweep emits ``degraded=0.0`` rather than omitting
+  the column.
+"""
+
+import pytest
+
+from repro.core import (
+    HedgingSpec,
+    SweepCell,
+    generate_burst,
+    get_backend,
+    rolling_restart,
+    run_cell,
+    run_sweep,
+    simulate_cluster,
+    summarize,
+)
+from repro.core.simulator import PS_KAPPA, simulate_single_node
+from repro.core.sweep import (
+    CLUSTER_XCHECK_RTOL,
+    CellResult,
+    SweepResult,
+    SweepSpec,
+    run_cells_scan,
+)
+
+try:
+    import jax  # noqa: F401
+    HAVE_JAX = True
+except ImportError:
+    HAVE_JAX = False
+
+needs_jax = pytest.mark.skipif(not HAVE_JAX, reason="jax not installed")
+
+
+def _burst(nodes=2, cores=4, intensity=12, seed=0):
+    return generate_burst(cores=nodes * cores, intensity=intensity,
+                          seed=seed)
+
+
+def _metrics(res):
+    s = summarize(res.requests)
+    return {"R_avg": s.response_avg, "R_p95": s.response_pct[95],
+            "max_c": s.max_completion, "n": s.n}
+
+
+# ---------------------------------------------------------------------------
+# parity for the newly-closed capability rows (exact counts: the ISSUE bar)
+# ---------------------------------------------------------------------------
+@needs_jax
+class TestClosedRowParity:
+    def _assert_parity(self, kw, seed=0, nodes=2, cores=4, intensity=12):
+        ref = simulate_cluster(_burst(nodes, cores, intensity, seed),
+                               nodes=nodes, cores_per_node=cores,
+                               backend="reference", **kw)
+        scan = simulate_cluster(_burst(nodes, cores, intensity, seed),
+                                nodes=nodes, cores_per_node=cores,
+                                backend="scan", **kw)
+        mr, ms = _metrics(ref), _metrics(scan)
+        for k in ("R_avg", "R_p95", "max_c"):
+            assert abs(mr[k] - ms[k]) <= CLUSTER_XCHECK_RTOL * max(
+                abs(mr[k]), 1e-9), (
+                f"{k}: scan {ms[k]} vs reference {mr[k]} under {kw}")
+        assert mr["n"] == ms["n"]
+        assert scan.backups_issued == ref.backups_issued, kw
+        assert scan.steals_won == ref.steals_won, kw
+        assert scan.failures == ref.failures, kw
+        assert scan.cold_starts == ref.cold_starts, kw
+        assert scan.evictions == ref.evictions, kw
+        return ref, scan
+
+    def test_hedging_composes_with_autoscale(self):
+        """Steal deadlines fire while the fleet is still provisioning; the
+        steal targets respect the live active mask."""
+        for seed in range(2):
+            ref, _ = self._assert_parity(
+                dict(policy="fc", assignment="push",
+                     degrade=((0, 1.0, 300.0, 6.0),),
+                     hedging=HedgingSpec(multiple=2.0),
+                     scale_up_queue_per_slot=1.0, max_nodes=4,
+                     provision_delay_s=2.0), seed=seed, intensity=25)
+            assert ref.backups_issued > 0          # the row actually fires
+
+    def test_hedging_composes_with_failures(self):
+        """Kills void in-flight hedge watches: a call lost mid-execution
+        keeps its stale start in the reference and never hedges again."""
+        for seed in range(2):
+            ref, _ = self._assert_parity(
+                dict(policy="sept", assignment="push",
+                     degrade=((0, 1.0, 300.0, 5.0),),
+                     hedging=HedgingSpec(multiple=2.0),
+                     fail_spec=rolling_restart(1, start=8.0)),
+                seed=seed, nodes=3, intensity=20)
+            assert ref.failures > 0 and ref.backups_issued > 0
+
+    def test_hedging_queued_at_kill_reroute_order(self):
+        """A kill that loses *queued* calls (failures > cores) re-routes
+        the lost set in the reference node.kill() order -- in-flight in
+        launch order, then the queue in priority order -- which decides
+        the least-loaded targets, FC counts and later steal cascades."""
+        for policy in ("fc", "sept"):
+            for seed, intensity in ((0, 16), (2, 20), (1, 25)):
+                ref, _ = self._assert_parity(
+                    dict(policy=policy, assignment="push",
+                         degrade=((0, 1.0, 300.0, 5.0),),
+                         hedging=HedgingSpec(multiple=2.0),
+                         fail_spec=rolling_restart(1, start=8.0)),
+                    seed=seed, nodes=3, cores=6, intensity=intensity)
+                assert ref.failures > 6      # queued losses actually occur
+
+    def test_duplicate_racing_static_push(self):
+        ref, _ = self._assert_parity(
+            dict(policy="fc", assignment="push",
+                 degrade=((0, 1.0, 300.0, 6.0),),
+                 hedging=HedgingSpec(multiple=2.0, mode="duplicate")),
+            intensity=25)
+        assert ref.backups_issued > 0
+
+    def test_duplicate_racing_under_failures(self):
+        """Racing copies with winner propagation while nodes die (pull)."""
+        ref, _ = self._assert_parity(
+            dict(policy="fc", assignment="pull",
+                 degrade=((0, 1.0, 300.0, 5.0),),
+                 hedging=HedgingSpec(multiple=2.0, mode="duplicate"),
+                 fail_at=8.0), nodes=3, intensity=20)
+        assert ref.failures > 0
+
+    def test_duplicate_racing_under_autoscale(self):
+        # pull-side watches arm on node-less queued calls, which the
+        # reference's fire check skips -- structurally zero backups, and
+        # the kernel must agree on that zero (push x dynamics x duplicate
+        # is the documented rejection)
+        ref, _ = self._assert_parity(
+            dict(policy="fc", assignment="pull",
+                 degrade=((0, 1.0, 300.0, 8.0),),
+                 hedging=HedgingSpec(multiple=2.0, mode="duplicate"),
+                 scale_up_queue_per_slot=1.0, max_nodes=4,
+                 provision_delay_s=2.0), intensity=25)
+        assert ref.backups_issued == 0
+
+    def test_hetero_composes_with_autoscale(self):
+        self._assert_parity(
+            dict(policy="fc", assignment="push",
+                 node_speeds=(0.5, 1.0),
+                 scale_up_queue_per_slot=1.0, max_nodes=4,
+                 provision_delay_s=2.0), intensity=25)
+
+    def test_single_node_push_self_steal(self):
+        """With no peer, the reference steal re-submits to the same node
+        (attempts still increment, FC window counts re-log the arrival)."""
+        ref, _ = self._assert_parity(
+            dict(policy="fc", assignment="push",
+                 degrade=((0, 1.0, 300.0, 4.0),),
+                 hedging=HedgingSpec(multiple=3.0)),
+            nodes=1, intensity=5)
+        assert ref.backups_issued > 0 and ref.steals_won >= 0
+
+    @pytest.mark.parametrize("kw", (dict(policy="fc", assignment="push"),
+                                    dict(policy="sept", assignment="pull")))
+    def test_cold_cluster_parity(self, kw):
+        for seed in range(2):
+            ref, _ = self._assert_parity(dict(warm=False, **kw), seed=seed)
+            assert ref.cold_starts > 0
+
+    def test_cold_composes_with_hetero_and_hedging(self):
+        self._assert_parity(
+            dict(policy="fc", assignment="push", warm=False,
+                 degrade=((0, 1.0, 300.0, 5.0),),
+                 hedging=HedgingSpec(multiple=2.0)), intensity=20)
+
+    @needs_jax
+    def test_cold_single_node_parity(self):
+        reqs = generate_burst(cores=4, intensity=12, seed=0)
+        ref = simulate_single_node(reqs, 4, policy="fc", warm=False,
+                                   backend="reference")
+        scan = simulate_single_node(generate_burst(cores=4, intensity=12,
+                                                   seed=0),
+                                    4, policy="fc", warm=False,
+                                    backend="scan")
+        mr, ms = _metrics(ref), _metrics(scan)
+        assert mr["n"] == ms["n"]
+        assert abs(mr["R_avg"] - ms["R_avg"]) <= 1e-2 * mr["R_avg"]
+        assert scan.cold_starts == ref.cold_starts > 0
+        assert scan.evictions == ref.evictions
+        # per-request cold-start flags line up, not just the total
+        assert (sorted(r.r for r in ref.requests if r.cold_start)
+                == sorted(r.r for r in scan.requests if r.cold_start))
+
+
+# ---------------------------------------------------------------------------
+# dropped-parameter regression: kappa must not be silently swallowed
+# ---------------------------------------------------------------------------
+class TestKappaNotDropped:
+    def _reqs(self):
+        return generate_burst(cores=4, intensity=10, seed=0)
+
+    @pytest.mark.parametrize("name", ("vectorized",
+                                      pytest.param("scan", marks=needs_jax)))
+    def test_fast_backends_reject_nondefault_kappa(self, name):
+        be = get_backend(name)
+        with pytest.raises(ValueError, match="kappa"):
+            be.simulate(self._reqs(), 4, policy="fc", kappa=PS_KAPPA * 2)
+
+    @pytest.mark.parametrize("name", ("vectorized",
+                                      pytest.param("scan", marks=needs_jax)))
+    def test_fast_backends_accept_default_kappa(self, name):
+        res = get_backend(name).simulate(self._reqs(), 4, policy="fc",
+                                         kappa=PS_KAPPA)
+        assert all(r.c is not None for r in res.requests)
+
+    def test_reference_consumes_kappa(self):
+        """The baseline PS node actually uses kappa once the node is
+        oversubscribed: changing it changes the metrics (so dropping it
+        would have been a real bug)."""
+        reqs = lambda: generate_burst(cores=4, intensity=40, seed=0)
+        a = get_backend("reference").simulate(reqs(), 4, mode="baseline")
+        b = get_backend("reference").simulate(reqs(), 4, mode="baseline",
+                                              kappa=PS_KAPPA * 4)
+        assert _metrics(a)["R_avg"] != _metrics(b)["R_avg"]
+
+
+# ---------------------------------------------------------------------------
+# matrix-driven consistency: supports() False => strict raises, non-strict
+# degrades with degraded=1.0
+# ---------------------------------------------------------------------------
+@needs_jax
+class TestMatrixConsistency:
+    # (cell kwargs, supports kwargs) for rows the matrix REJECTS
+    REJECTED = (
+        # stock baseline mode never runs on the scan kernel
+        (dict(policy="fifo", mode="baseline", nodes=2),
+         dict(mode="baseline", policy="fifo", warm=True, nodes=2)),
+        (dict(policy="baseline", nodes=1),
+         dict(mode="baseline", policy="fifo", warm=True, nodes=1)),
+        # failure injection with no surviving node
+        (dict(policy="fc", nodes=1, fail_at=10.0),
+         dict(mode="ours", policy="fc", warm=True, nodes=1, failures=True)),
+    )
+
+    def test_supports_says_no(self):
+        scan = get_backend("scan")
+        for _, sup_kw in self.REJECTED:
+            assert not scan.supports(**sup_kw)
+
+    def test_strict_raises_for_every_rejected_row(self):
+        for cell_kw, _ in self.REJECTED:
+            cell = SweepCell(cores=4, intensity=8, **cell_kw)
+            with pytest.raises(ValueError, match="not scan-eligible"):
+                run_cells_scan([cell])
+
+    def test_non_strict_degrades_and_counts(self):
+        # the baseline rows have reference semantics; run them through the
+        # degrade path and check the marker (the nodes=1 failure row has no
+        # reference-defined recovery, so strict-raise coverage is enough)
+        for cell_kw, _ in self.REJECTED[:2]:
+            cell = SweepCell(cores=4, intensity=8, **cell_kw)
+            got = run_cells_scan([cell], strict=False)[0]
+            assert got.pop("degraded") == 1.0
+            ref = dict(run_cell(cell))
+            ref.pop("degraded", None)
+            assert got == ref
+
+    def test_supported_rows_do_not_degrade(self):
+        """Every ours-mode cross-product in the matrix runs on the kernel:
+        no degraded marker on any supported row."""
+        cells = [
+            SweepCell(policy="fc", nodes=2, cores=4, intensity=8),
+            SweepCell(policy="sept", nodes=2, cores=4, intensity=8,
+                      assignment="push"),
+            SweepCell(policy="fc", nodes=2, cores=4, intensity=8,
+                      autoscale=True, hedge_multiple=2.0,
+                      degrade=((0, 1.0, 300.0, 5.0),)),
+            SweepCell(policy="fc", nodes=2, cores=4, intensity=8,
+                      fail_at=8.0, node_speeds=(0.5, 1.0)),
+            SweepCell(policy="fc", nodes=2, cores=4, intensity=8,
+                      warm=False),
+            SweepCell(policy="sept", nodes=1, cores=4, intensity=8,
+                      warm=False),
+        ]
+        for m in run_cells_scan(cells):
+            assert "degraded" not in m and m["n"] > 0
+
+
+# ---------------------------------------------------------------------------
+# cross-check sampling must not pick cells that would degrade
+# ---------------------------------------------------------------------------
+@needs_jax
+class TestCrossCheckSampling:
+    def _spec(self):
+        # cores=18 is statically capable but fails the warm-up check for
+        # its actual workload -> would degrade at run time
+        return SweepSpec(policies=("fc",), nodes=(2,), cores=(6, 18),
+                         intensities=(15,), seeds=2, backends=("scan",),
+                         validate="cross-check")
+
+    def test_degraded_groups_are_skipped(self):
+        spec = self._spec()
+        cells = spec.cells()
+        for c in cells:
+            assert c.cross_check == (c.cores == 6)
+        assert spec._xcheck_skipped_degraded == 2    # both seeds
+
+    def test_run_sweep_counts_skips_in_meta(self):
+        res = run_sweep(self._spec(), workers=1)
+        assert res.meta["xcheck_skipped_degraded"] == 2
+        assert res.meta["xcheck_sampled"] == 2
+        for cr in res.results:
+            if cr.cell.cores == 18:
+                # degraded cells ran on the reference, unsampled: no
+                # xcheck_err pretending a dual-run happened
+                assert cr.metrics.get("degraded") == 1.0
+                assert "xcheck_err" not in cr.metrics
+            else:
+                assert "xcheck_err" in cr.metrics
+
+
+# ---------------------------------------------------------------------------
+# degraded-fraction aggregation
+# ---------------------------------------------------------------------------
+class TestDegradedAggregation:
+    def test_seed_mean_fraction(self):
+        """1 degraded seed of 5 reads 0.2 in the aggregate (and in the CSV
+        / JSON columns derived from it), not 1.0."""
+        cells = [SweepCell(policy="fc", nodes=2, cores=6, intensity=15,
+                           seed=s, backend="scan") for s in range(5)]
+        metrics = [{"R_avg": 1.0, "n": 10.0} for _ in cells]
+        metrics[3] = {"R_avg": 1.0, "n": 10.0, "degraded": 1.0}
+        res = SweepResult(results=[CellResult(c, m)
+                                   for c, m in zip(cells, metrics)])
+        row, = res.aggregate()
+        assert row["seeds"] == 5
+        assert row["degraded"] == pytest.approx(0.2)
+
+    def test_fully_eligible_emits_zero_not_missing(self):
+        cells = [SweepCell(policy="fc", seed=s) for s in range(2)]
+        res = SweepResult(results=[CellResult(c, {"R_avg": 2.0})
+                                   for c in cells])
+        row, = res.aggregate()
+        assert row["degraded"] == 0.0
+
+    @needs_jax
+    def test_end_to_end_sweep_emits_zero(self):
+        spec = SweepSpec(policies=("fifo",), nodes=(2,), cores=(6,),
+                         intensities=(10,), seeds=1, backends=("scan",))
+        res = run_sweep(spec, workers=1)
+        row, = res.aggregate()
+        assert row["degraded"] == 0.0

@@ -92,8 +92,12 @@ class TestEligibility:
         reqs = _burst(cores=18)
         assert not cluster_scan_eligible(reqs, 2, 18, "fc")
 
-    def test_cold_ineligible(self):
-        assert not cluster_scan_eligible(_burst(), 2, 6, "fc", warm=False)
+    def test_cold_regime_eligibility(self):
+        """warm=False is in-matrix in the ample-memory prewarm regime; a
+        tight pool (evictions-for-memory reachable) stays reference-only."""
+        assert cluster_scan_eligible(_burst(), 2, 6, "fc", warm=False)
+        assert not cluster_scan_eligible(_burst(), 2, 6, "fc", warm=False,
+                                         memory_mb=512)
 
     def test_defaults_mirror_cluster_config(self):
         """fastpath's eligibility constants must track ClusterConfig, or the
@@ -174,7 +178,7 @@ class TestClusterScanParity:
         assert {r.node for r in res.requests} == {"node0", "node1", "node2"}
 
     def test_ineligible_batch_raises(self):
-        with pytest.raises(ValueError, match="always-warm"):
+        with pytest.raises(ValueError, match="ours regime"):
             simulate_cluster_cells_scan(
                 [(_burst(), 2, 6, "fc", "push", "round_robin")])
 
@@ -190,7 +194,7 @@ class TestSimulateClusterBackend:
         assert _worst_rel(_metrics(ref), _metrics(scan)) < CLUSTER_XCHECK_RTOL
 
     def test_scan_strict_raises_outside_regime(self):
-        with pytest.raises(ValueError, match="always-warm"):
+        with pytest.raises(ValueError, match="ours regime"):
             simulate_cluster(_burst(cores=18), nodes=2, cores_per_node=18,
                              policy="fc", backend="scan")
 
@@ -246,10 +250,10 @@ class TestSweepBatching:
         assert ref["R_avg"] > 0
 
     def test_run_cells_scan_strict_false_degrades(self):
-        """Cold-pool cells degrade to run_cell and are *counted*: the
-        degraded column marks them, eligible cells carry none."""
-        cells = [SweepCell(policy="fc", nodes=2, cores=6, intensity=15,
-                           warm=False, seed=0),
+        """Partial-warm-up cells degrade to run_cell and are *counted*:
+        the degraded column marks them, eligible cells carry none."""
+        cells = [SweepCell(policy="fc", nodes=2, cores=18, intensity=15,
+                           seed=0),
                  SweepCell(policy="fc", nodes=2, cores=6, intensity=15,
                            seed=0)]
         ms = run_cells_scan(cells, strict=False)
@@ -277,14 +281,21 @@ class TestCompileCache:
         assert second["size"] == first["misses"]
 
     def test_bucket_shapes_are_padded_pow2(self):
-        from repro.core.fastpath import _ScanCell, _arrival_features
+        from repro.core.fastpath import (
+            _ScanCell,
+            _arrival_features,
+            _mask_features,
+        )
         reqs = _burst()
         cell = _ScanCell(requests=reqs, feats=_arrival_features(reqs),
                          cores=6, nodes=3, policy="fc", assignment="pull")
-        (freeze, use_fc, fc_push, dyn, het, hedge, n_b, nodes_b, slots_b,
-         f_b, kq, window, fc_ring, n_ep, xtra) = cell.bucket()
-        assert not freeze and use_fc and not fc_push
-        assert not dyn and not het and not hedge and xtra == 0
+        (mask, n_b, nodes_b, slots_b, f_b, kq, window, fc_ring, n_ep,
+         n_copies, xtra) = cell.bucket()
+        flags = _mask_features(mask)
+        assert not flags["freeze"] and flags["use_fc"]
+        assert not flags["fc_push"] and not flags["cold"]
+        assert not any(flags[k] for k in ("dyn", "het", "hedge", "dup"))
+        assert xtra == 0 and n_copies == 1
         for v in (n_b, nodes_b, slots_b, f_b, kq):
             assert v & (v - 1) == 0                   # powers of two
         assert n_b >= len(reqs) and nodes_b >= 3 and slots_b >= 6

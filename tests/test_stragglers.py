@@ -412,12 +412,12 @@ class TestCapabilityMatrix:
         ok = dict(mode="ours", policy="fc", warm=True, nodes=4,
                   assignment="push")
         assert scan.supports(**ok, hedging=True, hetero=True)
-        # straggler scenarios need static capacity
-        assert not scan.supports(**ok, hedging=True, autoscale=True)
-        assert not scan.supports(**ok, hetero=True, failures=True)
-        # stealing needs a peer under push
-        assert not scan.supports(mode="ours", policy="fc", warm=True,
-                                 nodes=1, assignment="push", hedging=True)
+        # straggler scenarios compose with capacity dynamics now
+        assert scan.supports(**ok, hedging=True, autoscale=True)
+        assert scan.supports(**ok, hetero=True, failures=True)
+        # single-node push hedging self-steals, exactly like the reference
+        assert scan.supports(mode="ours", policy="fc", warm=True,
+                             nodes=1, assignment="push", hedging=True)
         # pull hedging (a structural no-op) is fine at any node count
         assert scan.supports(mode="ours", policy="fc", warm=True, nodes=1,
                              assignment="pull", hedging=True)
@@ -428,17 +428,21 @@ class TestCapabilityMatrix:
         assert cluster_scan_eligible(reqs, 2, 4, "fc", assignment="push",
                                      profile=prof,
                                      hedging=HedgingSpec())
-        # duplicate-mode racing stays reference-only
-        assert not cluster_scan_eligible(
+        # duplicate-mode racing is in-matrix (static and pull-side dynamic)
+        assert cluster_scan_eligible(
             reqs, 2, 4, "fc", assignment="push",
+            hedging=HedgingSpec(mode="duplicate"))
+        # ...except racing copies of re-arrived lost calls under push churn
+        dyn = ClusterDynamics(autoscale=True)
+        assert not cluster_scan_eligible(
+            reqs, 2, 4, "fc", assignment="push", dynamics=dyn,
             hedging=HedgingSpec(mode="duplicate"))
         # speeds beyond the fleet are a misconfiguration
         assert not cluster_scan_eligible(
             reqs, 1, 4, "fc", profile=NodeSpeedProfile(speeds=(1.0, 0.5)))
-        # straggler + dynamics combinations fall back to the reference
-        dyn = ClusterDynamics(autoscale=True)
-        assert not cluster_scan_eligible(reqs, 2, 4, "fc", dynamics=dyn,
-                                         profile=prof)
+        # straggler + dynamics combinations run on the scan kernel now
+        assert cluster_scan_eligible(reqs, 2, 4, "fc", dynamics=dyn,
+                                     profile=prof)
 
 
 # ---------------------------------------------------------------------------

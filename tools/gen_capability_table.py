@@ -1,0 +1,120 @@
+"""Regenerate the README backend-capability table from ``supports()``.
+
+The markdown table between the ``<!-- capability-matrix:begin -->`` /
+``<!-- capability-matrix:end -->`` markers in README.md is *generated*, not
+hand-written: every yes/no is the literal return value of the registered
+backend's ``supports()`` for that scenario, so the docs cannot drift from
+the routing matrix.  ``--check`` mode (used by tests and CI) regenerates
+the table and fails if the README disagrees -- which also catches a
+previously-green ``supports()`` row regressing to ``False``.
+
+Usage::
+
+    PYTHONPATH=src python tools/gen_capability_table.py            # rewrite
+    PYTHONPATH=src python tools/gen_capability_table.py --check    # verify
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.core.simulator import get_backend
+
+BEGIN = "<!-- capability-matrix:begin -->"
+END = "<!-- capability-matrix:end -->"
+
+BACKENDS = ("reference", "vectorized", "scan")
+
+# Canonical scenario rows: label -> supports() kwargs.  Axes not named
+# default to the single-node ours-mode warm regime.
+SCENARIOS: list[tuple[str, dict]] = [
+    ("ours, single node, warm",
+     dict()),
+    ("ours, single node, cold starts (`warm=False`)",
+     dict(warm=False)),
+    ("stock baseline (processor sharing)",
+     dict(mode="baseline")),
+    ("cluster, pull assignment",
+     dict(nodes=4, assignment="pull")),
+    ("cluster, push assignment",
+     dict(nodes=4, assignment="push")),
+    ("cluster, cold starts",
+     dict(nodes=4, assignment="pull", warm=False)),
+    ("autoscaling",
+     dict(nodes=4, assignment="push", autoscale=True)),
+    ("failure injection (`nodes >= 2`)",
+     dict(nodes=4, assignment="push", failures=True)),
+    ("failure injection, single node",
+     dict(nodes=1, failures=True)),
+    ("heterogeneous speeds / degradation",
+     dict(nodes=4, assignment="pull", hetero=True)),
+    ("hedging (steal or duplicate)",
+     dict(nodes=4, assignment="push", hedging=True)),
+    ("hedging x failures",
+     dict(nodes=4, assignment="push", hedging=True, failures=True)),
+    ("hedging x autoscaling",
+     dict(nodes=4, assignment="push", hedging=True, autoscale=True)),
+    ("hetero x failures x hedging",
+     dict(nodes=4, assignment="push", hetero=True, failures=True,
+          hedging=True)),
+]
+
+
+def _supports(backend_name: str, kwargs: dict) -> bool:
+    base = dict(mode="ours", policy="fc", warm=True, nodes=1,
+                assignment="pull", autoscale=False, failures=False,
+                hedging=False, hetero=False)
+    base.update(kwargs)
+    return bool(get_backend(backend_name).supports(**base))
+
+
+def render_table() -> str:
+    lines = [
+        "| scenario | " + " | ".join(f"`{b}`" for b in BACKENDS) + " |",
+        "|" + "---|" * (len(BACKENDS) + 1),
+    ]
+    for label, kwargs in SCENARIOS:
+        cells = " | ".join(
+            "yes" if _supports(b, kwargs) else "no" for b in BACKENDS)
+        lines.append(f"| {label} | {cells} |")
+    return "\n".join(lines)
+
+
+def splice(readme: str, table: str) -> str:
+    try:
+        head, rest = readme.split(BEGIN, 1)
+        _, tail = rest.split(END, 1)
+    except ValueError:
+        raise SystemExit(
+            f"README.md is missing the {BEGIN} / {END} markers") from None
+    return f"{head}{BEGIN}\n{table}\n{END}{tail}"
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help="verify README matches supports(); do not write")
+    ap.add_argument("--readme", type=Path,
+                    default=Path(__file__).resolve().parent.parent
+                    / "README.md")
+    args = ap.parse_args(argv)
+
+    readme = args.readme.read_text()
+    updated = splice(readme, render_table())
+    if args.check:
+        if updated != readme:
+            print("capability table out of date: run "
+                  "PYTHONPATH=src python tools/gen_capability_table.py",
+                  file=sys.stderr)
+            return 1
+        print("capability table in sync with supports()")
+        return 0
+    args.readme.write_text(updated)
+    print(f"wrote capability table ({len(SCENARIOS)} scenarios) "
+          f"to {args.readme}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
