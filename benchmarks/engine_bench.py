@@ -27,7 +27,15 @@ cache first); the cold wall and the bucket count are reported alongside.
 rows -- hedging x autoscale x failure schedules, duplicate-mode racing,
 and the cold (``warm=False``) regime -- entirely on the scan backend,
 asserting zero degraded cells and exact backup/steal/failure counts
-against a stratified reference sample."""
+against a stratified reference sample.
+
+``mega_rows`` (``--rows mega``) is the fused-path headline: a 100k-cell
+policy x intensity x fleet grid through the metrics-only interactive
+path (shared workloads, async bucket dispatch, plane-packed carries),
+cross-checked bit-identically against the write-back path and by rtol
+against the reference event loop, with a roofline-style per-bucket
+breakdown (build / compile / dispatch / host-sync) and the measured
+cells/sec ratio over the legacy per-cell pipeline."""
 
 import json
 import time
@@ -519,6 +527,139 @@ def matrix_rows(quick: bool = False,
     return rows
 
 
+def mega_spec(quick: bool = False) -> SweepSpec:
+    """The 100k-cell interactive-sweep grid: every policy x intensity x
+    fleet at a pinned offered load (``workload_cores=16``, so cells that
+    differ only in policy or fleet share one generated burst through the
+    metrics-only path's workload cache).  Full mode is 100,000 cells
+    (5 policies x 2 fleets x 5 intensities x 2000 seeds); quick is a
+    240-cell CI slice of the same shape."""
+    if quick:
+        return SweepSpec(policies=("fifo", "sept", "fc"),
+                         nodes=(2, 4), cores=(8,),
+                         intensities=(10, 20), seeds=20,
+                         workload_cores=16, backends=("scan",))
+    return SweepSpec(policies=("fifo", "sept", "eect", "rect", "fc"),
+                     nodes=(2, 4), cores=(8,),
+                     intensities=(10, 15, 20, 25, 30), seeds=2000,
+                     workload_cores=16, backends=("scan",))
+
+
+def mega_rows(quick: bool = False,
+              artifacts: str | None = None) -> list[dict]:
+    """The fused-path headline: run the mega grid through
+    ``run_cells_scan(metrics_only=True)`` (strict -- a single cell falling
+    off the scan path fails the row), cross-check a stratified sample two
+    ways (bit-identical against the write-back scan path, rtol against the
+    reference event loop), report cells/sec against the legacy per-cell
+    pipeline, and emit a roofline-style per-bucket breakdown of where the
+    wall went (build vs compile vs dispatch vs host sync)."""
+    try:
+        import jax  # noqa: F401
+    except ImportError:
+        return [{"name": "engine/mega", "us_per_call": 0.0,
+                 "derived": "skipped=no-jax"}]
+    from repro.core import scan_bucket_timings, scan_timings_clear
+    from repro.core.sweep import CLUSTER_XCHECK_RTOL
+    from .roofline import analyse_scan_buckets
+
+    cells = mega_spec(quick).cells()
+
+    scan_timings_clear()
+    t0 = time.perf_counter()
+    rows_mo = run_cells_scan(cells, metrics_only=True)
+    t_mega = time.perf_counter() - t0
+    degraded = sum(1 for m in rows_mo if m.get("degraded"))
+    if degraded:        # strict=True already raises; belt and braces
+        raise AssertionError(f"mega: {degraded} degraded cell(s)")
+    buckets = analyse_scan_buckets(scan_bucket_timings())
+    tune_new = sum(b["tune_s"] for b in buckets)
+    compile_new = sum(b["compile_s"] for b in buckets) + tune_new
+
+    # legacy rate: the same cells through the PR-6-era interactive path
+    # (per-cell workload generation + full write-back).  XLA compiles and
+    # chunk auto-tune probes are one-time-per-process on BOTH paths, so the
+    # headline ratio compares the setup-excluded walls (each path's own
+    # timing records say how much of its wall was compile/tune)
+    stride = max(1, len(cells) // (24 if quick else 64))
+    sample_idx = list(range(0, len(cells), stride))
+    sample = [cells[i] for i in sample_idx]
+    scan_timings_clear()
+    t0 = time.perf_counter()
+    rows_wb = run_cells_scan(sample, metrics_only=False)
+    t_legacy = time.perf_counter() - t0
+    compile_old = sum(r["compile_s"] + r.get("tune_s", 0.0)
+                      for r in scan_bucket_timings())
+    rate_new = len(cells) / max(t_mega - compile_new, 1e-9)
+    rate_old = len(sample) / max(t_legacy - compile_old, 1e-9)
+
+    # cross-check 1: metrics-only rows must be BIT-identical to the
+    # write-back path's rows on the stratified sample
+    for i, wb in zip(sample_idx, rows_wb):
+        mo = rows_mo[i]
+        for k, v in wb.items():
+            if mo.get(k) != v:
+                raise AssertionError(
+                    f"mega metrics-only mismatch on {cells[i].label()}: "
+                    f"{k} {mo.get(k)} != {v}")
+    # cross-check 2: a small slice against the reference event loop
+    ref_n = 3 if quick else 6
+    ref_idx = sample_idx[::max(1, len(sample_idx) // ref_n)]
+    worst_err = 0.0
+    for i in ref_idx:
+        cell = cells[i]
+        ref_m = run_cell(replace(cell, backend="reference",
+                                 cross_check=False))
+        mo = rows_mo[i]
+        err = max(abs(ref_m[k] - mo[k]) / max(abs(ref_m[k]), 1e-9)
+                  for k in ("R_avg", "R_p95", "max_c"))
+        worst_err = max(worst_err, err)
+        if err > CLUSTER_XCHECK_RTOL:
+            raise AssertionError(
+                f"mega reference cross-check breach on {cell.label()}: "
+                f"{err:.3f}")
+
+    if artifacts:
+        import os
+        os.makedirs(artifacts, exist_ok=True)
+        with open(f"{artifacts}/mega_timings.json", "w") as fh:
+            json.dump({"cells": len(cells), "mega_s": t_mega,
+                       "compile_s": compile_new, "tune_s": tune_new,
+                       "cells_per_s": rate_new,
+                       "legacy_cells_per_s": rate_old,
+                       "speedup": rate_new / max(rate_old, 1e-9),
+                       "degraded": 0, "buckets": buckets}, fh, indent=1)
+
+    rows = [{
+        "name": "engine/mega",
+        "us_per_call": t_mega / len(cells) * 1e6,
+        "derived": (
+            f"cells={len(cells)};degraded=0;mega_s={t_mega:.2f};"
+            f"compile_s={compile_new:.2f};tune_s={tune_new:.2f};"
+            f"cells_per_s={rate_new:.0f};"
+            f"legacy_cells_per_s={rate_old:.0f};"
+            f"speedup={rate_new / max(rate_old, 1e-9):.1f}x;"
+            f"buckets={len(buckets)};xcheck_exact_n={len(sample)};"
+            f"xcheck_ref_n={len(ref_idx)};"
+            f"xcheck_worst={worst_err:.2e}"),
+    }]
+    for i, b in enumerate(buckets[:8]):
+        rows.append({
+            "name": f"engine/mega_bucket{i}",
+            "us_per_call": b["total_s"] / max(b["cells"], 1) * 1e6,
+            "derived": (
+                f"dominant={b['dominant']};{b['bucket']};bsz={b['bsz']};"
+                f"cells={b['cells']};chunks={b['chunks']};"
+                f"build_ms={b['build_s']*1e3:.0f};"
+                f"compile_ms={b['compile_s']*1e3:.0f};"
+                f"tune_ms={b['tune_s']*1e3:.0f};"
+                f"dispatch_ms={b['dispatch_s']*1e3:.0f};"
+                f"sync_ms={b['sync_s']*1e3:.0f};"
+                f"cells_per_s={b['cells_per_s']:.0f}"),
+        })
+    return rows
+
+
 def _engine_cell(cell: SweepCell, quick: bool = False) -> dict:
     """One policy on the live engine; returns sweep-shaped metrics."""
     from repro.configs import get_config
@@ -549,7 +690,7 @@ def _engine_cell(cell: SweepCell, quick: bool = False) -> dict:
 
 
 ROW_GROUPS = ("all", "engine", "backend", "cluster", "frontier",
-              "straggler", "matrix")
+              "straggler", "matrix", "mega")
 
 
 def run(quick: bool = False, backend: str = "vectorized",
@@ -581,6 +722,8 @@ def run(quick: bool = False, backend: str = "vectorized",
         rows.extend(straggler_rows(quick, artifacts=artifacts))
     if rows_group in ("all", "matrix"):
         rows.extend(matrix_rows(quick, artifacts=artifacts))
+    if rows_group in ("all", "mega"):
+        rows.extend(mega_rows(quick, artifacts=artifacts))
     return rows
 
 

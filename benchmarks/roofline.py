@@ -74,6 +74,38 @@ def analyse(rec: dict) -> dict:
     }
 
 
+def analyse_scan_buckets(recs: list[dict]) -> list[dict]:
+    """Roofline-style breakdown for the simulator's scan path: aggregate the
+    per-dispatch timing records from ``repro.core.scan_bucket_timings()``
+    into one row per bucket shape, splitting the wall into host build (row
+    fill), XLA compile, async dispatch (enqueue) and host sync (the block on
+    results), with the dominant term named -- the mega-sweep analogue of the
+    TPU compute/memory/collective split above."""
+    by_bucket: dict[str, dict] = {}
+    for r in recs:
+        agg = by_bucket.setdefault(r["bucket"], {
+            "bucket": r["bucket"], "bsz": r["bsz"], "cells": 0,
+            "chunks": 0, "build_s": 0.0, "compile_s": 0.0,
+            "dispatch_s": 0.0, "sync_s": 0.0, "tune_s": 0.0})
+        agg["cells"] += r["cells"]
+        agg["chunks"] += 1 if r["cells"] else 0   # tune records aren't chunks
+        agg["bsz"] = max(agg["bsz"], r["bsz"])
+        for k in ("build_s", "compile_s", "dispatch_s", "sync_s"):
+            agg[k] += r[k]
+        agg["tune_s"] += r.get("tune_s", 0.0)
+    out = []
+    for agg in by_bucket.values():
+        terms = {k: agg[k] for k in ("build_s", "compile_s",
+                                     "dispatch_s", "sync_s", "tune_s")}
+        agg["dominant"] = max(terms, key=terms.get)
+        agg["total_s"] = sum(terms.values())
+        agg["cells_per_s"] = (agg["cells"] / agg["total_s"]
+                              if agg["total_s"] > 0 else 0.0)
+        out.append(agg)
+    out.sort(key=lambda a: -a["total_s"])
+    return out
+
+
 def load_records(mesh: str = "sp") -> list[dict]:
     recs = []
     for f in sorted(ART_DIR.glob(f"*__{mesh}.json")):

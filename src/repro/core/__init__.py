@@ -38,9 +38,11 @@ from .fastpath import (
     ScanBackend,
     VectorizedBackend,
     cluster_scan_eligible,
+    scan_bucket_timings,
     scan_cache_clear,
     scan_cache_stats,
     scan_eligible,
+    scan_timings_clear,
     simulate_cells_scan,
     simulate_cluster_cells_scan,
     simulate_cluster_scan,
@@ -177,8 +179,10 @@ __all__ = [
     "run_cell",
     "run_cells_scan",
     "run_sweep",
+    "scan_bucket_timings",
     "scan_cache_clear",
     "scan_cache_stats",
+    "scan_timings_clear",
     "scan_eligible",
     "simulate_baseline_cluster",
     "simulate_cells_scan",

@@ -56,10 +56,12 @@ engine falls back).
 
 from __future__ import annotations
 
+import contextlib
 import heapq
 import os
+import time
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from functools import partial
 
 import numpy as np
@@ -79,7 +81,7 @@ from .simulator import (
 )
 from .containers import COLD_CREATE_S, PREWARM_INIT_S
 from .estimator import DEFAULT_FC_HORIZON, DEFAULT_WINDOW
-from .workload import PROFILES, SEBS_MEMORY_MB
+from .workload import PROFILES, SEBS_MEMORY_MB, STRETCH_REFERENCE_S
 
 POLICY_NAMES = ("fifo", "sept", "eect", "rect", "fc")
 
@@ -581,13 +583,206 @@ def scan_eligible(
 _RORD_Q = 2 ** 30
 
 
-def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
-                      fc_push, dyn, het, hedge, cold, dup, n_copies, n_ep,
-                      fc_ring, horizon, n_steps):
+class _PlaneLayout:
+    """Contiguous batch-major packing of the scan carry.
+
+    Every float entry of the carry dict flattens into one **clocks plane**
+    (``clk``, f32 for static buckets / f64 for dynamic ones) and every
+    int/bool entry into one **counters plane** (``ctr``, int32), in
+    sorted-key order -- so the whole per-step state is two dense tensors
+    instead of ~20 scattered arrays.  That is what lets the step compile to
+    a handful of fused kernels (XLA fuses the unpack/update/pack chain into
+    the step body) and what makes the carry resident as two VMEM buffers on
+    the Pallas path (``repro.kernels.event_step``).  The layout is a pure
+    function of the carry *spec* (shapes + dtypes), so the packer
+    (:func:`_make_planes`) and the kernel's unpacker derive identical
+    offsets independently."""
+
+    __slots__ = ("fparts", "iparts", "f_len", "i_len")
+
+    def __init__(self, spec: dict):
+        import jax.numpy as jnp
+
+        self.fparts: list[tuple[str, int, int, tuple]] = []
+        self.iparts: list[tuple[str, int, int, tuple, bool]] = []
+        fo = io = 0
+        for k in sorted(spec):
+            s = spec[k]
+            size = 1
+            for d in s.shape:
+                size *= int(d)
+            if jnp.issubdtype(s.dtype, jnp.floating):
+                self.fparts.append((k, fo, fo + size, tuple(s.shape)))
+                fo += size
+            else:
+                self.iparts.append((k, io, io + size, tuple(s.shape),
+                                    s.dtype == jnp.bool_))
+                io += size
+        self.f_len, self.i_len = fo, io
+
+    def pack(self, st: dict):
+        """Carry dict -> ``(clk, ctr)`` plane pair (bools widen to int32)."""
+        import jax.numpy as jnp
+
+        clk = jnp.concatenate([jnp.ravel(st[k]) for k, _, _, _
+                               in self.fparts])
+        ctr = jnp.concatenate([jnp.ravel(st[k]).astype(jnp.int32)
+                               for k, _, _, _, _ in self.iparts])
+        return clk, ctr
+
+    def unpack(self, clk, ctr) -> dict:
+        """``(clk, ctr)`` plane pair -> carry dict (static slices, so XLA
+        sees them as zero-copy views into the planes)."""
+        st = {}
+        for k, lo, hi, shape in self.fparts:
+            st[k] = clk[lo:hi].reshape(shape)
+        for k, lo, hi, shape, isbool in self.iparts:
+            v = ctr[lo:hi].reshape(shape)
+            st[k] = v.astype(bool) if isbool else v
+        return st
+
+
+def _make_state0(inp, *, n_nodes, n_slots, window, freeze, fc_push, dyn,
+                 het, hedge, cold, dup, n_copies, fc_ring):
+    """Initial carry dict for one cell (the ``state0`` of the event scan).
+
+    Split out of the kernel so three consumers share one definition: the
+    kernel itself (via :func:`_carry_layout` / ``jax.eval_shape`` -- the
+    plane layout is derived from this function's output spec), the jitted
+    plane initializer (:func:`_make_planes`, whose output buffers the scan
+    runner donates back as the carry), and the Pallas kernel's static
+    offset table."""
+    import jax.numpy as jnp
+
+    t_arr = inp["t"]
+    nodes = inp["nodes"]
+    ring0, rsum0, rlen0, rpos0 = (inp["ring0"], inp["rsum0"],
+                                  inp["rlen0"], inp["rpos0"])
+    n = t_arr.shape[0] - 1           # trailing +inf sentinel
+    ft = t_arr.dtype
+    inf = jnp.asarray(jnp.inf, dtype=ft)
+    nq = n_copies * (n + 1) if dup else n + 1
+    n_est = n_nodes if freeze else 1
+    n_fns = ring0.shape[1]
+    state0 = {
+        "ai": jnp.int32(0),
+        "head": jnp.zeros(n_fns, dtype=jnp.int32),
+        "fin_s": jnp.full((n_nodes, n_slots), jnp.inf, dtype=ft),
+        "idx_s": jnp.zeros((n_nodes, n_slots), dtype=jnp.int32),
+        "busy": jnp.zeros(n_nodes, dtype=jnp.int32),
+        "qn": jnp.zeros(n_nodes, dtype=jnp.int32),
+        "chan": jnp.zeros(n_nodes, dtype=ft),
+        "ring": ring0, "rsum": rsum0, "rlen": rlen0, "rpos": rpos0,
+        "last_t": jnp.zeros((n_est, n_fns), dtype=ft),
+        "prev_t": jnp.zeros((n_est, n_fns), dtype=ft),
+        "narr": jnp.zeros((n_est, n_fns), dtype=jnp.int32),
+    }
+    if freeze:
+        state0.update(
+            pend=jnp.zeros(nq, dtype=bool),
+            fprio=jnp.zeros(nq, dtype=ft),
+            node_of=jnp.zeros(nq, dtype=jnp.int32),
+        )
+    if fc_push:
+        state0.update(
+            fcr=jnp.full((n_nodes, n_fns, fc_ring), -jnp.inf, dtype=ft),
+            fcp=jnp.zeros((n_nodes, n_fns), dtype=jnp.int32),
+        )
+    if cold:
+        state0.update(
+            # every pool starts empty in the warm=False regime (reference:
+            # warm_functions=None skips warm_up); ample memory keeps the
+            # prewarm pool inexhaustible, so only free-counts need carrying
+            freec=jnp.zeros((n_nodes, n_fns), dtype=jnp.int32),
+            ncold=jnp.int32(0), nevt=jnp.int32(0),
+            coldq=jnp.zeros(n + 1, dtype=bool),
+        )
+    if hedge:
+        state0.update(
+            hedge_t=jnp.full(n + 1, jnp.inf, dtype=ft),
+            att=jnp.zeros(n + 1, dtype=jnp.int32),
+            nbk=jnp.int32(0),
+            stolen=jnp.zeros(n + 1, dtype=bool),
+            # controller estimator starts EMPTY, like the reference
+            # Cluster's _estimator (nodes get the §V-A warm seed, the
+            # controller does not)
+            cring=jnp.zeros((n_fns, window), dtype=ft),
+            crsum=jnp.zeros(n_fns, dtype=ft),
+            crlen=jnp.zeros(n_fns, dtype=jnp.int32),
+            crpos=jnp.zeros(n_fns, dtype=jnp.int32),
+            qseq=jnp.zeros(nq, dtype=jnp.int32),
+            stepc=jnp.int32(0),
+            ndone=jnp.int32(0),
+        )
+        if dyn:
+            state0.update(unhedge=jnp.zeros(n + 1, dtype=bool))
+            if freeze:
+                state0.update(hedge_t2=jnp.full(n + 1, jnp.inf, dtype=ft))
+    if dup:
+        state0.update(
+            done0=jnp.zeros(n + 1, dtype=bool),
+            win_start=jnp.zeros(n + 1, dtype=ft),
+            win_fin=jnp.zeros(n + 1, dtype=ft),
+            win_node=jnp.zeros(n + 1, dtype=jnp.int32),
+            start_q=jnp.zeros(nq, dtype=ft),
+        )
+    if het and freeze:
+        state0["sspd"] = jnp.ones((n_nodes, n_slots), dtype=ft)
+    if dyn:
+        state0.update(
+            act_t=inp["act0"], dead=jnp.zeros(n_nodes, dtype=bool),
+            killq=inp["killt"],
+            act_pend=jnp.zeros(n_nodes, dtype=bool),
+            rearr=jnp.full(n + 1, jnp.inf, dtype=ft),
+            next_tick=jnp.where(inp["dynp"][4] > 0, inp["dynp"][0], inf),
+            prov=nodes.astype(jnp.int32),
+            nfail=jnp.int32(0), ndone=jnp.int32(0),
+        )
+        if freeze:
+            state0.update(
+                dseq=jnp.zeros((n_nodes, n_slots), dtype=jnp.int32),
+                dcnt=jnp.int32(0),
+                rord=jnp.zeros(n + 1, dtype=jnp.int32),
+            )
+        if not freeze:
+            state0["xq"] = jnp.zeros(n + 1, dtype=bool)
+            state0["rq_rt"] = jnp.zeros(n + 1, dtype=ft)
+            state0["enq_t"] = t_arr          # fresh calls enqueue at receive
+    return state0
+
+
+def _carry_layout(inp, **flags) -> _PlaneLayout:
+    """Plane layout for a cell's carry, derived shape-only (``eval_shape``
+    never materializes the state).  ``inp`` may hold concrete arrays,
+    tracers or ``ShapeDtypeStruct`` leaves; float64 buckets must call this
+    under ``enable_x64`` so the spec dtypes are not canonicalized down."""
+    import jax
+
+    return _PlaneLayout(jax.eval_shape(partial(_make_state0, **flags), inp))
+
+
+def _make_planes(inp, **flags):
+    """Per-cell initial carry as the packed ``(clk, ctr)`` plane pair.
+    vmapped + jitted by the scan runner; its output buffers are donated
+    straight back into the scan dispatch."""
+    layout = _carry_layout(inp, **flags)
+    return layout.pack(_make_state0(inp, **flags))
+
+
+def _scan_cell_kernel(clk, ctr, inp, *, n_nodes, n_slots, window, freeze,
+                      use_fc, fc_push, dyn, het, hedge, cold, dup, n_copies,
+                      n_ep, fc_ring, horizon, n_steps):
     """One cell's event scan over a whole **cluster**: slot-occupancy and
     channel clocks carry a node axis, and the per-event dispatch includes the
-    routing decision.  vmapped over the batch by the caller; ``inp`` is a
-    dict of per-cell arrays (see ``_run_scan_bucket``).
+    routing decision.  vmapped over the batch by the caller (via the
+    ``repro.kernels.ops.event_step`` dispatcher); ``inp`` is a dict of
+    per-cell arrays (see ``_run_scan_bucket``) and ``(clk, ctr)`` is the
+    cell's initial carry as a packed :class:`_PlaneLayout` plane pair
+    (produced by :func:`_make_planes`, whose buffers the runner donates).
+    The ``lax.scan`` carry is that same plane pair -- two contiguous
+    tensors -- with the per-segment dict view reconstructed by static
+    slicing inside the step, so XLA fuses the whole step into a handful of
+    kernels instead of threading ~20 small carry arrays.
 
     The carry is assembled as an **ordered pipeline of feature-flagged
     segments** (see ``_CARRY_SEGMENTS``): base slots/queue/channel state,
@@ -1344,95 +1539,21 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
                 nxt.update(xq=xq, rq_rt=rq_rt, enq_t=enq_t)
         return nxt, out
 
-    n_est = n_nodes if freeze else 1
-    n_fns = ring0.shape[1]
-    state0 = {
-        "ai": jnp.int32(0),
-        "head": jnp.zeros(n_fns, dtype=jnp.int32),
-        "fin_s": jnp.full((n_nodes, n_slots), jnp.inf, dtype=ft),
-        "idx_s": jnp.zeros((n_nodes, n_slots), dtype=jnp.int32),
-        "busy": jnp.zeros(n_nodes, dtype=jnp.int32),
-        "qn": jnp.zeros(n_nodes, dtype=jnp.int32),
-        "chan": jnp.zeros(n_nodes, dtype=ft),
-        "ring": ring0, "rsum": rsum0, "rlen": rlen0, "rpos": rpos0,
-        "last_t": jnp.zeros((n_est, n_fns), dtype=ft),
-        "prev_t": jnp.zeros((n_est, n_fns), dtype=ft),
-        "narr": jnp.zeros((n_est, n_fns), dtype=jnp.int32),
-    }
-    if freeze:
-        state0.update(
-            pend=jnp.zeros(nq, dtype=bool),
-            fprio=jnp.zeros(nq, dtype=ft),
-            node_of=jnp.zeros(nq, dtype=jnp.int32),
-        )
-    if fc_push:
-        state0.update(
-            fcr=jnp.full((n_nodes, n_fns, fc_ring), -jnp.inf, dtype=ft),
-            fcp=jnp.zeros((n_nodes, n_fns), dtype=jnp.int32),
-        )
-    if cold:
-        state0.update(
-            # every pool starts empty in the warm=False regime (reference:
-            # warm_functions=None skips warm_up); ample memory keeps the
-            # prewarm pool inexhaustible, so only free-counts need carrying
-            freec=jnp.zeros((n_nodes, n_fns), dtype=jnp.int32),
-            ncold=jnp.int32(0), nevt=jnp.int32(0),
-            coldq=jnp.zeros(n + 1, dtype=bool),
-        )
-    if hedge:
-        state0.update(
-            hedge_t=jnp.full(n + 1, jnp.inf, dtype=ft),
-            att=jnp.zeros(n + 1, dtype=jnp.int32),
-            nbk=jnp.int32(0),
-            stolen=jnp.zeros(n + 1, dtype=bool),
-            # controller estimator starts EMPTY, like the reference
-            # Cluster's _estimator (nodes get the §V-A warm seed, the
-            # controller does not)
-            cring=jnp.zeros((n_fns, window), dtype=ft),
-            crsum=jnp.zeros(n_fns, dtype=ft),
-            crlen=jnp.zeros(n_fns, dtype=jnp.int32),
-            crpos=jnp.zeros(n_fns, dtype=jnp.int32),
-            qseq=jnp.zeros(nq, dtype=jnp.int32),
-            stepc=jnp.int32(0),
-            ndone=jnp.int32(0),
-        )
-        if dyn:
-            state0.update(unhedge=jnp.zeros(n + 1, dtype=bool))
-            if freeze:
-                state0.update(hedge_t2=jnp.full(n + 1, jnp.inf, dtype=ft))
-    if dup:
-        state0.update(
-            done0=jnp.zeros(n + 1, dtype=bool),
-            win_start=jnp.zeros(n + 1, dtype=ft),
-            win_fin=jnp.zeros(n + 1, dtype=ft),
-            win_node=jnp.zeros(n + 1, dtype=jnp.int32),
-            start_q=jnp.zeros(nq, dtype=ft),
-        )
-    if het and freeze:
-        state0["sspd"] = jnp.ones((n_nodes, n_slots), dtype=ft)
-    if dyn:
-        state0.update(
-            act_t=inp["act0"], dead=jnp.zeros(n_nodes, dtype=bool),
-            killq=inp["killt"],
-            act_pend=jnp.zeros(n_nodes, dtype=bool),
-            rearr=jnp.full(n + 1, jnp.inf, dtype=ft),
-            next_tick=jnp.where(inp["dynp"][4] > 0, inp["dynp"][0], inf),
-            prov=nodes.astype(jnp.int32),
-            nfail=jnp.int32(0), ndone=jnp.int32(0),
-        )
-        if freeze:
-            state0.update(
-                dseq=jnp.zeros((n_nodes, n_slots), dtype=jnp.int32),
-                dcnt=jnp.int32(0),
-                rord=jnp.zeros(n + 1, dtype=jnp.int32),
-            )
-        if not freeze:
-            state0["xq"] = jnp.zeros(n + 1, dtype=bool)
-            state0["rq_rt"] = jnp.zeros(n + 1, dtype=ft)
-            state0["enq_t"] = t_arr          # fresh calls enqueue at receive
+    # the scan carry is the packed (clk, ctr) plane pair; the dict view the
+    # step works on is reconstructed by static slicing, which XLA folds into
+    # the step body (the unpack/update/pack chain fuses away)
+    layout = _carry_layout(inp, n_nodes=n_nodes, n_slots=n_slots,
+                           window=window, freeze=freeze, fc_push=fc_push,
+                           dyn=dyn, het=het, hedge=hedge, cold=cold,
+                           dup=dup, n_copies=n_copies, fc_ring=fc_ring)
 
-    state, (j_s, es_s, fs_s, pj_s, kd_s) = jax.lax.scan(
-        step, state0, None, length=n_steps)
+    def plane_step(planes, x):
+        nxt, rec = step(layout.unpack(*planes), x)
+        return layout.pack(nxt), rec
+
+    (clk, ctr), (j_s, es_s, fs_s, pj_s, kd_s) = jax.lax.scan(
+        plane_step, (clk, ctr), None, length=n_steps)
+    state = layout.unpack(clk, ctr)
     aux = {}
     if cold:
         aux.update(ncold=state["ncold"], nevt=state["nevt"],
@@ -1482,13 +1603,45 @@ def _scan_cell_kernel(inp, *, n_nodes, n_slots, window, freeze, use_fc,
 # batch) so a whole sweep resolves to a handful of distinct bucket keys; each
 # key holds one jitted vmapped kernel, shared across run_sweep calls, so the
 # XLA compile is paid once per bucket per process.
-SCAN_BATCH_MAX = 256         # cells per dispatched chunk (memory bound)
+SCAN_BATCH_MAX = 256         # default cells/chunk (auto-tuner may override)
+# async dispatch window: chunks of a bucket are dispatched ahead of the host
+# sync so XLA overlaps transfer and compute, but every in-flight chunk pins
+# its host inputs (hedge re-dispatch needs them) and its device results, so
+# the window caps peak memory
+SCAN_INFLIGHT = int(os.environ.get("REPRO_SCAN_INFLIGHT", "4"))
+# one-time per-(bucket-shape, backend) chunk-size measurement; disable with
+# REPRO_SCAN_AUTOTUNE=0 to pin SCAN_BATCH_MAX.  Candidate chunks are capped
+# by the REPRO_SCAN_MEM_MB device-footprint budget.
+SCAN_AUTOTUNE = os.environ.get("REPRO_SCAN_AUTOTUNE", "1") != "0"
+SCAN_MEM_MB = float(os.environ.get("REPRO_SCAN_MEM_MB", "512"))
 # resident compiled runners (LRU beyond this); long sweep sessions over
 # ever-changing shapes can bound their footprint via the environment
 SCAN_CACHE_MAX = int(os.environ.get("REPRO_SCAN_CACHE_MAX", "32"))
 
-_SCAN_CACHE: dict[tuple, object] = {}    # insertion-ordered => LRU
+
+@dataclass
+class _CacheEntry:
+    """Compiled state for one bucket *shape*, across every batch size it has
+    been dispatched at.  Folding the batch axis into the entry (instead of
+    the cache key) means tail chunks, auto-tune candidates and degraded-cell
+    retries extend an existing entry rather than churning LRU eviction of
+    other shapes' runners."""
+
+    runners: dict = field(default_factory=dict)    # bsz -> (init_c, scan_c)
+    compile_s: dict = field(default_factory=dict)  # bsz -> seconds
+    hits: int = 0                 # chunk dispatches that reused a runner
+    chunk: int | None = None      # auto-tuned cells/chunk (None = untuned)
+
+
+_SCAN_CACHE: dict[tuple, _CacheEntry] = {}   # shape key -> entry (LRU order)
 _SCAN_CACHE_STATS = {"hits": 0, "misses": 0}
+
+# per-chunk dispatch timing records (input build vs compile vs device
+# dispatch vs host sync), appended by ``_run_scan_bucket`` and surfaced by
+# ``engine_bench --rows mega``; bounded so long sessions don't grow them
+_SCAN_TIMINGS: list[dict] = []
+_SCAN_TIMINGS_MAX = 4096
+_SCAN_PROFILE_DONE = False       # REPRO_SCAN_PROFILE one-shot latch
 
 
 def _pow2(x: int) -> int:
@@ -1496,17 +1649,58 @@ def _pow2(x: int) -> int:
     return 1 << max(0, int(x) - 1).bit_length()
 
 
+def _bucket_tag(shape_key: tuple) -> str:
+    """Human-readable stats/timing key for one bucket shape."""
+    return ("mask=%#x,n=%d,nodes=%d,slots=%d,fns=%d,kq=%d,win=%d,ring=%d,"
+            "ep=%d,cp=%d,xtra=%d" % shape_key)
+
+
 def scan_cache_stats() -> dict:
-    """Bucket-cache counters: ``misses`` = distinct bucket shapes compiled in
-    this process, ``hits`` = batch dispatches that reused one, ``size`` =
-    resident compiled runners."""
-    return {**_SCAN_CACHE_STATS, "size": len(_SCAN_CACHE)}
+    """Bucket-cache counters: ``misses`` = runner compilations in this
+    process, ``hits`` = chunk dispatches that reused one, ``size`` =
+    resident compiled runners across all bucket shapes, and ``entries`` =
+    per-shape detail (hit count, compiled batch sizes, compile seconds and
+    the auto-tuned chunk size)."""
+    entries = {
+        _bucket_tag(k): {
+            "hits": e.hits,
+            "batches": sorted(e.runners),
+            "compiles": len(e.compile_s),
+            "compile_s": round(sum(e.compile_s.values()), 6),
+            "chunk": e.chunk,
+        }
+        for k, e in _SCAN_CACHE.items()
+    }
+    return {**_SCAN_CACHE_STATS,
+            "size": sum(len(e.runners) for e in _SCAN_CACHE.values()),
+            "entries": entries}
 
 
 def scan_cache_clear() -> None:
     _SCAN_CACHE.clear()
     _SCAN_CACHE_STATS["hits"] = 0
     _SCAN_CACHE_STATS["misses"] = 0
+
+
+def scan_bucket_timings() -> list[dict]:
+    """Per-chunk dispatch timing records (most recent last).  Each record:
+    ``bucket`` tag, ``bsz`` (padded batch), ``cells`` (real cells), and
+    seconds split into ``build_s`` (host input fill), ``compile_s`` (XLA
+    compile, zero on cache hits), ``dispatch_s`` (device call issue) and
+    ``sync_s`` (host block + unpack).  A bucket whose chunk size was
+    auto-tuned additionally carries one ``cells == 0`` record with the
+    probe wall in ``tune_s`` -- one-time setup cost, like compiles."""
+    return list(_SCAN_TIMINGS)
+
+
+def scan_timings_clear() -> None:
+    _SCAN_TIMINGS.clear()
+
+
+def _record_timing(rec: dict) -> None:
+    if len(_SCAN_TIMINGS) >= _SCAN_TIMINGS_MAX:
+        del _SCAN_TIMINGS[:_SCAN_TIMINGS_MAX // 2]
+    _SCAN_TIMINGS.append(rec)
 
 
 # The carry of ``_scan_cell_kernel`` is an ordered pipeline of feature-flagged
@@ -1550,32 +1744,238 @@ def _mask_features(mask: int) -> dict[str, bool]:
             for bit, (name, _) in enumerate(_CARRY_SEGMENTS)}
 
 
-def _scan_runner(key: tuple):
-    """Jitted vmapped kernel for one bucket shape ``key = (feature_mask,
-    n_req, n_nodes, n_slots, n_fns, fn_queue_cap, window, fc_ring, n_ep,
-    n_copies, xtra, batch)`` -- the leading element is the
-    :func:`_feature_mask` bitmask of enabled carry segments."""
-    runner = _SCAN_CACHE.pop(key, None)
-    if runner is not None:
-        _SCAN_CACHE_STATS["hits"] += 1
-        _SCAN_CACHE[key] = runner        # re-insert: most-recently-used last
-        return runner
-    _SCAN_CACHE_STATS["misses"] += 1
+def _use64(flags: dict) -> bool:
+    # dynamic-capacity, heterogeneous, hedged and cold buckets compute in
+    # float64 (enable_x64): failure, backup and cold-start accounting depend
+    # on exact completion-vs-kill/deadline event orderings, which float32
+    # channel-clock drift can flip under heavy backlog
+    return flags["dyn"] or flags["het"] or flags["hedge"] or flags["cold"]
+
+
+def _x64_ctx(use64: bool):
+    if use64:
+        from jax.experimental import enable_x64
+        return enable_x64()
+    return contextlib.nullcontext()
+
+
+def _alloc_bucket_inputs(shape_key: tuple, bsz: int) -> dict:
+    """Zero-filled host input arrays for one bucket shape at batch ``bsz``.
+    ``t`` defaults to +inf, so the untouched allocation is a valid *idle*
+    bucket whose per-step cost matches a loaded one (the step does the same
+    gathers/wheres regardless of values) -- the auto-tuner measures on
+    exactly this, the AOT lowering takes its arg specs from it, and
+    ``_run_scan_bucket`` fills rows in place."""
+    (mask, n_b, nodes_b, slots_b, f_b, kq, window, fc_ring, n_ep, n_copies,
+     xtra) = shape_key
+    flags = _mask_features(mask)
+    freeze, use_fc = flags["freeze"], flags["use_fc"]
+    dyn, het, hedge = flags["dyn"], flags["het"], flags["hedge"]
+    fdt = np.float64 if _use64(flags) else np.float32
+    n1 = n_b + 1
+    n_est = nodes_b if freeze else 1
+
+    inp: dict[str, np.ndarray] = {
+        "t": np.full((bsz, n1), np.inf, dtype=fdt),
+        "fnid": np.zeros((bsz, n1), dtype=np.int32),
+        "p": np.zeros((bsz, n1), dtype=fdt),
+        "cost": np.zeros((bsz, n1), dtype=fdt),
+        "cnt": np.zeros((bsz, n1), dtype=fdt),
+        "home0": np.zeros((bsz, n1), dtype=np.int32),
+        "coef": np.zeros((bsz, 5), dtype=fdt),
+        "cores": np.zeros(bsz, dtype=np.int32),
+        "nodes": np.ones(bsz, dtype=np.int32),
+        "route": np.zeros(bsz, dtype=np.int32),
+        "ring0": np.zeros((bsz, n_est, f_b, window), dtype=fdt),
+        "rsum0": np.zeros((bsz, n_est, f_b), dtype=fdt),
+        "rlen0": np.zeros((bsz, n_est, f_b), dtype=np.int32),
+        "rpos0": np.zeros((bsz, n_est, f_b), dtype=np.int32),
+        # FC pull counts and the per-function queue sequences come from
+        # the static arrival stream; freeze buckets get dummy rows (the
+        # kernel never traces those branches there)
+        "cumf": np.zeros((bsz, n1 if use_fc else 1, f_b), dtype=fdt),
+        "fn_ev": (np.full((bsz, f_b, kq), n_b, dtype=np.int32)
+                  if not freeze
+                  else np.zeros((bsz, 1, 1), dtype=np.int32)),
+    }
+    if dyn:
+        inp["act0"] = np.full((bsz, nodes_b), np.inf, dtype=fdt)
+        inp["killt"] = np.full((bsz, nodes_b), np.inf, dtype=fdt)
+        # [autoscale_interval, scale_up_threshold, provision_delay,
+        #  failure_detect, autoscale_flag]
+        inp["dynp"] = np.zeros((bsz, 5), dtype=fdt)
+        inp["maxn"] = np.zeros(bsz, dtype=np.int32)
+        inp["nreq"] = np.zeros(bsz, dtype=np.int32)
+    if het:
+        inp["spd"] = np.ones((bsz, nodes_b), dtype=fdt)
+        inp["epn"] = np.full((bsz, n_ep), -1, dtype=np.int32)
+        inp["ept0"] = np.zeros((bsz, n_ep), dtype=fdt)
+        inp["ept1"] = np.zeros((bsz, n_ep), dtype=fdt)
+        inp["epf"] = np.ones((bsz, n_ep), dtype=fdt)
+    if hedge:
+        inp["hmult"] = np.ones(bsz, dtype=fdt)
+        inp["hfloor"] = np.zeros(bsz, dtype=fdt)
+        inp["hmax"] = np.zeros(bsz, dtype=np.int32)
+    return inp
+
+
+def _build_runner(shape_key: tuple, bsz: int):
+    """Trace + AOT-compile the ``(init, scan)`` executable pair for one
+    (bucket shape, batch size), timing the compile.  ``init`` is the vmapped
+    plane packer (:func:`_make_planes`); ``scan`` is the fused event-step
+    dispatch (:func:`repro.kernels.ops.event_step`) jitted with the carry
+    planes **donated**, so the initial-state buffers are reused as the scan
+    carry instead of double-allocating large buckets.  AOT lowering (instead
+    of plain ``jax.jit`` call-site tracing) is what lets the compile be
+    timed separately from the dispatch.  float64 buckets lower under
+    ``enable_x64`` -- eval_shape / lowering outside it would silently
+    canonicalize the f64 specs back to f32."""
     import jax
 
+    from ..kernels import ops as _kops
+
     (mask, n_req, n_nodes, n_slots, _, _, window, fc_ring, n_ep, n_copies,
-     xtra, _) = key
-    runner = jax.jit(jax.vmap(partial(
-        _scan_cell_kernel, n_nodes=n_nodes, n_slots=n_slots, window=window,
-        n_copies=n_copies, n_ep=n_ep, fc_ring=fc_ring,
-        horizon=DEFAULT_FC_HORIZON, n_steps=2 * n_req + xtra,
-        **_mask_features(mask))))
-    while len(_SCAN_CACHE) > max(SCAN_CACHE_MAX - 1, 0):
-        # bound resident XLA executables in long-lived processes that sweep
-        # ever-changing shapes; dict order makes this LRU eviction
-        _SCAN_CACHE.pop(next(iter(_SCAN_CACHE)))
-    _SCAN_CACHE[key] = runner
-    return runner
+     xtra) = shape_key
+    flags = _mask_features(mask)
+    state_kw = dict(n_nodes=n_nodes, n_slots=n_slots, window=window,
+                    freeze=flags["freeze"], fc_push=flags["fc_push"],
+                    dyn=flags["dyn"], het=flags["het"],
+                    hedge=flags["hedge"], cold=flags["cold"],
+                    dup=flags["dup"], n_copies=n_copies, fc_ring=fc_ring)
+    step_kw = dict(state_kw, use_fc=flags["use_fc"], n_ep=n_ep,
+                   horizon=DEFAULT_FC_HORIZON, n_steps=2 * n_req + xtra)
+
+    init_fn = jax.jit(jax.vmap(partial(_make_planes, **state_kw)))
+    scan_fn = jax.jit(partial(_kops.event_step, **step_kw),
+                      donate_argnums=(0, 1))
+
+    import warnings
+
+    with _x64_ctx(_use64(flags)), warnings.catch_warnings():
+        # the donated planes rarely alias an output (the kernel returns
+        # event records, not the final carry), but donation still lets XLA
+        # recycle them for scan temporaries -- silence the advisory
+        warnings.filterwarnings("ignore",
+                                message="Some donated buffers were not")
+        specs = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                 for k, v in _alloc_bucket_inputs(shape_key, bsz).items()}
+        t0 = time.perf_counter()
+        init_c = init_fn.lower(specs).compile()
+        clk, ctr = jax.eval_shape(init_fn, specs)
+        scan_c = scan_fn.lower(clk, ctr, specs).compile()
+        return (init_c, scan_c), time.perf_counter() - t0
+
+
+def _cache_entry(shape_key: tuple) -> _CacheEntry:
+    entry = _SCAN_CACHE.pop(shape_key, None)
+    if entry is None:
+        entry = _CacheEntry()
+    _SCAN_CACHE[shape_key] = entry       # re-insert: most-recently-used last
+    return entry
+
+
+def _evict_runners(current: tuple) -> None:
+    """Bound total resident executables: drop whole LRU entries first, then
+    the oldest batch-size runner inside the current entry -- never the one
+    just built."""
+    cap = max(SCAN_CACHE_MAX, 1)
+    while sum(len(e.runners) for e in _SCAN_CACHE.values()) > cap:
+        victim = next((k for k in _SCAN_CACHE if k != current), None)
+        if victim is not None:
+            _SCAN_CACHE.pop(victim)
+            continue
+        entry = _SCAN_CACHE[current]
+        if len(entry.runners) <= 1:
+            break
+        bsz = next(iter(entry.runners))
+        entry.runners.pop(bsz)
+        entry.compile_s.pop(bsz, None)
+
+
+def _scan_runner(key: tuple):
+    """AOT-compiled ``(init, scan)`` pair for one bucket shape at one chunk
+    batch size: ``key = (feature_mask, n_req, n_nodes, n_slots, n_fns,
+    fn_queue_cap, window, fc_ring, n_ep, n_copies, xtra, batch)`` -- the
+    leading element is the :func:`_feature_mask` bitmask of enabled carry
+    segments, the trailing one the padded chunk batch.  All batch sizes of
+    one shape share a single LRU cache entry (see :class:`_CacheEntry`)."""
+    shape_key, bsz = key[:-1], key[-1]
+    entry = _cache_entry(shape_key)
+    pair = entry.runners.pop(bsz, None)
+    if pair is not None:
+        entry.runners[bsz] = pair        # MRU within the entry as well
+        entry.hits += 1
+        _SCAN_CACHE_STATS["hits"] += 1
+        return pair
+    _SCAN_CACHE_STATS["misses"] += 1
+    pair, secs = _build_runner(shape_key, bsz)
+    entry.runners[bsz] = pair
+    entry.compile_s[bsz] = secs
+    _evict_runners(shape_key)
+    return pair
+
+
+def _bucket_bytes(shape_key: tuple, bsz: int) -> int:
+    """Rough device footprint of one chunk at batch ``bsz``: inputs, packed
+    carry planes and stacked step outputs (the x3 covers planes + XLA
+    temporaries + donation slack)."""
+    per_cell = sum(v.nbytes
+                   for v in _alloc_bucket_inputs(shape_key, 1).values())
+    n_b, xtra = shape_key[1], shape_key[10]
+    itemsize = 8 if _use64(_mask_features(shape_key[0])) else 4
+    outs = (2 * n_b + xtra) * 5 * itemsize
+    return (per_cell * 3 + outs) * bsz
+
+
+def _bucket_chunk(shape_key: tuple, n_cells: int) -> int:
+    """Cells per dispatched chunk for this bucket: the auto-tuned value when
+    one exists, else :data:`SCAN_BATCH_MAX`.  Tuning runs once per (shape,
+    backend) the first time the bucket arrives with more cells than the
+    default chunk, and the choice persists on the cache entry (visible in
+    ``scan_cache_stats()["entries"]``)."""
+    entry = _cache_entry(shape_key)
+    if entry.chunk is not None:
+        return entry.chunk
+    if not SCAN_AUTOTUNE or n_cells <= SCAN_BATCH_MAX:
+        return SCAN_BATCH_MAX
+    entry.chunk = _autotune_chunk(shape_key, n_cells)
+    return entry.chunk
+
+
+def _autotune_chunk(shape_key: tuple, n_cells: int) -> int:
+    """One-time chunk-size measurement for one bucket shape: time the idle
+    bucket (per-step cost is value-independent) at power-of-two batch sizes
+    under the :data:`SCAN_MEM_MB` footprint cap and keep the cells/sec
+    argmax.  Candidates ascend and ``max`` keeps the first maximum, so exact
+    ties resolve to the smaller batch; re-tuning the same resident entry is
+    a no-op (the choice is cached), which is what the determinism contract
+    promises."""
+    import jax
+    import jax.numpy as jnp
+
+    flags = _mask_features(shape_key[0])
+    cap = _pow2(min(n_cells, 1024))
+    cands = [b for b in (128, 256, 512, 1024)
+             if b <= cap and _bucket_bytes(shape_key, b) <= SCAN_MEM_MB * 2**20]
+    if not cands:
+        return min(SCAN_BATCH_MAX, cap)
+
+    def _rate(bsz: int) -> float:
+        init_c, scan_c = _scan_runner(shape_key + (bsz,))
+        inp = _alloc_bucket_inputs(shape_key, bsz)
+        best = np.inf
+        for _ in range(3):       # min-of-3: robust to scheduler noise
+            arrs = {k: jnp.asarray(v) for k, v in inp.items()}
+            clk, ctr = init_c(arrs)
+            t0 = time.perf_counter()
+            res = scan_c(clk, ctr, arrs)
+            jax.block_until_ready(res)
+            best = min(best, time.perf_counter() - t0)
+        return bsz / best
+
+    with _x64_ctx(_use64(flags)):
+        rates = [(b, _rate(b)) for b in cands]
+    return max(rates, key=lambda kv: kv[1])[0]
 
 
 @dataclass
@@ -1717,14 +2117,18 @@ class _ScanCell:
 
 
 def _run_scan_bucket(key: tuple, cells: list[_ScanCell]) -> list[tuple]:
-    """Dispatch one shape bucket (possibly in SCAN_BATCH_MAX chunks, each
-    padded to a power-of-two batch) and return per-cell
-    ``(start, finish, prio, node, extras)`` arrays in event order; ``extras``
-    is ``None`` for plain static-capacity cells and a dict (failure/backup
-    counters, cold-start flags, activation/dead vectors as applicable)
-    otherwise."""
+    """Dispatch one shape bucket in auto-tuned chunks (each padded to a
+    power-of-two batch) and return per-cell ``(start, finish, prio, node,
+    extras)`` arrays in event order; ``extras`` is ``None`` for plain
+    static-capacity cells and a dict (failure/backup counters, cold-start
+    flags, activation/dead vectors as applicable) otherwise.  Chunks are
+    dispatched asynchronously -- up to :data:`SCAN_INFLIGHT` in flight ahead
+    of the host sync -- with the carry planes donated inside the runner, so
+    device work overlaps the host-side fill of the next chunk."""
     import jax
     import jax.numpy as jnp
+
+    global _SCAN_PROFILE_DONE
 
     (mask, n_b, nodes_b, slots_b, f_b, kq, window, fc_ring, n_ep, n_copies,
      xtra) = key
@@ -1734,61 +2138,135 @@ def _run_scan_bucket(key: tuple, cells: list[_ScanCell]) -> list[tuple]:
     dyn, het, hedge = flags["dyn"], flags["het"], flags["hedge"]
     cold, dup = flags["cold"], flags["dup"]
     n1 = n_b + 1
-    out: list[tuple] = []
-    # dynamic-capacity, heterogeneous, hedged and cold buckets compute in
-    # float64 (enable_x64 below), so their inputs must be *built* in float64
-    # -- quantizing kill/arrival/deadline times through float32 first would
-    # merge distinct event times and reintroduce exactly the ordering flips
-    # the promotion prevents (cold cells' warm-vs-miss decisions are
-    # order-dependent integer counts in the same way)
-    use64 = dyn or het or hedge or cold
-    fdt = np.float64 if use64 else np.float32
-    for lo in range(0, len(cells), SCAN_BATCH_MAX):
-        chunk = cells[lo:lo + SCAN_BATCH_MAX]
-        bsz = _pow2(len(chunk))
-        n_est = nodes_b if freeze else 1
+    use64 = _use64(flags)
+    tag = _bucket_tag(key)
+    t_tune = time.perf_counter()
+    chunk_max = _bucket_chunk(key, len(cells))
+    t_tune = time.perf_counter() - t_tune
+    if t_tune > 0.005:
+        # the auto-tuner probed this shape (compiles + timed runs): surface
+        # the one-time cost as its own record so rate analyses can separate
+        # it from steady-state dispatch, like compile time
+        _record_timing({"bucket": tag, "bsz": 0, "cells": 0, "build_s": 0.0,
+                        "compile_s": 0.0, "dispatch_s": 0.0, "sync_s": 0.0,
+                        "tune_s": t_tune})
+    out: list[tuple | None] = [None] * len(cells)
+    pending: deque = deque()
 
-        inp: dict[str, np.ndarray] = {
-            "t": np.full((bsz, n1), np.inf, dtype=fdt),
-            "fnid": np.zeros((bsz, n1), dtype=np.int32),
-            "p": np.zeros((bsz, n1), dtype=fdt),
-            "cost": np.zeros((bsz, n1), dtype=fdt),
-            "cnt": np.zeros((bsz, n1), dtype=fdt),
-            "home0": np.zeros((bsz, n1), dtype=np.int32),
-            "coef": np.zeros((bsz, 5), dtype=fdt),
-            "cores": np.zeros(bsz, dtype=np.int32),
-            "nodes": np.ones(bsz, dtype=np.int32),
-            "route": np.zeros(bsz, dtype=np.int32),
-            "ring0": np.zeros((bsz, n_est, f_b, window), dtype=fdt),
-            "rsum0": np.zeros((bsz, n_est, f_b), dtype=fdt),
-            "rlen0": np.zeros((bsz, n_est, f_b), dtype=np.int32),
-            "rpos0": np.zeros((bsz, n_est, f_b), dtype=np.int32),
-            # FC pull counts and the per-function queue sequences come from
-            # the static arrival stream; freeze buckets get dummy rows (the
-            # kernel never traces those branches there)
-            "cumf": np.zeros((bsz, n1 if use_fc else 1, f_b), dtype=fdt),
-            "fn_ev": (np.full((bsz, f_b, kq), n_b, dtype=np.int32)
-                      if not freeze
-                      else np.zeros((bsz, 1, 1), dtype=np.int32)),
-        }
-        if dyn:
-            inp["act0"] = np.full((bsz, nodes_b), np.inf, dtype=fdt)
-            inp["killt"] = np.full((bsz, nodes_b), np.inf, dtype=fdt)
-            # [autoscale_interval, scale_up_threshold, provision_delay,
-            #  failure_detect, autoscale_flag]
-            inp["dynp"] = np.zeros((bsz, 5), dtype=fdt)
-            inp["maxn"] = np.zeros(bsz, dtype=np.int32)
-            inp["nreq"] = np.zeros(bsz, dtype=np.int32)
-        if het:
-            inp["spd"] = np.ones((bsz, nodes_b), dtype=fdt)
-            inp["epn"] = np.full((bsz, n_ep), -1, dtype=np.int32)
-            inp["ept0"] = np.zeros((bsz, n_ep), dtype=fdt)
-            inp["ept1"] = np.zeros((bsz, n_ep), dtype=fdt)
-            inp["epf"] = np.ones((bsz, n_ep), dtype=fdt)
+    def _dispatch(inp, xtra_now: int, rec: dict):
+        """Issue one chunk on the device and return the *un-synced* result
+        tree (JAX dispatch is asynchronous, so this returns as soon as the
+        work is enqueued)."""
+        bsz = inp["cores"].shape[0]
+        t0 = time.perf_counter()
+        init_c, scan_c = _scan_runner((mask, n_b, nodes_b, slots_b, f_b,
+                                       kq, window, fc_ring, n_ep, n_copies,
+                                       xtra_now, bsz))
+        rec["compile_s"] += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        with _x64_ctx(use64):
+            # float64 buckets convert inputs *inside* enable_x64 --
+            # quantizing kill/arrival/deadline times through float32 first
+            # would merge distinct event times and reintroduce exactly the
+            # ordering flips the promotion prevents
+            arrs = {k: jnp.asarray(v) for k, v in inp.items()}
+            clk, ctr = init_c(arrs)
+            res = scan_c(clk, ctr, arrs)
+        rec["dispatch_s"] += time.perf_counter() - t0
+        return res
+
+    def _finish(lo: int, chunk: list, inp: dict, res, rec: dict) -> None:
+        """Host-sync one in-flight chunk, verify hedge step budgets
+        (re-running at the strict bound when the optimistic guess fell
+        short) and unpack per-cell outputs into ``out``."""
+        t0 = time.perf_counter()
+        res = jax.tree_util.tree_map(np.asarray, res)    # blocks
         if hedge:
-            inp["hmult"] = np.ones(bsz, dtype=fdt)
-            inp["hfloor"] = np.zeros(bsz, dtype=fdt)
-            inp["hmax"] = np.zeros(bsz, dtype=np.int32)
+            ndone_b = (res[1] if dyn else res[4])["ndone"]
+            if any(int(ndone_b[b]) != len(chunk[b].feats.t)
+                   for b in range(len(chunk))):
+                # the optimistic hedge step budget fell short (a cell fired
+                # far more deadlines than requests): re-run the chunk at
+                # the strict worst-case bound, which cannot fall short by
+                # construction
+                full = max(c.dyn_budget() + c.hedge_budget_full()
+                           for c in chunk)
+                res = jax.tree_util.tree_map(
+                    np.asarray, _dispatch(inp, _pow2(full), rec))
+                ndone_b = (res[1] if dyn else res[4])["ndone"]
+                for b, cell in enumerate(chunk):
+                    if int(ndone_b[b]) != len(cell.feats.t):
+                        raise RuntimeError(
+                            "hedge scan step budget exhausted at the "
+                            f"strict bound ({full}); this is a kernel "
+                            "budget bug")
+        rec["sync_s"] += time.perf_counter() - t0
+        _record_timing(rec)
+        if not dyn:
+            start_b, finish_b, prio_b, node_b, aux = res
+            for b in range(len(chunk)):
+                ex: dict | None = {}
+                if hedge:
+                    ex.update(backups=int(aux["nbk"][b]),
+                              steals=int(aux["nstl"][b]),
+                              attempts=aux["att"][b])
+                if cold:
+                    ex.update(cold_starts=int(aux["ncold"][b]),
+                              evictions=int(aux["nevt"][b]),
+                              coldq=aux["coldq"][b])
+                out[lo + b] = (np.asarray(start_b[b], dtype=np.float64),
+                               np.asarray(finish_b[b], dtype=np.float64),
+                               np.asarray(prio_b[b], dtype=np.float64),
+                               node_b[b], ex or None)
+            return
+        (j_s, es_s, fs_s, pj_s, kd_s), summary = res
+        es_s = np.asarray(es_s, dtype=np.float64)
+        fs_s = np.asarray(fs_s, dtype=np.float64)
+        pj_s = np.asarray(pj_s, dtype=np.float64)
+        for b, cell in enumerate(chunk):
+            n = len(cell.feats.t)
+            if int(summary["ndone"][b]) != n:
+                raise RuntimeError(
+                    f"scan dynamics step budget exhausted: cell completed "
+                    f"{int(summary['ndone'][b])}/{n} requests "
+                    f"(bucket xtra={xtra}); this is a kernel budget bug")
+            # a re-dispatched lost request appears twice in the step record;
+            # numpy fancy assignment resolves duplicates last-wins in step
+            # order, which is exactly the re-dispatch overriding the lost one
+            start = np.zeros(n1)
+            finish = np.zeros(n1)
+            start[j_s[b]] = es_s[b]
+            finish[j_s[b]] = fs_s[b]
+            if freeze:
+                prio = summary["prio"][b].astype(np.float64)
+                node = summary["node"][b]
+            else:
+                prio = np.zeros(n1)
+                node = np.zeros(n1, dtype=np.int64)
+                prio[j_s[b]] = pj_s[b]
+                node[j_s[b]] = kd_s[b]
+            extras = {
+                "failures": int(summary["nfail"][b]),
+                "nodes_used": int(summary["prov"][b]),
+                "act_t": summary["act_t"][b],
+                "dead": summary["dead"][b],
+                "killt": inp["killt"][b],
+            }
+            if hedge:
+                extras.update(backups=int(summary["nbk"][b]),
+                              steals=int(summary["nstl"][b]),
+                              attempts=summary["att"][b])
+            if cold:
+                extras.update(cold_starts=int(summary["ncold"][b]),
+                              evictions=int(summary["nevt"][b]),
+                              coldq=summary["coldq"][b])
+            out[lo + b] = (start, finish, prio, node, extras)
+
+    for lo in range(0, len(cells), chunk_max):
+        chunk = cells[lo:lo + chunk_max]
+        bsz = _pow2(len(chunk))
+        t_build = time.perf_counter()
+        inp = _alloc_bucket_inputs(key, bsz)
 
         for b, cell in enumerate(chunk):
             f = cell.feats
@@ -1862,119 +2340,109 @@ def _run_scan_bucket(key: tuple, cells: list[_ScanCell]) -> list[tuple]:
                     inp["rlen0"][b, :, fi] = seed_n
                     inp["rpos0"][b, :, fi] = seed_n % window
 
-        def _dispatch(xtra_now: int):
-            run = _scan_runner((mask, n_b, nodes_b, slots_b, f_b, kq,
-                                window, fc_ring, n_ep, n_copies, xtra_now,
-                                bsz))
-            if use64:
-                # dynamic-capacity / hetero / hedged / cold buckets run in
-                # float64 (enable_x64): failure, backup and cold-start
-                # accounting depend on exact completion-vs-kill/deadline
-                # event orderings, which float32 channel-clock drift can
-                # flip under heavy backlog
-                from jax.experimental import enable_x64
-                with enable_x64():
-                    r = run({k: jnp.asarray(v) for k, v in inp.items()})
-                    return jax.tree_util.tree_map(np.asarray, r)
-            r = run({k: jnp.asarray(v) for k, v in inp.items()})
-            return jax.tree_util.tree_map(np.asarray, r)
-
-        res = _dispatch(xtra)
-        if hedge:
-            ndone_b = (res[1] if dyn else res[4])["ndone"]
-            if any(int(ndone_b[b]) != len(chunk[b].feats.t)
-                   for b in range(len(chunk))):
-                # the optimistic hedge step budget fell short (a cell fired
-                # far more deadlines than requests): re-run the chunk at
-                # the strict worst-case bound, which cannot fall short by
-                # construction
-                full = max(c.dyn_budget() + c.hedge_budget_full()
-                           for c in chunk)
-                res = _dispatch(_pow2(full))
-                ndone_b = (res[1] if dyn else res[4])["ndone"]
-                for b, cell in enumerate(chunk):
-                    if int(ndone_b[b]) != len(cell.feats.t):
-                        raise RuntimeError(
-                            "hedge scan step budget exhausted at the "
-                            f"strict bound ({full}); this is a kernel "
-                            "budget bug")
-        if not dyn:
-            start_b, finish_b, prio_b, node_b, aux = res
-            for b in range(len(chunk)):
-                ex: dict | None = {}
-                if hedge:
-                    ex.update(backups=int(aux["nbk"][b]),
-                              steals=int(aux["nstl"][b]),
-                              attempts=aux["att"][b])
-                if cold:
-                    ex.update(cold_starts=int(aux["ncold"][b]),
-                              evictions=int(aux["nevt"][b]),
-                              coldq=aux["coldq"][b])
-                out.append((np.asarray(start_b[b], dtype=np.float64),
-                            np.asarray(finish_b[b], dtype=np.float64),
-                            np.asarray(prio_b[b], dtype=np.float64),
-                            node_b[b], ex or None))
-            continue
-        (j_s, es_s, fs_s, pj_s, kd_s), summary = res
-        j_s = np.asarray(j_s)
-        es_s = np.asarray(es_s, dtype=np.float64)
-        fs_s = np.asarray(fs_s, dtype=np.float64)
-        pj_s = np.asarray(pj_s, dtype=np.float64)
-        kd_s = np.asarray(kd_s)
-        summary = {k: np.asarray(v) for k, v in summary.items()}
-        for b, cell in enumerate(chunk):
-            n = len(cell.feats.t)
-            if int(summary["ndone"][b]) != n:
-                raise RuntimeError(
-                    f"scan dynamics step budget exhausted: cell completed "
-                    f"{int(summary['ndone'][b])}/{n} requests "
-                    f"(bucket xtra={xtra}); this is a kernel budget bug")
-            # a re-dispatched lost request appears twice in the step record;
-            # numpy fancy assignment resolves duplicates last-wins in step
-            # order, which is exactly the re-dispatch overriding the lost one
-            start = np.zeros(n1)
-            finish = np.zeros(n1)
-            start[j_s[b]] = es_s[b]
-            finish[j_s[b]] = fs_s[b]
-            if freeze:
-                prio = summary["prio"][b].astype(np.float64)
-                node = summary["node"][b]
-            else:
-                prio = np.zeros(n1)
-                node = np.zeros(n1, dtype=np.int64)
-                prio[j_s[b]] = pj_s[b]
-                node[j_s[b]] = kd_s[b]
-            extras = {
-                "failures": int(summary["nfail"][b]),
-                "nodes_used": int(summary["prov"][b]),
-                "act_t": summary["act_t"][b],
-                "dead": summary["dead"][b],
-                "killt": inp["killt"][b],
-            }
-            if hedge:
-                extras.update(backups=int(summary["nbk"][b]),
-                              steals=int(summary["nstl"][b]),
-                              attempts=summary["att"][b])
-            if cold:
-                extras.update(cold_starts=int(summary["ncold"][b]),
-                              evictions=int(summary["nevt"][b]),
-                              coldq=summary["coldq"][b])
-            out.append((start, finish, prio, node, extras))
+        rec = {"bucket": tag, "bsz": bsz, "cells": len(chunk),
+               "build_s": time.perf_counter() - t_build,
+               "compile_s": 0.0, "dispatch_s": 0.0, "sync_s": 0.0}
+        if (os.environ.get("REPRO_SCAN_PROFILE") == "1"
+                and not _SCAN_PROFILE_DONE):
+            # one-shot REPRO_SCAN_PROFILE=1 hook: dump a jax.profiler trace
+            # of a single bucket dispatch (view with TensorBoard / xprof)
+            _SCAN_PROFILE_DONE = True
+            tdir = os.environ.get("REPRO_SCAN_PROFILE_DIR",
+                                  "/tmp/repro_scan_profile")
+            with jax.profiler.trace(tdir):
+                res = _dispatch(inp, xtra, rec)
+                jax.block_until_ready(res)
+        else:
+            res = _dispatch(inp, xtra, rec)
+        pending.append((lo, chunk, inp, res, rec))
+        # bounded async window: every chunk is dispatched before its
+        # predecessors are synced, so device work overlaps the host-side
+        # fill of the next chunk without pinning the whole bucket
+        while len(pending) >= max(SCAN_INFLIGHT, 1):
+            _finish(*pending.popleft())
+    while pending:
+        _finish(*pending.popleft())
     return out
 
 
-def _run_scan_cells(cells: list[_ScanCell]) -> list[SimResult]:
+@dataclass
+class ScanMetrics:
+    """Metrics-only output for one scan cell: response-time / stretch
+    arrays in **request order** plus the extras counters, with no Request
+    objects touched.  Request-order arrays make the means bit-identical to
+    the write-back path (``np.mean`` pairwise summation is order-sensitive
+    in the last ulp), and not mutating the requests is what lets callers
+    share one workload across every policy/fleet cell that uses it."""
+
+    resp: np.ndarray          # response times, request order
+    stretch: np.ndarray       # stretch values, request order
+    max_c: float              # makespan (max completion time)
+    fnids: np.ndarray         # per-request index into ``fns``
+    fns: tuple                # sorted function names
+    cold_starts: int = 0
+    evictions: int = 0
+    failures: int = 0
+    backups: int = 0
+    steals: int = 0
+    nodes_used: int = 0
+
+
+def _cell_scan_metrics(cell: _ScanCell, finish, extras,
+                       req_cache: dict) -> ScanMetrics:
+    """Fold one cell's event-order finish times into request-order metric
+    arrays, replicating the write-back arithmetic operation-for-operation
+    (``c = finish + RESP_OVERHEAD_S``; ``resp = c - r``; ``stretch = resp /
+    max(ref-or-p_true, 1e-9)``) so the results agree bitwise.  ``req_cache``
+    memoizes the per-workload arrays by list identity within one batch call
+    -- cells sharing a workload pay the Python-level extraction once."""
+    f = cell.feats
+    n = len(f.t)
+    cached = req_cache.get(id(cell.requests))
+    if cached is None:
+        r_req = np.array([req.r for req in cell.requests], dtype=np.float64)
+        den = np.array([max(STRETCH_REFERENCE_S.get(req.fn) or req.p_true,
+                            1e-9) for req in cell.requests])
+        cached = req_cache[id(cell.requests)] = (r_req, den)
+    r_req, den = cached
+    finish_req = np.empty(n, dtype=np.float64)
+    finish_req[f.order] = np.asarray(finish[:n], dtype=np.float64)
+    c_req = finish_req + RESP_OVERHEAD_S
+    resp = c_req - r_req
+    fnids = np.empty(n, dtype=np.int64)
+    fnids[f.order] = f.fn_ids
+    ex = extras or {}
+    return ScanMetrics(
+        resp=resp, stretch=resp / den, max_c=float(c_req.max()),
+        fnids=fnids, fns=tuple(f.fns),
+        cold_starts=ex.get("cold_starts", 0),
+        evictions=ex.get("evictions", 0),
+        failures=ex.get("failures", 0), backups=ex.get("backups", 0),
+        steals=ex.get("steals", 0),
+        nodes_used=ex.get("nodes_used", cell.nodes))
+
+
+def _run_scan_cells(cells: list[_ScanCell],
+                    metrics_only: bool = False) -> list:
     """Bucket, dispatch and write back a list of prepared cells (any mix of
     single-node / pull / push, static or dynamic capacity), preserving input
-    order."""
+    order.  ``metrics_only=True`` skips the per-request write-back and
+    returns :class:`ScanMetrics` rows instead of :class:`SimResult` -- the
+    interactive-sweep mode, where cells share workloads and only aggregate
+    metrics leave the batch."""
     buckets: dict[tuple, list[int]] = {}
     for i, cell in enumerate(cells):
         buckets.setdefault(cell.bucket(), []).append(i)
-    results: list[SimResult | None] = [None] * len(cells)
+    results: list = [None] * len(cells)
+    req_cache: dict = {}
     for key, idxs in buckets.items():
         arrays = _run_scan_bucket(key, [cells[i] for i in idxs])
         for i, (start, finish, prio, node, extras) in zip(idxs, arrays):
             cell = cells[i]
+            if metrics_only:
+                results[i] = _cell_scan_metrics(cell, finish, extras,
+                                                req_cache)
+                continue
             f = cell.feats
             order = f.order.tolist()
             t_list = f.t.tolist()
@@ -2026,11 +2494,28 @@ def _run_scan_cells(cells: list[_ScanCell]) -> list[SimResult]:
     return results  # type: ignore[return-value]
 
 
+def _feats_cache():
+    """Per-batch-call ``_arrival_features`` memo keyed by request-list
+    identity: cells sharing one workload (the metrics-only sweep mode) pay
+    the numpy feature extraction once.  Scoped to a single batch call so
+    recycled ``id()`` values can never alias across calls."""
+    cache: dict[int, _Arrivals] = {}
+
+    def feats(requests: list[Request]) -> _Arrivals:
+        f = cache.get(id(requests))
+        if f is None:
+            f = cache[id(requests)] = _arrival_features(requests)
+        return f
+
+    return feats
+
+
 def simulate_cells_scan(
     batch: list[tuple],
     memory_mb: int = 32 * 1024,
     container_mb: int = 128,
     validate: bool = True,
+    metrics_only: bool = False,
 ) -> list[SimResult]:
     """Run a batch of ``(requests, cores, policy[, warm])`` ours-mode
     **single-node** scenarios through the bucketed scan path (cells vmapped,
@@ -2043,9 +2528,13 @@ def simulate_cells_scan(
     Every cell must satisfy :func:`scan_eligible`; this is checked and raises
     ``ValueError`` otherwise (callers that already checked pass
     ``validate=False`` to skip the re-check).  Start/finish times are written
-    back into the request objects exactly like the other backends."""
+    back into the request objects exactly like the other backends --
+    unless ``metrics_only=True``, which leaves the requests untouched and
+    returns :class:`ScanMetrics` rows instead (so one workload can be
+    shared across many cells)."""
     if not batch:
         return []
+    feats = _feats_cache()
     cells = []
     for item in batch:
         requests, cores, policy = item[:3]
@@ -2058,11 +2547,10 @@ def simulate_cells_scan(
                 "(cold cells) ample container memory "
                 f"(policy={policy!r}, cores={cores}, warm={warm}); use "
                 "backend='vectorized' for the general exact fast path")
-        cells.append(_ScanCell(requests=requests,
-                               feats=_arrival_features(requests),
+        cells.append(_ScanCell(requests=requests, feats=feats(requests),
                                cores=cores, nodes=1, policy=policy,
                                assignment="single", warm=warm))
-    return _run_scan_cells(cells)
+    return _run_scan_cells(cells, metrics_only=metrics_only)
 
 
 # ---------------------------------------------------------------------------
@@ -2155,6 +2643,7 @@ def simulate_cluster_cells_scan(
     memory_mb: int = CLUSTER_MEMORY_MB,
     container_mb: int = CLUSTER_CONTAINER_MB,
     validate: bool = True,
+    metrics_only: bool = False,
 ) -> list[SimResult]:
     """Run a batch of ``(requests, nodes, cores, policy[, assignment[, lb[,
     dynamics[, profile[, hedging[, warm]]]]]])`` ours-mode cluster scenarios
@@ -2175,9 +2664,13 @@ def simulate_cluster_cells_scan(
     cluster cross-check tolerance (float32 clocks, index-order
     tie-breaking), see ``repro.core.sweep.CLUSTER_XCHECK_RTOL``; lost
     request, backup/steal and cold-start/eviction counts are exact.
+    ``metrics_only=True`` skips the per-request write-back and returns
+    :class:`ScanMetrics` rows (bit-identical aggregate metrics, shareable
+    workloads).
     """
     if not batch:
         return []
+    feats = _feats_cache()
     cells = []
     for item in batch:
         requests, nodes, cores, policy = item[:4]
@@ -2200,13 +2693,12 @@ def simulate_cluster_cells_scan(
                 f"assignment={assignment!r}, warm={warm}, "
                 f"dynamics={dynamics!r}, hedging={hedging!r}); use "
                 "backend='reference'")
-        cells.append(_ScanCell(requests=requests,
-                               feats=_arrival_features(requests),
+        cells.append(_ScanCell(requests=requests, feats=feats(requests),
                                cores=cores, nodes=nodes, policy=policy,
                                assignment=assignment, lb=lb, warm=warm,
                                dynamics=dynamics, profile=profile,
                                hedging=hedging))
-    return _run_scan_cells(cells)
+    return _run_scan_cells(cells, metrics_only=metrics_only)
 
 
 def simulate_cluster_scan(

@@ -58,12 +58,17 @@ def summarize_arrays(
     response/stretch arrays and want to skip the per-request extraction."""
     if resp.size == 0:
         raise ValueError("no completed requests to summarize")
+    # one vectorized percentile call per array: same sort + interpolation as
+    # per-percentile calls (bit-identical values), ~4x fewer array passes --
+    # this sits on the per-cell hot path of 100k-cell mega sweeps
+    r_pct = np.percentile(resp, PERCENTILES)
+    s_pct = np.percentile(stretch, PERCENTILES)
     return Summary(
         n=int(resp.size),
         response_avg=float(resp.mean()),
-        response_pct={p: float(np.percentile(resp, p)) for p in PERCENTILES},
+        response_pct=dict(zip(PERCENTILES, map(float, r_pct))),
         stretch_avg=float(stretch.mean()),
-        stretch_pct={p: float(np.percentile(stretch, p)) for p in PERCENTILES},
+        stretch_pct=dict(zip(PERCENTILES, map(float, s_pct))),
         max_completion=float(max_completion),
         cold_starts=cold_starts,
         failures=failures,

@@ -39,7 +39,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
-from .metrics import summarize
+from .metrics import summarize, summarize_arrays
 from .request import Request
 from .workload import (
     generate_burst,
@@ -693,15 +693,56 @@ def run_cell(cell: SweepCell) -> dict[str, float]:
                          steals=steals)
 
 
+def _workload_key(cell: SweepCell) -> tuple:
+    """Identity of a cell's deterministic workload (everything
+    :func:`make_workload` reads): cells agreeing on this key generate
+    bit-identical request lists."""
+    wcores = cell.workload_cores or cell.cores * cell.nodes
+    return (cell.arrival, cell.intensity, cell.seed, cell.duration_s,
+            wcores, cell.trace_path, cell.trace_repeat, cell.trace_scale)
+
+
+def _metrics_from_scan(cell: SweepCell, mo) -> dict[str, float]:
+    """Metrics row from a metrics-only scan result
+    (:class:`repro.core.fastpath.ScanMetrics`), matching
+    :func:`_cell_metrics` bit-for-bit: the arrays are request-ordered, so
+    every mean sums in the same order the write-back path does."""
+    s = summarize_arrays(mo.resp, mo.stretch, mo.max_c)
+    metrics: dict[str, float] = {
+        "R_avg": s.response_avg, "S_avg": s.stretch_avg,
+        "max_c": s.max_completion, "cold": float(mo.cold_starts),
+        "n": float(s.n), "failures": float(mo.failures),
+        "backups": float(mo.backups), "steals": float(mo.steals),
+        "nodes_used": float(mo.nodes_used),
+    }
+    for p, v in s.response_pct.items():
+        metrics[f"R_p{p}"] = v
+    for p, v in s.stretch_pct.items():
+        metrics[f"S_p{p}"] = v
+    for fn in cell.per_function:
+        if fn not in mo.fns:
+            continue
+        m = mo.fnids == mo.fns.index(fn)
+        if m.any():
+            metrics[f"R_avg:{fn}"] = float(mo.resp[m].mean())
+            metrics[f"S_avg:{fn}"] = float(mo.stretch[m].mean())
+    return metrics
+
+
 def _run_cells_scan_partial(
-        cells: Sequence[SweepCell]) -> list[dict[str, float] | None]:
+        cells: Sequence[SweepCell],
+        metrics_only: bool = False) -> list[dict[str, float] | None]:
     """Bucketed scan dispatch over whichever cells are eligible; returns
     ``None`` in the slots of ineligible cells (the caller decides how to run
     those -- :func:`run_sweep` sends them to its pool).
 
     Workloads are only generated after the static eligibility checks pass,
     and eligibility is checked exactly once per cell (the batch calls run
-    with ``validate=False``)."""
+    with ``validate=False``).  ``metrics_only=True`` additionally **shares**
+    one request list across every cell with the same :func:`_workload_key`
+    (safe because nothing is written back), which removes the dominant
+    per-cell cost of large grids -- a 5-policy x fleet grid generates each
+    burst once instead of once per cell."""
     from .fastpath import (
         scan_eligible,
         simulate_cells_scan,
@@ -712,6 +753,17 @@ def _run_cells_scan_partial(
     except ImportError:
         return [None] * len(cells)
 
+    workloads: dict[tuple, list[Request]] = {}
+
+    def _cell_reqs(cell: SweepCell) -> list[Request]:
+        if not metrics_only:     # write-back mutates: never share
+            return make_workload(cell)
+        key = _workload_key(cell)
+        reqs = workloads.get(key)
+        if reqs is None:
+            reqs = workloads[key] = make_workload(cell)
+        return reqs
+
     metrics: list[dict[str, float] | None] = [None] * len(cells)
     singles: list[tuple[int, SweepCell, list[Request]]] = []
     clusters: list[tuple[int, SweepCell, list[Request]]] = []
@@ -720,11 +772,11 @@ def _run_cells_scan_partial(
                               or cell.policy == "baseline") else "ours"
         policy = "fifo" if cell.policy == "baseline" else cell.policy
         if _cluster_scan_capable(cell):
-            reqs = make_workload(cell)
+            reqs = _cell_reqs(cell)
             if _cluster_scan_ok(cell, reqs, policy):
                 clusters.append((pos, cell, reqs))
         elif _vectorized_eligible(cell) and mode == "ours":
-            reqs = make_workload(cell)
+            reqs = _cell_reqs(cell)
             if scan_eligible(reqs, cell.cores, policy, warm=cell.warm):
                 singles.append((pos, cell, reqs))
 
@@ -732,26 +784,36 @@ def _run_cells_scan_partial(
         results = simulate_cells_scan(
             [(reqs, cell.cores, cell.policy, cell.warm)
              for _, cell, reqs in singles],
-            validate=False)
+            validate=False, metrics_only=metrics_only)
         for (pos, cell, _), res in zip(singles, results):
-            metrics[pos] = _cell_metrics(cell, res.requests, res.cold_starts,
-                                         0, 0, cell.nodes)
+            if metrics_only:
+                metrics[pos] = _metrics_from_scan(cell, res)
+            else:
+                metrics[pos] = _cell_metrics(cell, res.requests,
+                                             res.cold_starts, 0, 0,
+                                             cell.nodes)
     if clusters:
         results = simulate_cluster_cells_scan(
             [(reqs, cell.nodes, cell.cores, cell.policy, cell.assignment,
               cell.lb, _cell_dynamics(cell), _cell_profile(cell),
               _cell_hedging(cell), cell.warm)
-             for _, cell, reqs in clusters], validate=False)
+             for _, cell, reqs in clusters], validate=False,
+            metrics_only=metrics_only)
         for (pos, cell, _), res in zip(clusters, results):
-            metrics[pos] = _cell_metrics(cell, res.requests, res.cold_starts,
-                                         res.failures, res.backups_issued,
-                                         res.nodes_used,
-                                         steals=res.steals_won)
+            if metrics_only:
+                metrics[pos] = _metrics_from_scan(cell, res)
+            else:
+                metrics[pos] = _cell_metrics(cell, res.requests,
+                                             res.cold_starts, res.failures,
+                                             res.backups_issued,
+                                             res.nodes_used,
+                                             steals=res.steals_won)
     return metrics
 
 
 def run_cells_scan(cells: Sequence[SweepCell],
-                   strict: bool = True) -> list[dict[str, float]]:
+                   strict: bool = True,
+                   metrics_only: bool = False) -> list[dict[str, float]]:
     """Run a whole list of cells through the bucketed ``jax.lax.scan`` path
     (padded tensors, cells vmapped, one XLA dispatch per shape bucket) and
     return per-cell metrics in order.
@@ -765,8 +827,13 @@ def run_cells_scan(cells: Sequence[SweepCell],
     their metrics carry ``degraded=1.0`` (surfaced as a ``degraded`` column
     in ``SweepResult`` aggregates) rather than silently folding into
     scan-path timings.  Unlike :func:`run_sweep` this executes in-process:
-    the batch IS the parallelism."""
-    metrics = _run_cells_scan_partial(cells)
+    the batch IS the parallelism.
+
+    ``metrics_only=True`` is the interactive-sweep mode: request objects are
+    never written back, cells with identical workload parameters share one
+    generated burst, and the returned rows are built from request-ordered
+    arrays -- bit-identical to the default mode's rows."""
+    metrics = _run_cells_scan_partial(cells, metrics_only=metrics_only)
     for pos, m in enumerate(metrics):
         if m is None:
             if strict:

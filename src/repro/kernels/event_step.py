@@ -1,0 +1,257 @@
+"""Pallas megakernel for the cluster event scan (base pull configuration).
+
+One ``pl.pallas_call`` program per batched cell (grid over the batch axis):
+the packed ``(clk, ctr)`` carry planes stay resident in VMEM across the
+whole ``fori_loop`` over events, and the per-dispatch outputs are written
+with dynamic stores -- so a cell's entire event history is one kernel
+launch instead of ``n_steps`` host-visible scan iterations.
+
+Scope: the **base pull** regime only -- late-binding queue, one controller
+estimator ring, optional FC pull counts (``use_fc``); no frozen-priority
+(``freeze``), capacity dynamics, heterogeneity, hedging, cold-start or
+duplicate machinery.  Everything else dispatches to the pure-jnp oracle in
+``repro.kernels.ops.event_step`` (which *is* the fused CPU path).  The
+kernel body mirrors the oracle's step op-for-op against the same
+:class:`repro.core.fastpath._PlaneLayout` offsets, with two mechanical
+substitutions for TPU friendliness: every dynamic gather becomes a one-hot
+masked reduction (exact -- the sum adds a single selected value to zeros)
+and ``searchsorted`` becomes a ``sum(t <= v)`` count (identical on the
+sorted arrival stream).  Rows ``[:n]`` of the outputs are therefore
+bit-identical to the oracle; row ``n`` is the shared garbage sentinel both
+paths scribble no-op events into.  The parity suite runs this kernel under
+``interpret=True`` on CPU.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def event_step_supported(*, freeze, use_fc, fc_push, dyn, het, hedge, cold,
+                         dup, **_static) -> bool:
+    """True when the static feature set falls inside the Pallas kernel's
+    scope (base pull, with or without FC pull counts)."""
+    return not (freeze or fc_push or dyn or het or hedge or cold or dup)
+
+
+def _gat(vec, i):
+    """``vec[i]`` as a one-hot masked reduction (no dynamic gather, which
+    Mosaic lowers poorly); exact -- one selected value summed with zeros."""
+    ids = jnp.arange(vec.shape[0])
+    return jnp.sum(jnp.where(ids == i, vec, jnp.zeros_like(vec)))
+
+
+def _event_kernel(clk_ref, ctr_ref, t_ref, fnid_ref, p_ref, cost_ref,
+                  coef_ref, cores_ref, nodes_ref, cumf_ref, fnev_ref,
+                  start_ref, finish_ref, prio_ref, node_ref, *,
+                  layout, n, n_nodes, n_slots, window, n_fns, kq, use_fc,
+                  horizon, n_steps, ft):
+    t_arr = t_ref[0]
+    fnid = fnid_ref[0]
+    p = p_ref[0]
+    cost = cost_ref[0]
+    coef = coef_ref[0]
+    cores = cores_ref[0]
+    nodes = nodes_ref[0]
+    cumf = cumf_ref[0]
+    fn_ev = fnev_ref[0]
+
+    inf = jnp.asarray(jnp.inf, dtype=ft)
+    node_ids = jnp.arange(n_nodes)
+    slot_ids = jnp.arange(n_slots)
+    fn_ids = jnp.arange(n_fns)
+    win_ids = jnp.arange(window)
+    ev_ids = jnp.arange(n + 1)
+    active = node_ids < nodes
+    kmax = kq - 1
+
+    # can=False steps land on the sentinel row n; never-dispatched rows
+    # (none exist for a filled cell) read as the oracle's scatter zeros
+    start_ref[...] = jnp.zeros((1, n + 1), dtype=ft)
+    finish_ref[...] = jnp.zeros((1, n + 1), dtype=ft)
+    prio_ref[...] = jnp.zeros((1, n + 1), dtype=ft)
+    node_ref[...] = jnp.zeros((1, n + 1), dtype=jnp.int32)
+
+    def step(_, planes):
+        st = layout.unpack(*planes)
+        ai, head = st["ai"], st["head"]
+        fin_s, idx_s = st["fin_s"], st["idx_s"]
+        busy, qn, chan = st["busy"], st["qn"], st["chan"]
+        ring, rsum, rlen, rpos = (st["ring"], st["rsum"], st["rlen"],
+                                  st["rpos"])
+        last_t, prev_t, narr = st["last_t"], st["prev_t"], st["narr"]
+
+        # -- event selection: arrival vs earliest completion (arrival wins
+        # exact ties, matching the oracle's first-min argmin precedence)
+        t_a = _gat(t_arr, ai)
+        flat = fin_s.reshape(-1)
+        kflat = jnp.argmin(flat)
+        t_c = jnp.min(flat)
+        now = jnp.minimum(t_a, t_c)
+        none_left = jnp.isinf(now)
+        do_arr = (t_a <= t_c) & ~none_left
+        do_comp = (t_c < t_a) & ~none_left
+
+        # -- completion: free the slot, feed the controller ring ------------
+        kn = (kflat // n_slots).astype(jnp.int32)
+        ks = kflat % n_slots
+        j_done = _gat(idx_s.reshape(-1), kflat)
+        f_done = _gat(fnid, j_done)
+        m_fd = fn_ids == f_done
+        m_cf = m_fd[None, :] & do_comp               # (1, F): en_c == 0
+        pos = _gat(rpos[0], f_done)
+        v = _gat(p, j_done)
+        old = jnp.sum(jnp.where(m_fd[:, None] & (win_ids == pos)[None, :],
+                                ring[0], jnp.zeros_like(ring[0])))
+        full = _gat(rlen[0], f_done) == window
+        rsum = jnp.where(m_cf, rsum + v - jnp.where(full, old, 0.0), rsum)
+        ring = jnp.where(m_cf[:, :, None] & (win_ids == pos), v, ring)
+        rlen = jnp.where(m_cf & ~full, rlen + 1, rlen)
+        rpos = jnp.where(m_cf, (rpos + 1) % window, rpos)
+        m_kn = (node_ids == kn) & do_comp
+        busy = jnp.where(m_kn, busy - 1, busy)
+        fin_s = jnp.where(m_kn[:, None] & (slot_ids == ks), inf, fin_s)
+
+        # -- arrival: enqueue, observe on the controller estimator ----------
+        i_ins = jnp.minimum(ai, n)
+        do_ins = do_arr
+        f_i = _gat(fnid, i_ins)
+        first = _gat(narr[0], f_i) == 0
+        prev_used = jnp.where(first, now, _gat(last_t[0], f_i))
+        m_af = ((fn_ids == f_i) & do_ins)[None, :]
+        prev_t = jnp.where(m_af, prev_used, prev_t)
+        last_t = jnp.where(m_af, now, last_t)
+        narr = jnp.where(m_af, narr + 1, narr)
+        qn = jnp.where((node_ids == 0) & do_ins, qn + 1, qn)
+        ai = ai + do_arr.astype(jnp.int32)
+
+        # -- dispatch: most-free invoker pulls the global best head ---------
+        fs = jnp.where(active, cores - busy, -1)
+        k_d = jnp.argmax(fs).astype(jnp.int32)
+        est_f = jnp.where(rlen[0] > 0,
+                          rsum[0] / jnp.maximum(rlen[0], 1), 0.0)
+        hm = jnp.minimum(head, kmax)
+        idx_f = jnp.sum(jnp.where(jnp.arange(kq)[None, :] == hm[:, None],
+                                  fn_ev, jnp.zeros_like(fn_ev)), axis=1)
+        valid = head < narr[0]
+        if use_fc:
+            # searchsorted(t_arr, v, "right") == count of entries <= v on
+            # the sorted stream; the +inf sentinel keeps k0 <= n in range
+            k0 = jnp.sum((t_arr <= now - horizon).astype(jnp.int32))
+            row_a = jnp.sum(jnp.where((ev_ids == ai)[:, None], cumf,
+                                      jnp.zeros_like(cumf)), axis=0)
+            row_0 = jnp.sum(jnp.where((ev_ids == k0)[:, None], cumf,
+                                      jnp.zeros_like(cumf)), axis=0)
+            cnt_f = (row_a - row_0).astype(jnp.float32)
+            w_est = coef[2] + coef[3] * cnt_f
+        else:
+            w_est = coef[2]
+        base_f = coef[1] * prev_t[0] + w_est * est_f
+        t_idx = jnp.sum(jnp.where(idx_f[:, None] == ev_ids[None, :],
+                                  t_arr[None, :],
+                                  jnp.zeros_like(t_arr)[None, :]), axis=1)
+        prio_f = jnp.where(valid, coef[0] * t_idx + base_f, inf)
+        best = jnp.min(prio_f)
+        j = jnp.min(jnp.where(valid & (prio_f == best), idx_f, n))
+        has_q = j < n
+        prio_j = best
+        can = ~none_left & (_gat(busy, k_d) < cores) & has_q
+        cost_j = _gat(cost, j)
+        exec_start = jnp.maximum(now, _gat(chan, k_d)) + cost_j
+        m_kd = node_ids == k_d
+        chan = jnp.where(m_kd & can, exec_start, chan)
+        fin_j = exec_start + _gat(p, j)
+        fin_kd = jnp.sum(jnp.where(m_kd[:, None], fin_s,
+                                   jnp.zeros_like(fin_s)), axis=0)
+        slot_free = jnp.isinf(fin_kd) & (slot_ids < cores)
+        s = jnp.argmax(slot_free)
+        m_ds = (m_kd[:, None] & (slot_ids == s)[None, :]) & can
+        fin_s = jnp.where(m_ds, fin_j, fin_s)
+        idx_s = jnp.where(m_ds, j, idx_s)
+        busy = jnp.where(m_kd & can, busy + 1, busy)
+        qn = jnp.where(m_kd & can, qn - 1, qn)
+        head = jnp.where((fn_ids == _gat(fnid, j)) & can, head + 1, head)
+
+        # -- per-dispatch record, stored straight into the output rows ------
+        jn = jnp.where(can, j, n).astype(jnp.int32)
+        r0 = pl.dslice(0, 1)
+        pl.store(start_ref, (r0, pl.dslice(jn, 1)),
+                 jnp.full((1, 1), exec_start, dtype=ft))
+        pl.store(finish_ref, (r0, pl.dslice(jn, 1)),
+                 jnp.full((1, 1), fin_j, dtype=ft))
+        pl.store(prio_ref, (r0, pl.dslice(jn, 1)),
+                 jnp.full((1, 1), prio_j, dtype=ft))
+        pl.store(node_ref, (r0, pl.dslice(jn, 1)),
+                 jnp.full((1, 1), k_d, dtype=jnp.int32))
+
+        nxt = {"ai": ai, "head": head, "fin_s": fin_s, "idx_s": idx_s,
+               "busy": busy, "qn": qn, "chan": chan,
+               "ring": ring, "rsum": rsum, "rlen": rlen, "rpos": rpos,
+               "last_t": last_t, "prev_t": prev_t, "narr": narr}
+        return layout.pack(nxt)
+
+    lax.fori_loop(0, n_steps, step, (clk_ref[0], ctr_ref[0]))
+
+
+def event_step_pallas(clk, ctr, inp, *, interpret=False, n_nodes, n_slots,
+                      window, use_fc, horizon, n_steps, n_copies=1,
+                      fc_ring=1, **_static):
+    """Batched base-pull event scan as one Pallas launch per cell.
+
+    Same contract as the oracle path of ``repro.kernels.ops.event_step``:
+    ``clk``/``ctr`` are the packed ``(B, f_len)`` / ``(B, i_len)`` carry
+    planes, ``inp`` the batched bucket input dict; returns the
+    ``(start, finish, prio, node, aux)`` tuple with ``aux == {}``."""
+    from ..core import fastpath as _fp     # lazy: core is heavy
+
+    B, n1 = inp["t"].shape
+    n = n1 - 1
+    n_fns, kq = inp["fn_ev"].shape[1], inp["fn_ev"].shape[2]
+    nc = inp["cumf"].shape[1]
+    ncoef = inp["coef"].shape[1]
+    ft = inp["t"].dtype
+
+    spec = {k: jax.ShapeDtypeStruct(v.shape[1:], v.dtype)
+            for k, v in inp.items()}
+    layout = _fp._carry_layout(spec, n_nodes=n_nodes, n_slots=n_slots,
+                               window=window, freeze=False, fc_push=False,
+                               dyn=False, het=False, hedge=False,
+                               cold=False, dup=False, n_copies=n_copies,
+                               fc_ring=fc_ring)
+
+    kernel = partial(_event_kernel, layout=layout, n=n, n_nodes=n_nodes,
+                     n_slots=n_slots, window=window, n_fns=n_fns, kq=kq,
+                     use_fc=use_fc, horizon=horizon, n_steps=n_steps, ft=ft)
+    row = lambda b: (b, 0)
+    start, finish, prio, node = pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, layout.f_len), row),
+            pl.BlockSpec((1, layout.i_len), row),
+            pl.BlockSpec((1, n1), row),                      # t
+            pl.BlockSpec((1, n1), row),                      # fnid
+            pl.BlockSpec((1, n1), row),                      # p
+            pl.BlockSpec((1, n1), row),                      # cost
+            pl.BlockSpec((1, ncoef), row),                   # coef
+            pl.BlockSpec((1,), lambda b: (b,)),              # cores
+            pl.BlockSpec((1,), lambda b: (b,)),              # nodes
+            pl.BlockSpec((1, nc, n_fns), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, n_fns, kq), lambda b: (b, 0, 0)),
+        ],
+        out_specs=[pl.BlockSpec((1, n1), row)] * 4,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n1), ft),
+            jax.ShapeDtypeStruct((B, n1), ft),
+            jax.ShapeDtypeStruct((B, n1), ft),
+            jax.ShapeDtypeStruct((B, n1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(clk, ctr, inp["t"], inp["fnid"], inp["p"], inp["cost"], inp["coef"],
+      inp["cores"], inp["nodes"], inp["cumf"], inp["fn_ev"])
+    return start, finish, prio, node, {}

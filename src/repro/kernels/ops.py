@@ -8,6 +8,8 @@ references execute.  ``force`` overrides for kernel validation tests
 
 from __future__ import annotations
 
+from functools import partial
+
 import jax
 
 from . import ref
@@ -49,6 +51,39 @@ def rglru_scan(a, gx, h0, *, force: str | None = None,
     if use_pallas:
         return _rglru_pallas(a, gx, h0, interpret=interpret or not _on_tpu())
     return ref.rglru_ref(a, gx, h0)
+
+
+def event_step(clk, ctr, inp, *, force: str | None = None,
+               interpret: bool = False, **static):
+    """Batched fused cluster event scan -- the simulator hot path.
+
+    ``clk``/``ctr`` are the ``(B, len_f)`` / ``(B, len_i)`` packed carry
+    plane pairs (see ``repro.core.fastpath._PlaneLayout``) and ``inp`` a
+    dict of batched per-cell input arrays; ``static`` carries the kernel's
+    compile-time shape/feature kwargs.  Returns what the per-cell scan
+    kernel returns, batched.
+
+    The pure-jnp oracle (a vmap over ``_scan_cell_kernel``) *is* the fused
+    CPU path -- XLA fuses the plane unpack/update/pack chain into the step
+    body.  On TPU the base pull configuration runs as a Pallas megakernel
+    with the carry planes resident in VMEM across the scan
+    (``repro.kernels.event_step``); unsupported feature combinations fall
+    back to the oracle unless ``force="pallas"``."""
+    from ..core import fastpath as _fp     # lazy: core is heavy
+
+    use_pallas = force == "pallas" or (force is None and _on_tpu())
+    if use_pallas:
+        from .event_step import event_step_pallas, event_step_supported
+
+        if event_step_supported(**static):
+            return event_step_pallas(clk, ctr, inp,
+                                     interpret=interpret or not _on_tpu(),
+                                     **static)
+        if force == "pallas":
+            raise NotImplementedError(
+                "the Pallas event_step covers only the base pull "
+                "configuration (no freeze/dyn/het/hedge/cold/dup)")
+    return jax.vmap(partial(_fp._scan_cell_kernel, **static))(clk, ctr, inp)
 
 
 def rwkv6_scan(r, k, v, w, u, *, force: str | None = None,

@@ -302,7 +302,8 @@ class TestCompileCache:
 
     def test_clear_resets(self):
         scan_cache_clear()
-        assert scan_cache_stats() == {"hits": 0, "misses": 0, "size": 0}
+        assert scan_cache_stats() == {"hits": 0, "misses": 0, "size": 0,
+                                      "entries": {}}
 
 
 @needs_jax
