@@ -660,6 +660,198 @@ def mega_rows(quick: bool = False,
     return rows
 
 
+# --------------------------------------------------------------------------
+# storm: metastable-overload / retry-storm hysteresis (ISSUE 8)
+# --------------------------------------------------------------------------
+# Six client behaviours on the same ramp-and-release workload: no client
+# retries / naive immediate retries / capped exponential backoff + jitter,
+# each with and without admission control.  All share the same per-attempt
+# timeout, which is what converts a transient burst into retry fuel.
+STORM_SCENARIOS = (
+    ("no-retry", None, False),
+    ("no-retry+shed", None, True),
+    ("naive", "immediate", False),
+    ("naive+shed", "immediate", True),
+    ("backoff", "backoff", False),
+    ("backoff+shed", "backoff", True),
+)
+
+
+def _storm_resilience(retry_mode, shed: bool):
+    from repro.core import (AdmissionPolicy, ResilienceSpec, RetryPolicy,
+                            TimeoutSpec)
+    retry = None
+    if retry_mode is not None:
+        retry = RetryPolicy(max_attempts=4, mode=retry_mode,
+                            base_delay_s=0.5, cap_delay_s=8.0, jitter=0.5)
+    return ResilienceSpec(
+        timeout=TimeoutSpec(multiple=3.0, floor_s=2.0),
+        retry=retry,
+        admission=AdmissionPolicy(threshold_s=2.0) if shed else None)
+
+
+def _windowed_goodput(requests, a: float, b: float) -> float:
+    """Completions per second observed by clients in [a, b)."""
+    n = sum(1 for r in requests if r.c is not None and a <= r.c < b)
+    return n / max(b - a, 1e-9)
+
+
+def storm_rows(quick: bool = False, artifacts: str | None = None,
+               duration_s: float | None = None) -> list[dict]:
+    """Retry-storm / metastable-overload benchmark (``--rows storm``).
+
+    A ramp-and-release arrival process (base Poisson rate with a burst
+    window at [T/3, T/2)) drives every :data:`STORM_SCENARIOS` cell through
+    the batched scan kernel AND the reference event loop: the resilience
+    counters (timed_out / shed / retries_issued) must match **exactly**
+    per cell, and the post-compile scan wall is reported against the
+    reference wall.  The hysteresis claim is computed from windowed
+    goodput: naive immediate retries stay depressed after the burst
+    releases, capped backoff + shedding recovers most of the pre-burst
+    goodput."""
+    try:
+        import jax  # noqa: F401
+    except ImportError:
+        return [{"name": "engine/storm", "us_per_call": 0.0,
+                 "derived": "skipped=no-jax"}]
+    import copy
+
+    from repro.core import (generate_trace_burst, simulate_cluster,
+                            simulate_cluster_cells_scan)
+
+    nodes, cores, policy = 2, 4, "sept"
+    T = float(duration_s) if duration_s else 60.0
+    seeds = range(4 if quick else 10)
+    burst_t0, burst_t1 = T / 3.0, T / 2.0
+    # intensity chosen so the base rate loads the cluster well below
+    # saturation (~40%: pre-burst goodput tracks the offered rate with few
+    # timeouts) but the 6x burst overshoots capacity ~2.5x: timeouts fire,
+    # and what happens next is pure client policy
+    intensity, burst_x = 14, 6.0
+    bursts = {s: generate_trace_burst(
+        cores=nodes * cores, intensity=intensity, seed=1000 + s,
+        kind="ramp", duration_s=T, burst_factor=burst_x,
+        burst_start_frac=1 / 3, burst_end_frac=1 / 2) for s in seeds}
+    cells = [(name, rmode, shed, s)
+             for (name, rmode, shed) in STORM_SCENARIOS for s in seeds]
+
+    def _items():
+        # fresh Request copies every run: both engines mutate in place
+        return [(copy.deepcopy(bursts[s]), nodes, cores, policy, "push",
+                 "least_loaded", None, None, None, True,
+                 _storm_resilience(rmode, shed))
+                for (name, rmode, shed, s) in cells]
+
+    simulate_cluster_cells_scan(_items())          # compile warm-up
+    t0 = time.perf_counter()
+    scan_res = simulate_cluster_cells_scan(_items())
+    scan_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    ref_res = []
+    for (name, rmode, shed, s) in cells:
+        ref_res.append(simulate_cluster(
+            copy.deepcopy(bursts[s]), nodes=nodes, cores_per_node=cores,
+            policy=policy, assignment="push", warm=True,
+            resilience=_storm_resilience(rmode, shed)))
+    ref_s = time.perf_counter() - t0
+
+    # exact-count cross-check: every cell, every resilience counter
+    for (name, rmode, shed, s), sr, rr in zip(cells, scan_res, ref_res):
+        for k in ("timed_out", "shed", "retries_issued"):
+            if getattr(sr, k) != getattr(rr, k):
+                raise AssertionError(
+                    f"storm counter mismatch on {name}#seed{s}: {k} "
+                    f"scan={getattr(sr, k)} ref={getattr(rr, k)}")
+
+    # hysteresis: windowed goodput before the burst vs after it releases.
+    # The post window starts a couple of timeout periods after release so
+    # a healthy policy has had time to drain the genuine backlog; a
+    # metastable one is still burning slots on retries there.
+    pre_w = (5.0, burst_t0)
+    post_w = (burst_t1 + 0.10 * T, min(burst_t1 + 0.35 * T, T))
+    summary: dict[str, dict] = {}
+    for (name, rmode, shed, s), sr in zip(cells, scan_res):
+        d = summary.setdefault(name, {"pre": [], "post": [], "timed_out": 0,
+                                      "shed": 0, "retries_issued": 0})
+        d["pre"].append(_windowed_goodput(sr.requests, *pre_w))
+        d["post"].append(_windowed_goodput(sr.requests, *post_w))
+        d["timed_out"] += sr.timed_out
+        d["shed"] += sr.shed
+        d["retries_issued"] += sr.retries_issued
+    for d in summary.values():
+        d["pre"] = sum(d["pre"]) / len(d["pre"])
+        d["post"] = sum(d["post"]) / len(d["post"])
+        d["recovery"] = d["post"] / max(d["pre"], 1e-9)
+
+    naive, good = summary["naive"], summary["backoff+shed"]
+    hysteresis = good["recovery"] - naive["recovery"]
+
+    if artifacts:
+        import csv
+        import os
+        os.makedirs(artifacts, exist_ok=True)
+        with open(f"{artifacts}/storm.csv", "w", newline="") as fh:
+            w = csv.writer(fh)
+            w.writerow(["scenario", "retry_mode", "shed", "pre_goodput",
+                        "post_goodput", "recovery", "timed_out", "shed_n",
+                        "retries_issued"])
+            for (name, rmode, shed) in STORM_SCENARIOS:
+                d = summary[name]
+                w.writerow([name, rmode or "none", shed,
+                            f"{d['pre']:.4f}", f"{d['post']:.4f}",
+                            f"{d['recovery']:.4f}", d["timed_out"],
+                            d["shed"], d["retries_issued"]])
+        # time-binned goodput series for the hysteresis figure
+        bin_s = max(2.0, T / 40.0)
+        edges = [i * bin_s for i in range(int(T / bin_s) + 1)]
+        series = []
+        for (name, rmode, shed) in STORM_SCENARIOS:
+            reqs = [r for (cname, _rm, _sh, _s), sr in zip(cells, scan_res)
+                    if cname == name for r in sr.requests]
+            n_seeds = len(list(seeds))
+            for a, b in zip(edges[:-1], edges[1:]):
+                series.append({
+                    "scenario": name, "t": (a + b) / 2.0,
+                    "goodput": _windowed_goodput(reqs, a, b) / n_seeds,
+                    "burst_t0": burst_t0, "burst_t1": burst_t1})
+        with open(f"{artifacts}/storm_series.csv", "w", newline="") as fh:
+            w = csv.DictWriter(fh, fieldnames=["scenario", "t", "goodput",
+                                               "burst_t0", "burst_t1"])
+            w.writeheader()
+            w.writerows(series)
+        try:
+            from .plots import plot_storm
+            plot_storm(series, out=f"{artifacts}/storm_goodput.png")
+        except (ImportError, ValueError):
+            pass
+
+    rows = [{
+        "name": "engine/storm",
+        "us_per_call": scan_s / len(cells) * 1e6,
+        "derived": (
+            f"cells={len(cells)};T={T:g}s;scan_s={scan_s:.2f};"
+            f"ref_s={ref_s:.2f};speedup={ref_s / max(scan_s, 1e-9):.1f}x;"
+            f"xcheck_exact_n={len(cells)};"
+            f"naive_recovery={naive['recovery']:.2f};"
+            f"backoff_shed_recovery={good['recovery']:.2f};"
+            f"hysteresis={hysteresis:.2f}"),
+    }]
+    for (name, rmode, shed) in STORM_SCENARIOS:
+        d = summary[name]
+        rows.append({
+            "name": f"engine/storm_{name}",
+            "us_per_call": d["post"] * 1e6,
+            "derived": (
+                f"pre_goodput={d['pre']:.2f}/s;"
+                f"post_goodput={d['post']:.2f}/s;"
+                f"recovery={d['recovery']:.2f};"
+                f"timed_out={d['timed_out']};shed={d['shed']};"
+                f"retries={d['retries_issued']}"),
+        })
+    return rows
+
+
 def _engine_cell(cell: SweepCell, quick: bool = False) -> dict:
     """One policy on the live engine; returns sweep-shaped metrics."""
     from repro.configs import get_config
@@ -690,7 +882,7 @@ def _engine_cell(cell: SweepCell, quick: bool = False) -> dict:
 
 
 ROW_GROUPS = ("all", "engine", "backend", "cluster", "frontier",
-              "straggler", "matrix", "mega")
+              "straggler", "matrix", "mega", "storm")
 
 
 def run(quick: bool = False, backend: str = "vectorized",
@@ -724,6 +916,8 @@ def run(quick: bool = False, backend: str = "vectorized",
         rows.extend(matrix_rows(quick, artifacts=artifacts))
     if rows_group in ("all", "mega"):
         rows.extend(mega_rows(quick, artifacts=artifacts))
+    if rows_group in ("all", "storm"):
+        rows.extend(storm_rows(quick, artifacts=artifacts))
     return rows
 
 

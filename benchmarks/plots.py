@@ -32,7 +32,8 @@ if str(SRC) not in sys.path:
 
 # numeric columns in aggregate rows (everything else stays a string)
 _STR_COLS = {"policy", "mode", "assignment", "lb", "arrival", "backend",
-             "label", "fail_spec", "node_speeds", "degrade"}
+             "label", "fail_spec", "node_speeds", "degrade", "scenario",
+             "retry_mode"}
 
 
 def _coerce(key: str, val):
@@ -300,6 +301,56 @@ def plot_straggler(rows: list[dict], metric: str = "R_p95",
     return Path(out)
 
 
+def plot_storm(rows: list[dict], metric: str = "goodput",
+               out: str | Path = "sweep_storm.png") -> Path:
+    """Metastable-overload hysteresis: time-binned goodput, one line per
+    retry/shedding scenario, the ramp's burst window shaded -- "naive
+    immediate retries keep the cluster depressed after the burst releases,
+    capped backoff + admission control recovers" as a figure.  Consumes the
+    ``storm_series.csv`` rows written by ``engine_bench --rows storm``
+    (columns: scenario, t, goodput[, burst_t0, burst_t1])."""
+    srows = [r for r in rows
+             if r.get("scenario") not in (None, "")
+             and r.get("t") is not None and r.get(metric) is not None]
+    if not srows:
+        raise ValueError(
+            f"artifact has no storm series rows for {metric} "
+            "(needs scenario/t columns from engine_bench --rows storm)")
+    series: dict[str, list[dict]] = {}
+    for r in srows:
+        series.setdefault(str(r["scenario"]), []).append(r)
+    fig, axes = _fig(1)
+    ax = axes[0]
+    b0 = next((r["burst_t0"] for r in srows
+               if r.get("burst_t0") not in (None, "")), None)
+    b1 = next((r["burst_t1"] for r in srows
+               if r.get("burst_t1") not in (None, "")), None)
+    if b0 is not None and b1 is not None:
+        ax.axvspan(float(b0), float(b1), color="0.88", zorder=0,
+                   label="burst window")
+    for name, pts in sorted(series.items()):
+        pts = _series_sorted(pts, "t")
+        style = dict(linewidth=1.5, markersize=2.8)
+        if "backoff" in name:
+            style.update(linestyle="-", marker="o")
+        elif "naive" in name:
+            style.update(linestyle="--", marker="s")
+        else:
+            style.update(linestyle=":", marker="^")
+        ax.plot([p["t"] for p in pts], [p[metric] for p in pts],
+                label=name, **style)
+    ax.set_xlabel("time (s)")
+    ax.set_ylabel("goodput (completions/s)")
+    ax.set_title("retry-storm hysteresis (ramp-and-release)", fontsize=10)
+    ax.grid(alpha=0.3)
+    ax.legend(fontsize=8)
+    fig.tight_layout()
+    fig.savefig(out, dpi=120)
+    import matplotlib.pyplot as plt
+    plt.close(fig)
+    return Path(out)
+
+
 def render_rows(rows: list[dict], outdir: str | Path,
                 metrics: tuple[str, ...] = ("R_avg",)) -> list[Path]:
     """Render every figure the artifact supports: policy curves when an
@@ -330,6 +381,10 @@ def render_rows(rows: list[dict], outdir: str | Path,
                 rows, metric, outdir / f"straggler_{metric}.png"))
         except ValueError:
             pass
+    try:
+        written.append(plot_storm(rows, out=outdir / "storm_goodput.png"))
+    except ValueError:
+        pass
     if not written:
         raise ValueError(
             f"artifact supports none of the figures for metrics {metrics} "

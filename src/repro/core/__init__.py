@@ -52,6 +52,13 @@ from .metrics import Summary, merge_summaries, summarize, summarize_arrays
 from .policies import EECT, FIFO, FairChoice, Policy, RECT, SEPT, make_policy
 from .queues import PriorityQueue
 from .request import CallRecord, Request
+from .resilience import (
+    AdmissionPolicy,
+    ResilienceSpec,
+    RetryPolicy,
+    TimeoutSpec,
+    retry_jitter_u,
+)
 from .scheduler import NodeScheduler, StartDecision
 from .simulator import (
     BaselineNodeSim,
@@ -112,11 +119,13 @@ from .workload import (
     generate_trace_burst,
     mmpp_arrivals,
     poisson_arrivals,
+    ramp_arrivals,
 )
 
 __all__ = [
     "ARRIVAL_KINDS",
     "AcquireResult",
+    "AdmissionPolicy",
     "BACKEND_CHOICES",
     "BackendMismatchError",
     "BaselineNodeSim",
@@ -142,6 +151,8 @@ __all__ = [
     "Policy",
     "PriorityQueue",
     "RECT",
+    "ResilienceSpec",
+    "RetryPolicy",
     "ReferenceBackend",
     "Request",
     "RuntimeEstimator",
@@ -156,6 +167,7 @@ __all__ = [
     "SweepCell",
     "SweepResult",
     "SweepSpec",
+    "TimeoutSpec",
     "VectorizedBackend",
     "available_backends",
     "cluster_scan_eligible",
@@ -173,8 +185,10 @@ __all__ = [
     "mmpp_arrivals",
     "most_free_index",
     "poisson_arrivals",
+    "ramp_arrivals",
     "register_backend",
     "requests_from_trace",
+    "retry_jitter_u",
     "rolling_restart",
     "run_cell",
     "run_cells_scan",

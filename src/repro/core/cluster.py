@@ -35,6 +35,7 @@ from dataclasses import replace as _dc_replace
 
 from .estimator import RuntimeEstimator
 from .request import Request
+from .resilience import ResilienceSpec
 from .stragglers import HedgingSpec, NodeSpeedProfile
 from .traces import stable_hash
 from .simulator import (
@@ -202,6 +203,9 @@ class ClusterConfig:
     # heterogeneity: static speeds + degradation episodes; the legacy
     # ``node_speeds`` dict keeps working and folds into the profile
     speed_profile: NodeSpeedProfile | None = None
+    # request-lifecycle resilience: timeouts / client retries / admission
+    # control (see repro.core.resilience); None = infinitely patient clients
+    resilience: ResilienceSpec | None = None
     # elasticity
     autoscale: bool = False
     autoscale_interval_s: float = _DYN_DEFAULTS.autoscale_interval_s
@@ -233,6 +237,25 @@ class Cluster:
                                        floor_s=cfg.straggler_floor_s)
         self._stolen_ids: set[int] = set()       # steal mode
         self._dup_copies: dict[int, Request] = {}  # duplicate mode: id -> copy
+        # request-lifecycle resilience (timeouts / retries / shedding)
+        self.res = ResilienceSpec.from_any(cfg.resilience)
+        if self.res is not None and self.hedging is not None:
+            # a hedge copy and a deadline watch would both re-dispatch the
+            # same request id with conflicting completion semantics; the
+            # combination is a documented exclusion, not a silent best-effort
+            raise ValueError(
+                "resilience (timeouts/retries/shedding) and straggler "
+                "hedging cannot be combined on the same cluster")
+        self.timed_out = 0
+        self.shed = 0
+        self.retries_issued = 0
+        self.wasted_work = 0.0
+        self._res_qep = 0.0                      # sum of queued E[p] snapshots
+        self._res_eps: dict[int, float] = {}     # per queued call: its snapshot
+        self._res_att: dict[int, int] = {}       # submissions per request id
+        self._res_seq: dict[int, int] = {}       # stable arrival rank (jitter)
+        self._to_tok: dict[int, int] = {}        # timeout-watch validity token
+        self._res_failed = 0                     # permanently failed calls
         # heterogeneity: explicit profile > legacy node_speeds dict > uniform
         self.profile = cfg.speed_profile
         if self.profile is None and cfg.node_speeds:
@@ -263,6 +286,7 @@ class Cluster:
             speed_fn=speed_fn,
             warm_functions=self.warm_functions,
             on_complete=self._on_complete,
+            on_start=self._on_start if self.res is not None else None,
         )
         self.nodes.append(node)
         self.timeline.add_node(self.loop.now)
@@ -280,12 +304,96 @@ class Cluster:
         self._estimator.observe_arrival(req.fn, self.loop.now)
         if self.hedging is not None:
             self._arm_straggler_watch(req)
+        if self.res is not None and not self._res_admit(req):
+            return                               # shed (maybe retried later)
         if self.cfg.assignment == "push":
             node = self._pick_node(req)
             node.submit(req)
         else:  # pull
             self._global_queue.append(req)
             self._pull_round()
+
+    # ------------------------------------------------------------- resilience
+    # The scan kernel's ``res`` carry segment mirrors this logic line for
+    # line (same controller estimate, same accumulation order, the identical
+    # integer-hash jitter), so the timed_out / shed / retries_issued counters
+    # cross-check *exactly*.  Keep the two in sync.
+    def _res_admit(self, req: Request) -> bool:
+        """Admission + watch arming for an arriving or re-arriving call;
+        returns False when the controller sheds it."""
+        spec = self.res
+        att = self._res_att.get(req.id, 0) + 1
+        self._res_att[req.id] = att
+        if spec.admission is not None:
+            free = sum(n.free_slots for n in self._alive_nodes())
+            if spec.admission.shed(self._res_qep, free):
+                self.shed += 1
+                self._res_fail_or_retry(req, "shed", att)
+                return False
+        e = self._estimator.estimate(req.fn)
+        self._res_eps[req.id] = e
+        self._res_qep += e
+        if spec.timeout is not None:
+            tok = self._to_tok.get(req.id, 0) + 1
+            self._to_tok[req.id] = tok
+            deadline = spec.timeout.deadline(self.loop.now, e)
+            self.loop.schedule(deadline,
+                               lambda: self._maybe_timeout(req, tok))
+        return True
+
+    def _on_start(self, req: Request) -> None:
+        """A call left its queue for a slot: drop its queued-E[p] snapshot."""
+        e = self._res_eps.pop(req.id, None)
+        if e is not None:
+            self._res_qep -= e
+
+    def _maybe_timeout(self, req: Request, tok: int) -> None:
+        """Deadline watch fired.  Still queued -> cancel the call; running
+        -> free the slot mid-execution and count the elapsed time as wasted
+        work.  Either way the attempt is over: retry or fail permanently."""
+        if self._to_tok.get(req.id) != tok or req.id in self.completed:
+            return                               # stale watch / already done
+        self._to_tok[req.id] = tok + 1           # consume the watch
+        node = next((n for n in self.nodes
+                     if n.name == req.node and n.alive), None)
+        queued_cancel = running_cancel = False
+        if node is not None and node.cancel_queued(req):
+            queued_cancel = True
+        elif (node is not None and req.start is not None
+                and node.cancel_running(req)):
+            running_cancel = True
+            self.wasted_work += max(0.0, self.loop.now - req.start)
+        elif req in self._global_queue:          # pull: not yet at any node
+            self._global_queue.remove(req)
+            queued_cancel = True
+        if not (queued_cancel or running_cancel):
+            return                               # raced with completion/kill
+        if queued_cancel:
+            self._on_start(req)                  # snapshot leaves the queue
+        self.timed_out += 1
+        self._res_fail_or_retry(req, "timeout", self._res_att[req.id])
+        if running_cancel and self.cfg.assignment == "pull":
+            self._pull_round()                   # the freed slot pulls
+
+    def _res_fail_or_retry(self, req: Request, cause: str, att: int) -> None:
+        """A submission ended in failure ``cause``: schedule the client's
+        retry re-arrival (deterministic backoff + jitter) or give up."""
+        rt = self.res.retry
+        if rt is not None and rt.should_retry(cause, att):
+            delay = rt.delay(self._res_seq.get(req.id, req.id), att)
+            self.retries_issued += 1
+            req.attempts += 1
+            req.r_prime = None
+            req.start = None
+            req.finish = None
+            req.priority = None
+            req.node = None
+            req.cold_start = False
+            self.loop.schedule(self.loop.now + delay,
+                               lambda: self._route(req))
+        else:
+            req.failed = "lost" if cause == "kill" else cause
+            self._res_failed += 1
 
     # push-model load balancing ------------------------------------------------
     def _pick_node(self, req: Request) -> OursNodeSim:
@@ -331,6 +439,7 @@ class Cluster:
             self.completed[req.id] = req
         self._estimator.observe_completion(req.fn, req.p_true)
         self._watched.pop(req.id, None)
+        self._to_tok.pop(req.id, None)           # timeout watch is void
         if self.cfg.assignment == "pull":
             self._pull_round()
 
@@ -346,6 +455,18 @@ class Cluster:
         lost = node.kill()
         self.timeline.kill(idx, self.loop.now)
         self.failures += len(lost)
+        if self.res is not None:
+            # kill-lost calls flow through the resilience retry path: void
+            # their watches, drop still-queued E[p] snapshots, then apply
+            # the retry policy (cause "kill") with backoff instead of the
+            # plain failure-detection re-route below
+            for req in lost:
+                self._to_tok.pop(req.id, None)
+                self._on_start(req)
+                self._stolen_ids.discard(req.id)
+                self._res_fail_or_retry(
+                    req, "kill", self._res_att.get(req.id, 1))
+            return
         if self.cfg.assignment == "pull":
             # queued work is recovered from the global queue semantics; the
             # running calls are re-queued after failure detection
@@ -419,7 +540,7 @@ class Cluster:
 
     # ------------------------------------------------------------- autoscaler
     def _autoscale_tick(self) -> None:
-        if len(self.completed) >= self._expected:
+        if len(self.completed) + self._res_failed >= self._expected:
             return                        # burst drained: stop ticking
         alive = self._alive_nodes()
         queued = len(self._global_queue) + sum(n.scheduler.queued for n in alive)
@@ -444,12 +565,25 @@ class Cluster:
     # ------------------------------------------------------------------- run
     def run(self, requests: list[Request], until: float | None = None) -> SimResult:
         self._expected = len(requests)
+        if self.res is not None:
+            # stable arrival rank = the retry-jitter sequence number; the
+            # scan kernel's event index is the same stable sort by r, so
+            # both engines hash identical (seq, attempt) pairs
+            order = sorted(range(len(requests)), key=lambda i: requests[i].r)
+            self._res_seq = {requests[i].id: rank
+                             for rank, i in enumerate(order)}
         for req in requests:
             self.submit(req)
         if self.cfg.autoscale:
             self.loop.schedule(self.cfg.autoscale_interval_s, self._autoscale_tick)
         self.loop.run(until=until)
         done = [r for r in requests if self.completed.get(r.id) is not None]
+        if self.res is not None:
+            # resilience runs report every decided call: completions plus
+            # terminal failures (timed out / shed / lost), so downstream
+            # metrics can see the failed population, not just survivors
+            done = done + [r for r in requests if r.failed is not None
+                           and self.completed.get(r.id) is None]
         for r in requests:  # propagate winner's completion onto the original
             w = self.completed.get(r.id)
             if w is not None and r.c is None:
@@ -484,6 +618,10 @@ class Cluster:
             backups_issued=self.backups_issued,
             steals_won=self.steals_won,
             nodes_used=len(self.nodes),
+            timed_out=self.timed_out,
+            shed=self.shed,
+            retries_issued=self.retries_issued,
+            wasted_work=self.wasted_work,
             timeline=self.timeline,
             meta={"policy": self.cfg.policy, "assignment": self.cfg.assignment},
         )
@@ -520,6 +658,7 @@ def simulate_cluster(
     node_speeds=None,
     degrade=(),
     hedging: HedgingSpec | None = None,
+    resilience: ResilienceSpec | None = None,
     **kwargs,
 ) -> SimResult:
     """Run one burst on an N-node cluster.
@@ -552,6 +691,7 @@ def simulate_cluster(
                 f"fail_spec kills node {idx} at t={at:g}, outside the "
                 f"{nodes}-node initial fleet")
     profile = NodeSpeedProfile.from_any(node_speeds, degrade)
+    resilience = ResilienceSpec.from_any(resilience)
     if backend in ("scan", "auto"):
         from .fastpath import (
             CLUSTER_CONTAINER_MB,
@@ -574,13 +714,14 @@ def simulate_cluster(
             requests, nodes, cores_per_node, policy, assignment=assignment,
             lb=lb, warm=warm, memory_mb=memory_mb,
             container_mb=container_mb, dynamics=dynamics,
-            profile=profile, hedging=hedging))
+            profile=profile, hedging=hedging, resilience=resilience))
         if eligible:
             return simulate_cluster_scan(
                 requests, nodes, cores_per_node, policy,
                 assignment=assignment, lb=lb, warm=warm,
                 memory_mb=memory_mb, container_mb=container_mb,
-                dynamics=dynamics, profile=profile, hedging=hedging)
+                dynamics=dynamics, profile=profile, hedging=hedging,
+                resilience=resilience)
         if backend == "scan":
             raise ValueError(
                 "scan cluster backend requires jax and the ours regime with "
@@ -593,6 +734,7 @@ def simulate_cluster(
     cfg = ClusterConfig(
         nodes=nodes, cores_per_node=cores_per_node, policy=policy,
         assignment=assignment, speed_profile=profile, hedging=hedging,
+        resilience=resilience,
         **kwargs,
     )
     warm_fns = sorted({r.fn for r in requests}) if warm else None

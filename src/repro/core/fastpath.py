@@ -437,10 +437,13 @@ class VectorizedBackend:
     def supports(self, *, mode: str, policy: str, warm: bool,
                  nodes: int = 1, assignment: str = "pull",
                  autoscale: bool = False, failures: bool = False,
-                 hedging: bool = False, hetero: bool = False) -> bool:
+                 hedging: bool = False, hetero: bool = False,
+                 timeouts: bool = False, retries: bool = False,
+                 shedding: bool = False) -> bool:
         return (mode == "ours" and policy in POLICY_NAMES and nodes <= 1
                 and not autoscale and not failures
-                and not hedging and not hetero)
+                and not hedging and not hetero
+                and not timeouts and not retries and not shedding)
 
     def simulate(
         self,
@@ -643,7 +646,7 @@ class _PlaneLayout:
 
 
 def _make_state0(inp, *, n_nodes, n_slots, window, freeze, fc_push, dyn,
-                 het, hedge, cold, dup, n_copies, fc_ring):
+                 het, hedge, cold, dup, n_copies, fc_ring, res=False):
     """Initial carry dict for one cell (the ``state0`` of the event scan).
 
     Split out of the kernel so three consumers share one definition: the
@@ -748,6 +751,39 @@ def _make_state0(inp, *, n_nodes, n_slots, window, freeze, fc_push, dyn,
             state0["xq"] = jnp.zeros(n + 1, dtype=bool)
             state0["rq_rt"] = jnp.zeros(n + 1, dtype=ft)
             state0["enq_t"] = t_arr          # fresh calls enqueue at receive
+    if res:
+        state0.update(
+            # request lifecycle (timeouts / retries / shedding): active
+            # timeout deadline and pending retry re-arrival per request,
+            # the queued-E[p] snapshot each admission added to the shed
+            # pressure gauge, submission counts, terminal-failure mask +
+            # cause, per-slot exec starts (wasted-work accounting), and the
+            # counters cross-checked exactly against the reference Cluster
+            to_t=jnp.full(n + 1, jnp.inf, dtype=ft),
+            rto=jnp.full(n + 1, jnp.inf, dtype=ft),
+            eps=jnp.zeros(n + 1, dtype=ft),
+            qep=jnp.zeros((), dtype=ft),
+            ratt=jnp.zeros(n + 1, dtype=jnp.int32),
+            nfl=jnp.zeros(n + 1, dtype=bool),
+            fcz=jnp.zeros(n + 1, dtype=jnp.int32),   # 1=timeout, 2=shed
+            sst=jnp.zeros((n_nodes, n_slots), dtype=ft),
+            nto=jnp.int32(0), nsh=jnp.int32(0), nrt=jnp.int32(0),
+            wst=jnp.zeros((), dtype=ft),
+            ndn=jnp.int32(0),        # completions + terminal failures
+            # queue-push sequence: a retry re-arrival re-pushes a LOW-index
+            # call LATE, so push order decouples from request-index order
+            # -- the reference's stable per-node PriorityQueue breaks
+            # priority ties by it (same device as the hedge qseq)
+            qsq=jnp.zeros(n + 1, dtype=jnp.int32),
+            stp=jnp.int32(0),
+            # controller estimator (deadline/shed estimates) starts EMPTY,
+            # like the reference Cluster's _estimator (nodes get the §V-A
+            # warm seed, the controller does not)
+            zring=jnp.zeros((n_fns, window), dtype=ft),
+            zrsum=jnp.zeros(n_fns, dtype=ft),
+            zrlen=jnp.zeros(n_fns, dtype=jnp.int32),
+            zrpos=jnp.zeros(n_fns, dtype=jnp.int32),
+        )
     return state0
 
 
@@ -771,7 +807,7 @@ def _make_planes(inp, **flags):
 
 def _scan_cell_kernel(clk, ctr, inp, *, n_nodes, n_slots, window, freeze,
                       use_fc, fc_push, dyn, het, hedge, cold, dup, n_copies,
-                      n_ep, fc_ring, horizon, n_steps):
+                      n_ep, fc_ring, horizon, n_steps, res=False):
     """One cell's event scan over a whole **cluster**: slot-occupancy and
     channel clocks carry a node axis, and the per-event dispatch includes the
     routing decision.  vmapped over the batch by the caller (via the
@@ -938,6 +974,33 @@ def _scan_cell_kernel(clk, ctr, inp, *, n_nodes, n_slots, window, freeze,
     if dyn:
         interval, thr, delay, detect, auto_f = (inp["dynp"][k]
                                                 for k in range(5))
+    if res:
+        # request-lifecycle resilience (timeouts / retries / shedding)
+        # compiles only the static warm push regime -- every other combo is
+        # rejected by cluster_scan_eligible / ScanBackend.supports
+        assert freeze and not (dyn or hedge or dup or het or cold), \
+            "res carry segment requires the static warm push regime"
+        rto_p = inp["rto_p"]   # [on, multiple, floor, absolute]
+        rrt_p = inp["rrt_p"]   # [max_attempts, base, cap, jitter, on_timeout,
+        #                         on_shed]
+        adm_p = inp["adm_p"]   # [on, threshold]
+
+        def _res_delay(seq, a):
+            # bit-identical to RetryPolicy.delay: 16-bit hash fraction for
+            # the per-(request, attempt) jitter, exponential doubling via an
+            # integer left-shift (exp2/power are not bit-exact), f64 ops in
+            # the same order as the Python reference.  ``seq`` is the event
+            # index == the reference's stable arrival rank; int64 keeps the
+            # hash exact for any stream length (res buckets run under x64).
+            base, cap, jit = rrt_p[1], rrt_p[2], rrt_p[3]
+            u = (((seq.astype(jnp.int64) * 7919
+                   + a.astype(jnp.int64) * 104729 + 12345)
+                  % 65536).astype(ft)) / 65536.0
+            shift = jnp.left_shift(
+                jnp.ones((), jnp.int32),
+                jnp.maximum(a - 1, 0)).astype(ft)
+            raw = jnp.minimum(cap, base * shift)
+            return raw * ((1.0 - jit) + jit * u)
 
     # XLA's CPU scatter runs a slow generic per-element path, so every
     # fixed-size state update below is a dense one-hot ``where`` instead of
@@ -952,6 +1015,15 @@ def _scan_cell_kernel(clk, ctr, inp, *, n_nodes, n_slots, window, freeze,
         last_t, prev_t, narr = st["last_t"], st["prev_t"], st["narr"]
         if freeze:
             pend, fprio, node_of = st["pend"], st["fprio"], st["node_of"]
+        if res:
+            to_t, rto = st["to_t"], st["rto"]
+            eps, qep = st["eps"], st["qep"]
+            ratt, nfl, fcz = st["ratt"], st["nfl"], st["fcz"]
+            sst = st["sst"]
+            nto, nsh, nrt = st["nto"], st["nsh"], st["nrt"]
+            wst, ndn = st["wst"], st["ndn"]
+            maxa = rrt_p[0].astype(jnp.int32)
+            on_to, on_sh = rrt_p[4] > 0, rrt_p[5] > 0
 
         t_a = t_arr[ai]
         flat = fin_s.reshape(-1)
@@ -972,6 +1044,13 @@ def _scan_cell_kernel(clk, ctr, inp, *, n_nodes, n_slots, window, freeze,
             # hedge deadlines rank after completions at exact ties (a
             # measure-zero case: deadlines are estimate multiples)
             cand = jnp.stack([t_a, t_c, jnp.min(st["hedge_t"])])
+        elif res:
+            # timeout fires rank after completions and retry re-arrivals
+            # after both; the reference heap would fire a timeout watch
+            # first at a deadline == completion exact tie (lower schedule
+            # seq), but deadlines are estimate multiples and re-arrivals
+            # jittered backoff sums -- measure-zero, like hedge
+            cand = jnp.stack([t_a, t_c, jnp.min(to_t), jnp.min(rto)])
         else:
             cand = jnp.stack([t_a, t_c])
         # argmin takes the *first* minimum: at equal times the stack order is
@@ -984,6 +1063,9 @@ def _scan_cell_kernel(clk, ctr, inp, *, n_nodes, n_slots, window, freeze,
         do_comp = (e == off + 1) & ~none_left
         if hedge:
             do_hedge = (e == (6 if dyn else 2)) & ~none_left
+        if res:
+            do_to = (e == 2) & ~none_left
+            do_rto = (e == 3) & ~none_left
         if dyn:
             do_kill = (e == 0) & ~none_left
             do_re = (e == 3) & ~none_left
@@ -1027,6 +1109,24 @@ def _scan_cell_kernel(clk, ctr, inp, *, n_nodes, n_slots, window, freeze,
                               p[j_done], st["cring"])
             crlen = jnp.where(m_cfd & ~cfull, st["crlen"] + 1, st["crlen"])
             crpos = jnp.where(m_cfd, (cpos + 1) % window, st["crpos"])
+        if res:
+            # completion voids the timeout watch (the reference's
+            # completed-set staleness check) and feeds the controller
+            # estimator ring that admission/deadline estimates read
+            # (Cluster._on_complete observes p_true; nodes see the same
+            # value -- het is excluded from res buckets)
+            to_t = jnp.where((req_ids == j_done) & do_comp, inf, to_t)
+            ndn = ndn + do_comp.astype(jnp.int32)
+            zpos = st["zrpos"][f_done]
+            zfull = st["zrlen"][f_done] == window
+            zold = st["zring"][f_done, zpos]
+            m_zfd = (fn_ids_ax == f_done) & do_comp
+            zrsum = jnp.where(m_zfd, st["zrsum"] + p[j_done]
+                              - jnp.where(zfull, zold, 0.0), st["zrsum"])
+            zring = jnp.where(m_zfd[:, None] & (win_ids == zpos),
+                              p[j_done], st["zring"])
+            zrlen = jnp.where(m_zfd & ~zfull, st["zrlen"] + 1, st["zrlen"])
+            zrpos = jnp.where(m_zfd, (zpos + 1) % window, st["zrpos"])
         m_kn = (node_ids == kn) & do_comp
         busy = jnp.where(m_kn, busy - 1, busy)
         fin_s = jnp.where(m_kn[:, None] & (slot_ids == ks), inf, fin_s)
@@ -1207,6 +1307,46 @@ def _scan_cell_kernel(clk, ctr, inp, *, n_nodes, n_slots, window, freeze,
                 xq = st["xq"] | m_ir     # joins the (virtual) global queue
                 enq_t = jnp.where(m_ir, now, st["enq_t"])
 
+        if res:
+            # -- request-timeout fire: cancel the queued or running attempt.
+            # The invariant "finite to_t => queued xor running" holds
+            # because the watch is armed at admission, survives dispatch and
+            # is cleared at completion / fire / re-arm, so exactly one of
+            # the two branches acts per fire (Cluster._maybe_timeout)
+            jt = jnp.argmin(to_t).astype(jnp.int32)
+            is_q = pend[jt] & do_to
+            slot_match = (idx_s == jt) & jnp.isfinite(fin_s)  # (nodes, S)
+            is_run = do_to & ~is_q & jnp.any(slot_match)
+            # queued: leave the node queue (scheduler.cancel) and return
+            # the admission's E[p] snapshot to the shed gauge, like the
+            # reference's queued-cancel -> _on_start
+            pend = jnp.where((req_ids == jt) & is_q, False, pend)
+            qn = jnp.where((node_ids == node_of[jt]) & is_q, qn - 1, qn)
+            qep = qep - jnp.where(is_q, eps[jt], 0.0)
+            # running: free the slot mid-flight (scheduler.abort) and
+            # account the execution seconds bought and thrown away
+            m_rc = slot_match & is_run
+            rn = (jnp.argmax(slot_match.ravel()) // n_slots).astype(
+                jnp.int32)
+            sst_v = jnp.sum(jnp.where(m_rc, sst, 0.0))
+            wst = wst + jnp.where(is_run,
+                                  jnp.maximum(now - sst_v, 0.0), 0.0)
+            fin_s = jnp.where(m_rc, inf, fin_s)
+            busy = jnp.where((node_ids == rn) & is_run, busy - 1, busy)
+            nto = nto + do_to.astype(jnp.int32)
+            to_t = jnp.where((req_ids == jt) & do_to, inf, to_t)
+            # retry-or-fail (Cluster._res_fail_or_retry): ``ratt`` already
+            # counts this attempt, so the 1-based failed-attempt number is
+            # ratt[jt] itself
+            can_rt = do_to & on_to & (ratt[jt] < maxa)
+            rto = jnp.where((req_ids == jt) & can_rt,
+                            now + _res_delay(jt, ratt[jt]), rto)
+            nrt = nrt + can_rt.astype(jnp.int32)
+            died = do_to & ~can_rt
+            nfl = nfl | ((req_ids == jt) & died)
+            fcz = jnp.where((req_ids == jt) & died, 1, fcz)
+            ndn = ndn + died.astype(jnp.int32)
+
         # -- arrival / re-arrival: route (freeze) / enqueue, observe --------
         i_orig = jnp.minimum(ai, n)
         if dyn and hedge:
@@ -1228,10 +1368,49 @@ def _scan_cell_kernel(clk, ctr, inp, *, n_nodes, n_slots, window, freeze,
                 i_ins = jnp.where(do_arr, i_orig, i_dup)
             else:
                 i_ins = jnp.where(do_arr, i_orig, jh)
+        elif res:
+            # a retry re-arrival re-enters through the same insert path as
+            # a fresh arrival (reference: loop.schedule(now + delay, _route))
+            jr = jnp.argmin(rto).astype(jnp.int32)
+            rto = jnp.where((req_ids == jr) & do_rto, inf, rto)
+            do_ins = do_arr | do_rto
+            i_ins = jnp.where(do_arr, i_orig, jr)
         else:
             do_ins = do_arr
             i_ins = i_orig
         f_i = fnid[i_ins]
+        if res:
+            # -- admission (Cluster._res_admit, kept in sync line-for-line):
+            # count the submission, shed when the queued-E[p] backlog per
+            # free slot exceeds the threshold, else snapshot the controller
+            # estimate into the gauge and arm the timeout watch.  A shed
+            # submission never reaches a node: everything downstream gated
+            # on do_ins (node observe, FC log, queue insert, dispatch)
+            # stays untouched, exactly like _route returning early.
+            do_ins0 = do_ins
+            ratt = jnp.where((req_ids == i_ins) & do_ins0, ratt + 1, ratt)
+            att_i = ratt[i_ins]          # submissions including this one
+            est_z = jnp.where(zrlen[f_i] > 0,
+                              zrsum[f_i] / jnp.maximum(zrlen[f_i], 1), 0.0)
+            free_tot = jnp.sum(jnp.where(active, cores - busy, 0))
+            shed_now = (do_ins0 & (adm_p[0] > 0)
+                        & (qep / jnp.maximum(free_tot, 1) > adm_p[1]))
+            nsh = nsh + shed_now.astype(jnp.int32)
+            sh_rt = shed_now & on_sh & (att_i < maxa)
+            rto = jnp.where((req_ids == i_ins) & sh_rt,
+                            now + _res_delay(i_ins, att_i), rto)
+            nrt = nrt + sh_rt.astype(jnp.int32)
+            sh_die = shed_now & ~sh_rt
+            nfl = nfl | ((req_ids == i_ins) & sh_die)
+            fcz = jnp.where((req_ids == i_ins) & sh_die, 2, fcz)
+            ndn = ndn + sh_die.astype(jnp.int32)
+            do_ins = do_ins0 & ~shed_now
+            eps = jnp.where((req_ids == i_ins) & do_ins, est_z, eps)
+            qep = qep + jnp.where(do_ins, est_z, 0.0)
+            dl = jnp.where(rto_p[3] > 0, now + rto_p[3],
+                           now + rto_p[1] * jnp.maximum(est_z, rto_p[2]))
+            to_t = jnp.where((req_ids == i_ins) & do_ins & (rto_p[0] > 0),
+                             dl, to_t)
         if freeze:
             # push least-loaded: min busy+queued over nodes, first on ties
             load = jnp.where(active, busy + qn, jnp.int32(2 ** 30))
@@ -1304,6 +1483,9 @@ def _scan_cell_kernel(clk, ctr, inp, *, n_nodes, n_slots, window, freeze,
                                                   fprio[i_ins]))
             node_of = node_of.at[i_ins].set(jnp.where(do_ins, k_arr,
                                                       node_of[i_ins]))
+            if res:
+                qsq = jnp.where((req_ids == i_ins) & do_ins, st["stp"],
+                                st["qsq"])
             if hedge:
                 # (re-)arm the watch from the controller estimate -- both
                 # fresh arrivals and just-stolen/raced calls keep being
@@ -1354,13 +1536,19 @@ def _scan_cell_kernel(clk, ctr, inp, *, n_nodes, n_slots, window, freeze,
             k_d = jnp.where(do_ins, k_arr, kn)
             if dyn:
                 k_d = jnp.where(do_act, ka, k_d)
+            if res:
+                # a running-timeout frees a slot on the watched node and
+                # backfills there (scheduler.abort -> _dispatch)
+                k_d = jnp.where(do_to & is_run, rn, k_d)
             prio_vec = jnp.where(pend & (node_of == k_d), fprio, inf)
-            if hedge:
+            if hedge or res:
                 # exact priority ties (common under SEPT/FC: same fn, same
                 # estimate) resolve by queue push order, like the
-                # reference's stable per-node PriorityQueue
+                # reference's stable per-node PriorityQueue -- hedge steals
+                # and retry re-arrivals both re-push out of index order
                 best = jnp.min(prio_vec)
-                qv = jnp.where(prio_vec == best, qseq, jnp.int32(2 ** 30))
+                seq_v = qseq if hedge else qsq
+                qv = jnp.where(prio_vec == best, seq_v, jnp.int32(2 ** 30))
                 j = jnp.argmin(qv).astype(jnp.int32)
                 has_q = best < inf
                 prio_j = best
@@ -1419,6 +1607,10 @@ def _scan_cell_kernel(clk, ctr, inp, *, n_nodes, n_slots, window, freeze,
         elif hedge:
             # an ineligible hedge fire is a pure no-op event: no dispatch
             can = (do_ins | do_comp) & (busy[k_d] < cores) & has_q
+        elif res:
+            # queued-timeouts and shed inserts free no slot: no dispatch
+            can = ((do_ins | do_comp | (do_to & is_run))
+                   & (busy[k_d] < cores) & has_q)
         else:
             can = ~none_left & (busy[k_d] < cores) & has_q
         if cold:
@@ -1460,6 +1652,12 @@ def _scan_cell_kernel(clk, ctr, inp, *, n_nodes, n_slots, window, freeze,
         m_ds = (m_kd[:, None] & (slot_ids == s)[None, :]) & can
         fin_s = jnp.where(m_ds, fin_j, fin_s)
         idx_s = jnp.where(m_ds, j, idx_s)
+        if res:
+            sst = jnp.where(m_ds, exec_start, sst)
+            # the dispatched call leaves the shed gauge (the reference
+            # on_start hook): subtract the same stored snapshot its
+            # admission added, so the +/- sequence matches bit-for-bit
+            qep = qep - jnp.where(can, eps[j], 0.0)
         if dyn and freeze:
             # launch-sequence stamp: orders the in-flight half of a kill's
             # lost set (the reference in_flight dict is insertion-ordered)
@@ -1537,6 +1735,12 @@ def _scan_cell_kernel(clk, ctr, inp, *, n_nodes, n_slots, window, freeze,
                     nxt.update(hedge_t2=hedge_t2)
             if not freeze:
                 nxt.update(xq=xq, rq_rt=rq_rt, enq_t=enq_t)
+        if res:
+            nxt.update(to_t=to_t, rto=rto, eps=eps, qep=qep, ratt=ratt,
+                       nfl=nfl, fcz=fcz, sst=sst, nto=nto, nsh=nsh,
+                       nrt=nrt, wst=wst, ndn=ndn, qsq=qsq,
+                       stp=st["stp"] + 1, zring=zring,
+                       zrsum=zrsum, zrlen=zrlen, zrpos=zrpos)
         return nxt, out
 
     # the scan carry is the packed (clk, ctr) plane pair; the dict view the
@@ -1545,7 +1749,8 @@ def _scan_cell_kernel(clk, ctr, inp, *, n_nodes, n_slots, window, freeze,
     layout = _carry_layout(inp, n_nodes=n_nodes, n_slots=n_slots,
                            window=window, freeze=freeze, fc_push=fc_push,
                            dyn=dyn, het=het, hedge=hedge, cold=cold,
-                           dup=dup, n_copies=n_copies, fc_ring=fc_ring)
+                           dup=dup, n_copies=n_copies, fc_ring=fc_ring,
+                           res=res)
 
     def plane_step(planes, x):
         nxt, rec = step(layout.unpack(*planes), x)
@@ -1576,6 +1781,16 @@ def _scan_cell_kernel(clk, ctr, inp, *, n_nodes, n_slots, window, freeze,
                    "dead": state["dead"], **aux}
         if freeze:
             summary.update(prio=state["fprio"], node=state["node_of"])
+        return (j_s, es_s, fs_s, pj_s, kd_s), summary
+    if res:
+        # a timed-out-and-retried request is dispatched more than once, so
+        # the step records resolve host-side last-wins like dyn; ``ndn``
+        # lets the caller verify the step budget covered every lifecycle
+        summary = {"nto": state["nto"], "nsh": state["nsh"],
+                   "nrt": state["nrt"], "wst": state["wst"],
+                   "nfl": state["nfl"], "fcz": state["fcz"],
+                   "ratt": state["ratt"], "ndn": state["ndn"],
+                   "prio": state["fprio"], "node": state["node_of"]}
         return (j_s, es_s, fs_s, pj_s, kd_s), summary
     if dup:
         # a raced request's client-visible outcome is its first-completed
@@ -1721,6 +1936,9 @@ _CARRY_SEGMENTS: tuple[tuple[str, tuple[str, ...]], ...] = (
     ("dyn", ("act_t", "dead", "killq", "act_pend", "rearr", "next_tick",
              "prov", "nfail", "ndone", "xq", "rq_rt", "enq_t",
              "dseq", "dcnt", "rord")),
+    ("res", ("to_t", "rto", "eps", "qep", "ratt", "nfl", "fcz", "sst",
+             "nto", "nsh", "nrt", "wst", "ndn", "qsq", "stp",
+             "zring", "zrsum", "zrlen", "zrpos")),
 )
 
 
@@ -1745,11 +1963,13 @@ def _mask_features(mask: int) -> dict[str, bool]:
 
 
 def _use64(flags: dict) -> bool:
-    # dynamic-capacity, heterogeneous, hedged and cold buckets compute in
-    # float64 (enable_x64): failure, backup and cold-start accounting depend
-    # on exact completion-vs-kill/deadline event orderings, which float32
-    # channel-clock drift can flip under heavy backlog
-    return flags["dyn"] or flags["het"] or flags["hedge"] or flags["cold"]
+    # dynamic-capacity, heterogeneous, hedged, cold and resilience buckets
+    # compute in float64 (enable_x64): failure, backup, cold-start and
+    # timeout/shed accounting depend on exact completion-vs-kill/deadline
+    # event orderings, which float32 channel-clock drift can flip under
+    # heavy backlog
+    return (flags["dyn"] or flags["het"] or flags["hedge"] or flags["cold"]
+            or flags["res"])
 
 
 def _x64_ctx(use64: bool):
@@ -1816,6 +2036,15 @@ def _alloc_bucket_inputs(shape_key: tuple, bsz: int) -> dict:
         inp["hmult"] = np.ones(bsz, dtype=fdt)
         inp["hfloor"] = np.zeros(bsz, dtype=fdt)
         inp["hmax"] = np.zeros(bsz, dtype=np.int32)
+    if flags["res"]:
+        # ResilienceSpec.arrays() tensor form: timeout [on, multiple,
+        # floor, absolute], retry [max_attempts, base, cap, jitter,
+        # on_timeout, on_shed], admission [on, threshold].  The idle
+        # default (all off, max_attempts=1) never fires an event.
+        inp["rto_p"] = np.zeros((bsz, 4), dtype=fdt)
+        inp["rrt_p"] = np.zeros((bsz, 6), dtype=fdt)
+        inp["rrt_p"][:, 0] = 1.0
+        inp["adm_p"] = np.zeros((bsz, 2), dtype=fdt)
     return inp
 
 
@@ -1841,7 +2070,8 @@ def _build_runner(shape_key: tuple, bsz: int):
                     freeze=flags["freeze"], fc_push=flags["fc_push"],
                     dyn=flags["dyn"], het=flags["het"],
                     hedge=flags["hedge"], cold=flags["cold"],
-                    dup=flags["dup"], n_copies=n_copies, fc_ring=fc_ring)
+                    dup=flags["dup"], n_copies=n_copies, fc_ring=fc_ring,
+                    res=flags["res"])
     step_kw = dict(state_kw, use_fc=flags["use_fc"], n_ep=n_ep,
                    horizon=DEFAULT_FC_HORIZON, n_steps=2 * n_req + xtra)
 
@@ -1993,10 +2223,15 @@ class _ScanCell:
     dynamics: object | None = None      # ClusterDynamics | None
     profile: object | None = None       # NodeSpeedProfile | None
     hedging: object | None = None       # HedgingSpec | None
+    resilience: object | None = None    # ResilienceSpec | None
 
     @property
     def dyn(self) -> bool:
         return self.dynamics is not None and not self.dynamics.is_static
+
+    @property
+    def res(self) -> bool:
+        return self.resilience is not None and not self.resilience.is_null
 
     @property
     def het(self) -> bool:
@@ -2082,15 +2317,42 @@ class _ScanCell:
             full += len(self.dynamics.fail) * self.cores + n
         return full
 
+    def res_budget(self) -> int:
+        """*Optimistic* extra scan steps for resilience: realized extra
+        events are timeout fires plus retry re-arrivals plus resubmission
+        terminals -- ``n`` exactly when retries are off (<= one fire per
+        submission), and empirically ~2 n even in a full retry storm.
+        ``_run_scan_bucket`` verifies completion (``ndn``) and re-runs a
+        chunk at :meth:`res_budget_full` when this guess was short, so the
+        bound is a performance knob, never a correctness one."""
+        if not self.res:
+            return 0
+        n = len(self.feats.t)
+        return n if int(self.resilience.max_attempts) <= 1 else 2 * n
+
+    def res_budget_full(self) -> int:
+        """Strict upper bound on the extra scan steps resilience consumes:
+        each of the <= n * max_attempts submissions costs at most one
+        insert event (covered by the base arrival budget for the first) and
+        one terminal event (completion or timeout fire), plus one retry
+        re-arrival event per resubmission -- <= n * (2 * max_attempts - 1)
+        extra, rounded up to ``2 n max_attempts``.  Sheds happen inside the
+        insert event and stale watch fires never exist (the deadline slot
+        is overwritten at re-arm), so no slack is needed for either."""
+        if not self.res:
+            return 0
+        return 2 * len(self.feats.t) * int(self.resilience.max_attempts)
+
     def bucket(self) -> tuple:
         freeze = self.assignment != "pull"
         dyn = self.dyn
         use_fc = not freeze and self.policy == "fc"
         # single-node static push-FC can use the precomputed global window
-        # counts -- unless hedging re-logs steal/copy re-submissions on the
-        # node, which only the live per-(node, fn) rings can track
+        # counts -- unless hedging or retries re-log re-submissions on the
+        # node (and shedding withholds arrivals from it), which only the
+        # live per-(node, fn) rings can track
         fc_push = (freeze and self.policy == "fc"
-                   and (self.nodes > 1 or dyn or self.hedge))
+                   and (self.nodes > 1 or dyn or self.hedge or self.res))
         if freeze:
             kq = 1                   # fn_ev unused in frozen-priority mode
         else:                        # per-function queue capacity
@@ -2101,19 +2363,41 @@ class _ScanCell:
         # additionally re-log each steal/copy on its target node, so every
         # arrival can contribute up to 1 + max_backups entries in-window
         fc_mult = 1 + int(self.hedging.max_backups) if self.hedge else 1
+        if self.res:
+            # every admitted resubmission re-logs on its target node
+            fc_mult = max(fc_mult, int(self.resilience.max_attempts))
         fc_ring = (_pow2(int(self.feats.count.max()) * fc_mult)
                    if fc_push and len(self.feats.count) else 1)
         n_ep = (_pow2(max(1, len(self.profile.episodes)))
                 if self.het else 1)
-        extra = self.dyn_budget() + self.hedge_budget()
+        extra = self.dyn_budget() + self.hedge_budget() + self.res_budget()
         xtra = _pow2(extra) if extra else 0
         mask = _feature_mask(freeze=freeze, use_fc=use_fc, fc_push=fc_push,
                              cold=self.cold, hedge=self.hedge, dup=self.dup,
-                             het=self.het, dyn=dyn)
+                             het=self.het, dyn=dyn, res=self.res)
         return (mask, _pow2(len(self.feats.t)),
                 _pow2(self.node_cap()), _pow2(self.cores),
                 _pow2(len(self.feats.fns)), kq, DEFAULT_WINDOW,
                 fc_ring, n_ep, self.n_copies, xtra)
+
+
+def _scan_check_outputs(tag: str, cell_idx: int, n: int,
+                        fields: dict) -> None:
+    """Opt-in (``REPRO_SCAN_CHECK=1``) numerical validation of one cell's
+    carry-derived outputs, run after each chunk's host sync: every live
+    entry must be finite.  A NaN/inf here means a kernel carry segment went
+    numerically bad (e.g. an inf sentinel leaked through a mask); the error
+    names the bucket, the cell and the offending field/event so the bad
+    segment is identifiable without bisecting the sweep."""
+    for name, arr in fields.items():
+        a = np.asarray(arr[:n], dtype=np.float64)
+        bad = ~np.isfinite(a)
+        if bad.any():
+            e = int(np.nonzero(bad)[0][0])
+            raise FloatingPointError(
+                f"REPRO_SCAN_CHECK: non-finite scan output in bucket {tag} "
+                f"cell {cell_idx}: field {name!r} = {a[e]!r} at event "
+                f"index {e}")
 
 
 def _run_scan_bucket(key: tuple, cells: list[_ScanCell]) -> list[tuple]:
@@ -2136,7 +2420,8 @@ def _run_scan_bucket(key: tuple, cells: list[_ScanCell]) -> list[tuple]:
     freeze, use_fc, fc_push = (flags["freeze"], flags["use_fc"],
                                flags["fc_push"])
     dyn, het, hedge = flags["dyn"], flags["het"], flags["hedge"]
-    cold, dup = flags["cold"], flags["dup"]
+    cold, dup, resil = flags["cold"], flags["dup"], flags["res"]
+    check = os.environ.get("REPRO_SCAN_CHECK") == "1"
     n1 = n_b + 1
     use64 = _use64(flags)
     tag = _bucket_tag(key)
@@ -2200,9 +2485,22 @@ def _run_scan_bucket(key: tuple, cells: list[_ScanCell]) -> list[tuple]:
                             "hedge scan step budget exhausted at the "
                             f"strict bound ({full}); this is a kernel "
                             "budget bug")
+        if resil:
+            ndn_b = res[1]["ndn"]
+            if any(int(ndn_b[b]) != len(chunk[b].feats.t)
+                   for b in range(len(chunk))):
+                # the optimistic resilience step budget fell short (a storm
+                # fired far more timeouts/retries than the ~2n guess): re-run
+                # the chunk at the strict worst-case bound, which cannot fall
+                # short by construction -- the per-cell ndn check below then
+                # only fires on a genuine kernel budget bug
+                full = max(c.dyn_budget() + c.hedge_budget()
+                           + c.res_budget_full() for c in chunk)
+                res = jax.tree_util.tree_map(
+                    np.asarray, _dispatch(inp, _pow2(full), rec))
         rec["sync_s"] += time.perf_counter() - t0
         _record_timing(rec)
-        if not dyn:
+        if not dyn and not resil:
             start_b, finish_b, prio_b, node_b, aux = res
             for b in range(len(chunk)):
                 ex: dict | None = {}
@@ -2214,6 +2512,11 @@ def _run_scan_bucket(key: tuple, cells: list[_ScanCell]) -> list[tuple]:
                     ex.update(cold_starts=int(aux["ncold"][b]),
                               evictions=int(aux["nevt"][b]),
                               coldq=aux["coldq"][b])
+                if check:
+                    _scan_check_outputs(
+                        tag, lo + b, len(chunk[b].feats.t),
+                        {"start": start_b[b], "finish": finish_b[b],
+                         "prio": prio_b[b]})
                 out[lo + b] = (np.asarray(start_b[b], dtype=np.float64),
                                np.asarray(finish_b[b], dtype=np.float64),
                                np.asarray(prio_b[b], dtype=np.float64),
@@ -2225,14 +2528,16 @@ def _run_scan_bucket(key: tuple, cells: list[_ScanCell]) -> list[tuple]:
         pj_s = np.asarray(pj_s, dtype=np.float64)
         for b, cell in enumerate(chunk):
             n = len(cell.feats.t)
-            if int(summary["ndone"][b]) != n:
+            ndone = int(summary["ndn" if resil else "ndone"][b])
+            if ndone != n:
                 raise RuntimeError(
-                    f"scan dynamics step budget exhausted: cell completed "
-                    f"{int(summary['ndone'][b])}/{n} requests "
+                    f"scan {'resilience' if resil else 'dynamics'} step "
+                    f"budget exhausted: cell resolved {ndone}/{n} requests "
                     f"(bucket xtra={xtra}); this is a kernel budget bug")
-            # a re-dispatched lost request appears twice in the step record;
-            # numpy fancy assignment resolves duplicates last-wins in step
-            # order, which is exactly the re-dispatch overriding the lost one
+            # a re-dispatched lost/retried request appears twice in the step
+            # record; numpy fancy assignment resolves duplicates last-wins
+            # in step order, which is exactly the re-dispatch overriding
+            # the cancelled one
             start = np.zeros(n1)
             finish = np.zeros(n1)
             start[j_s[b]] = es_s[b]
@@ -2245,21 +2550,36 @@ def _run_scan_bucket(key: tuple, cells: list[_ScanCell]) -> list[tuple]:
                 node = np.zeros(n1, dtype=np.int64)
                 prio[j_s[b]] = pj_s[b]
                 node[j_s[b]] = kd_s[b]
-            extras = {
-                "failures": int(summary["nfail"][b]),
-                "nodes_used": int(summary["prov"][b]),
-                "act_t": summary["act_t"][b],
-                "dead": summary["dead"][b],
-                "killt": inp["killt"][b],
-            }
-            if hedge:
-                extras.update(backups=int(summary["nbk"][b]),
-                              steals=int(summary["nstl"][b]),
-                              attempts=summary["att"][b])
-            if cold:
-                extras.update(cold_starts=int(summary["ncold"][b]),
-                              evictions=int(summary["nevt"][b]),
-                              coldq=summary["coldq"][b])
+            if resil:
+                extras = {
+                    "timed_out": int(summary["nto"][b]),
+                    "shed": int(summary["nsh"][b]),
+                    "retries_issued": int(summary["nrt"][b]),
+                    "wasted_work": float(summary["wst"][b]),
+                    "failed_mask": summary["nfl"][b],
+                    "failed_cause": summary["fcz"][b],
+                    "attempts_res": summary["ratt"][b],
+                }
+            else:
+                extras = {
+                    "failures": int(summary["nfail"][b]),
+                    "nodes_used": int(summary["prov"][b]),
+                    "act_t": summary["act_t"][b],
+                    "dead": summary["dead"][b],
+                    "killt": inp["killt"][b],
+                }
+                if hedge:
+                    extras.update(backups=int(summary["nbk"][b]),
+                                  steals=int(summary["nstl"][b]),
+                                  attempts=summary["att"][b])
+                if cold:
+                    extras.update(cold_starts=int(summary["ncold"][b]),
+                                  evictions=int(summary["nevt"][b]),
+                                  coldq=summary["coldq"][b])
+            if check:
+                _scan_check_outputs(tag, lo + b, n,
+                                    {"start": start, "finish": finish,
+                                     "prio": prio})
             out[lo + b] = (start, finish, prio, node, extras)
 
     for lo in range(0, len(cells), chunk_max):
@@ -2305,6 +2625,11 @@ def _run_scan_bucket(key: tuple, cells: list[_ScanCell]) -> list[tuple]:
                 inp["hmult"][b] = h.multiple
                 inp["hfloor"][b] = h.floor_s
                 inp["hmax"][b] = h.max_backups
+            if resil:
+                t4, r6, a2 = cell.resilience.arrays()
+                inp["rto_p"][b] = t4
+                inp["rrt_p"][b] = r6
+                inp["adm_p"][b] = a2
             if cell.assignment == "pull":
                 if dyn:
                     inp["coef"][b] = _PULL_COEF_DYN[cell.policy]
@@ -2440,6 +2765,13 @@ def _run_scan_cells(cells: list[_ScanCell],
         for i, (start, finish, prio, node, extras) in zip(idxs, arrays):
             cell = cells[i]
             if metrics_only:
+                if cell.res:
+                    # resilience cells can terminate requests without a
+                    # completion; the metrics-only fold assumes every
+                    # request finished, so those cells always write back
+                    raise ValueError(
+                        "metrics_only is not supported for resilience "
+                        "cells; run them through the write-back path")
                 results[i] = _cell_scan_metrics(cell, finish, extras,
                                                 req_cache)
                 continue
@@ -2448,6 +2780,10 @@ def _run_scan_cells(cells: list[_ScanCell],
             t_list = f.t.tolist()
             att = extras.get("attempts") if extras is not None else None
             coldq = extras.get("coldq") if extras is not None else None
+            fmask = (extras.get("failed_mask")
+                     if extras is not None else None)
+            fcause = extras.get("failed_cause") if extras is not None else None
+            ratt = extras.get("attempts_res") if extras is not None else None
             for e, ridx in enumerate(order):
                 req = cell.requests[ridx]
                 req.node = f"node{int(node[e])}"
@@ -2456,11 +2792,21 @@ def _run_scan_cells(cells: list[_ScanCell],
                 # warm cells never cold-start; cold cells carry the
                 # original's own dispatch decision per request
                 req.cold_start = bool(coldq[e]) if coldq is not None else False
+                if fmask is not None and bool(fmask[e]):
+                    # terminal failure: the recorded start/finish belong to
+                    # a cancelled attempt -- the client never saw a response
+                    req.start = req.finish = req.c = None
+                    req.failed = "timeout" if int(fcause[e]) == 1 else "shed"
+                    req.attempts = max(int(ratt[e]) - 1, 0)
+                    continue
                 req.start = float(start[e])
                 req.finish = float(finish[e])
                 req.c = req.finish + RESP_OVERHEAD_S
+                req.failed = None
                 if att is not None:              # hedged cell: backup count
                     req.attempts = int(att[e])
+                if ratt is not None:             # resubmission count
+                    req.attempts = max(int(ratt[e]) - 1, 0)
             meta = {"mode": "ours", "policy": cell.policy,
                     "cores": cell.cores, "backend": "scan"}
             if cell.assignment != "single":
@@ -2468,6 +2814,8 @@ def _run_scan_cells(cells: list[_ScanCell],
                 meta["assignment"] = cell.assignment
             failures = backups = steals = 0
             cold_starts = evictions = 0
+            timed_out = shed = retries_issued = 0
+            wasted_work = 0.0
             nodes_used = cell.nodes
             timeline = None
             if extras is not None:
@@ -2476,6 +2824,10 @@ def _run_scan_cells(cells: list[_ScanCell],
                 steals = extras.get("steals", 0)
                 cold_starts = extras.get("cold_starts", 0)
                 evictions = extras.get("evictions", 0)
+                timed_out = extras.get("timed_out", 0)
+                shed = extras.get("shed", 0)
+                retries_issued = extras.get("retries_issued", 0)
+                wasted_work = extras.get("wasted_work", 0.0)
                 if "act_t" in extras:        # dynamic-capacity cell
                     from .cluster import CapacityTimeline
                     nodes_used = extras["nodes_used"]
@@ -2490,7 +2842,10 @@ def _run_scan_cells(cells: list[_ScanCell],
                 requests=cell.requests, cold_starts=cold_starts,
                 evictions=evictions, creations=0, failures=failures,
                 backups_issued=backups, steals_won=steals,
-                nodes_used=nodes_used, timeline=timeline, meta=meta)
+                nodes_used=nodes_used, timeline=timeline,
+                timed_out=timed_out, shed=shed,
+                retries_issued=retries_issued, wasted_work=wasted_work,
+                meta=meta)
     return results  # type: ignore[return-value]
 
 
@@ -2569,6 +2924,7 @@ def cluster_scan_eligible(
     dynamics=None,
     profile=None,
     hedging=None,
+    resilience=None,
 ) -> bool:
     """True when the scan kernel reproduces the reference cluster within
     float32 rounding: ours mode, known policy, a container regime the kernel
@@ -2613,6 +2969,14 @@ def cluster_scan_eligible(
     elif assignment != "pull":
         return False
     dyn = dynamics is not None and not dynamics.is_static
+    if resilience is not None and not resilience.is_null:
+        # the res carry segment models the push (frozen-priority) static
+        # warm regime; resilience x pull / dynamics / hedging /
+        # heterogeneity / cold-starts runs on the reference loop
+        if (assignment != "push" or not warm or dyn
+                or hedging is not None
+                or (profile is not None and not profile.is_uniform)):
+            return False
     if hedging is not None:
         if hedging.mode not in ("steal", "duplicate"):
             return False
@@ -2646,7 +3010,8 @@ def simulate_cluster_cells_scan(
     metrics_only: bool = False,
 ) -> list[SimResult]:
     """Run a batch of ``(requests, nodes, cores, policy[, assignment[, lb[,
-    dynamics[, profile[, hedging[, warm]]]]]])`` ours-mode cluster scenarios
+    dynamics[, profile[, hedging[, warm[, resilience]]]]]]])`` ours-mode
+    cluster scenarios
     as bucketed vmapped scans -- an entire nodes x intensity x policy grid
     becomes a handful of XLA dispatches.  ``dynamics`` (a
     :class:`~repro.core.cluster.ClusterDynamics`, or ``None``) adds
@@ -2680,24 +3045,25 @@ def simulate_cluster_cells_scan(
         profile = item[7] if len(item) > 7 else None
         hedging = item[8] if len(item) > 8 else None
         warm = item[9] if len(item) > 9 else True
+        resilience = item[10] if len(item) > 10 else None
         if validate and not cluster_scan_eligible(
                 requests, nodes, cores, policy, assignment=assignment,
                 lb=lb, warm=warm, memory_mb=memory_mb,
                 container_mb=container_mb, dynamics=dynamics,
-                profile=profile, hedging=hedging):
+                profile=profile, hedging=hedging, resilience=resilience):
             raise ValueError(
                 "scan cluster backend requires the ours regime with "
-                "supported dynamics/heterogeneity/hedging and, for cold "
-                "cells, ample container memory "
+                "supported dynamics/heterogeneity/hedging/resilience and, "
+                "for cold cells, ample container memory "
                 f"(policy={policy!r}, nodes={nodes}, cores={cores}, "
                 f"assignment={assignment!r}, warm={warm}, "
-                f"dynamics={dynamics!r}, hedging={hedging!r}); use "
-                "backend='reference'")
+                f"dynamics={dynamics!r}, hedging={hedging!r}, "
+                f"resilience={resilience!r}); use backend='reference'")
         cells.append(_ScanCell(requests=requests, feats=feats(requests),
                                cores=cores, nodes=nodes, policy=policy,
                                assignment=assignment, lb=lb, warm=warm,
                                dynamics=dynamics, profile=profile,
-                               hedging=hedging))
+                               hedging=hedging, resilience=resilience))
     return _run_scan_cells(cells, metrics_only=metrics_only)
 
 
@@ -2714,12 +3080,13 @@ def simulate_cluster_scan(
     dynamics=None,
     profile=None,
     hedging=None,
+    resilience=None,
 ) -> SimResult:
     """Single-cell convenience wrapper over
     :func:`simulate_cluster_cells_scan`."""
     return simulate_cluster_cells_scan(
         [(requests, nodes, cores_per_node, policy, assignment, lb,
-          dynamics, profile, hedging, warm)],
+          dynamics, profile, hedging, warm, resilience)],
         memory_mb=memory_mb, container_mb=container_mb)[0]
 
 
@@ -2748,13 +3115,22 @@ class ScanBackend:
     def supports(self, *, mode: str, policy: str, warm: bool,
                  nodes: int = 1, assignment: str = "pull",
                  autoscale: bool = False, failures: bool = False,
-                 hedging: bool = False, hetero: bool = False) -> bool:
+                 hedging: bool = False, hetero: bool = False,
+                 timeouts: bool = False, retries: bool = False,
+                 shedding: bool = False) -> bool:
         if mode != "ours" or policy not in POLICY_NAMES:
             return False
         if assignment not in ("pull", "push"):
             return False
         if failures and nodes < 2:
             return False             # lost calls need a surviving node
+        if timeouts or retries or shedding:
+            # the res carry segment models the push (freeze-priority)
+            # static warm regime; resilience x pull / dynamics / hedging /
+            # heterogeneity / cold-starts runs on the reference loop
+            if (assignment != "push" or not warm or autoscale or failures
+                    or hedging or hetero):
+                return False
         try:
             import jax  # noqa: F401
         except ImportError:

@@ -103,6 +103,48 @@ def summarize(
     return summary
 
 
+def resilience_row(
+    requests: list[Request],
+    *,
+    timed_out: int = 0,
+    shed: int = 0,
+    retries_issued: int = 0,
+    wasted_work: float = 0.0,
+) -> dict[str, float]:
+    """Resilience-scenario metrics (ISSUE 8): counters plus the derived
+    ``goodput`` (successful completions per second of makespan),
+    ``R_ok_p95`` (95th-percentile response over *successful* calls only --
+    under shedding/timeouts the plain percentiles silently drop failures,
+    so this name makes the survivorship explicit), and ``wasted_frac``
+    (wasted execution seconds / total execution seconds, wasted included).
+
+    Tolerates bursts where every call failed: the derived metrics degrade
+    to 0.0 instead of raising, so a fully-shed cell still yields a row."""
+    done = [r for r in requests if r.c is not None]
+    failed = [r for r in requests if r.c is None and r.failed is not None]
+    makespan = max((r.c for r in done), default=0.0)
+    goodput = len(done) / makespan if makespan > 0 else 0.0
+    if done:
+        r_ok_p95 = float(np.percentile(
+            np.array([r.response_time for r in done]), 95))
+    else:
+        r_ok_p95 = 0.0
+    busy = sum(r.finish - r.start for r in done
+               if r.start is not None and r.finish is not None)
+    total = wasted_work + busy
+    wasted_frac = wasted_work / total if total > 0 else 0.0
+    return {
+        "goodput": goodput,
+        "R_ok_p95": r_ok_p95,
+        "wasted_frac": wasted_frac,
+        "timed_out": float(timed_out),
+        "shed": float(shed),
+        "retries_issued": float(retries_issued),
+        "wasted_work": float(wasted_work),
+        "n_failed": float(len(failed)),
+    }
+
+
 def merge_summaries(parts: list[Summary]) -> dict[str, float]:
     """Average key statistics across repetitions (the paper aggregates the
     five random call sequences per configuration)."""

@@ -91,6 +91,15 @@ class NodeScheduler:
         """Remove a queued (not yet started) call; used by straggler backups."""
         return self.queue.remove(req)
 
+    def abort(self, acquire: AcquireResult, now: float) -> list[StartDecision]:
+        """A *running* call was cancelled (request timeout): free the slot
+        and container and backfill, but record **no** completion history --
+        the invoker never measured a processing time."""
+        self.pool.release(acquire.container, now)
+        self.busy -= 1
+        assert self.busy >= 0, "slot accounting went negative"
+        return self._dispatch(now)
+
     # -- core loop -------------------------------------------------------------
     def _dispatch(self, now: float) -> list[StartDecision]:
         """Start queued calls while free slots remain.  Non-preemptive: once a

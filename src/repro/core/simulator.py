@@ -149,6 +149,7 @@ class OursNodeSim:
         speed_fn: Callable[[float], float] | None = None,
         warm_functions: list[str] | None = None,
         on_complete: Callable[[Request], None] | None = None,
+        on_start: Callable[[Request], None] | None = None,
         fn_memory: dict | None = None,
     ) -> None:
         if fn_memory is None:
@@ -161,6 +162,10 @@ class OursNodeSim:
         self.speed_fn = speed_fn
         self.alive = True
         self.on_complete = on_complete
+        # fired when a call leaves the queue for a slot (admission-control
+        # bookkeeping: the controller's queued-E[p] accumulator drops the
+        # call's enqueue-time snapshot here, in dispatch order)
+        self.on_start = on_start
         self.channel = ManagementChannel(loop, servers=1)
         self.scheduler = NodeScheduler.build(
             slots=cores, policy=policy, memory_mb=memory_mb,
@@ -175,7 +180,7 @@ class OursNodeSim:
                 for _ in range(min(cores, self.scheduler.estimator.window)):
                     self.scheduler.estimator.observe_completion(fn, w)
         self.completed: list[Request] = []
-        self.in_flight: dict[int, Request] = {}
+        self.in_flight: dict[int, StartDecision] = {}
 
     # the invoker pulls the call at ``now`` (= r + REQ_OVERHEAD)
     def submit(self, req: Request) -> None:
@@ -189,8 +194,12 @@ class OursNodeSim:
         req = dec.request
         # keyed by *object* identity: duplicate-mode hedging can race two
         # copies sharing one request id onto the same node, and each
-        # launched execution must complete (and free its slot) on its own
-        self.in_flight[id(req)] = req
+        # launched execution must complete (and free its slot) on its own.
+        # The *decision* is the value so a stale completion event -- the
+        # request timed out mid-run, retried, and re-launched on this very
+        # node under the same object identity -- cannot finish the newer
+        # execution early (``_finish`` checks decision identity).
+        self.in_flight[id(req)] = dec
         # serialized management: cpu pin + unpause (+ init when not warm);
         # a degraded node (speed < 1) is slow at management too.  The
         # effective speed is sampled once, at dispatch -- non-preemptive
@@ -205,12 +214,14 @@ class OursNodeSim:
         req.start = exec_start
         service = req.p_true / speed
         finish = exec_start + service
+        if self.on_start is not None:
+            self.on_start(req)
         self.loop.schedule(finish, lambda d=dec, s=service: self._finish(d, s))
 
     def _finish(self, dec: StartDecision, service: float) -> None:
         req = dec.request
-        if not self.alive or id(req) not in self.in_flight:
-            return  # node died mid-flight
+        if not self.alive or self.in_flight.get(id(req)) is not dec:
+            return  # node died, or the call was cancelled (timeout) mid-run
         del self.in_flight[id(req)]
         req.finish = self.loop.now
         req.c = self.loop.now + RESP_OVERHEAD_S
@@ -222,11 +233,27 @@ class OursNodeSim:
         for d in follow:
             self._launch(d)
 
+    # -- resilience hooks -----------------------------------------------------
+    def cancel_queued(self, req: Request) -> bool:
+        """Drop a still-queued call (request timeout before dispatch)."""
+        return self.scheduler.cancel(req)
+
+    def cancel_running(self, req: Request) -> bool:
+        """Cancel a running call (request timeout mid-execution): free the
+        slot and container without completion history, backfill the slot.
+        The already-scheduled finish event becomes a stale no-op."""
+        dec = self.in_flight.pop(id(req), None)
+        if dec is None:
+            return False
+        for d in self.scheduler.abort(dec.acquire, self.loop.now):
+            self._launch(d)
+        return True
+
     # -- fault injection ------------------------------------------------------
     def kill(self) -> list[Request]:
         """Node failure: everything queued or running is lost."""
         self.alive = False
-        lost = list(self.in_flight.values())
+        lost = [d.request for d in self.in_flight.values()]
         self.in_flight.clear()
         while self.scheduler.queue:
             lost.append(self.scheduler.queue.pop())
@@ -439,6 +466,13 @@ class SimResult:
     backups_issued: int = 0
     steals_won: int = 0       # hedged calls whose winning run was the backup
     nodes_used: int = 1
+    # resilience counters (ISSUE 8): attempts that hit their deadline,
+    # arrivals refused by admission control, client retries scheduled, and
+    # seconds of execution thrown away by running-call cancellation
+    timed_out: int = 0
+    shed: int = 0
+    retries_issued: int = 0
+    wasted_work: float = 0.0
     # realized per-node capacity intervals (cluster runs only); typed loosely
     # to keep this module import-independent of .cluster
     timeline: object | None = None
@@ -476,7 +510,9 @@ class SimBackend(Protocol):
     def supports(self, *, mode: str, policy: str, warm: bool,
                  nodes: int = 1, assignment: str = "pull",
                  autoscale: bool = False, failures: bool = False,
-                 hedging: bool = False, hetero: bool = False) -> bool:
+                 hedging: bool = False, hetero: bool = False,
+                 timeouts: bool = False, retries: bool = False,
+                 shedding: bool = False) -> bool:
         """Can this backend run the scenario exactly?"""
         ...
 
@@ -495,14 +531,25 @@ class SimBackend(Protocol):
 
 
 class ReferenceBackend:
-    """The pure-Python discrete-event loop; supports every scenario."""
+    """The pure-Python discrete-event loop; supports every scenario except
+    resilience on the stock baseline (processor sharing has no slot/queue
+    structure for deadline cancellation to act on) and resilience combined
+    with straggler hedging (a hedge copy and a deadline watch would both
+    re-dispatch the same request id -- a documented exclusion)."""
 
     name = "reference"
 
     def supports(self, *, mode: str, policy: str, warm: bool,
                  nodes: int = 1, assignment: str = "pull",
                  autoscale: bool = False, failures: bool = False,
-                 hedging: bool = False, hetero: bool = False) -> bool:
+                 hedging: bool = False, hetero: bool = False,
+                 timeouts: bool = False, retries: bool = False,
+                 shedding: bool = False) -> bool:
+        resil = timeouts or retries or shedding
+        if mode == "baseline" and resil:
+            return False
+        if hedging and resil:
+            return False
         return True
 
     def simulate(

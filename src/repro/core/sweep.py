@@ -35,6 +35,7 @@ import sys
 import time
 from concurrent.futures import ProcessPoolExecutor
 from dataclasses import dataclass, field, fields, replace
+from functools import partial
 from typing import Callable, Sequence
 
 import numpy as np
@@ -51,7 +52,8 @@ from .workload import (
 GRID_FIELDS = ("policy", "mode", "assignment", "lb", "arrival", "intensity",
                "cores", "nodes", "autoscale", "provision_delay", "scale_up",
                "max_nodes", "fail_at", "fail_spec", "node_speeds", "degrade",
-               "hedge_multiple", "backend")
+               "hedge_multiple", "timeout_multiple", "retry_attempts",
+               "retry_mode", "shed_threshold", "backend")
 
 # simulation-backend selectors accepted by SweepCell.backend; the SweepSpec
 # backends axis additionally accepts "cross-check" as sugar for
@@ -82,11 +84,19 @@ class BackendMismatchError(AssertionError):
 METRIC_KEYS = ("R_avg", "R_p50", "R_p75", "R_p95", "R_p99",
                "S_avg", "S_p50", "S_p75", "S_p95", "S_p99",
                "max_c", "cold", "n", "failures", "backups", "steals",
-               "nodes_used")
+               "nodes_used",
+               # resilience cells additionally report (see metrics.
+               # resilience_row): successful completions per second,
+               # p95 response over successes only, counters, wasted work
+               "goodput", "R_ok_p95", "wasted_frac", "timed_out", "shed",
+               "retries_issued", "wasted_work", "n_failed")
 # count-like metrics the cross-check requires to match *exactly* -- a fast
 # backend miscounting backups or lost calls is a hard failure regardless of
-# how small the relative error looks (ISSUE: accounting parity)
-CROSS_CHECK_EXACT = ("failures", "backups", "steals")
+# how small the relative error looks (ISSUE: accounting parity).  The
+# resilience counters join the list: the scan kernel's res segment replays
+# the reference lifecycle bit-for-bit, so any drift is a real bug.
+CROSS_CHECK_EXACT = ("failures", "backups", "steals",
+                     "timed_out", "shed", "retries_issued", "n_failed")
 
 
 @dataclass(frozen=True)
@@ -120,6 +130,18 @@ class SweepCell:
     hedge_floor_s: float = 0.5
     hedge_max_backups: int = 3
     hedge_mode: str = "steal"
+    # request-lifecycle resilience (None on each axis = that policy off);
+    # the non-axis knobs below fill out TimeoutSpec / RetryPolicy
+    timeout_multiple: float | None = None   # deadline = mult x max(E[p], floor)
+    retry_attempts: int | None = None       # total submissions allowed
+    retry_mode: str = "backoff"             # backoff | immediate
+    shed_threshold: float | None = None     # queued-E[p]/free-slot limit
+    timeout_floor_s: float = 0.5
+    timeout_absolute_s: float | None = None
+    retry_base_s: float = 0.5
+    retry_cap_s: float = 8.0
+    retry_jitter: float = 0.5
+    retry_on: tuple[str, ...] = ("timeout", "shed", "kill")
     seed: int = 0
     duration_s: float = 60.0
     workload_cores: int | None = None  # burst sized for this many cores
@@ -166,6 +188,15 @@ class SweepCell:
                 parts.append(f"deg{prof.max_slowdown():g}")
         if self.hedge_multiple is not None:
             parts.append(f"hedge{self.hedge_multiple:g}")
+        if self.timeout_multiple is not None or self.timeout_absolute_s:
+            parts.append(f"to{self.timeout_absolute_s:g}s"
+                         if self.timeout_absolute_s
+                         else f"to{self.timeout_multiple:g}x")
+        if self.retry_attempts is not None:
+            suffix = "i" if self.retry_mode == "immediate" else "b"
+            parts.append(f"rt{self.retry_attempts}{suffix}")
+        if self.shed_threshold is not None:
+            parts.append(f"shed{self.shed_threshold:g}")
         if self.backend != "reference":
             parts.append(self.backend)
         return "_".join(parts)
@@ -197,6 +228,17 @@ class SweepSpec:
     hedge_floor_s: float = 0.5           # HedgingSpec knobs (all hedged cells)
     hedge_max_backups: int = 3
     hedge_mode: str = "steal"
+    # resilience axes (None = that policy off for the cell) + shared knobs
+    timeout_multiples: Sequence[float | None] = (None,)
+    retry_attempts: Sequence[int | None] = (None,)
+    retry_modes: Sequence[str] = ("backoff",)
+    shed_thresholds: Sequence[float | None] = (None,)
+    timeout_floor_s: float = 0.5
+    timeout_absolute_s: float | None = None
+    retry_base_s: float = 0.5
+    retry_cap_s: float = 8.0
+    retry_jitter: float = 0.5
+    retry_on: tuple[str, ...] = ("timeout", "shed", "kill")
     seeds: int | Sequence[int] = 3
     base_seed: int = 0
     duration_s: float = 60.0
@@ -240,12 +282,15 @@ class SweepSpec:
                 backends.append(b)
         out = []
         for (pol, mode, asg, lb, arr, inten, c, n, auto, pd, su, fail,
-             fspec, spd, deg, hedge, be, seed) in itertools.product(
+             fspec, spd, deg, hedge, tmult, ratt, rmode, shed, be,
+             seed) in itertools.product(
                 self.policies, self.modes, self.assignments, self.lbs,
                 self.arrivals, self.intensities, self.cores,
                 self.nodes, self.autoscale, self.provision_delays,
                 self.scale_ups, self.failures, self.fail_specs,
                 self.node_speeds, self.degrades, self.hedge_multiples,
+                self.timeout_multiples, self.retry_attempts,
+                self.retry_modes, self.shed_thresholds,
                 backends, self.seed_list()):
             cell = SweepCell(
                 policy=pol, mode=mode, assignment=asg,
@@ -263,6 +308,19 @@ class SweepSpec:
                 hedge_floor_s=self.hedge_floor_s,
                 hedge_max_backups=self.hedge_max_backups,
                 hedge_mode=self.hedge_mode,
+                timeout_multiple=tmult,
+                # the mode axis only means something on retrying cells;
+                # collapse it elsewhere (mirrors the lb/autoscale knobs)
+                retry_attempts=ratt,
+                retry_mode=rmode if ratt is not None else "backoff",
+                shed_threshold=shed,
+                timeout_floor_s=self.timeout_floor_s,
+                timeout_absolute_s=(self.timeout_absolute_s
+                                    if tmult is not None else None),
+                retry_base_s=self.retry_base_s,
+                retry_cap_s=self.retry_cap_s,
+                retry_jitter=self.retry_jitter,
+                retry_on=tuple(self.retry_on),
                 seed=seed, duration_s=self.duration_s,
                 workload_cores=self.workload_cores,
                 per_function=self.per_function, trace_path=self.trace_path,
@@ -276,7 +334,7 @@ class SweepSpec:
         # push cells); collapsing them to None elsewhere would otherwise
         # duplicate static cells
         if (len(self.provision_delays) > 1 or len(self.scale_ups) > 1
-                or len(self.lbs) > 1):
+                or len(self.lbs) > 1 or len(self.retry_modes) > 1):
             seen: set = set()
             dedup = []
             for cell in out:
@@ -396,12 +454,43 @@ def _cell_hedging(cell: SweepCell):
                        mode=cell.hedge_mode)
 
 
+def _cell_resilience(cell: SweepCell):
+    """The cell's :class:`~repro.core.resilience.ResilienceSpec`, or
+    ``None`` when every lifecycle policy is off."""
+    if (cell.timeout_multiple is None and cell.retry_attempts is None
+            and cell.shed_threshold is None):
+        return None
+    from .resilience import (
+        AdmissionPolicy,
+        ResilienceSpec,
+        RetryPolicy,
+        TimeoutSpec,
+    )
+    timeout = None
+    if cell.timeout_multiple is not None:
+        timeout = TimeoutSpec(multiple=cell.timeout_multiple,
+                              floor_s=cell.timeout_floor_s,
+                              absolute_s=cell.timeout_absolute_s)
+    retry = None
+    if cell.retry_attempts is not None:
+        retry = RetryPolicy(max_attempts=cell.retry_attempts,
+                            mode=cell.retry_mode,
+                            base_delay_s=cell.retry_base_s,
+                            cap_delay_s=cell.retry_cap_s,
+                            jitter=cell.retry_jitter,
+                            retry_on=tuple(cell.retry_on))
+    admission = (AdmissionPolicy(threshold_s=cell.shed_threshold)
+                 if cell.shed_threshold is not None else None)
+    return ResilienceSpec(timeout=timeout, retry=retry, admission=admission)
+
+
 def _vectorized_eligible(cell: SweepCell) -> bool:
     """Can the cell run on the vectorized (ours-node) fast path?"""
     mode = "baseline" if (cell.mode == "baseline"
                           or cell.policy == "baseline") else "ours"
     return (mode == "ours" and cell.nodes <= 1 and not cell.autoscale
-            and cell.fail_at is None and not _cell_straggler(cell))
+            and cell.fail_at is None and not _cell_straggler(cell)
+            and _cell_resilience(cell) is None)
 
 
 def _cell_dynamics(cell: SweepCell):
@@ -435,8 +524,10 @@ def _cluster_scan_capable(cell: SweepCell) -> bool:
     :func:`run_cells_scan` / ``cluster_scan_eligible``."""
     mode = "baseline" if (cell.mode == "baseline"
                           or cell.policy == "baseline") else "ours"
+    resil = _cell_resilience(cell)
     cluster_shaped = (cell.nodes > 1 or cell.autoscale
-                      or cell.fail_at is not None or _cell_straggler(cell))
+                      or cell.fail_at is not None or _cell_straggler(cell)
+                      or resil is not None)
     if mode != "ours" or not cluster_shaped:
         return False
     dyn_cap = (cell.autoscale or cell.fail_at is not None
@@ -456,7 +547,10 @@ def _cluster_scan_capable(cell: SweepCell) -> bool:
         assignment=cell.assignment, autoscale=cell.autoscale,
         failures=cell.fail_at is not None or cell.fail_spec is not None,
         hedging=cell.hedge_multiple is not None,
-        hetero=profile is not None)
+        hetero=profile is not None,
+        timeouts=resil is not None and resil.timeout is not None,
+        retries=resil is not None and resil.retry is not None,
+        shedding=resil is not None and resil.admission is not None)
 
 
 def _scan_batchable(cell: SweepCell) -> bool:
@@ -496,7 +590,27 @@ def _resolve_backend(cell: SweepCell, reqs, mode: str, policy: str) -> str:
 
 
 def _cell_metrics(cell: SweepCell, done, cold, failures, backups,
-                  nodes_used, steals: int = 0) -> dict[str, float]:
+                  nodes_used, steals: int = 0,
+                  res_counts: tuple | None = None) -> dict[str, float]:
+    resil = _cell_resilience(cell)
+    if resil is not None and not any(r.c is not None for r in done):
+        # a storm cell can shed/time out *every* call; summarize() would
+        # raise, but a fully-failed cell is a legitimate data point on the
+        # overload frontier -- report zeros plus the failure counters
+        from .metrics import PERCENTILES, resilience_row
+        metrics = {
+            "R_avg": 0.0, "S_avg": 0.0, "max_c": 0.0, "cold": float(cold),
+            "n": 0.0, "failures": float(failures),
+            "backups": float(backups), "steals": float(steals),
+            "nodes_used": float(nodes_used),
+        }
+        for p in PERCENTILES:
+            metrics[f"R_p{p}"] = 0.0
+            metrics[f"S_p{p}"] = 0.0
+        to, sh, rt, ww = res_counts or (0, 0, 0, 0.0)
+        metrics.update(resilience_row(done, timed_out=to, shed=sh,
+                                      retries_issued=rt, wasted_work=ww))
+        return metrics
     s = summarize(done, per_function=bool(cell.per_function))
     metrics: dict[str, float] = {
         "R_avg": s.response_avg, "S_avg": s.stretch_avg,
@@ -513,6 +627,11 @@ def _cell_metrics(cell: SweepCell, done, cold, failures, backups,
         if sub is not None:
             metrics[f"R_avg:{fn}"] = sub.response_avg
             metrics[f"S_avg:{fn}"] = sub.stretch_avg
+    if resil is not None:
+        from .metrics import resilience_row
+        to, sh, rt, ww = res_counts or (0, 0, 0, 0.0)
+        metrics.update(resilience_row(done, timed_out=to, shed=sh,
+                                      retries_issued=rt, wasted_work=ww))
     return metrics
 
 
@@ -559,7 +678,8 @@ def _cluster_scan_ok(cell: SweepCell, reqs: list[Request],
                                  warm=cell.warm,
                                  dynamics=_cell_dynamics(cell),
                                  profile=_cell_profile(cell),
-                                 hedging=_cell_hedging(cell))
+                                 hedging=_cell_hedging(cell),
+                                 resilience=_cell_resilience(cell))
 
 
 def run_cell(cell: SweepCell) -> dict[str, float]:
@@ -577,7 +697,8 @@ def run_cell(cell: SweepCell) -> dict[str, float]:
     cold = 0
 
     if (cell.nodes <= 1 and not cell.autoscale and cell.fail_at is None
-            and not _cell_straggler(cell)):
+            and not _cell_straggler(cell)
+            and _cell_resilience(cell) is None):
         backend = _resolve_backend(cell, reqs, mode, policy)
         res = simulate_single_node(reqs, cores=cell.cores, policy=policy,
                                    mode=mode, warm=cell.warm,
@@ -602,13 +723,15 @@ def run_cell(cell: SweepCell) -> dict[str, float]:
             metrics["degraded"] = 1.0
         return metrics
     elif mode == "baseline":
-        if cell.fail_at is not None or _cell_straggler(cell):
+        if (cell.fail_at is not None or _cell_straggler(cell)
+                or _cell_resilience(cell) is not None):
             raise ValueError(
-                "failure injection and straggler axes (fail_spec, "
-                "node_speeds, degrade, hedge_multiple) are unsupported for "
-                "the stock baseline cluster (no retry/hedging/speed "
-                "semantics) -- silently dropping them would mislabel "
-                "healthy runs as degraded scenarios")
+                "failure injection, straggler and resilience axes "
+                "(fail_spec, node_speeds, degrade, hedge_multiple, "
+                "timeout_multiple, retry_attempts, shed_threshold) are "
+                "unsupported for the stock baseline cluster (no "
+                "retry/hedging/speed semantics) -- silently dropping them "
+                "would mislabel healthy runs as degraded scenarios")
         res = simulate_baseline_cluster(reqs, nodes=cell.nodes,
                                         cores_per_node=cell.cores,
                                         warm=cell.warm)
@@ -625,6 +748,7 @@ def run_cell(cell: SweepCell) -> dict[str, float]:
         dynamics = _cell_dynamics(cell)
         profile = _cell_profile(cell)
         hedging = _cell_hedging(cell)
+        resilience = _cell_resilience(cell)
         scan_ok = (cell.backend == "scan" or cell.cross_check) \
             and _cluster_scan_capable(cell) \
             and _cluster_scan_ok(cell, reqs, policy)
@@ -636,6 +760,7 @@ def run_cell(cell: SweepCell) -> dict[str, float]:
                       node_speeds=cell.node_speeds,
                       degrade=cell.degrade or (),
                       hedging=hedging,
+                      resilience=resilience,
                       autoscale=cell.autoscale)
         if cell.provision_delay is not None:
             ref_kw["provision_delay_s"] = cell.provision_delay
@@ -643,21 +768,27 @@ def run_cell(cell: SweepCell) -> dict[str, float]:
             ref_kw["scale_up_queue_per_slot"] = cell.scale_up
         if cell.max_nodes is not None:
             ref_kw["max_nodes"] = cell.max_nodes
+        def _counts(r):
+            return (r.timed_out, r.shed, r.retries_issued, r.wasted_work)
+
         if cell.backend == "scan" and scan_ok:
             from .fastpath import simulate_cluster_cells_scan
             res = simulate_cluster_cells_scan(
                 [(reqs, cell.nodes, cell.cores, policy, cell.assignment,
-                  cell.lb, dynamics, profile, hedging, cell.warm)])[0]
+                  cell.lb, dynamics, profile, hedging, cell.warm,
+                  resilience)])[0]
             metrics = _cell_metrics(cell, res.requests, res.cold_starts,
                                     res.failures, res.backups_issued,
-                                    res.nodes_used, steals=res.steals_won)
+                                    res.nodes_used, steals=res.steals_won,
+                                    res_counts=_counts(res))
             if cell.cross_check:
                 other = simulate_cluster(make_workload(cell), **ref_kw)
                 other_m = _cell_metrics(cell, other.requests,
                                         other.cold_starts, other.failures,
                                         other.backups_issued,
                                         other.nodes_used,
-                                        steals=other.steals_won)
+                                        steals=other.steals_won,
+                                        res_counts=_counts(other))
                 metrics["xcheck_err"] = _cross_check(
                     cell, other_m, metrics, "scan",
                     rtol=CLUSTER_XCHECK_RTOL)
@@ -666,18 +797,21 @@ def run_cell(cell: SweepCell) -> dict[str, float]:
         done, cold = res.requests, res.cold_starts
         failures, backups = res.failures, res.backups_issued
         steals, nodes_used = res.steals_won, res.nodes_used
+        res_counts = _counts(res)
         if cell.cross_check and scan_ok:
             from .fastpath import simulate_cluster_cells_scan
             metrics = _cell_metrics(cell, done, cold, failures, backups,
-                                    nodes_used, steals=steals)
+                                    nodes_used, steals=steals,
+                                    res_counts=res_counts)
             other = simulate_cluster_cells_scan(
                 [(make_workload(cell), cell.nodes, cell.cores, policy,
                   cell.assignment, cell.lb, dynamics, profile,
-                  hedging, cell.warm)])[0]
+                  hedging, cell.warm, resilience)])[0]
             other_m = _cell_metrics(cell, other.requests, other.cold_starts,
                                     other.failures, other.backups_issued,
                                     other.nodes_used,
-                                    steals=other.steals_won)
+                                    steals=other.steals_won,
+                                    res_counts=_counts(other))
             metrics["xcheck_err"] = _cross_check(
                 cell, metrics, other_m, "scan", rtol=CLUSTER_XCHECK_RTOL)
             return metrics
@@ -685,12 +819,33 @@ def run_cell(cell: SweepCell) -> dict[str, float]:
             # a scan-requested cluster cell outside the kernel's regime ran
             # on the reference event loop: count it (satellite contract)
             metrics = _cell_metrics(cell, done, cold, failures, backups,
-                                    nodes_used, steals=steals)
+                                    nodes_used, steals=steals,
+                                    res_counts=res_counts)
             metrics["degraded"] = 1.0
             return metrics
+        return _cell_metrics(cell, done, cold, failures, backups,
+                             nodes_used, steals=steals,
+                             res_counts=res_counts)
 
     return _cell_metrics(cell, done, cold, failures, backups, nodes_used,
                          steals=steals)
+
+
+def _run_guard(fn: Callable[[SweepCell], dict],
+               cell: SweepCell) -> dict[str, float]:
+    """Fault-isolating cell runner for :func:`run_sweep` (module-level so
+    pool workers can unpickle it): run the cell, retry once on any
+    exception (transient faults -- a worker hiccup, an engine cache race),
+    and on the second failure return an error marker instead of raising,
+    so one bad cell cannot sink a 10k-cell sweep."""
+    try:
+        return fn(cell)
+    except Exception:
+        pass
+    try:
+        return fn(cell)
+    except Exception as exc:  # noqa: BLE001 -- marker row, surfaced in meta
+        return {"__error__": f"{type(exc).__name__}: {exc}"}
 
 
 def _workload_key(cell: SweepCell) -> tuple:
@@ -767,11 +922,20 @@ def _run_cells_scan_partial(
     metrics: list[dict[str, float] | None] = [None] * len(cells)
     singles: list[tuple[int, SweepCell, list[Request]]] = []
     clusters: list[tuple[int, SweepCell, list[Request]]] = []
+    res_clusters: list[tuple[int, SweepCell, list[Request]]] = []
     for pos, cell in enumerate(cells):
         mode = "baseline" if (cell.mode == "baseline"
                               or cell.policy == "baseline") else "ours"
         policy = "fifo" if cell.policy == "baseline" else cell.policy
         if _cluster_scan_capable(cell):
+            if _cell_resilience(cell) is not None:
+                # resilience cells always write back (failed-request
+                # nulling): give each its own burst even in metrics_only
+                # mode, and batch them separately below
+                reqs = make_workload(cell)
+                if _cluster_scan_ok(cell, reqs, policy):
+                    res_clusters.append((pos, cell, reqs))
+                continue
             reqs = _cell_reqs(cell)
             if _cluster_scan_ok(cell, reqs, policy):
                 clusters.append((pos, cell, reqs))
@@ -780,12 +944,32 @@ def _run_cells_scan_partial(
             if scan_eligible(reqs, cell.cores, policy, warm=cell.warm):
                 singles.append((pos, cell, reqs))
 
+    def _dispatch(batch, runner):
+        """Run ``runner`` over the whole batch; when a *value-dependent*
+        mid-dispatch rejection surfaces (an eligibility race the static
+        checks could not see), re-run cell by cell so one bad cell
+        degrades alone (``None`` -> reference fallback, counted in
+        ``degraded``) instead of sinking its entire shape bucket."""
+        try:
+            return runner(batch)
+        except Exception:
+            out = []
+            for item in batch:
+                try:
+                    out.append(runner([item])[0])
+                except Exception:
+                    out.append(None)
+            return out
+
     if singles:
-        results = simulate_cells_scan(
+        results = _dispatch(
             [(reqs, cell.cores, cell.policy, cell.warm)
              for _, cell, reqs in singles],
-            validate=False, metrics_only=metrics_only)
+            lambda b: simulate_cells_scan(b, validate=False,
+                                          metrics_only=metrics_only))
         for (pos, cell, _), res in zip(singles, results):
+            if res is None:
+                continue
             if metrics_only:
                 metrics[pos] = _metrics_from_scan(cell, res)
             else:
@@ -793,13 +977,16 @@ def _run_cells_scan_partial(
                                              res.cold_starts, 0, 0,
                                              cell.nodes)
     if clusters:
-        results = simulate_cluster_cells_scan(
+        results = _dispatch(
             [(reqs, cell.nodes, cell.cores, cell.policy, cell.assignment,
               cell.lb, _cell_dynamics(cell), _cell_profile(cell),
               _cell_hedging(cell), cell.warm)
-             for _, cell, reqs in clusters], validate=False,
-            metrics_only=metrics_only)
+             for _, cell, reqs in clusters],
+            lambda b: simulate_cluster_cells_scan(
+                b, validate=False, metrics_only=metrics_only))
         for (pos, cell, _), res in zip(clusters, results):
+            if res is None:
+                continue
             if metrics_only:
                 metrics[pos] = _metrics_from_scan(cell, res)
             else:
@@ -808,6 +995,21 @@ def _run_cells_scan_partial(
                                              res.backups_issued,
                                              res.nodes_used,
                                              steals=res.steals_won)
+    if res_clusters:
+        results = _dispatch(
+            [(reqs, cell.nodes, cell.cores, cell.policy, cell.assignment,
+              cell.lb, _cell_dynamics(cell), _cell_profile(cell),
+              _cell_hedging(cell), cell.warm, _cell_resilience(cell))
+             for _, cell, reqs in res_clusters],
+            lambda b: simulate_cluster_cells_scan(b, validate=False))
+        for (pos, cell, _), res in zip(res_clusters, results):
+            if res is None:
+                continue
+            metrics[pos] = _cell_metrics(
+                cell, res.requests, res.cold_starts, res.failures,
+                res.backups_issued, res.nodes_used, steals=res.steals_won,
+                res_counts=(res.timed_out, res.shed, res.retries_issued,
+                            res.wasted_work))
     return metrics
 
 
@@ -880,18 +1082,24 @@ class SweepResult:
             # degraded=0.0 rather than omitting it, so downstream consumers
             # can assert on it unconditionally
             metric_keys = sorted({k for cr in crs
-                                  for k in cr.metrics} | {"degraded"})
+                                  for k in cr.metrics}
+                                 | {"degraded", "failed"})
             for mk in metric_keys:
-                if mk == "degraded":
-                    # fallback *fraction*: cells that ran on their requested
-                    # engine simply lack the key and count as 0, so a group
-                    # where 1 of 5 seeds degraded reads 0.2, not 1.0
+                if mk in ("degraded", "failed"):
+                    # fallback / error *fraction*: cells that ran on their
+                    # requested engine (or succeeded) simply lack the key
+                    # and count as 0, so a group where 1 of 5 seeds
+                    # degraded reads 0.2, not 1.0
                     vals = [cr.metrics.get(mk, 0.0) for cr in crs]
                 else:
                     vals = [cr.metrics[mk] for cr in crs if mk in cr.metrics]
-                row[mk] = float(np.mean(vals))
-            row["R_avg_std"] = float(np.std(
-                [cr.metrics["R_avg"] for cr in crs]))
+                # a group whose every seed failed has no real metric values
+                # at all: report NaN rather than crashing the aggregation
+                row[mk] = float(np.mean(vals)) if vals else float("nan")
+            r_avgs = [cr.metrics["R_avg"] for cr in crs
+                      if "R_avg" in cr.metrics]
+            row["R_avg_std"] = (float(np.std(r_avgs)) if r_avgs
+                                else float("nan"))
             rows.append(row)
         return rows
 
@@ -994,9 +1202,20 @@ def run_sweep(
     scan_pos = [i for i, c in enumerate(cells)
                 if runner is None and _scan_batchable(c)]
     scan_batched = 0
+    errors: dict[str, str] = {}
     if scan_pos:
-        for i, m in zip(scan_pos,
-                        _run_cells_scan_partial([cells[i] for i in scan_pos])):
+        scan_cells = [cells[i] for i in scan_pos]
+        try:
+            batch = _run_cells_scan_partial(scan_cells)
+        except Exception:
+            # batched dispatch itself fell over (not a per-cell rejection,
+            # those degrade inside): retry once, then send every scan cell
+            # through the pool path below instead of failing the sweep
+            try:
+                batch = _run_cells_scan_partial(scan_cells)
+            except Exception:
+                batch = [None] * len(scan_pos)
+        for i, m in zip(scan_pos, batch):
             if m is not None:
                 metrics[i] = m
                 scan_batched += 1
@@ -1008,11 +1227,12 @@ def run_sweep(
     # pool, unsupported dynamics) degrade to run_cell below -- count them
     degraded_pos = {i for i in scan_pos if metrics[i] is None}
 
+    guarded = partial(_run_guard, fn)
     rest = [i for i in range(len(cells)) if metrics[i] is None]
     pool_workers = max(1, min(workers, len(rest)))
     if rest and (pool_workers == 1 or len(rest) == 1):
         for i in rest:
-            metrics[i] = fn(cells[i])
+            metrics[i] = guarded(cells[i])
             done += 1
             if progress is not None:
                 progress(done, len(cells))
@@ -1033,7 +1253,7 @@ def run_sweep(
         ctx = multiprocessing.get_context(method)
         with ProcessPoolExecutor(max_workers=pool_workers,
                                  mp_context=ctx) as ex:
-            it = ex.map(fn, [cells[i] for i in rest], chunksize=chunk)
+            it = ex.map(guarded, [cells[i] for i in rest], chunksize=chunk)
             for i, m in zip(rest, it):
                 metrics[i] = m
                 done += 1
@@ -1042,6 +1262,13 @@ def run_sweep(
     for i in degraded_pos:
         if metrics[i] is not None and "degraded" not in metrics[i]:
             metrics[i] = {**metrics[i], "degraded": 1.0}
+    # cells that raised twice come back as error markers: convert to a
+    # ``failed`` metrics row (aggregate() reports the failed fraction per
+    # group) and record the error strings in the sweep metadata
+    for i, m in enumerate(metrics):
+        if m is not None and "__error__" in m:
+            errors[f"{cells[i].label()}#seed{cells[i].seed}"] = m["__error__"]
+            metrics[i] = {"failed": 1.0}
     wall = time.monotonic() - t0
     return SweepResult(
         results=[CellResult(c, m) for c, m in zip(cells, metrics)],
@@ -1049,6 +1276,9 @@ def run_sweep(
         meta={"cells": len(cells), "scan_batched": scan_batched,
               "degraded": sum(1 for m in metrics
                               if m is not None and m.get("degraded")),
+              "failed": sum(1 for m in metrics
+                            if m is not None and m.get("failed")),
+              "errors": errors,
               "xcheck_sampled": sum(1 for c in cells if c.cross_check),
               "xcheck_skipped_degraded": getattr(
                   spec, "_xcheck_skipped_degraded", 0)},

@@ -235,7 +235,34 @@ def mmpp_arrivals(
     return np.concatenate(out) if out else np.empty(0)
 
 
-ARRIVAL_KINDS = ("uniform", "poisson", "diurnal", "mmpp")
+def ramp_arrivals(
+    rate_per_s: float,
+    duration_s: float,
+    rng: np.random.Generator,
+    burst_factor: float = 6.0,
+    burst_start_frac: float = 1.0 / 3.0,
+    burst_end_frac: float = 1.0 / 2.0,
+) -> np.ndarray:
+    """Ramp-and-release: steady Poisson load at ``rate_per_s`` with a
+    deterministic overload window in the middle -- the rate steps to
+    ``burst_factor`` x base inside ``[burst_start_frac, burst_end_frac) x
+    duration`` and back.  Unlike :func:`mmpp_arrivals` the burst window is
+    *fixed*, so pre-burst / in-burst / post-release metrics can be compared
+    across scenarios (the metastable-overload benchmark measures goodput
+    recovery after the release edge)."""
+    if burst_factor < 1.0:
+        raise ValueError("burst_factor must be >= 1")
+    if not 0.0 <= burst_start_frac < burst_end_frac <= 1.0:
+        raise ValueError("need 0 <= burst_start_frac < burst_end_frac <= 1")
+    base = poisson_arrivals(rate_per_s, duration_s, rng)
+    t0 = burst_start_frac * duration_s
+    t1 = burst_end_frac * duration_s
+    extra = t0 + poisson_arrivals(rate_per_s * (burst_factor - 1.0),
+                                  t1 - t0, rng)
+    return np.sort(np.concatenate([base, extra]))
+
+
+ARRIVAL_KINDS = ("uniform", "poisson", "diurnal", "mmpp", "ramp")
 
 
 def generate_trace_burst(
@@ -263,6 +290,8 @@ def generate_trace_burst(
         times = diurnal_arrivals(rate, duration_s, rng, **kwargs)
     elif kind == "mmpp":
         times = mmpp_arrivals(rate, duration_s, rng, **kwargs)
+    elif kind == "ramp":
+        times = ramp_arrivals(rate, duration_s, rng, **kwargs)
     else:
         raise ValueError(f"unknown arrival kind {kind!r}")
     reqs: list[Request] = []

@@ -58,13 +58,27 @@ SCENARIOS: list[tuple[str, dict]] = [
     ("hetero x failures x hedging",
      dict(nodes=4, assignment="push", hetero=True, failures=True,
           hedging=True)),
+    ("timeouts (deadline cancellation)",
+     dict(nodes=4, assignment="push", timeouts=True)),
+    ("timeouts + retries (backoff / immediate)",
+     dict(nodes=4, assignment="push", timeouts=True, retries=True)),
+    ("admission control (load shedding)",
+     dict(nodes=4, assignment="push", shedding=True)),
+    ("full resilience (timeouts x retries x shedding)",
+     dict(nodes=4, assignment="push", timeouts=True, retries=True,
+          shedding=True)),
+    ("resilience, pull assignment",
+     dict(nodes=4, assignment="pull", timeouts=True, retries=True)),
+    ("resilience x hedging",
+     dict(nodes=4, assignment="push", timeouts=True, hedging=True)),
 ]
 
 
 def _supports(backend_name: str, kwargs: dict) -> bool:
     base = dict(mode="ours", policy="fc", warm=True, nodes=1,
                 assignment="pull", autoscale=False, failures=False,
-                hedging=False, hetero=False)
+                hedging=False, hetero=False, timeouts=False, retries=False,
+                shedding=False)
     base.update(kwargs)
     return bool(get_backend(backend_name).supports(**base))
 
