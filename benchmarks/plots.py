@@ -351,6 +351,42 @@ def plot_storm(rows: list[dict], metric: str = "goodput",
     return Path(out)
 
 
+def plot_planet(rows: list[dict], out: str | Path = "planet_rate.png") -> Path:
+    """Planet-scale streaming replay: time-binned completions/s against the
+    autoscaler's provisioned node count on a twin axis -- "the fleet grows
+    into the offered load and throughput follows" as a figure.  Consumes
+    the ``planet_series.csv`` rows written by ``engine_bench --rows planet``
+    (columns: t, rate, nodes)."""
+    srows = [r for r in rows
+             if r.get("t") is not None and r.get("rate") is not None
+             and r.get("nodes") is not None]
+    if not srows:
+        raise ValueError(
+            "artifact has no planet series rows "
+            "(needs t/rate/nodes columns from engine_bench --rows planet)")
+    srows = _series_sorted(srows, "t")
+    fig, axes = _fig(1)
+    ax = axes[0]
+    hours = [r["t"] / 3600.0 for r in srows]
+    ax.plot(hours, [r["rate"] for r in srows], color="tab:blue",
+            linewidth=1.5, label="completions/s")
+    ax.set_xlabel("stream time (h)")
+    ax.set_ylabel("completions/s", color="tab:blue")
+    ax.tick_params(axis="y", labelcolor="tab:blue")
+    ax2 = ax.twinx()
+    ax2.plot(hours, [r["nodes"] for r in srows], color="tab:red",
+             linewidth=1.3, linestyle="--", label="provisioned nodes")
+    ax2.set_ylabel("provisioned nodes", color="tab:red")
+    ax2.tick_params(axis="y", labelcolor="tab:red")
+    ax.set_title("planet replay: throughput vs fleet size", fontsize=10)
+    ax.grid(alpha=0.3)
+    fig.tight_layout()
+    fig.savefig(out, dpi=120)
+    import matplotlib.pyplot as plt
+    plt.close(fig)
+    return Path(out)
+
+
 def render_rows(rows: list[dict], outdir: str | Path,
                 metrics: tuple[str, ...] = ("R_avg",)) -> list[Path]:
     """Render every figure the artifact supports: policy curves when an
@@ -383,6 +419,10 @@ def render_rows(rows: list[dict], outdir: str | Path,
             pass
     try:
         written.append(plot_storm(rows, out=outdir / "storm_goodput.png"))
+    except ValueError:
+        pass
+    try:
+        written.append(plot_planet(rows, out=outdir / "planet_rate.png"))
     except ValueError:
         pass
     if not written:

@@ -24,7 +24,8 @@ from .common import emit
 import numpy as np
 
 from repro.core import SweepSpec, run_sweep, simulate_single_node
-from repro.core.traces import generate_trace_requests
+from repro.core.request import Request
+from repro.core.traces import iter_tiled_chunks, load_azure_trace
 
 TRACE = Path(__file__).resolve().parent.parent / "data" / "azure_trace_slice.csv"
 
@@ -65,11 +66,19 @@ def diurnal_rows(repeat: int = 4, scale: float = 1.0,
     response per ``window_min`` window of *arrival* time for each policy.
 
     Runs on the vectorized backend (exact, no always-warm restriction), so
-    an hours-scale stream finishes in seconds."""
+    an hours-scale stream finishes in seconds.  The tiled stream is
+    generated lazily (:func:`~repro.core.traces.iter_tiled_chunks`): the
+    tiled per-minute trace never exists in host memory, only each minute's
+    slab -- ``tile_trace``'s O(repeat x n) materialization is gone."""
+    trace = load_azure_trace(TRACE)
+    fns = sorted(trace)
     rows = []
     for policy in policies:
-        reqs = generate_trace_requests(TRACE, seed=seed, repeat=repeat,
-                                       scale=scale)
+        reqs = []
+        for ch in iter_tiled_chunks(trace, seed=seed, repeat=repeat,
+                                    scale=scale):
+            reqs.extend(Request(fn=fns[fi], r=float(t), p_true=float(p))
+                        for t, fi, p in zip(ch.r, ch.fn, ch.p))
         simulate_single_node(reqs, cores=cores, policy=policy,
                              backend="vectorized")
         win = np.array([int(r.r // (window_min * 60.0)) for r in reqs])

@@ -439,11 +439,13 @@ class VectorizedBackend:
                  autoscale: bool = False, failures: bool = False,
                  hedging: bool = False, hetero: bool = False,
                  timeouts: bool = False, retries: bool = False,
-                 shedding: bool = False) -> bool:
+                 shedding: bool = False,
+                 streaming: bool = False) -> bool:
         return (mode == "ours" and policy in POLICY_NAMES and nodes <= 1
                 and not autoscale and not failures
                 and not hedging and not hetero
-                and not timeouts and not retries and not shedding)
+                and not timeouts and not retries and not shedding
+                and not streaming)
 
     def simulate(
         self,
@@ -646,7 +648,8 @@ class _PlaneLayout:
 
 
 def _make_state0(inp, *, n_nodes, n_slots, window, freeze, fc_push, dyn,
-                 het, hedge, cold, dup, n_copies, fc_ring, res=False):
+                 het, hedge, cold, dup, n_copies, fc_ring, res=False,
+                 stream=False):
     """Initial carry dict for one cell (the ``state0`` of the event scan).
 
     Split out of the kernel so three consumers share one definition: the
@@ -784,6 +787,14 @@ def _make_state0(inp, *, n_nodes, n_slots, window, freeze, fc_push, dyn,
             zrlen=jnp.zeros(n_fns, dtype=jnp.int32),
             zrpos=jnp.zeros(n_fns, dtype=jnp.int32),
         )
+    if stream and not freeze:
+        # chunked-stream pull validity counter: ``narr`` carries the
+        # *cumulative* per-function arrival count across chunk boundaries
+        # (its zero-vs-nonzero state is the RECT first-arrival detector), so
+        # the head-window validity test needs its own chunk-rebased counter
+        # (carried queued entries preloaded by the handoff, fresh arrivals
+        # incremented in-step)
+        state0["qcnt"] = jnp.zeros(n_fns, dtype=jnp.int32)
     return state0
 
 
@@ -807,7 +818,8 @@ def _make_planes(inp, **flags):
 
 def _scan_cell_kernel(clk, ctr, inp, *, n_nodes, n_slots, window, freeze,
                       use_fc, fc_push, dyn, het, hedge, cold, dup, n_copies,
-                      n_ep, fc_ring, horizon, n_steps, res=False):
+                      n_ep, fc_ring, horizon, n_steps, res=False,
+                      stream=False):
     """One cell's event scan over a whole **cluster**: slot-occupancy and
     channel clocks carry a node axis, and the per-event dispatch includes the
     routing decision.  vmapped over the batch by the caller (via the
@@ -925,6 +937,21 @@ def _scan_cell_kernel(clk, ctr, inp, *, n_nodes, n_slots, window, freeze,
     ``n_steps`` must cover 2n plus the dynamics budget (see
     ``_ScanCell.dyn_budget``); the caller verifies the returned completion
     count.
+
+    ``stream=True`` compiles the **chunked-stream** variant used by
+    :mod:`repro.core.streamscan`: the scan stops *freezing the carry* at the
+    chunk horizon ``t_stop`` (every event at ``now >= t_stop`` defers to the
+    next chunk, whose candidate stack replays the same precedence), the
+    final ``(clk, ctr)`` planes are returned so the host can hand the carry
+    off into the next chunk's tensors, and three chunk-local indirections
+    replace whole-stream lookups: the pull head-window validity test reads
+    the chunk-rebased ``qcnt`` carry instead of the cumulative ``narr``,
+    the per-function event lists arrive in CSR form (``fnev``/``fnst``,
+    O(n + F) instead of the dense ``(F, kq)`` table), and the resilience
+    retry-jitter hash reads the request's *global* arrival rank from
+    ``gseq`` so backoff delays are bit-identical to the single-shot run.
+    Dispatch records are returned raw for every mode (the host resolves
+    last-wins across chunks).
     """
     import jax
     import jax.numpy as jnp
@@ -943,6 +970,13 @@ def _scan_cell_kernel(clk, ctr, inp, *, n_nodes, n_slots, window, freeze,
                                   inp["rlen0"], inp["rpos0"])
     cumf = inp["cumf"]
     fn_ev = inp["fn_ev"]
+    if stream:
+        t_stop = inp["t_stop"]
+        if not freeze:
+            fnev_flat = inp["fnev"]      # CSR per-fn event lists
+            fn_start = inp["fnst"]
+        if res:
+            gseq = inp["gseq"]           # global arrival ranks
 
     n = t_arr.shape[0] - 1           # t_arr carries a trailing +inf sentinel
     # float dtype follows the inputs: float32 for static-capacity buckets,
@@ -1002,6 +1036,16 @@ def _scan_cell_kernel(clk, ctr, inp, *, n_nodes, n_slots, window, freeze,
             raw = jnp.minimum(cap, base * shift)
             return raw * ((1.0 - jit) + jit * u)
 
+        if stream:
+            # the jitter hash is keyed on the reference's stable arrival
+            # rank; a chunk-local row index would change the delay, so the
+            # handoff supplies each row's global rank
+            def _res_seq(i):
+                return gseq[i]
+        else:
+            def _res_seq(i):
+                return i
+
     # XLA's CPU scatter runs a slow generic per-element path, so every
     # fixed-size state update below is a dense one-hot ``where`` instead of
     # an ``.at[]`` scatter -- the masks are tiny ((F,), (nodes, slots), ...)
@@ -1058,6 +1102,12 @@ def _scan_cell_kernel(clk, ctr, inp, *, n_nodes, n_slots, window, freeze,
         e = jnp.argmin(cand)
         now = cand[e]
         none_left = jnp.isinf(now)
+        if stream:
+            # chunk horizon: every event at or past ``t_stop`` defers to the
+            # next chunk -- the carry freezes exactly as it was before the
+            # next chunk's first event, and the next chunk's candidate stack
+            # replays the same same-instant precedence order
+            none_left = none_left | (now >= t_stop)
         off = 1 if dyn else 0
         do_arr = (e == off) & ~none_left
         do_comp = (e == off + 1) & ~none_left
@@ -1340,7 +1390,7 @@ def _scan_cell_kernel(clk, ctr, inp, *, n_nodes, n_slots, window, freeze,
             # ratt[jt] itself
             can_rt = do_to & on_to & (ratt[jt] < maxa)
             rto = jnp.where((req_ids == jt) & can_rt,
-                            now + _res_delay(jt, ratt[jt]), rto)
+                            now + _res_delay(_res_seq(jt), ratt[jt]), rto)
             nrt = nrt + can_rt.astype(jnp.int32)
             died = do_to & ~can_rt
             nfl = nfl | ((req_ids == jt) & died)
@@ -1398,7 +1448,7 @@ def _scan_cell_kernel(clk, ctr, inp, *, n_nodes, n_slots, window, freeze,
             nsh = nsh + shed_now.astype(jnp.int32)
             sh_rt = shed_now & on_sh & (att_i < maxa)
             rto = jnp.where((req_ids == i_ins) & sh_rt,
-                            now + _res_delay(i_ins, att_i), rto)
+                            now + _res_delay(_res_seq(i_ins), att_i), rto)
             nrt = nrt + sh_rt.astype(jnp.int32)
             sh_die = shed_now & ~sh_rt
             nfl = nfl | ((req_ids == i_ins) & sh_die)
@@ -1450,6 +1500,12 @@ def _scan_cell_kernel(clk, ctr, inp, *, n_nodes, n_slots, window, freeze,
         prev_t = jnp.where(m_af, prev_used, prev_t)
         last_t = jnp.where(m_af, now, last_t)
         narr = jnp.where(m_af, narr + 1, narr)
+        if stream and not freeze:
+            # chunk-rebased head-window validity counter: counts only fresh
+            # arrivals of this chunk (carried queued rows were preloaded by
+            # the handoff), matching the CSR fnev row order
+            qcnt = jnp.where((fn_ids_ax == f_i) & do_arr,
+                             st["qcnt"] + 1, st["qcnt"])
         if hedge and not dup:
             # the stolen call leaves its old node's queue (scheduler.cancel);
             # duplicate mode races a fresh copy instead -- the original
@@ -1564,10 +1620,19 @@ def _scan_cell_kernel(clk, ctr, inp, *, n_nodes, n_slots, window, freeze,
             k_d = jnp.argmax(fs).astype(jnp.int32)
             est_f = jnp.where(rlen[0] > 0,
                               rsum[0] / jnp.maximum(rlen[0], 1), 0.0)
-            kmax = fn_ev.shape[1] - 1
-            idx_f = jnp.take_along_axis(
-                fn_ev, jnp.minimum(head, kmax)[:, None], axis=1)[:, 0]
-            valid = head < narr[0]
+            if stream:
+                # CSR per-function event lists: fnev is the n+1 chunk rows
+                # grouped by function, fnst the per-function offsets --
+                # O(n + F) memory where the dense (F, kq) table would be
+                # O(F * max-calls-per-fn).  Overruns clip onto the sentinel
+                # row (t = +inf) and are masked by ``valid`` anyway.
+                idx_f = fnev_flat[jnp.clip(fn_start + head, 0, n)]
+                valid = head < qcnt
+            else:
+                kmax = fn_ev.shape[1] - 1
+                idx_f = jnp.take_along_axis(
+                    fn_ev, jnp.minimum(head, kmax)[:, None], axis=1)[:, 0]
+                valid = head < narr[0]
             if use_fc:               # FC window counts: static-stream lookup
                 k0 = jnp.searchsorted(t_arr, now - horizon, side="right")
                 cnt_f = (cumf[ai] - cumf[k0]).astype(jnp.float32)
@@ -1741,6 +1806,8 @@ def _scan_cell_kernel(clk, ctr, inp, *, n_nodes, n_slots, window, freeze,
                        nrt=nrt, wst=wst, ndn=ndn, qsq=qsq,
                        stp=st["stp"] + 1, zring=zring,
                        zrsum=zrsum, zrlen=zrlen, zrpos=zrpos)
+        if stream and not freeze:
+            nxt.update(qcnt=qcnt)
         return nxt, out
 
     # the scan carry is the packed (clk, ctr) plane pair; the dict view the
@@ -1750,7 +1817,7 @@ def _scan_cell_kernel(clk, ctr, inp, *, n_nodes, n_slots, window, freeze,
                            window=window, freeze=freeze, fc_push=fc_push,
                            dyn=dyn, het=het, hedge=hedge, cold=cold,
                            dup=dup, n_copies=n_copies, fc_ring=fc_ring,
-                           res=res)
+                           res=res, stream=stream)
 
     def plane_step(planes, x):
         nxt, rec = step(layout.unpack(*planes), x)
@@ -1758,6 +1825,12 @@ def _scan_cell_kernel(clk, ctr, inp, *, n_nodes, n_slots, window, freeze,
 
     (clk, ctr), (j_s, es_s, fs_s, pj_s, kd_s) = jax.lax.scan(
         plane_step, (clk, ctr), None, length=n_steps)
+    if stream:
+        # chunked-stream mode: the host handoff needs the final carry
+        # planes (everything a summary would report lives in them) plus the
+        # raw dispatch records -- last-wins resolution across re-dispatches
+        # happens host-side in global chunk order for every feature set
+        return (clk, ctr), (j_s, es_s, fs_s, pj_s, kd_s)
     state = layout.unpack(clk, ctr)
     aux = {}
     if cold:
@@ -1939,6 +2012,7 @@ _CARRY_SEGMENTS: tuple[tuple[str, tuple[str, ...]], ...] = (
     ("res", ("to_t", "rto", "eps", "qep", "ratt", "nfl", "fcz", "sst",
              "nto", "nsh", "nrt", "wst", "ndn", "qsq", "stp",
              "zring", "zrsum", "zrlen", "zrpos")),
+    ("stream", ("qcnt",)),               # chunked-stream carry handoff
 )
 
 
@@ -1947,7 +2021,7 @@ def _feature_mask(**flags: bool) -> int:
     (bit i = segment i of ``_CARRY_SEGMENTS``)."""
     mask = 0
     for bit, (name, _) in enumerate(_CARRY_SEGMENTS):
-        if flags.pop(name):
+        if flags.pop(name, False):
             mask |= 1 << bit
     if flags:
         raise TypeError(f"unknown feature flags: {sorted(flags)}")
@@ -1991,6 +2065,7 @@ def _alloc_bucket_inputs(shape_key: tuple, bsz: int) -> dict:
     flags = _mask_features(mask)
     freeze, use_fc = flags["freeze"], flags["use_fc"]
     dyn, het, hedge = flags["dyn"], flags["het"], flags["hedge"]
+    stream = flags["stream"]
     fdt = np.float64 if _use64(flags) else np.float32
     n1 = n_b + 1
     n_est = nodes_b if freeze else 1
@@ -2015,9 +2090,18 @@ def _alloc_bucket_inputs(shape_key: tuple, bsz: int) -> dict:
         # kernel never traces those branches there)
         "cumf": np.zeros((bsz, n1 if use_fc else 1, f_b), dtype=fdt),
         "fn_ev": (np.full((bsz, f_b, kq), n_b, dtype=np.int32)
-                  if not freeze
+                  if not freeze and not stream
                   else np.zeros((bsz, 1, 1), dtype=np.int32)),
     }
+    if stream:
+        # chunk horizon; +inf = run to exhaustion (the final chunk)
+        inp["t_stop"] = np.full(bsz, np.inf, dtype=fdt)
+        if not freeze:
+            # CSR per-function event lists replace the dense fn_ev table
+            inp["fnev"] = np.full((bsz, n1), n_b, dtype=np.int32)
+            inp["fnst"] = np.zeros((bsz, f_b), dtype=np.int32)
+        if flags["res"]:
+            inp["gseq"] = np.zeros((bsz, n1), dtype=np.int32)
     if dyn:
         inp["act0"] = np.full((bsz, nodes_b), np.inf, dtype=fdt)
         inp["killt"] = np.full((bsz, nodes_b), np.inf, dtype=fdt)
@@ -2071,7 +2155,7 @@ def _build_runner(shape_key: tuple, bsz: int):
                     dyn=flags["dyn"], het=flags["het"],
                     hedge=flags["hedge"], cold=flags["cold"],
                     dup=flags["dup"], n_copies=n_copies, fc_ring=fc_ring,
-                    res=flags["res"])
+                    res=flags["res"], stream=flags["stream"])
     step_kw = dict(state_kw, use_fc=flags["use_fc"], n_ep=n_ep,
                    horizon=DEFAULT_FC_HORIZON, n_steps=2 * n_req + xtra)
 
@@ -3117,7 +3201,11 @@ class ScanBackend:
                  autoscale: bool = False, failures: bool = False,
                  hedging: bool = False, hetero: bool = False,
                  timeouts: bool = False, retries: bool = False,
-                 shedding: bool = False) -> bool:
+                 shedding: bool = False,
+                 streaming: bool = False) -> bool:
+        # streaming (the chunked carry-handoff path, core/streamscan.py)
+        # covers the same flag matrix as the single-shot kernel, so the
+        # flag never changes the answer here
         if mode != "ours" or policy not in POLICY_NAMES:
             return False
         if assignment not in ("pull", "push"):

@@ -512,7 +512,8 @@ class SimBackend(Protocol):
                  autoscale: bool = False, failures: bool = False,
                  hedging: bool = False, hetero: bool = False,
                  timeouts: bool = False, retries: bool = False,
-                 shedding: bool = False) -> bool:
+                 shedding: bool = False,
+                 streaming: bool = False) -> bool:
         """Can this backend run the scenario exactly?"""
         ...
 
@@ -544,7 +545,10 @@ class ReferenceBackend:
                  autoscale: bool = False, failures: bool = False,
                  hedging: bool = False, hetero: bool = False,
                  timeouts: bool = False, retries: bool = False,
-                 shedding: bool = False) -> bool:
+                 shedding: bool = False,
+                 streaming: bool = False) -> bool:
+        if streaming:
+            return False       # the event loop materializes the full stream
         resil = timeouts or retries or shedding
         if mode == "baseline" and resil:
             return False

@@ -71,6 +71,12 @@ CROSS_CHECK_RTOL = 1e-2
 # (tail percentiles of FC/RECT at sustained overload); typical cells are at
 # float32 rounding (~1e-6).  3% leaves headroom without masking real bugs.
 CLUSTER_XCHECK_RTOL = 3e-2
+# Scan cells whose request stream exceeds this many rows route through the
+# chunked streaming path (core/streamscan.py, bit-identical carry handoff)
+# instead of padding the whole stream into one device tensor; override with
+# REPRO_STREAM_THRESHOLD (0 disables streaming routing entirely).
+STREAM_CELL_THRESHOLD = int(os.environ.get("REPRO_STREAM_THRESHOLD",
+                                           65536))
 # metrics the cross-check compares (count-like metrics must match exactly
 # anyway; near-zero values use an absolute epsilon)
 CROSS_CHECK_KEYS = ("R_avg", "R_p50", "R_p75", "R_p95", "R_p99",
@@ -553,6 +559,45 @@ def _cluster_scan_capable(cell: SweepCell) -> bool:
         shedding=resil is not None and resil.admission is not None)
 
 
+def _stream_routable(cell: SweepCell, reqs, dynamics, profile, hedging,
+                     resilience) -> bool:
+    """Chunked-cell routing predicate: a scan-eligible cell whose request
+    stream is longer than :data:`STREAM_CELL_THRESHOLD` replays through
+    the streaming carry-handoff path (bounded device memory) when the
+    stream engine covers its feature combination."""
+    if STREAM_CELL_THRESHOLD <= 0 or len(reqs) <= STREAM_CELL_THRESHOLD:
+        return False
+    from .streamscan import stream_supported
+    return stream_supported(
+        policy=cell.policy, assignment=cell.assignment, lb=cell.lb,
+        warm=cell.warm, dynamics=dynamics, profile=profile,
+        hedging=hedging, resilience=resilience)
+
+
+def _run_stream_cell(cell: SweepCell, reqs, policy, dynamics, profile,
+                     hedging, resilience):
+    """Run one cluster cell through the streaming chunked-scan engine and
+    adapt its result to the SimResult attribute surface the metrics code
+    reads (requests are written back in place)."""
+    from types import SimpleNamespace
+
+    from .streamscan import simulate_cluster_stream, stream_from_requests
+    stream, order = stream_from_requests(reqs)
+    sr = simulate_cluster_stream(
+        stream, nodes=cell.nodes, cores_per_node=cell.cores, policy=policy,
+        assignment=cell.assignment, lb=cell.lb, warm=cell.warm,
+        dynamics=dynamics, profile=profile, hedging=hedging,
+        resilience=resilience)
+    sr.write_back(reqs, order)
+    c = sr.counters
+    return SimpleNamespace(
+        requests=reqs, cold_starts=c["cold_starts"],
+        failures=c["failures"], backups_issued=c["backups_issued"],
+        nodes_used=sr.nodes_used, steals_won=c["steals_won"],
+        timed_out=c["timed_out"], shed=c["shed"],
+        retries_issued=c["retries_issued"], wasted_work=c["wasted_work"])
+
+
 def _scan_batchable(cell: SweepCell) -> bool:
     """Should run_sweep route this cell into a bucketed scan batch?
     Cross-checked cells stay on the per-cell path (they dual-run)."""
@@ -773,10 +818,18 @@ def run_cell(cell: SweepCell) -> dict[str, float]:
 
         if cell.backend == "scan" and scan_ok:
             from .fastpath import simulate_cluster_cells_scan
-            res = simulate_cluster_cells_scan(
-                [(reqs, cell.nodes, cell.cores, policy, cell.assignment,
-                  cell.lb, dynamics, profile, hedging, cell.warm,
-                  resilience)])[0]
+            if _stream_routable(cell, reqs, dynamics, profile, hedging,
+                                resilience):
+                # chunked-cell routing: oversized streams replay through
+                # the carry-handoff path -- O(chunk) device memory,
+                # bit-identical counters/clocks to the single-shot kernel
+                res = _run_stream_cell(cell, reqs, policy, dynamics,
+                                       profile, hedging, resilience)
+            else:
+                res = simulate_cluster_cells_scan(
+                    [(reqs, cell.nodes, cell.cores, policy,
+                      cell.assignment, cell.lb, dynamics, profile, hedging,
+                      cell.warm, resilience)])[0]
             metrics = _cell_metrics(cell, res.requests, res.cold_starts,
                                     res.failures, res.backups_issued,
                                     res.nodes_used, steals=res.steals_won,

@@ -1,0 +1,297 @@
+"""Azure-calibrated workload synthesizer: fit a trace, generate planet-days.
+
+The vendored Azure slice (``data/azure_trace_slice.csv``) is 32 functions
+over 15 minutes -- enough to calibrate on, far too short to stress a
+100+-node fleet.  This module fits the slice's *marginals* and then
+synthesizes arbitrarily long, arbitrarily wide streams lazily, as
+:class:`~repro.core.streamscan.StreamChunk` iterators, so a
+multi-hour / 10k-function / million-invocation day never has to exist in
+memory at once.
+
+Calibration recipe
+------------------
+The method follows the OS-Scheduling load-generator workflow
+(``loadgen/dataset/gen_workload.py`` + ``compare_workload_to_azure.py`` in
+the panosstef/OS-Scheduling repo; the files are not vendored in this
+checkout, so the recipe is inlined here):
+
+1. **Bin** the trace into per-minute invocation counts per function (the
+   Azure Functions 2019 dataset's native shape -- our CSV is already
+   binned).
+2. **Popularity**: each function's share of total invocations.  Azure
+   popularity is heavy-tailed, so fit a Zipf exponent ``alpha`` by least
+   squares on ``log(count) ~ -alpha * log(rank)``; the fitted exponent
+   lets :func:`expand_catalog` extrapolate the measured head (32 fns) to a
+   synthetic tail (10k+ fns) with the same decay.
+3. **Arrival intensity**: the per-minute *total* count profile, kept as a
+   piecewise-constant diurnal cycle.  Generation draws each simulated
+   minute's count ``~ Poisson(rate)`` from the cycled profile and places
+   arrivals uniformly within the minute -- exactly the expansion
+   :func:`~repro.core.traces.requests_from_trace` applies to the real
+   trace, so the synthesized inter-arrival (IAT) marginal matches the
+   trace's by construction, up to Poisson noise.
+4. **Durations**: per-function service times come from the calibrated
+   SeBS profiles (Table I lognormals); trace names map onto profiles via
+   the deterministic CRC32 mapping (:func:`~repro.core.traces.profile_for`),
+   again matching the real-trace expansion.
+5. **Verify** the fit with distance metrics
+   (:func:`SynthModel.fit_report`): two-sample Kolmogorov-Smirnov
+   statistics on the IAT and duration marginals (synth stream vs the
+   expanded real trace) and Spearman rank correlation between synthesized
+   and traced per-function invocation counts.  Thresholds are pinned by
+   ``tests/test_synth.py``.
+
+Everything is deterministic per ``seed``: each simulated minute draws
+from ``default_rng([seed, minute])``, so chunk iterators can be
+re-instantiated (the streaming engine may iterate a stream more than
+once) and a given ``(model, seed)`` always produces the identical stream.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Iterator
+
+import numpy as np
+
+from .traces import load_azure_trace, profile_for
+from .workload import PROFILES
+
+__all__ = [
+    "SynthModel",
+    "expand_catalog",
+    "fit_azure_trace",
+    "fit_azure_csv",
+    "ks_statistic",
+    "spearman_rank",
+]
+
+
+def ks_statistic(a: np.ndarray, b: np.ndarray) -> float:
+    """Two-sample Kolmogorov-Smirnov statistic, sup |F_a - F_b|."""
+    a = np.sort(np.asarray(a, dtype=np.float64))
+    b = np.sort(np.asarray(b, dtype=np.float64))
+    if a.size == 0 or b.size == 0:
+        return 1.0
+    grid = np.concatenate([a, b])
+    fa = np.searchsorted(a, grid, side="right") / a.size
+    fb = np.searchsorted(b, grid, side="right") / b.size
+    return float(np.max(np.abs(fa - fb)))
+
+
+def spearman_rank(x: np.ndarray, y: np.ndarray) -> float:
+    """Spearman rank correlation (Pearson on average ranks)."""
+    def ranks(v):
+        v = np.asarray(v, dtype=np.float64)
+        order = np.argsort(v, kind="stable")
+        r = np.empty(v.size)
+        r[order] = np.arange(v.size, dtype=np.float64)
+        # average ties so equal counts share a rank
+        for u in np.unique(v):
+            m = v == u
+            if m.sum() > 1:
+                r[m] = r[m].mean()
+        return r
+
+    rx, ry = ranks(x), ranks(y)
+    sx, sy = rx.std(), ry.std()
+    if sx == 0 or sy == 0:
+        return 0.0
+    return float(np.mean((rx - rx.mean()) * (ry - ry.mean())) / (sx * sy))
+
+
+@dataclass
+class SynthModel:
+    """A fitted workload model: function catalog + popularity + diurnal
+    arrival-intensity cycle.  Generation is lazy and deterministic per
+    seed (see module docstring)."""
+
+    fns: tuple[str, ...]                 # catalog, popularity-rank order
+    popularity: np.ndarray               # (F,) probabilities, sums to 1
+    minute_rate: np.ndarray              # (M,) expected arrivals per minute
+    minute_s: float = 60.0
+    zipf_alpha: float = 1.0              # fitted popularity decay exponent
+    profile_names: tuple[str, ...] = ()  # SeBS profile per catalog fn
+    _medians: np.ndarray = field(default=None, repr=False)
+    _sigmas: np.ndarray = field(default=None, repr=False)
+
+    def __post_init__(self):
+        self.popularity = np.asarray(self.popularity, dtype=np.float64)
+        self.popularity = self.popularity / self.popularity.sum()
+        self.minute_rate = np.asarray(self.minute_rate, dtype=np.float64)
+        if not self.profile_names:
+            self.profile_names = tuple(profile_for(f) for f in self.fns)
+        self._medians = np.array(
+            [PROFILES[p].median_s for p in self.profile_names])
+        self._sigmas = np.array(
+            [PROFILES[p].sigma for p in self.profile_names])
+
+    @property
+    def mean_rate_per_s(self) -> float:
+        return float(self.minute_rate.mean() / self.minute_s)
+
+    # -- generation --------------------------------------------------------
+
+    def _minute(self, minute: int, seed: int, rate_scale: float):
+        """One simulated minute: (times, fn indices, durations)."""
+        rng = np.random.default_rng([seed, minute])
+        rate = self.minute_rate[minute % self.minute_rate.size] * rate_scale
+        count = int(rng.poisson(rate))
+        if count == 0:
+            z = np.zeros(0)
+            return z, np.zeros(0, dtype=np.int64), z
+        t = np.sort(rng.uniform(minute * self.minute_s,
+                                (minute + 1) * self.minute_s, size=count))
+        f = rng.choice(self.popularity.size, size=count, p=self.popularity)
+        # per-fn lognormal service times (workload.Profile.sample, batched)
+        p = self._medians[f] * np.exp(self._sigmas[f] * rng.standard_normal(count))
+        return t, f.astype(np.int64), np.maximum(p, 1e-4)
+
+    def iter_minutes(self, seed: int = 0, *, minutes: int | None = None,
+                     max_invocations: int | None = None,
+                     rate_scale: float = 1.0) -> Iterator:
+        """Yield per-minute :class:`StreamChunk`-shaped triples lazily."""
+        from .streamscan import StreamChunk
+        total = 0
+        m = 0
+        while True:
+            if minutes is not None and m >= minutes:
+                return
+            t, f, p = self._minute(m, seed, rate_scale)
+            if max_invocations is not None and total + t.size >= max_invocations:
+                keep = max_invocations - total
+                yield StreamChunk(r=t[:keep], fn=f[:keep], p=p[:keep])
+                return
+            if t.size:
+                yield StreamChunk(r=t, fn=f, p=p)
+                total += t.size
+            m += 1
+
+    def stream(self, seed: int = 0, *, minutes: int | None = None,
+               max_invocations: int | None = None, rate_scale: float = 1.0):
+        """An :class:`~repro.core.streamscan.ArrivalStream` over the model.
+
+        The chunk factory re-derives every minute's RNG from
+        ``(seed, minute)``, so the stream can be iterated repeatedly and
+        is bit-identical per seed."""
+        from .streamscan import ArrivalStream
+        if minutes is None and max_invocations is None:
+            raise ValueError("bound the stream with minutes= or "
+                             "max_invocations=")
+
+        def chunks():
+            return self.iter_minutes(seed, minutes=minutes,
+                                     max_invocations=max_invocations,
+                                     rate_scale=rate_scale)
+
+        return ArrivalStream(fns=self.fns, chunks=chunks,
+                             total=max_invocations)
+
+    # -- fit verification --------------------------------------------------
+
+    def fit_report(self, trace: dict[str, list[int]], *, seed: int = 0,
+                   cycles: int = 4) -> dict[str, float]:
+        """Distance metrics between a synthesized stream and the expanded
+        real trace (recipe step 5): K-S on IAT and duration marginals,
+        Spearman rank correlation on per-function counts."""
+        from .traces import requests_from_trace, tile_trace
+        minutes = cycles * len(next(iter(trace.values())))
+        ref = requests_from_trace(tile_trace(trace, repeat=cycles),
+                                  seed=seed + 1, minute_s=self.minute_s)
+        ref_t = np.array([r.r for r in ref])
+        ref_p = np.array([r.p_true for r in ref])
+        ref_counts = np.zeros(len(self.fns))
+        fn_index = {f: i for i, f in enumerate(self.fns)}
+        for r in ref:
+            i = fn_index.get(r.fn)
+            if i is not None:
+                ref_counts[i] += 1
+
+        t = np.zeros(0)
+        f = np.zeros(0, dtype=np.int64)
+        p = np.zeros(0)
+        for ch in self.iter_minutes(seed, minutes=minutes):
+            t = np.concatenate([t, ch.r])
+            f = np.concatenate([f, ch.fn])
+            p = np.concatenate([p, ch.p])
+        counts = np.bincount(f, minlength=len(self.fns)).astype(np.float64)
+
+        return {
+            "n_synth": int(t.size),
+            "n_ref": int(ref_t.size),
+            "ks_iat": ks_statistic(np.diff(t), np.diff(np.sort(ref_t))),
+            "ks_duration": ks_statistic(p, ref_p),
+            "popularity_spearman": spearman_rank(counts, ref_counts),
+        }
+
+
+def fit_azure_trace(trace: dict[str, list[int]],
+                    minute_s: float = 60.0) -> SynthModel:
+    """Fit a :class:`SynthModel` to an Azure-style per-minute count trace
+    (recipe steps 1-4)."""
+    fns = sorted(trace, key=lambda f: (-sum(trace[f]), f))
+    totals = np.array([sum(trace[f]) for f in fns], dtype=np.float64)
+    if totals.sum() <= 0:
+        raise ValueError("trace has no invocations to fit")
+    n_min = len(trace[fns[0]])
+    minute_rate = np.zeros(n_min)
+    for f in fns:
+        minute_rate[:len(trace[f])] += trace[f]
+
+    # Zipf decay: least-squares log(count) ~ -alpha log(rank) on the
+    # nonzero head (rank is 1-based; single-function traces fall back to 1)
+    nz = totals > 0
+    ranks = np.arange(1, totals.size + 1, dtype=np.float64)[nz]
+    if ranks.size >= 2:
+        x = np.log(ranks)
+        y = np.log(totals[nz])
+        alpha = -float(np.polyfit(x, y, 1)[0])
+        alpha = float(np.clip(alpha, 0.1, 4.0))
+    else:
+        alpha = 1.0
+
+    return SynthModel(fns=tuple(fns), popularity=totals / totals.sum(),
+                      minute_rate=minute_rate, minute_s=minute_s,
+                      zipf_alpha=alpha)
+
+
+def fit_azure_csv(path: str | Path, minute_s: float = 60.0) -> SynthModel:
+    """Convenience: :func:`fit_azure_trace` on a CSV file."""
+    return fit_azure_trace(load_azure_trace(path), minute_s=minute_s)
+
+
+def expand_catalog(model: SynthModel, n_fns: int, *,
+                   rate_scale: float = 1.0,
+                   tail_alpha: float | None = None) -> SynthModel:
+    """Extrapolate a fitted model's catalog to ``n_fns`` functions.
+
+    The measured functions keep their fitted popularity mass in rank
+    order; synthetic tail functions ``synth-%05d`` continue a Zipf decay
+    (``rank**-alpha``) below the last measured function, so a 32-function
+    slice grows into a 10k-function catalog with the same head behaviour
+    and a realistic long tail.  ``rate_scale`` scales the arrival
+    intensity (more functions usually means more total load).
+
+    ``tail_alpha`` overrides the decay exponent for the synthetic tail
+    only: a head-only slice over-estimates the decay (ours fits ~2.0 on
+    32 functions, while the full Azure dataset's app popularity decays
+    with alpha ~= 1), so planet-scale catalogs pass a milder exponent to
+    keep the tail warm enough that every function is actually invoked."""
+    if n_fns < len(model.fns):
+        raise ValueError(f"n_fns={n_fns} below measured catalog "
+                         f"{len(model.fns)}")
+    k = len(model.fns)
+    alpha = model.zipf_alpha if tail_alpha is None else float(tail_alpha)
+    pop = np.zeros(n_fns)
+    pop[:k] = model.popularity
+    if n_fns > k:
+        # continue the decay below the last measured share: the rank-k
+        # function anchors the tail, so share(rank) = share(k) * (rank/k)^-a
+        ranks = np.arange(k + 1, n_fns + 1, dtype=np.float64)
+        pop[k:] = model.popularity[-1] * (ranks / k) ** (-alpha)
+    fns = tuple(model.fns) + tuple(
+        f"synth-{i:05d}" for i in range(k, n_fns))
+    return SynthModel(fns=fns, popularity=pop / pop.sum(),
+                      minute_rate=model.minute_rate * rate_scale,
+                      minute_s=model.minute_s, zipf_alpha=model.zipf_alpha)

@@ -141,3 +141,98 @@ def generate_trace_requests(
         trace = tile_trace(trace, repeat=repeat, scale=scale)
     return requests_from_trace(trace, seed,
                                minute_s=minute_s, max_minutes=max_minutes)
+
+
+# ---------------------------------------------------------------------------
+# lazy tiling: stream the tiled trace without materializing it
+# ---------------------------------------------------------------------------
+# tile_trace() + requests_from_trace() costs O(repeat * n) host memory twice
+# over (the tiled count lists, then every Request).  The functions below
+# generate the same per-minute expansion lazily, one minute at a time, with
+# a per-(seed, minute) derived RNG so a minute's arrivals depend only on the
+# minute's counts -- which makes the lazy tiled stream *bit-identical* to
+# expanding a materialized tile_trace() result through the same per-minute
+# rule (the parity tests pin this down).
+
+def _scaled_count(count: int, scale: float) -> int:
+    return int(round(count * scale)) if scale != 1.0 else count
+
+
+def _minute_arrivals(trace: dict[str, list[int]], minute: int, seed: int,
+                     minute_s: float, scale: float, fns: list[str],
+                     src_minute: int):
+    """Expand one tiled minute: time-sorted (r, fn_index, p_true) arrays.
+
+    ``src_minute`` is the minute's index into the *source* trace (tiling is
+    ``minute % len(counts)``); ``minute`` is the absolute output minute and
+    seeds the RNG, so every tiled copy of a source minute draws fresh."""
+    rng = np.random.default_rng([seed, minute])
+    ts, fs, ps = [], [], []
+    for fi, fn in enumerate(fns):
+        counts = trace[fn]
+        count = _scaled_count(counts[src_minute % len(counts)], scale)
+        if count <= 0:
+            continue
+        ts.append(rng.uniform(minute * minute_s, (minute + 1) * minute_s,
+                              size=count))
+        fs.append(np.full(count, fi, dtype=np.int64))
+        ps.append(np.maximum(
+            PROFILES[profile_for(fn)].sample(rng, count), 1e-4))
+    if not ts:
+        z = np.zeros(0)
+        return z, np.zeros(0, dtype=np.int64), z
+    t = np.concatenate(ts)
+    order = np.argsort(t, kind="stable")
+    return (t[order], np.concatenate(fs)[order], np.concatenate(ps)[order])
+
+
+def iter_tiled_chunks(trace: dict[str, list[int]], seed: int = 0,
+                      repeat: int = 1, scale: float = 1.0,
+                      minute_s: float = 60.0):
+    """Lazily yield the tiled trace as time-ordered
+    :class:`~repro.core.streamscan.StreamChunk` slabs, one per minute --
+    O(one minute) host memory regardless of ``repeat``, in place of
+    ``tile_trace`` + ``requests_from_trace``'s O(repeat * n)."""
+    from .streamscan import StreamChunk
+    if repeat < 1:
+        raise ValueError(f"repeat must be >= 1, got {repeat}")
+    if scale <= 0:
+        raise ValueError(f"scale must be > 0, got {scale}")
+    fns = sorted(trace)
+    n_min = max(len(c) for c in trace.values())
+    for minute in range(repeat * n_min):
+        t, f, p = _minute_arrivals(trace, minute, seed, minute_s, scale,
+                                   fns, minute % n_min)
+        if t.size:
+            yield StreamChunk(r=t, fn=f, p=p)
+
+
+def tiled_stream(trace: dict[str, list[int]], seed: int = 0, repeat: int = 1,
+                 scale: float = 1.0, minute_s: float = 60.0):
+    """The lazy tiled trace as a re-playable
+    :class:`~repro.core.streamscan.ArrivalStream`."""
+    from .streamscan import ArrivalStream
+    return ArrivalStream(
+        fns=tuple(sorted(trace)),
+        chunks=lambda: iter_tiled_chunks(trace, seed=seed, repeat=repeat,
+                                         scale=scale, minute_s=minute_s))
+
+
+def tiled_requests_materialized(trace: dict[str, list[int]], seed: int = 0,
+                                repeat: int = 1, scale: float = 1.0,
+                                minute_s: float = 60.0) -> list[Request]:
+    """The materialized path the lazy iterator must match: tile the whole
+    trace up front with :func:`tile_trace` (O(repeat * n)), then expand it
+    through the same per-minute rule.  Exists as the parity oracle for
+    :func:`iter_tiled_chunks` and for callers that genuinely need a
+    request list."""
+    tiled = tile_trace(trace, repeat=repeat, scale=scale)
+    fns = sorted(tiled)
+    n_min = max(len(c) for c in tiled.values())
+    reqs: list[Request] = []
+    for minute in range(n_min):
+        t, f, p = _minute_arrivals(tiled, minute, seed, minute_s, 1.0,
+                                   fns, minute)
+        reqs.extend(Request(fn=fns[fi], r=float(ti), p_true=float(pi))
+                    for ti, fi, pi in zip(t, f, p))
+    return reqs

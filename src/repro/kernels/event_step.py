@@ -33,10 +33,13 @@ from jax.experimental import pallas as pl
 
 
 def event_step_supported(*, freeze, use_fc, fc_push, dyn, het, hedge, cold,
-                         dup, **_static) -> bool:
+                         dup, stream=False, **_static) -> bool:
     """True when the static feature set falls inside the Pallas kernel's
-    scope (base pull, with or without FC pull counts)."""
-    return not (freeze or fc_push or dyn or het or hedge or cold or dup)
+    scope (base pull, with or without FC pull counts).  ``stream`` (the
+    chunked carry-handoff variant) always falls back to the jnp oracle: the
+    Pallas body predates the t_stop gate / CSR fn_ev / qcnt carry."""
+    return not (freeze or fc_push or dyn or het or hedge or cold or dup
+                or stream)
 
 
 def _gat(vec, i):

@@ -1,0 +1,308 @@
+"""Streaming chunked-scan replay: carry handoff parity with the
+single-shot scan.
+
+Contracts under test:
+
+* chunked replay is *bit-identical* to the single-shot scan kernel on
+  streams that fit both ways: exact counter equality
+  (``failures``/``timed_out``/``shed``/``retries_issued``/...), identical
+  failed-request masks, and zero clock drift on start/finish times -- the
+  documented guarantee only promises clocks within
+  ``CLUSTER_XCHECK_RTOL``, but the handoff is exact by construction and
+  the tests pin that down;
+* parity holds across chunk sizes (tiny, a pow2 bucket boundary, larger
+  than the stream) and across the feature axes the carry must thread:
+  dynamics (failures + autoscaling), steal hedging, resilience
+  (timeout/retry/admission), cold starts, FC window counts, push
+  sequencing;
+* ``stream_supported`` mirrors ``cluster_scan_eligible`` for the flag
+  combinations the streaming path accepts;
+* peak request-tensor rows are bounded by the chunk size (plus carried
+  rows), independent of total stream length;
+* ``stream_from_requests`` round-trips: ``write_back`` populates the
+  original Request objects exactly like ``simulate_cluster_scan``.
+"""
+
+import numpy as np
+import pytest
+
+from _hypothesis_shim import given, settings, st
+
+from repro.core.cluster import ClusterDynamics
+from repro.core.request import Request
+from repro.core.resilience import (
+    AdmissionPolicy,
+    ResilienceSpec,
+    RetryPolicy,
+    TimeoutSpec,
+)
+from repro.core.stragglers import HedgingSpec, NodeSpeedProfile
+from repro.core.sweep import CLUSTER_XCHECK_RTOL
+
+try:
+    import jax  # noqa: F401
+    HAVE_JAX = True
+except ImportError:
+    HAVE_JAX = False
+
+needs_jax = pytest.mark.skipif(not HAVE_JAX, reason="jax not installed")
+
+if HAVE_JAX:
+    from repro.core.fastpath import simulate_cluster_scan
+    from repro.core.streamscan import (
+        ArrivalStream,
+        StreamChunk,
+        simulate_cluster_stream,
+        stream_from_requests,
+        stream_supported,
+    )
+
+FNS = ("dynamic-html", "uploader", "thumbnailer", "compression")
+
+DYN_FAIL = ClusterDynamics(fail=((1, 6.0),), failure_detect_s=0.5)
+DYN_AUTO = ClusterDynamics(autoscale=True, autoscale_interval_s=2.0,
+                           max_nodes=6)
+RES = ResilienceSpec(
+    timeout=TimeoutSpec(multiple=3.0, floor_s=0.4),
+    retry=RetryPolicy(max_attempts=3, base_delay_s=0.3, cap_delay_s=2.0,
+                      jitter=0.0),
+    admission=AdmissionPolicy(threshold_s=1.5),
+)
+
+
+def _requests(n, seed, span=25.0):
+    rng = np.random.default_rng(seed)
+    return [Request(fn=FNS[int(rng.integers(0, len(FNS)))], r=float(r),
+                    p_true=float(rng.uniform(0.05, 0.9)))
+            for r in np.sort(rng.uniform(0, span, n))]
+
+
+def _assert_parity(reqs, chunk, **kw):
+    """Chunked replay vs single-shot scan on the same stream: exact
+    counters, exact failed masks, bitwise clocks."""
+    ref = simulate_cluster_scan(
+        [Request(fn=q.fn, r=q.r, p_true=q.p_true) for q in reqs], **kw)
+    stream, order = stream_from_requests(reqs)
+    sr = simulate_cluster_stream(stream, chunk=chunk, **kw)
+
+    ref_start = np.array([np.nan if r.start is None else r.start
+                          for r in ref.requests])[order]
+    ref_finish = np.array([np.nan if r.finish is None else r.finish
+                           for r in ref.requests])[order]
+    ref_failed = np.array([r.failed is not None for r in ref.requests])[order]
+
+    for key, want in (("failures", ref.failures),
+                      ("timed_out", ref.timed_out),
+                      ("shed", ref.shed),
+                      ("retries_issued", ref.retries_issued),
+                      ("cold_starts", ref.cold_starts),
+                      ("steals_won", ref.steals_won),
+                      ("backups_issued", ref.backups_issued)):
+        assert sr.counters[key] == want, (
+            f"counter {key}: chunked={sr.counters[key]} single={want}")
+    assert np.array_equal(sr.failed > 0, ref_failed)
+    assert np.array_equal(np.isnan(sr.start), np.isnan(ref_start))
+    ok = np.isfinite(ref_start)
+    # exact in practice; the documented bound is CLUSTER_XCHECK_RTOL
+    np.testing.assert_allclose(sr.start[ok], ref_start[ok], rtol=0, atol=0)
+    np.testing.assert_allclose(sr.finish[ok], ref_finish[ok], rtol=0, atol=0)
+    assert np.nanmax(np.abs(sr.start - ref_start), initial=0.0) <= (
+        CLUSTER_XCHECK_RTOL * max(1.0, np.nanmax(np.abs(ref_start),
+                                                 initial=1.0)))
+    return sr
+
+
+# chunk sizes: tiny, a pow2 bucket boundary, larger than any test stream
+CHUNKS = (17, 64, 100_000)
+
+
+@needs_jax
+class TestHandoffParity:
+    @pytest.mark.parametrize("chunk", CHUNKS)
+    @pytest.mark.parametrize("policy", ("fifo", "sept", "rect", "fc"))
+    def test_pull_policies(self, policy, chunk):
+        _assert_parity(_requests(140, seed=hash(policy) % 97),
+                       chunk=chunk, nodes=3, cores_per_node=2,
+                       policy=policy, assignment="pull")
+
+    @pytest.mark.parametrize("chunk", CHUNKS)
+    def test_push_fc(self, chunk):
+        _assert_parity(_requests(140, seed=4), chunk=chunk, nodes=3,
+                       cores_per_node=2, policy="fc", assignment="push")
+
+    @pytest.mark.parametrize("chunk", CHUNKS)
+    def test_push_home(self, chunk):
+        _assert_parity(_requests(140, seed=5), chunk=chunk, nodes=3,
+                       cores_per_node=2, policy="sept", assignment="push",
+                       lb="home")
+
+    @pytest.mark.parametrize("chunk", CHUNKS)
+    def test_cold_starts(self, chunk):
+        sr = _assert_parity(_requests(110, seed=6), chunk=chunk, nodes=2,
+                            cores_per_node=2, policy="sept",
+                            assignment="pull", warm=False)
+        assert sr.counters["cold_starts"] > 0
+
+    @pytest.mark.parametrize("chunk", CHUNKS)
+    def test_dynamics_failure(self, chunk):
+        sr = _assert_parity(_requests(140, seed=7), chunk=chunk, nodes=3,
+                            cores_per_node=2, policy="sept",
+                            assignment="push", dynamics=DYN_FAIL)
+        assert sr.counters["failures"] > 0
+
+    @pytest.mark.parametrize("chunk", CHUNKS)
+    def test_dynamics_autoscale(self, chunk):
+        sr = _assert_parity(_requests(260, seed=1), chunk=chunk, nodes=2,
+                            cores_per_node=3, policy="rect",
+                            assignment="pull", dynamics=DYN_AUTO)
+        assert sr.nodes_used > 2
+
+    @pytest.mark.parametrize("chunk", CHUNKS)
+    def test_hedging_steal(self, chunk):
+        _assert_parity(_requests(140, seed=8), chunk=chunk, nodes=3,
+                       cores_per_node=2, policy="sept", assignment="push",
+                       profile=NodeSpeedProfile(speeds=(1.0, 0.7, 1.3)),
+                       hedging=HedgingSpec(mode="steal", multiple=3.0,
+                                           floor_s=0.5))
+
+    @pytest.mark.parametrize("chunk", CHUNKS)
+    def test_resilience(self, chunk):
+        sr = _assert_parity(_requests(160, seed=9, span=12.0), chunk=chunk,
+                            nodes=2, cores_per_node=2, policy="sept",
+                            assignment="push", resilience=RES)
+        assert sr.counters["retries_issued"] > 0
+
+    @given(st.integers(min_value=3, max_value=160),
+           st.integers(min_value=1, max_value=5000),
+           st.sampled_from(("pull", "push")))
+    @settings(max_examples=6, deadline=None)
+    def test_random_chunk_sizes(self, seed, chunk, assignment):
+        _assert_parity(_requests(90, seed=seed, span=18.0), chunk=chunk,
+                       nodes=2, cores_per_node=2, policy="sept",
+                       assignment=assignment)
+
+
+@needs_jax
+class TestStreamMechanics:
+    def test_peak_rows_bounded(self):
+        """Doubling the stream does not grow the per-chunk request tensor."""
+        kw = dict(nodes=3, cores_per_node=2, policy="sept",
+                  assignment="pull", chunk=64)
+        a, _ = stream_from_requests(_requests(200, seed=11, span=60.0))
+        b, _ = stream_from_requests(_requests(400, seed=11, span=120.0))
+        ra = simulate_cluster_stream(a, **kw)
+        rb = simulate_cluster_stream(b, **kw)
+        assert rb.chunks > ra.chunks
+        assert rb.peak_rows == ra.peak_rows
+
+    def test_write_back_matches_scan(self):
+        reqs = _requests(90, seed=12)
+        ref = simulate_cluster_scan(
+            [Request(fn=q.fn, r=q.r, p_true=q.p_true) for q in reqs],
+            nodes=2, cores_per_node=2, policy="sept", assignment="pull")
+        stream, order = stream_from_requests(reqs)
+        sr = simulate_cluster_stream(stream, nodes=2, cores_per_node=2,
+                                     policy="sept", assignment="pull",
+                                     chunk=32)
+        sr.write_back(reqs, order)
+        for got, want in zip(reqs, ref.requests):
+            assert got.node == want.node
+            assert got.start == pytest.approx(want.start, abs=0)
+            assert got.finish == pytest.approx(want.finish, abs=0)
+            assert got.failed == want.failed
+
+    def test_tie_safe_batching(self):
+        """Simultaneous arrivals are never split across a chunk edge."""
+        reqs = []
+        for i in range(60):
+            t = float(i // 4)  # runs of 4 identical arrival times
+            reqs.append(Request(fn=FNS[i % len(FNS)], r=t, p_true=0.2))
+        _assert_parity(reqs, chunk=5, nodes=2, cores_per_node=2,
+                       policy="fifo", assignment="pull")
+
+    def test_batches_callable_hint(self):
+        """A zero-arg callable hint is sampled once per batch, after the
+        previous batch was consumed -- the adaptive-batching contract the
+        driver relies on to fit carry + fresh into one compiled shape."""
+        from repro.core.streamscan import _batches
+
+        def chunks():
+            t = np.arange(30, dtype=np.float64) * 0.5
+            yield StreamChunk(r=t, fn=np.zeros(30, dtype=np.int64),
+                              p=np.full(30, 0.2))
+
+        stream = ArrivalStream(fns=("dynamic-html",), chunks=chunks)
+        targets = [10, 3, 5, 100]
+        sampled = []
+
+        def hint():
+            sampled.append(targets[len(sampled)])
+            return sampled[-1]
+
+        sizes = [len(b[0]) for b in _batches(stream, hint)]
+        # distinct times -> the tie-safe cut lands exactly on each target;
+        # the final batch is the remainder
+        assert sizes == [10, 3, 5, 12]
+        assert sampled == [10, 3, 5, 100]
+
+    def test_chunk_iterator_is_lazy(self):
+        pulled = []
+
+        def chunks():
+            for k in range(4):
+                t = np.arange(10, dtype=np.float64) * 0.1 + k
+                pulled.append(k)
+                yield StreamChunk(r=t, fn=np.zeros(10, dtype=np.int64),
+                                  p=np.full(10, 0.2))
+
+        stream = ArrivalStream(fns=("dynamic-html",), chunks=chunks)
+        sr = simulate_cluster_stream(stream, nodes=2, cores_per_node=2,
+                                     policy="sept", assignment="pull",
+                                     chunk=10)
+        assert sr.n == 40
+        assert pulled == [0, 1, 2, 3]
+
+    def test_lazy_tiling_parity(self):
+        """iter_tiled_chunks == tile_trace + the same per-minute expansion,
+        bit for bit (the --repeat lazy path vs the materialized path)."""
+        from repro.core.traces import (
+            iter_tiled_chunks,
+            load_azure_trace,
+            tiled_requests_materialized,
+            tiled_stream,
+        )
+        import pathlib
+        path = (pathlib.Path(__file__).resolve().parent.parent
+                / "data" / "azure_trace_slice.csv")
+        trace = load_azure_trace(path)
+        lazy = list(iter_tiled_chunks(trace, seed=3, repeat=3, scale=1.5))
+        mat = tiled_requests_materialized(trace, seed=3, repeat=3, scale=1.5)
+        fns = sorted(trace)
+        assert sum(c.r.size for c in lazy) == len(mat) > 0
+        lr = np.concatenate([c.r for c in lazy])
+        lf = np.concatenate([c.fn for c in lazy])
+        lp = np.concatenate([c.p for c in lazy])
+        assert np.array_equal(lr, np.array([q.r for q in mat]))
+        assert np.array_equal(lf, np.array([fns.index(q.fn) for q in mat]))
+        assert np.array_equal(lp, np.array([q.p_true for q in mat]))
+        assert np.all(np.diff(lr) >= 0)
+        # the ArrivalStream wrapper is re-playable
+        s = tiled_stream(trace, seed=3, repeat=2)
+        n1 = sum(c.r.size for c in s.iter_chunks())
+        n2 = sum(c.r.size for c in s.iter_chunks())
+        assert n1 == n2 > 0
+
+    def test_supported_matrix(self):
+        ok = dict(policy="sept", assignment="pull", lb="least_loaded",
+                  warm=True, dynamics=None, profile=None, hedging=None,
+                  resilience=None)
+        assert stream_supported(**ok)
+        assert not stream_supported(**{**ok, "policy": "nonesuch"})
+        # duplicate hedging is reference-engine-only
+        assert not stream_supported(
+            **{**ok, "assignment": "push",
+               "hedging": HedgingSpec(mode="duplicate")})
+        # resilience requires push + warm
+        assert not stream_supported(**{**ok, "resilience": RES})
+        assert stream_supported(
+            **{**ok, "assignment": "push", "resilience": RES})

@@ -1,0 +1,146 @@
+"""Synthesizer-fit regression: the Azure-calibrated workload model stays
+faithful to the vendored slice.
+
+Contracts under test (thresholds are the documented fit budget -- the
+measured values sit well inside them, see ``SynthModel.fit_report``):
+
+* K-S statistic on the inter-arrival marginal (synth vs expanded trace)
+  <= 0.05;
+* K-S statistic on the duration marginal <= 0.05;
+* Spearman rank correlation between synthesized and traced per-function
+  invocation counts >= 0.90;
+* generation is bit-deterministic per seed and re-iterable (chunk
+  factories can be consumed twice);
+* :func:`expand_catalog` extrapolates the popularity tail with the
+  fitted Zipf decay and preserves the measured head.
+"""
+
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.synth import (
+    SynthModel,
+    expand_catalog,
+    fit_azure_csv,
+    fit_azure_trace,
+    ks_statistic,
+    spearman_rank,
+)
+from repro.core.traces import load_azure_trace
+
+SLICE = Path(__file__).resolve().parent.parent / "data" / "azure_trace_slice.csv"
+
+KS_IAT_MAX = 0.05
+KS_DURATION_MAX = 0.05
+SPEARMAN_MIN = 0.90
+
+
+@pytest.fixture(scope="module")
+def model():
+    return fit_azure_csv(SLICE)
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return load_azure_trace(SLICE)
+
+
+class TestFit:
+    def test_fit_shape(self, model, trace):
+        assert len(model.fns) == len(trace)
+        assert model.popularity.sum() == pytest.approx(1.0)
+        # popularity is rank-ordered descending
+        assert np.all(np.diff(model.popularity) <= 1e-12)
+        assert 0.1 <= model.zipf_alpha <= 4.0
+        # arrival mass is conserved: sum of minute rates == total count
+        assert model.minute_rate.sum() == pytest.approx(
+            sum(sum(v) for v in trace.values()))
+
+    def test_fit_report_under_thresholds(self, model, trace):
+        rep = model.fit_report(trace, seed=0, cycles=4)
+        assert rep["ks_iat"] <= KS_IAT_MAX, rep
+        assert rep["ks_duration"] <= KS_DURATION_MAX, rep
+        assert rep["popularity_spearman"] >= SPEARMAN_MIN, rep
+        assert rep["n_synth"] > 0 and rep["n_ref"] > 0
+
+    def test_empty_trace_rejected(self):
+        with pytest.raises(ValueError):
+            fit_azure_trace({"f": [0, 0]})
+
+
+class TestGeneration:
+    def test_deterministic_per_seed_and_reiterable(self, model):
+        s = model.stream(seed=7, minutes=8)
+        first = list(s.iter_chunks())
+        second = list(s.iter_chunks())   # same stream object, re-iterated
+        other = list(model.stream(seed=7, minutes=8).iter_chunks())
+        assert len(first) == len(second) == len(other) > 0
+        for a, b, c in zip(first, second, other):
+            for x in (b, c):
+                assert np.array_equal(a.r, x.r)
+                assert np.array_equal(a.fn, x.fn)
+                assert np.array_equal(a.p, x.p)
+
+    def test_seed_changes_stream(self, model):
+        a = next(iter(model.stream(seed=1, minutes=4).iter_chunks()))
+        b = next(iter(model.stream(seed=2, minutes=4).iter_chunks()))
+        assert not (a.r.size == b.r.size and np.array_equal(a.r, b.r))
+
+    def test_chunks_sorted_and_bounded(self, model):
+        total = 0
+        last = -np.inf
+        for ch in model.stream(seed=3, max_invocations=500).iter_chunks():
+            assert np.all(np.diff(ch.r) >= 0)
+            assert ch.r.size and ch.r[0] >= last
+            last = ch.r[-1]
+            assert np.all(ch.p >= 1e-4)
+            total += ch.r.size
+        assert total == 500
+
+    def test_stream_requires_bound(self, model):
+        with pytest.raises(ValueError):
+            model.stream(seed=0)
+
+
+class TestExpandCatalog:
+    def test_head_preserved_tail_decays(self, model):
+        big = expand_catalog(model, 500)
+        assert len(big.fns) == 500
+        assert big.fns[:len(model.fns)] == model.fns
+        head = big.popularity[:len(model.fns)]
+        np.testing.assert_allclose(head / head.sum(), model.popularity,
+                                   rtol=1e-12)
+        tail = big.popularity[len(model.fns):]
+        assert np.all(np.diff(tail) <= 1e-15)
+        assert tail[0] <= big.popularity[len(model.fns) - 1]
+
+    def test_rate_scale(self, model):
+        big = expand_catalog(model, 100, rate_scale=3.0)
+        assert big.mean_rate_per_s == pytest.approx(
+            3.0 * model.mean_rate_per_s)
+
+    def test_tail_functions_generate(self, model):
+        big = expand_catalog(model, 64, rate_scale=2.0)
+        ch = next(iter(big.stream(seed=5, minutes=3).iter_chunks()))
+        assert ch.fn.max() < 64
+
+    def test_shrinking_rejected(self, model):
+        with pytest.raises(ValueError):
+            expand_catalog(model, 3)
+
+
+class TestMetrics:
+    def test_ks_statistic(self):
+        rng = np.random.default_rng(0)
+        a = rng.normal(size=4000)
+        assert ks_statistic(a, rng.normal(size=4000)) < 0.05
+        assert ks_statistic(a, rng.normal(3.0, size=4000)) > 0.5
+        assert ks_statistic(a, np.array([])) == 1.0
+
+    def test_spearman(self):
+        x = np.arange(50.0)
+        assert spearman_rank(x, 3 * x + 1) == pytest.approx(1.0)
+        assert spearman_rank(x, -x) == pytest.approx(-1.0)
+        assert abs(spearman_rank(x, np.ones(50))) == 0.0

@@ -78,20 +78,26 @@ def _supports(backend_name: str, kwargs: dict) -> bool:
     base = dict(mode="ours", policy="fc", warm=True, nodes=1,
                 assignment="pull", autoscale=False, failures=False,
                 hedging=False, hetero=False, timeouts=False, retries=False,
-                shedding=False)
+                shedding=False, streaming=False)
     base.update(kwargs)
     return bool(get_backend(backend_name).supports(**base))
 
 
 def render_table() -> str:
+    # the trailing `streaming` column asks the scan backend about the
+    # chunked carry-handoff replay path (core/streamscan.py) for the same
+    # scenario -- bounded-memory streams on every row it says yes to
     lines = [
-        "| scenario | " + " | ".join(f"`{b}`" for b in BACKENDS) + " |",
-        "|" + "---|" * (len(BACKENDS) + 1),
+        "| scenario | " + " | ".join(f"`{b}`" for b in BACKENDS)
+        + " | `streaming` |",
+        "|" + "---|" * (len(BACKENDS) + 2),
     ]
     for label, kwargs in SCENARIOS:
         cells = " | ".join(
             "yes" if _supports(b, kwargs) else "no" for b in BACKENDS)
-        lines.append(f"| {label} | {cells} |")
+        stream = "yes" if _supports(
+            "scan", {**kwargs, "streaming": True}) else "no"
+        lines.append(f"| {label} | {cells} | {stream} |")
     return "\n".join(lines)
 
 
