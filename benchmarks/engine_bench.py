@@ -1105,6 +1105,29 @@ def planet_rows(quick: bool = False,
     }]
 
 
+def _write_bench_summary(group: str, rows: list[dict]) -> None:
+    """Write/refresh ``BENCH_<group>.json`` at the repo root: the group's
+    benchmark rows plus the flight-recorder run manifest (git sha, jax
+    platform, scan-cache/bucket-timing stats, ``REPRO_*``/``JAX_*``/
+    ``XLA_*`` env) so a committed number is reproducible later.  Merges
+    into any existing payload -- the mega/planet trajectory keys written
+    by :func:`_write_bench_trajectory` survive."""
+    from pathlib import Path
+
+    from repro.core import run_manifest
+
+    path = Path(__file__).resolve().parent.parent / f"BENCH_{group}.json"
+    payload = {}
+    if path.exists():
+        try:
+            payload = json.loads(path.read_text())
+        except (ValueError, OSError):
+            payload = {}
+    payload["rows"] = rows
+    payload["manifest"] = run_manifest()
+    path.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")
+
+
 def _write_bench_trajectory(fname: str, row: str, **metrics) -> None:
     """Append/refresh a row in a committed ``BENCH_*.json`` trajectory
     artifact at the repo root (schema: row name -> {cells_or_invocations,
@@ -1130,37 +1153,44 @@ def run(quick: bool = False, backend: str = "vectorized",
         workers: int | None = None, rows_group: str = "all",
         artifacts: str | None = None) -> list[dict]:
     rows = []
+
+    def _group(name: str, new_rows: list[dict]) -> None:
+        rows.extend(new_rows)
+        _write_bench_summary(name, new_rows)
+
     if rows_group in ("all", "engine"):
         # XLA engines cannot fork; workers>1 uses a spawn pool so the
         # cells run concurrently, each worker with its own runtime
         result = run_sweep(spec(), workers=workers or 1,
                            runner=partial(_engine_cell, quick=quick),
                            executor="spawn" if (workers or 1) > 1 else None)
+        engine_rows = []
         for cr in result.results:
             m = cr.metrics
-            rows.append({
+            engine_rows.append({
                 "name": f"engine/{cr.cell.policy}",
                 "us_per_call": m["R_avg"] * 1e6,
                 "derived": (f"R_p50={m['R_p50']*1e3:.0f}ms;"
                             f"R_p95={m['R_p95']*1e3:.0f}ms;n={m['n']:.0f};"
                             f"workers={result.workers}"),
             })
+        _group("engine", engine_rows)
     if rows_group in ("all", "backend"):
-        rows.extend(backend_speedup_rows(quick, backend=backend))
+        _group("backend", backend_speedup_rows(quick, backend=backend))
     if rows_group in ("all", "cluster"):
-        rows.extend(cluster_speedup_rows(quick))
+        _group("cluster", cluster_speedup_rows(quick))
     if rows_group in ("all", "frontier"):
-        rows.extend(frontier_rows(quick, artifacts=artifacts))
+        _group("frontier", frontier_rows(quick, artifacts=artifacts))
     if rows_group in ("all", "straggler"):
-        rows.extend(straggler_rows(quick, artifacts=artifacts))
+        _group("straggler", straggler_rows(quick, artifacts=artifacts))
     if rows_group in ("all", "matrix"):
-        rows.extend(matrix_rows(quick, artifacts=artifacts))
+        _group("matrix", matrix_rows(quick, artifacts=artifacts))
     if rows_group in ("all", "mega"):
-        rows.extend(mega_rows(quick, artifacts=artifacts))
+        _group("mega", mega_rows(quick, artifacts=artifacts))
     if rows_group in ("all", "storm"):
-        rows.extend(storm_rows(quick, artifacts=artifacts))
+        _group("storm", storm_rows(quick, artifacts=artifacts))
     if rows_group in ("all", "planet"):
-        rows.extend(planet_rows(quick, artifacts=artifacts))
+        _group("planet", planet_rows(quick, artifacts=artifacts))
     return rows
 
 

@@ -387,6 +387,60 @@ def plot_planet(rows: list[dict], out: str | Path = "planet_rate.png") -> Path:
     return Path(out)
 
 
+def plot_timeline(trace_or_probes, out: str | Path = "flight_timeline.png",
+                  window_s: float | None = None, bins: int = 64) -> Path:
+    """Flight-recorder timeline: the windowed probes of a
+    :class:`repro.core.SimTrace` as a two-panel ribbon -- utilization and
+    queue/backlog levels on top, per-window event rates (arrivals,
+    completions, retries/timeouts/sheds/steals when present) below.
+    Accepts either a ``SimTrace`` (probes are computed here) or the dict
+    returned by ``SimTrace.probes()``."""
+    probes = trace_or_probes
+    if hasattr(trace_or_probes, "probes"):
+        probes = trace_or_probes.probes(window_s, bins=bins)
+    if not isinstance(probes, dict) or "t" not in probes:
+        raise ValueError("expected a SimTrace or a SimTrace.probes() dict")
+    t = probes["t"]
+    if not t:
+        raise ValueError("trace has no probe windows")
+    fig, axes = _fig(2)
+    ax = axes[0]
+    ax.plot(t, probes["utilization"], color="tab:blue", linewidth=1.5,
+            label="utilization")
+    ax.set_ylabel("utilization", color="tab:blue")
+    ax.tick_params(axis="y", labelcolor="tab:blue")
+    ax.set_ylim(bottom=0)
+    ax2 = ax.twinx()
+    ax2.plot(t, probes["queue_depth"], color="tab:red", linewidth=1.3,
+             linestyle="--", label="queue depth")
+    if any(probes.get("channel_backlog", ())):
+        ax2.plot(t, probes["channel_backlog"], color="tab:orange",
+                 linewidth=1.2, linestyle=":", label="channel backlog")
+    ax2.set_ylabel("queued calls", color="tab:red")
+    ax2.tick_params(axis="y", labelcolor="tab:red")
+    ax2.set_ylim(bottom=0)
+    ax.set_xlabel("time (s)")
+    ax.set_title("load: utilization and queueing", fontsize=10)
+    ax.grid(alpha=0.3)
+    ax = axes[1]
+    ax.plot(t, probes["arrivals"], linewidth=1.5, label="arrivals")
+    ax.plot(t, probes["completions"], linewidth=1.5, linestyle="--",
+            label="completions")
+    for key in ("retries", "timeouts", "sheds", "steals"):
+        if any(probes.get(key, ())):
+            ax.plot(t, probes[key], linewidth=1.2, linestyle=":", label=key)
+    ax.set_xlabel("time (s)")
+    ax.set_ylabel("events / window")
+    ax.set_title("lifecycle event rates", fontsize=10)
+    ax.grid(alpha=0.3)
+    ax.legend(fontsize=8)
+    fig.tight_layout()
+    fig.savefig(out, dpi=120)
+    import matplotlib.pyplot as plt
+    plt.close(fig)
+    return Path(out)
+
+
 def render_rows(rows: list[dict], outdir: str | Path,
                 metrics: tuple[str, ...] = ("R_avg",)) -> list[Path]:
     """Render every figure the artifact supports: policy curves when an

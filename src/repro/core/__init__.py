@@ -59,6 +59,18 @@ from .resilience import (
     TimeoutSpec,
     retry_jitter_u,
 )
+from .flight import (
+    CANONICAL_KINDS,
+    DivergenceReport,
+    FlightRecorder,
+    SimTrace,
+    TraceEvent,
+    first_divergence,
+    run_manifest,
+    trace_from_requests,
+    trace_from_result,
+    write_manifest,
+)
 from .scheduler import NodeScheduler, StartDecision
 from .simulator import (
     BaselineNodeSim,
@@ -92,12 +104,14 @@ from .sweep import (
     BACKEND_CHOICES,
     BackendMismatchError,
     CellResult,
+    ProgressReporter,
     SweepCell,
     SweepResult,
     SweepSpec,
     run_cell,
     run_cells_scan,
     run_sweep,
+    triage_cell,
 )
 from .traces import (
     generate_trace_requests,
@@ -129,9 +143,12 @@ __all__ = [
     "BACKEND_CHOICES",
     "BackendMismatchError",
     "BaselineNodeSim",
+    "CANONICAL_KINDS",
     "CallRecord",
     "CapacityTimeline",
     "CellResult",
+    "DivergenceReport",
+    "FlightRecorder",
     "Cluster",
     "ClusterConfig",
     "ClusterDynamics",
@@ -150,6 +167,7 @@ __all__ = [
     "PROFILES",
     "Policy",
     "PriorityQueue",
+    "ProgressReporter",
     "RECT",
     "ResilienceSpec",
     "RetryPolicy",
@@ -162,6 +180,7 @@ __all__ = [
     "ScanBackend",
     "SimBackend",
     "SimResult",
+    "SimTrace",
     "StartDecision",
     "Summary",
     "SweepCell",
@@ -186,12 +205,15 @@ __all__ = [
     "most_free_index",
     "poisson_arrivals",
     "ramp_arrivals",
+    "TraceEvent",
+    "first_divergence",
     "register_backend",
     "requests_from_trace",
     "retry_jitter_u",
     "rolling_restart",
     "run_cell",
     "run_cells_scan",
+    "run_manifest",
     "run_sweep",
     "scan_bucket_timings",
     "scan_cache_clear",
@@ -209,4 +231,8 @@ __all__ = [
     "summarize",
     "summarize_arrays",
     "tile_trace",
+    "trace_from_requests",
+    "trace_from_result",
+    "triage_cell",
+    "write_manifest",
 ]

@@ -34,6 +34,7 @@ from dataclasses import dataclass, field
 from dataclasses import replace as _dc_replace
 
 from .estimator import RuntimeEstimator
+from .flight import FlightRecorder, trace_from_result
 from .request import Request
 from .resilience import ResilienceSpec
 from .stragglers import HedgingSpec, NodeSpeedProfile
@@ -216,10 +217,14 @@ class ClusterConfig:
 
 
 class Cluster:
-    def __init__(self, cfg: ClusterConfig, warm_functions: list[str] | None = None):
+    def __init__(self, cfg: ClusterConfig, warm_functions: list[str] | None = None,
+                 trace: "FlightRecorder | None" = None):
         self.cfg = cfg
         self.loop = EventLoop()
         self.warm_functions = warm_functions
+        # flight recorder (set before _add_node: nodes share the sink);
+        # every emission site below is a single None-check when disabled
+        self._flight = trace
         self.nodes: list[OursNodeSim] = []
         self.completed: dict[int, Request] = {}
         self.failures = 0
@@ -287,9 +292,13 @@ class Cluster:
             warm_functions=self.warm_functions,
             on_complete=self._on_complete,
             on_start=self._on_start if self.res is not None else None,
+            trace=self._flight,
+            trace_node=idx,
         )
         self.nodes.append(node)
         self.timeline.add_node(self.loop.now)
+        if self._flight is not None:
+            self._flight.emit(self.loop.now, "node_up", node=idx)
         return node
 
     def _alive_nodes(self) -> list[OursNodeSim]:
@@ -301,6 +310,9 @@ class Cluster:
         self.loop.schedule(req.r + REQ_OVERHEAD_S, lambda: self._route(req))
 
     def _route(self, req: Request) -> None:
+        if self._flight is not None:
+            self._flight.emit(self.loop.now, "arrival", req=req.id,
+                              fn=req.fn, attempt=req.attempts)
         self._estimator.observe_arrival(req.fn, self.loop.now)
         if self.hedging is not None:
             self._arm_straggler_watch(req)
@@ -310,6 +322,9 @@ class Cluster:
             node = self._pick_node(req)
             node.submit(req)
         else:  # pull
+            if self._flight is not None:         # global queue: node = -1
+                self._flight.emit(self.loop.now, "enqueue", req=req.id,
+                                  fn=req.fn, attempt=req.attempts)
             self._global_queue.append(req)
             self._pull_round()
 
@@ -328,6 +343,9 @@ class Cluster:
             free = sum(n.free_slots for n in self._alive_nodes())
             if spec.admission.shed(self._res_qep, free):
                 self.shed += 1
+                if self._flight is not None:
+                    self._flight.emit(self.loop.now, "shed", req=req.id,
+                                      fn=req.fn, attempt=att)
                 self._res_fail_or_retry(req, "shed", att)
                 return False
         e = self._estimator.estimate(req.fn)
@@ -371,6 +389,12 @@ class Cluster:
         if queued_cancel:
             self._on_start(req)                  # snapshot leaves the queue
         self.timed_out += 1
+        if self._flight is not None:
+            self._flight.emit(
+                self.loop.now, "timeout", req=req.id, fn=req.fn,
+                node=(node.trace_node if node is not None else -1),
+                attempt=self._res_att[req.id],
+                info="running" if running_cancel else "queued")
         self._res_fail_or_retry(req, "timeout", self._res_att[req.id])
         if running_cancel and self.cfg.assignment == "pull":
             self._pull_round()                   # the freed slot pulls
@@ -381,6 +405,10 @@ class Cluster:
         rt = self.res.retry
         if rt is not None and rt.should_retry(cause, att):
             delay = rt.delay(self._res_seq.get(req.id, req.id), att)
+            if self._flight is not None:
+                self._flight.emit(self.loop.now, "retry", req=req.id,
+                                  fn=req.fn, attempt=att,
+                                  info=f"{cause} delay={delay:.4f}")
             self.retries_issued += 1
             req.attempts += 1
             req.r_prime = None
@@ -394,6 +422,9 @@ class Cluster:
         else:
             req.failed = "lost" if cause == "kill" else cause
             self._res_failed += 1
+            if self._flight is not None:
+                self._flight.emit(self.loop.now, "fail", req=req.id,
+                                  fn=req.fn, attempt=att, info=req.failed)
 
     # push-model load balancing ------------------------------------------------
     def _pick_node(self, req: Request) -> OursNodeSim:
@@ -454,6 +485,9 @@ class Cluster:
             return
         lost = node.kill()
         self.timeline.kill(idx, self.loop.now)
+        if self._flight is not None:
+            self._flight.emit(self.loop.now, "node_down", node=idx,
+                              info=f"lost={len(lost)}")
         self.failures += len(lost)
         if self.res is not None:
             # kill-lost calls flow through the resilience retry path: void
@@ -493,6 +527,10 @@ class Cluster:
     def _arm_straggler_watch(self, req: Request) -> None:
         deadline = self.hedging.deadline(self.loop.now,
                                          self._estimator.estimate(req.fn))
+        if self._flight is not None:
+            self._flight.emit(self.loop.now, "hedge_arm", req=req.id,
+                              fn=req.fn, attempt=req.attempts,
+                              info=f"deadline={deadline:.4f}")
         self._watched[req.id] = req
         self.loop.schedule(deadline, lambda: self._maybe_backup(req))
 
@@ -522,6 +560,11 @@ class Cluster:
             req.attempts += 1
             self.backups_issued += 1
             self._stolen_ids.add(req.id)
+            if self._flight is not None:
+                self._flight.emit(self.loop.now, "steal", req=req.id,
+                                  fn=req.fn, node=target.trace_node,
+                                  attempt=req.attempts,
+                                  info=f"from=node{node.trace_node}")
             target.submit(req)
         else:                                       # duplicate
             others = [n for n in self._alive_nodes() if n is not node]
@@ -535,6 +578,11 @@ class Cluster:
             req.attempts += 1
             self.backups_issued += 1
             self._dup_copies[req.id] = dup
+            if self._flight is not None:
+                self._flight.emit(self.loop.now, "duplicate", req=req.id,
+                                  fn=req.fn, node=target.trace_node,
+                                  attempt=dup.attempts,
+                                  info=f"from=node{node.trace_node}")
             target.submit(dup)
         self._arm_straggler_watch(req)              # keep watching
 
@@ -545,6 +593,10 @@ class Cluster:
         alive = self._alive_nodes()
         queued = len(self._global_queue) + sum(n.scheduler.queued for n in alive)
         slots = sum(n.scheduler.slots for n in alive)
+        if self._flight is not None:
+            self._flight.emit(self.loop.now, "autoscale_tick",
+                              info=f"queued={queued} slots={slots} "
+                                   f"provisioned={self._provisioned}")
         if (
             queued > self.cfg.scale_up_queue_per_slot * max(slots, 1)
             and self._provisioned < self.cfg.max_nodes
@@ -609,6 +661,19 @@ class Cluster:
         self.steals_won += sum(
             1 for rid in self._dup_copies
             if getattr(self.completed.get(rid), "is_backup", False))
+        trace = None
+        if self._flight is not None:
+            for rid in self._dup_copies:
+                w = self.completed.get(rid)
+                if getattr(w, "is_backup", False):
+                    self._flight.emit(w.finish, "dup_win", req=rid, fn=w.fn,
+                                      node=w.node, attempt=w.attempts)
+            trace = self._flight.to_trace(
+                nodes=len(self.nodes),
+                slots_per_node=self.cfg.cores_per_node,
+                meta={"policy": self.cfg.policy,
+                      "assignment": self.cfg.assignment,
+                      "backend": "reference"})
         return SimResult(
             requests=done,
             cold_starts=cold,
@@ -623,6 +688,7 @@ class Cluster:
             retries_issued=self.retries_issued,
             wasted_work=self.wasted_work,
             timeline=self.timeline,
+            trace=trace,
             meta={"policy": self.cfg.policy, "assignment": self.cfg.assignment},
         )
 
@@ -659,6 +725,7 @@ def simulate_cluster(
     degrade=(),
     hedging: HedgingSpec | None = None,
     resilience: ResilienceSpec | None = None,
+    trace: bool = False,
     **kwargs,
 ) -> SimResult:
     """Run one burst on an N-node cluster.
@@ -679,7 +746,15 @@ def simulate_cluster(
     capacity dynamics, heterogeneous fleets, both hedging modes and the
     cold-start regime (``warm=False``) natively, in any eligible
     combination; kwargs outside that set (legacy ``backup_requests`` sugar,
-    retry tuning) force the reference event loop."""
+    retry tuning) force the reference event loop.
+
+    ``trace=True`` attaches a flight-recorder lifecycle stream to
+    ``result.trace`` (see :mod:`~repro.core.flight`): the reference loop
+    emits the rich instrumented stream (enqueue/channel/steal/container
+    events, probes over live queue depth), the scan path attaches the
+    canonical reconstruction from its written-back request tensors -- the
+    two streams share one schema and are directly comparable with
+    :func:`~repro.core.flight.first_divergence`."""
     if backend not in ("reference", "scan", "auto"):
         raise ValueError(f"unknown cluster backend {backend!r}; "
                          "available: ('reference', 'scan', 'auto')")
@@ -716,12 +791,18 @@ def simulate_cluster(
             container_mb=container_mb, dynamics=dynamics,
             profile=profile, hedging=hedging, resilience=resilience))
         if eligible:
-            return simulate_cluster_scan(
+            res = simulate_cluster_scan(
                 requests, nodes, cores_per_node, policy,
                 assignment=assignment, lb=lb, warm=warm,
                 memory_mb=memory_mb, container_mb=container_mb,
                 dynamics=dynamics, profile=profile, hedging=hedging,
                 resilience=resilience)
+            if trace:
+                res.trace = trace_from_result(
+                    res, requests=requests, slots_per_node=cores_per_node,
+                    meta={"backend": "scan", "policy": policy,
+                          "assignment": assignment})
+            return res
         if backend == "scan":
             raise ValueError(
                 "scan cluster backend requires jax and the ours regime with "
@@ -738,7 +819,8 @@ def simulate_cluster(
         **kwargs,
     )
     warm_fns = sorted({r.fn for r in requests}) if warm else None
-    cluster = Cluster(cfg, warm_functions=warm_fns)
+    cluster = Cluster(cfg, warm_functions=warm_fns,
+                      trace=FlightRecorder() if trace else None)
     for idx, at in kills:
         cluster.fail_node(idx, at=at)
     return cluster.run(requests)

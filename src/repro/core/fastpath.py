@@ -440,12 +440,14 @@ class VectorizedBackend:
                  hedging: bool = False, hetero: bool = False,
                  timeouts: bool = False, retries: bool = False,
                  shedding: bool = False,
-                 streaming: bool = False) -> bool:
+                 streaming: bool = False, trace: bool = False) -> bool:
+        # trace: no rich event hooks -- the canonical lifecycle stream is
+        # reconstructed from written-back request state instead
         return (mode == "ours" and policy in POLICY_NAMES and nodes <= 1
                 and not autoscale and not failures
                 and not hedging and not hetero
                 and not timeouts and not retries and not shedding
-                and not streaming)
+                and not streaming and not trace)
 
     def simulate(
         self,
@@ -1982,7 +1984,11 @@ def scan_bucket_timings() -> list[dict]:
 
 
 def scan_timings_clear() -> None:
+    """Reset the timing log *and* the REPRO_SCAN_PROFILE one-shot latch, so
+    a later sweep in the same process can dump a fresh profiler trace."""
+    global _SCAN_PROFILE_DONE
     _SCAN_TIMINGS.clear()
+    _SCAN_PROFILE_DONE = False
 
 
 def _record_timing(rec: dict) -> None:
@@ -3202,10 +3208,14 @@ class ScanBackend:
                  hedging: bool = False, hetero: bool = False,
                  timeouts: bool = False, retries: bool = False,
                  shedding: bool = False,
-                 streaming: bool = False) -> bool:
+                 streaming: bool = False, trace: bool = False) -> bool:
         # streaming (the chunked carry-handoff path, core/streamscan.py)
         # covers the same flag matrix as the single-shot kernel, so the
         # flag never changes the answer here
+        if trace:
+            # no rich event hooks inside the kernel; the canonical
+            # lifecycle stream comes from flight.trace_from_result
+            return False
         if mode != "ours" or policy not in POLICY_NAMES:
             return False
         if assignment not in ("pull", "push"):

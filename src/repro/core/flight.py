@@ -1,0 +1,685 @@
+"""Flight recorder: unified lifecycle traces, probes, and triage.
+
+The paper's argument is entirely about per-request lifecycle (queue wait,
+management-channel cost, non-preemptive execution) and time-varying load,
+yet aggregates alone cannot say *which event* diverged or *when* a queue
+built up.  This module provides:
+
+- ``TraceEvent`` / ``SimTrace``: a canonical lifecycle event schema shared
+  by every engine.  The reference ``Cluster``/``OursNodeSim`` emit rich
+  events through a zero-cost-when-disabled ``FlightRecorder`` hook; the
+  scan/streamscan paths reconstruct the *canonical* subset (arrival,
+  dispatch, complete, fail) from their per-request output tensors via
+  :func:`trace_from_result`, so the trace itself is a parity surface next
+  to ``CROSS_CHECK_EXACT``.
+- windowed time-series probes (:meth:`SimTrace.probes`): queue depth, busy
+  slots / utilization, channel backlog, active nodes, arrivals /
+  completions / retries per window.
+- :func:`first_divergence`: align two canonical streams and name the first
+  divergent event (time, kind, request, node, field) — attached to
+  ``BackendMismatchError`` by the sweep cross-checker.
+- exporters: Chrome-trace/Perfetto JSON (:meth:`SimTrace.to_chrome`, one
+  lane per node slot), array bundles for ``plots.plot_timeline``
+  (:meth:`SimTrace.to_arrays`), and a per-run ``manifest.json``
+  (:func:`run_manifest` / :func:`write_manifest`).
+- :meth:`SimTrace.explain`: a human-readable single-request lifecycle.
+
+Event vocabulary (``kind``):
+
+======================  =====================================================
+kind                    meaning
+======================  =====================================================
+``arrival``             invoker receives the call (``r + REQ_OVERHEAD_S``)
+``enqueue``             call enters a queue (global pull queue: ``node=-1``)
+``channel_enter``       slot granted; management channel work begins
+``dispatch``            execution starts on a node slot (``req.start``)
+``complete``            execution finishes (``req.finish``)
+``fail``                terminal failure (``info`` = cause)
+``kill``                in-flight/queued call lost to a node failure
+``timeout``             resilience deadline fired (``info``: queued/running)
+``shed``                admission control rejected the call
+``retry``               failed attempt re-armed (``info`` = cause + delay)
+``hedge_arm``           straggler watch armed for a call
+``steal``               hedged call cancelled+restolen to another node
+``duplicate``           racing backup copy issued to another node
+``dup_win``             the backup copy beat the original
+``container_cold``      cold container created for this dispatch
+``container_prewarm``   warm-pool container consumed for this dispatch
+``container_evict``     idle container evicted to free memory
+``node_up``             node activated (startup or autoscale-out)
+``node_down``           node killed / scaled in
+``autoscale_tick``      autoscaler evaluated its rule (``info`` = inputs)
+======================  =====================================================
+
+Canonical kinds — reconstructible from final per-request state on *every*
+backend — are ``arrival``/``dispatch``/``complete``/``fail``.  All other
+kinds are only observable from the instrumented reference event loop.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import subprocess
+import sys
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Iterable, Sequence
+
+__all__ = [
+    "CANONICAL_KINDS",
+    "TraceEvent",
+    "FlightRecorder",
+    "SimTrace",
+    "DivergenceReport",
+    "trace_from_result",
+    "trace_from_requests",
+    "first_divergence",
+    "run_manifest",
+    "write_manifest",
+]
+
+# canonical = derivable from written-back request state on any backend
+CANONICAL_KINDS = ("arrival", "dispatch", "complete", "fail")
+
+# deterministic tie-break order for same-time events (lifecycle order)
+_KIND_RANK = {
+    "node_up": 0, "arrival": 1, "enqueue": 2, "shed": 3, "hedge_arm": 4,
+    "channel_enter": 5, "container_evict": 6, "container_cold": 7,
+    "container_prewarm": 8, "dispatch": 9, "steal": 10, "duplicate": 11,
+    "timeout": 12, "retry": 13, "complete": 14, "dup_win": 15, "kill": 16,
+    "fail": 17, "node_down": 18, "autoscale_tick": 19,
+}
+
+
+def _node_index(name: Any) -> int:
+    """Map a node name ("node3") or index to an int lane; -1 = none/global."""
+    if name is None:
+        return -1
+    if isinstance(name, (int,)):
+        return int(name)
+    s = str(name)
+    if s.startswith("node"):
+        try:
+            return int(s[4:])
+        except ValueError:
+            return -1
+    return -1
+
+
+@dataclass(frozen=True)
+class TraceEvent:
+    """One lifecycle event.  ``t`` may be NaN when the engine cannot
+    recover the wall-clock (e.g. terminal failures reconstructed from scan
+    output tensors); comparisons skip NaN times."""
+
+    t: float
+    kind: str
+    req: int = -1
+    node: int = -1
+    fn: str = ""
+    attempt: int = 0
+    info: str = ""
+
+    def as_dict(self) -> dict[str, Any]:
+        return {"t": self.t, "kind": self.kind, "req": self.req,
+                "node": self.node, "fn": self.fn, "attempt": self.attempt,
+                "info": self.info}
+
+    def render(self) -> str:
+        t = "      ?" if math.isnan(self.t) else f"{self.t:10.4f}"
+        node = f" node{self.node}" if self.node >= 0 else ""
+        att = f" attempt={self.attempt}" if self.attempt else ""
+        info = f"  [{self.info}]" if self.info else ""
+        return f"{t}s  {self.kind:<16}{node}{att}{info}"
+
+
+class FlightRecorder:
+    """Mutable event sink the reference engines emit into.
+
+    Engines hold ``trace: FlightRecorder | None`` and guard every emission
+    site with ``if trace is not None`` — the disabled path costs one
+    attribute load + None check per site, nothing else.
+    """
+
+    __slots__ = ("events",)
+
+    def __init__(self) -> None:
+        self.events: list[TraceEvent] = []
+
+    def emit(self, t: float, kind: str, *, req: int = -1, node: int = -1,
+             fn: str = "", attempt: int = 0, info: str = "") -> None:
+        self.events.append(TraceEvent(float(t), kind, int(req),
+                                      _node_index(node), fn, int(attempt),
+                                      info))
+
+    def to_trace(self, *, nodes: int = 1, slots_per_node: int = 1,
+                 meta: dict[str, Any] | None = None) -> "SimTrace":
+        return SimTrace(events=sorted(
+            self.events, key=lambda e: (e.t, _KIND_RANK.get(e.kind, 99),
+                                        e.req, e.node)),
+            nodes=nodes, slots_per_node=slots_per_node, meta=meta or {})
+
+
+@dataclass
+class SimTrace:
+    """An immutable, time-sorted lifecycle event stream plus topology."""
+
+    events: list[TraceEvent]
+    nodes: int = 1
+    slots_per_node: int = 1
+    meta: dict[str, Any] = field(default_factory=dict)
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    # ------------------------------------------------------------------
+    # views
+    # ------------------------------------------------------------------
+    def by_kind(self, *kinds: str) -> list[TraceEvent]:
+        want = set(kinds)
+        return [e for e in self.events if e.kind in want]
+
+    def for_request(self, req: int) -> list[TraceEvent]:
+        return [e for e in self.events if e.req == req]
+
+    def relabel(self, mapping: dict[int, int]) -> "SimTrace":
+        """Return a copy with request ids mapped through ``mapping``
+        (ids absent from the map pass through).  Request ids are allocated
+        globally, so two separately-generated twin workloads carry distinct
+        ids for the same call; relabel one side before comparing streams."""
+        evs = [TraceEvent(e.t, e.kind, mapping.get(e.req, e.req), e.node,
+                          e.fn, e.attempt, e.info) for e in self.events]
+        return SimTrace(events=evs, nodes=self.nodes,
+                        slots_per_node=self.slots_per_node,
+                        meta=dict(self.meta))
+
+    def counts(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for e in self.events:
+            out[e.kind] = out.get(e.kind, 0) + 1
+        return out
+
+    def canonical(self) -> "SimTrace":
+        """Project the rich stream down to the canonical per-request
+        lifecycle: every arrival, plus the *winning* dispatch/complete pair
+        per request (hedged duplicates and killed/retried attempts emit
+        extra dispatch events; the winner is the one that produced the
+        surviving completion), plus terminal fails.
+
+        A canonical projection of a reference trace is directly comparable
+        with :func:`trace_from_result` output from any backend.
+        """
+        per_req: dict[int, dict[str, list[TraceEvent]]] = {}
+        for e in self.events:
+            if e.kind in ("arrival", "dispatch", "complete", "fail"):
+                per_req.setdefault(e.req, {}).setdefault(e.kind, []).append(e)
+        out: list[TraceEvent] = []
+        for req, kinds in per_req.items():
+            arrs = kinds.get("arrival", [])
+            if arrs:
+                # retry/backoff re-arrivals re-emit "arrival" in the rich
+                # stream; canonically a request arrives once, at the start
+                out.append(min(arrs, key=lambda e: e.t))
+            comps = kinds.get("complete", [])
+            if comps:
+                win = min(comps, key=lambda e: e.t)
+                out.append(win)
+                # winning dispatch: latest dispatch on the winner's node at
+                # or before the winning completion (attempts are sequential
+                # per node, so this is the run that completed)
+                cands = [d for d in kinds.get("dispatch", [])
+                         if d.node == win.node and d.t <= win.t + 1e-12]
+                if cands:
+                    out.append(max(cands, key=lambda e: e.t))
+            else:
+                out.extend(kinds.get("fail", []))
+        out.sort(key=lambda e: (math.inf if math.isnan(e.t) else e.t,
+                                _KIND_RANK.get(e.kind, 99), e.req))
+        return SimTrace(events=out, nodes=self.nodes,
+                        slots_per_node=self.slots_per_node,
+                        meta=dict(self.meta, canonical=True))
+
+    # ------------------------------------------------------------------
+    # probes
+    # ------------------------------------------------------------------
+    def span(self) -> tuple[float, float]:
+        ts = [e.t for e in self.events if not math.isnan(e.t)]
+        if not ts:
+            return (0.0, 0.0)
+        return (min(ts), max(ts))
+
+    def probes(self, window_s: float | None = None, *,
+               bins: int = 64) -> dict[str, Any]:
+        """Windowed time-series probes.
+
+        Returns a dict of equal-length lists: ``t`` (window right edges),
+        rate-like series counted per window (``arrivals``, ``completions``,
+        ``retries``, ``timeouts``, ``sheds``, ``steals``), and level-like
+        series sampled at each edge (``queue_depth``, ``busy``,
+        ``utilization``, ``active_nodes``, ``channel_backlog``).
+
+        Level series are derived from lifecycle intervals, so they work on
+        canonical traces from any backend: queued = [arrival, dispatch),
+        busy = [dispatch, complete).  ``channel_backlog`` needs the rich
+        reference stream (``channel_enter`` events) and is all-zero
+        otherwise.  ``active_nodes`` uses node_up/node_down when present,
+        else the static node count.
+        """
+        lo, hi = self.span()
+        if hi <= lo:
+            hi = lo + 1.0
+        if window_s is None:
+            window_s = (hi - lo) / max(1, bins)
+        n_win = max(1, int(math.ceil((hi - lo) / window_s - 1e-9)))
+        edges = [lo + window_s * (i + 1) for i in range(n_win)]
+
+        def win_of(t: float) -> int:
+            return min(n_win - 1, max(0, int((t - lo) / window_s)))
+
+        zeros = lambda: [0] * n_win
+        rates = {k: zeros() for k in ("arrivals", "completions", "retries",
+                                      "timeouts", "sheds", "steals")}
+        rate_kind = {"arrival": "arrivals", "complete": "completions",
+                     "retry": "retries", "timeout": "timeouts",
+                     "shed": "sheds", "steal": "steals"}
+
+        # level series via +/-1 deltas, then prefix-sum sampled at edges
+        dq, db, dc, dn = zeros(), zeros(), zeros(), zeros()
+        per_req: dict[int, dict[str, TraceEvent]] = {}
+        have_node_events = False
+        for e in self.events:
+            if math.isnan(e.t):
+                continue
+            key = rate_kind.get(e.kind)
+            if key is not None:
+                rates[key][win_of(e.t)] += 1
+            if e.kind in ("arrival", "dispatch", "complete", "channel_enter"):
+                per_req.setdefault(e.req, {}).setdefault(e.kind, e)
+            elif e.kind == "node_up":
+                have_node_events = True
+                dn[win_of(e.t)] += 1
+            elif e.kind == "node_down":
+                have_node_events = True
+                dn[win_of(e.t)] -= 1
+        for evs in per_req.values():
+            arr, disp = evs.get("arrival"), evs.get("dispatch")
+            comp, chan = evs.get("complete"), evs.get("channel_enter")
+            if arr is not None and disp is not None:
+                dq[win_of(arr.t)] += 1
+                dq[win_of(disp.t)] -= 1
+            if disp is not None and comp is not None:
+                db[win_of(disp.t)] += 1
+                db[win_of(comp.t)] -= 1
+            if chan is not None and disp is not None:
+                dc[win_of(chan.t)] += 1
+                dc[win_of(disp.t)] -= 1
+
+        def cumsum(deltas: list[int], base: int = 0) -> list[int]:
+            out, acc = [], base
+            for d in deltas:
+                acc += d
+                out.append(acc)
+            return out
+
+        queue = cumsum(dq)
+        busy = cumsum(db)
+        backlog = cumsum(dc)
+        active = (cumsum(dn) if have_node_events
+                  else [self.nodes] * n_win)
+        total_slots = [max(1, a) * self.slots_per_node for a in active]
+        util = [b / s for b, s in zip(busy, total_slots)]
+        return {"t": edges, "window_s": window_s,
+                "queue_depth": queue, "busy": busy, "utilization": util,
+                "channel_backlog": backlog, "active_nodes": active,
+                **rates}
+
+    # ------------------------------------------------------------------
+    # exporters
+    # ------------------------------------------------------------------
+    def to_arrays(self) -> dict[str, list[Any]]:
+        """Column-oriented view (DataFrame-ish) for plotting/analysis."""
+        cols: dict[str, list[Any]] = {k: [] for k in
+                                      ("t", "kind", "req", "node", "fn",
+                                       "attempt", "info")}
+        for e in self.events:
+            cols["t"].append(e.t)
+            cols["kind"].append(e.kind)
+            cols["req"].append(e.req)
+            cols["node"].append(e.node)
+            cols["fn"].append(e.fn)
+            cols["attempt"].append(e.attempt)
+            cols["info"].append(e.info)
+        return cols
+
+    def to_chrome(self, path: str | os.PathLike | None = None) -> dict:
+        """Chrome-trace/Perfetto JSON: one process per node, one lane
+        (thread) per node slot, execution runs as complete ("X") events,
+        everything else as instants.  Load the file at ``chrome://tracing``
+        or https://ui.perfetto.dev."""
+        trace_events: list[dict[str, Any]] = []
+        # execution intervals from the canonical winning runs
+        canon = self.canonical()
+        runs: dict[int, dict[str, TraceEvent]] = {}
+        for e in canon.events:
+            if e.kind in ("dispatch", "complete"):
+                runs.setdefault(e.req, {})[e.kind] = e
+        intervals = sorted(
+            ((d["dispatch"].t, d["complete"].t, d["dispatch"]) for d in
+             runs.values() if "dispatch" in d and "complete" in d
+             and not math.isnan(d["dispatch"].t)),
+            key=lambda iv: iv[0])
+        # greedy slot-lane assignment per node (interval partitioning)
+        lanes: dict[int, list[float]] = {}
+        for start, end, disp in intervals:
+            free = lanes.setdefault(disp.node, [])
+            lane = next((i for i, t_free in enumerate(free)
+                         if t_free <= start + 1e-12), None)
+            if lane is None:
+                lane = len(free)
+                free.append(end)
+            else:
+                free[lane] = end
+            trace_events.append({
+                "name": disp.fn or f"req{disp.req}", "cat": "exec",
+                "ph": "X", "ts": start * 1e6, "dur": (end - start) * 1e6,
+                "pid": disp.node + 1, "tid": lane + 1,
+                "args": {"req": disp.req, "attempt": disp.attempt},
+            })
+        for e in self.events:
+            if e.kind in ("dispatch", "complete") or math.isnan(e.t):
+                continue
+            trace_events.append({
+                "name": e.kind, "cat": "lifecycle", "ph": "i", "s": "t",
+                "ts": e.t * 1e6, "pid": (e.node + 1 if e.node >= 0 else 0),
+                "tid": 0,
+                "args": {"req": e.req, "fn": e.fn, "attempt": e.attempt,
+                         "info": e.info},
+            })
+        for pid in sorted({ev["pid"] for ev in trace_events}):
+            trace_events.append({
+                "name": "process_name", "ph": "M", "pid": pid, "tid": 0,
+                "args": {"name": ("controller" if pid == 0
+                                  else f"node{pid - 1}")}})
+        doc = {"traceEvents": trace_events, "displayTimeUnit": "ms",
+               "otherData": dict(self.meta)}
+        if path is not None:
+            Path(path).write_text(json.dumps(doc))
+        return doc
+
+    # ------------------------------------------------------------------
+    # human-readable lifecycle
+    # ------------------------------------------------------------------
+    def explain(self, req: int) -> str:
+        """Render one request's lifecycle, e.g. ``queued 3.2s behind 7
+        calls, stolen to node 2, completed attempt 2``."""
+        evs = self.for_request(req)
+        if not evs:
+            return f"request {req}: no events recorded"
+        lines = [f"request {req}" + (f" fn={evs[0].fn}" if evs[0].fn else "")]
+        lines += ["  " + e.render() for e in evs]
+        arr = next((e for e in evs if e.kind == "arrival"), None)
+        comp = next((e for e in evs if e.kind == "complete"), None)
+        disp = [e for e in evs if e.kind == "dispatch"]
+        summary: list[str] = []
+        if arr is not None and disp:
+            d0 = min(disp, key=lambda e: e.t)
+            wait = d0.t - arr.t
+            behind = sum(1 for e in self.events
+                         if e.kind == "dispatch" and e.req != req
+                         and e.node == d0.node and arr.t < e.t <= d0.t)
+            summary.append(f"queued {wait:.3f}s behind {behind} call"
+                           + ("s" if behind != 1 else ""))
+        for e in evs:
+            if e.kind == "steal":
+                summary.append(f"stolen to node {e.node}")
+            elif e.kind == "duplicate":
+                summary.append(f"duplicated to node {e.node}")
+            elif e.kind == "retry":
+                summary.append(f"retried ({e.info})" if e.info else "retried")
+        if comp is not None:
+            att = f" attempt {comp.attempt}" if comp.attempt > 1 else ""
+            summary.append(f"completed{att} on node {comp.node} "
+                           f"at {comp.t:.3f}s")
+        else:
+            fail = next((e for e in evs if e.kind == "fail"), None)
+            if fail is not None:
+                summary.append(f"failed ({fail.info or 'unknown'})")
+        if summary:
+            lines.append("  => " + ", ".join(summary))
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# canonical reconstruction from written-back request state (any backend)
+# ---------------------------------------------------------------------------
+def trace_from_requests(requests: Iterable[Any], *, nodes: int = 1,
+                        slots_per_node: int = 1,
+                        meta: dict[str, Any] | None = None) -> SimTrace:
+    """Build the canonical lifecycle stream from final ``Request`` state.
+
+    Every backend — reference event loop, vectorized replay, scan kernel,
+    streaming scan — writes the same per-request fields (start/finish
+    clocks, node, attempts, cold_start, failed cause), so this function is
+    the engine-independent half of the trace parity surface.
+    """
+    from .simulator import REQ_OVERHEAD_S
+
+    events: list[TraceEvent] = []
+    for q in requests:
+        rid = int(getattr(q, "id", -1))
+        node = _node_index(getattr(q, "node", None))
+        att = int(getattr(q, "attempts", 0) or 0)
+        events.append(TraceEvent(q.r + REQ_OVERHEAD_S, "arrival", rid,
+                                 -1, q.fn, 0))
+        failed = getattr(q, "failed", None)
+        if failed:
+            # terminal-failure wall clock is not recoverable from scan
+            # output tensors; NaN time => compared by kind/cause only
+            events.append(TraceEvent(float("nan"), "fail", rid, node,
+                                     q.fn, att, str(failed)))
+        elif q.start is not None and q.finish is not None:
+            info = "cold" if getattr(q, "cold_start", False) else ""
+            events.append(TraceEvent(float(q.start), "dispatch", rid, node,
+                                     q.fn, att, info))
+            events.append(TraceEvent(float(q.finish), "complete", rid, node,
+                                     q.fn, att))
+    events.sort(key=lambda e: (math.inf if math.isnan(e.t) else e.t,
+                               _KIND_RANK.get(e.kind, 99), e.req))
+    return SimTrace(events=events, nodes=nodes,
+                    slots_per_node=slots_per_node,
+                    meta=dict(meta or {}, canonical=True))
+
+
+def trace_from_result(result: Any, *, requests: Sequence[Any] | None = None,
+                      slots_per_node: int = 1,
+                      meta: dict[str, Any] | None = None) -> SimTrace:
+    """Canonical trace from a ``SimResult`` (any backend)."""
+    reqs = result.requests if requests is None else requests
+    nodes = max(1, int(getattr(result, "nodes_used", 1) or 1))
+    m = {"cold_starts": result.cold_starts,
+         "failures": getattr(result, "failures", 0)}
+    if meta:
+        m.update(meta)
+    return trace_from_requests(reqs, nodes=nodes,
+                               slots_per_node=slots_per_node, meta=m)
+
+
+# ---------------------------------------------------------------------------
+# first-divergence triage
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class DivergenceReport:
+    """Names the first divergent event between two canonical streams."""
+
+    t: float
+    kind: str
+    req: int
+    fld: str
+    ref_value: Any
+    got_value: Any
+    occurrence: int = 0
+
+    def __str__(self) -> str:
+        t = "t=?" if math.isnan(self.t) else f"t={self.t:.6f}s"
+        return (f"first divergence at {t} kind={self.kind} req={self.req} "
+                f"field={self.fld}: reference={self.ref_value!r} vs "
+                f"other={self.got_value!r}"
+                + (f" (occurrence {self.occurrence})"
+                   if self.occurrence else ""))
+
+
+def _rel_err(a: float, b: float) -> float:
+    return abs(a - b) / max(abs(a), abs(b), 1e-9)
+
+
+def first_divergence(ref: SimTrace, got: SimTrace, *,
+                     rtol: float = 3e-2, atol: float = 1e-6,
+                     compare_attempts: bool = True,
+                     ) -> DivergenceReport | None:
+    """Align two canonical streams and return the earliest divergence.
+
+    Events are matched by ``(req, kind, occurrence index)`` rather than by
+    global time-sorted position: backend clocks legitimately differ within
+    ``rtol`` (float32 rounding on the scan path), so positional alignment
+    on a time sort would manufacture false divergences at every near-tie.
+    Compared fields: event multiplicity per (req, kind), ``t`` (relative
+    tolerance, NaNs skip), ``node``, ``attempt`` (dispatch/complete), and
+    ``info`` on fail events (the failure cause).  Fail events compare the
+    cause but not the node: a terminally-failed call's last-touched node
+    is engine bookkeeping, not client-visible outcome, and the backends
+    legitimately record it differently (the reference keeps ``None`` for
+    calls shed before routing).  Pass ``compare_attempts=False`` for
+    failure-injection cells without hedging/resilience: the scan kernel
+    re-routes kill-lost calls but does not write back a per-request
+    resubmission count there (a documented gap).  Returns ``None`` when
+    the streams agree.
+    """
+    rc, gc = ref.canonical(), got.canonical()
+
+    def index(tr: SimTrace) -> dict[tuple[int, str], list[TraceEvent]]:
+        out: dict[tuple[int, str], list[TraceEvent]] = {}
+        for e in tr.events:
+            out.setdefault((e.req, e.kind), []).append(e)
+        return out
+
+    ri, gi = index(rc), index(gc)
+    worst: DivergenceReport | None = None
+
+    def earlier(a: DivergenceReport, b: DivergenceReport | None) -> bool:
+        if b is None:
+            return True
+        ta = math.inf if math.isnan(a.t) else a.t
+        tb = math.inf if math.isnan(b.t) else b.t
+        return ta < tb
+
+    for key in sorted(set(ri) | set(gi),
+                      key=lambda k: (min((e.t for e in ri.get(k, gi.get(k, []))
+                                          if not math.isnan(e.t)),
+                                         default=math.inf), k)):
+        req, kind = key
+        revs, gevs = ri.get(key, []), gi.get(key, [])
+        if len(revs) != len(gevs):
+            anchor = (revs or gevs)[0]
+            rep = DivergenceReport(anchor.t, kind, req, "count",
+                                   len(revs), len(gevs))
+            if earlier(rep, worst):
+                worst = rep
+            continue
+        for occ, (re_, ge) in enumerate(zip(revs, gevs)):
+            rep: DivergenceReport | None = None
+            if (not math.isnan(re_.t) and not math.isnan(ge.t)
+                    and _rel_err(re_.t, ge.t) > rtol
+                    and abs(re_.t - ge.t) > atol):
+                rep = DivergenceReport(re_.t, kind, req, "t", re_.t, ge.t,
+                                       occ)
+            elif kind != "fail" and re_.node != ge.node:
+                rep = DivergenceReport(re_.t, kind, req, "node", re_.node,
+                                       ge.node, occ)
+            elif (compare_attempts and kind in ("dispatch", "complete")
+                    and re_.attempt != ge.attempt):
+                rep = DivergenceReport(re_.t, kind, req, "attempt",
+                                       re_.attempt, ge.attempt, occ)
+            elif kind == "fail" and re_.info != ge.info:
+                rep = DivergenceReport(re_.t, kind, req, "cause", re_.info,
+                                       ge.info, occ)
+            if rep is not None and earlier(rep, worst):
+                worst = rep
+    return worst
+
+
+# ---------------------------------------------------------------------------
+# run manifest
+# ---------------------------------------------------------------------------
+_ENV_PREFIXES = ("REPRO_", "JAX_", "XLA_")
+
+
+def run_manifest(extra: dict[str, Any] | None = None) -> dict[str, Any]:
+    """Provenance snapshot for a sweep/bench run: git sha, platform,
+    scan compile-cache + per-bucket timing stats, and REPRO_*/JAX_*/XLA_*
+    env flags.  Every lookup is best-effort — a manifest must never fail
+    the run it documents."""
+    man: dict[str, Any] = {
+        "generated_unix": time.time(),
+        "python": sys.version.split()[0],
+        "platform": sys.platform,
+    }
+    try:
+        repo = Path(__file__).resolve().parents[3]
+        sha = subprocess.run(["git", "rev-parse", "HEAD"], cwd=repo,
+                             capture_output=True, text=True, timeout=5)
+        if sha.returncode == 0:
+            man["git_sha"] = sha.stdout.strip()
+    except Exception:
+        pass
+    try:
+        import jax
+        man["jax"] = {"version": jax.__version__,
+                      "backend": jax.default_backend(),
+                      "device_count": jax.device_count()}
+    except Exception:
+        man["jax"] = None
+    try:
+        from .fastpath import scan_bucket_timings, scan_cache_stats
+        man["scan_cache"] = scan_cache_stats()
+        timings = scan_bucket_timings()
+        man["scan_buckets"] = {
+            "records": len(timings),
+            "cells": sum(int(t.get("cells", 0)) for t in timings),
+            **{f"total_{k}": round(sum(t.get(k, 0.0) for t in timings), 6)
+               for k in ("build_s", "compile_s", "dispatch_s", "sync_s",
+                         "tune_s")},
+        }
+    except Exception:
+        pass
+    man["env"] = {k: v for k, v in sorted(os.environ.items())
+                  if k.startswith(_ENV_PREFIXES)}
+    if extra:
+        man.update(extra)
+    return man
+
+
+def write_manifest(path: str | os.PathLike, *, sweep: Any = None,
+                   extra: dict[str, Any] | None = None) -> dict[str, Any]:
+    """Write ``manifest.json`` next to sweep artifacts.  ``sweep`` may be
+    a ``SweepResult``; its degraded/failed/error counts are included."""
+    info: dict[str, Any] = dict(extra or {})
+    if sweep is not None:
+        results = list(getattr(sweep, "results", []) or [])
+        meta = dict(getattr(sweep, "meta", {}) or {})
+        info["sweep"] = {
+            "cells": len(results),
+            "degraded": sum(1 for cr in results
+                            if cr.metrics.get("degraded")),
+            "errors": sum(1 for cr in results if cr.metrics.get("error")),
+            "wall_s": getattr(sweep, "wall_s", 0.0),
+        }
+        for k in ("backend", "validate"):
+            if k in meta:
+                info["sweep"][k] = meta[k]
+    man = run_manifest(info)
+    p = Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(man, indent=2, sort_keys=True, default=str))
+    return man

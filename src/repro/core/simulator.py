@@ -42,6 +42,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Protocol, runtime_checkable
 
 from .containers import ContainerPool
+from .flight import FlightRecorder, SimTrace, _node_index, trace_from_result
 from .request import Request
 from .scheduler import NodeScheduler, StartDecision
 from .workload import PROFILES, SEBS_MEMORY_MB
@@ -151,11 +152,17 @@ class OursNodeSim:
         on_complete: Callable[[Request], None] | None = None,
         on_start: Callable[[Request], None] | None = None,
         fn_memory: dict | None = None,
+        trace: "FlightRecorder | None" = None,
+        trace_node: int = -1,
     ) -> None:
         if fn_memory is None:
             fn_memory = SEBS_MEMORY_MB
         self.loop = loop
         self.name = name
+        # flight-recorder hook: every emission site is guarded by a single
+        # ``is not None`` check so the disabled path stays zero-cost
+        self.trace = trace
+        self.trace_node = trace_node if trace_node >= 0 else _node_index(name)
         self.speed = speed
         # time-varying effective speed (heterogeneity episodes): sampled at
         # dispatch time, overriding the static ``speed`` when provided
@@ -187,8 +194,17 @@ class OursNodeSim:
         if not self.alive:
             return
         req.node = self.name
+        tr = self.trace
+        if tr is not None:
+            tr.emit(self.loop.now, "enqueue", req=req.id,
+                    node=self.trace_node, fn=req.fn, attempt=req.attempts)
+            ev0 = self.scheduler.pool.evictions
         for dec in self.scheduler.receive(req, self.loop.now):
             self._launch(dec)
+        if tr is not None:
+            for _ in range(self.scheduler.pool.evictions - ev0):
+                tr.emit(self.loop.now, "container_evict",
+                        node=self.trace_node)
 
     def _launch(self, dec: StartDecision) -> None:
         req = dec.request
@@ -214,6 +230,18 @@ class OursNodeSim:
         req.start = exec_start
         service = req.p_true / speed
         finish = exec_start + service
+        tr = self.trace
+        if tr is not None:
+            tr.emit(self.loop.now, "channel_enter", req=req.id,
+                    node=self.trace_node, fn=req.fn, attempt=req.attempts)
+            if dec.acquire.cold_start:
+                tr.emit(self.loop.now,
+                        ("container_cold" if dec.acquire.startup_delay > 1.0
+                         else "container_prewarm"),
+                        req=req.id, node=self.trace_node, fn=req.fn)
+            tr.emit(exec_start, "dispatch", req=req.id, node=self.trace_node,
+                    fn=req.fn, attempt=req.attempts,
+                    info="cold" if dec.acquire.cold_start else "")
         if self.on_start is not None:
             self.on_start(req)
         self.loop.schedule(finish, lambda d=dec, s=service: self._finish(d, s))
@@ -226,8 +254,17 @@ class OursNodeSim:
         req.finish = self.loop.now
         req.c = self.loop.now + RESP_OVERHEAD_S
         self.completed.append(req)
+        tr = self.trace
+        if tr is not None:
+            tr.emit(self.loop.now, "complete", req=req.id,
+                    node=self.trace_node, fn=req.fn, attempt=req.attempts)
+            ev0 = self.scheduler.pool.evictions
         # the invoker logs the *measured* processing time
         follow = self.scheduler.complete(req, service, dec.acquire, self.loop.now)
+        if tr is not None:
+            for _ in range(self.scheduler.pool.evictions - ev0):
+                tr.emit(self.loop.now, "container_evict",
+                        node=self.trace_node)
         if self.on_complete is not None:
             self.on_complete(req)
         for d in follow:
@@ -257,6 +294,11 @@ class OursNodeSim:
         self.in_flight.clear()
         while self.scheduler.queue:
             lost.append(self.scheduler.queue.pop())
+        if self.trace is not None:
+            for q in lost:
+                self.trace.emit(self.loop.now, "kill", req=q.id,
+                                node=self.trace_node, fn=q.fn,
+                                attempt=q.attempts)
         return lost
 
     @property
@@ -476,6 +518,9 @@ class SimResult:
     # realized per-node capacity intervals (cluster runs only); typed loosely
     # to keep this module import-independent of .cluster
     timeline: object | None = None
+    # flight-recorder lifecycle stream (populated only when tracing was
+    # requested): rich on the reference event loop, canonical elsewhere
+    trace: SimTrace | None = None
     meta: dict = field(default_factory=dict)
 
 
@@ -513,8 +558,14 @@ class SimBackend(Protocol):
                  hedging: bool = False, hetero: bool = False,
                  timeouts: bool = False, retries: bool = False,
                  shedding: bool = False,
-                 streaming: bool = False) -> bool:
-        """Can this backend run the scenario exactly?"""
+                 streaming: bool = False, trace: bool = False) -> bool:
+        """Can this backend run the scenario exactly?
+
+        ``trace=True`` asks for the **rich** instrumented lifecycle stream
+        (enqueue/channel/steal/container/... events).  Every backend can
+        produce the *canonical* stream (arrival/dispatch/complete/fail via
+        ``flight.trace_from_result``) for any scenario it runs, so the
+        canonical trace needs no capability bit."""
         ...
 
     def simulate(
@@ -546,9 +597,11 @@ class ReferenceBackend:
                  hedging: bool = False, hetero: bool = False,
                  timeouts: bool = False, retries: bool = False,
                  shedding: bool = False,
-                 streaming: bool = False) -> bool:
+                 streaming: bool = False, trace: bool = False) -> bool:
         if streaming:
             return False       # the event loop materializes the full stream
+        if trace and mode == "baseline":
+            return False       # processor-sharing node is not instrumented
         resil = timeouts or retries or shedding
         if mode == "baseline" and resil:
             return False
@@ -566,14 +619,17 @@ class ReferenceBackend:
         container_mb: int = 128,
         warm: bool = True,
         kappa: float = PS_KAPPA,
+        trace: bool = False,
     ) -> SimResult:
         loop = EventLoop()
         warm_fns = sorted({r.fn for r in requests}) if warm else None
+        rec = FlightRecorder() if (trace and mode == "ours") else None
         node: OursNodeSim | BaselineNodeSim
         if mode == "ours":
             node = OursNodeSim(loop, cores, policy=policy, memory_mb=memory_mb,
                                container_mb=container_mb,
-                               warm_functions=warm_fns)
+                               warm_functions=warm_fns,
+                               trace=rec, trace_node=0)
             pool = node.scheduler.pool
         elif mode == "baseline":
             node = BaselineNodeSim(loop, cores, memory_mb=memory_mb,
@@ -584,6 +640,11 @@ class ReferenceBackend:
             raise ValueError(f"unknown mode {mode!r}")
 
         base_cold = pool.cold_starts  # warm-up colds are not measured (§V-A)
+        if rec is not None:
+            rec.emit(0.0, "node_up", node=0)
+            for req in requests:
+                rec.emit(req.r + REQ_OVERHEAD_S, "arrival", req=req.id,
+                         fn=req.fn)
         for req in requests:
             loop.schedule(req.r + REQ_OVERHEAD_S, lambda r=req: node.submit(r))
         loop.run()
@@ -595,6 +656,9 @@ class ReferenceBackend:
             cold_starts=pool.cold_starts - base_cold,
             evictions=pool.evictions,
             creations=pool.creations,
+            trace=(rec.to_trace(nodes=1, slots_per_node=cores,
+                                meta={"mode": mode, "policy": policy})
+                   if rec is not None else None),
             meta={"mode": mode, "policy": policy, "cores": cores,
                   "backend": self.name},
         )
@@ -643,6 +707,7 @@ def simulate_single_node(
     warm: bool = True,
     kappa: float = PS_KAPPA,
     backend: str = "reference",
+    trace: bool = False,
 ) -> SimResult:
     """Run one burst on one node; returns completed requests + counters.
 
@@ -650,13 +715,26 @@ def simulate_single_node(
     loop), ``"vectorized"`` (array fast path, ours mode only) or ``"scan"``
     (batched jax.lax.scan variant).  A backend raises ``ValueError`` when it
     does not support the scenario; the sweep engine's ``backend="auto"``
-    selector (``SweepSpec(backends=("auto",))``) falls back gracefully."""
+    selector (``SweepSpec(backends=("auto",))``) falls back gracefully.
+
+    ``trace=True`` attaches a flight-recorder stream to ``result.trace``:
+    the rich instrumented stream on the reference ours-mode loop, the
+    canonical reconstruction (``flight.trace_from_result``) everywhere
+    else -- same schema, directly comparable."""
     be = get_backend(backend)
     if not be.supports(mode=mode, policy=policy, warm=warm):
         raise ValueError(
             f"backend {be.name!r} does not support mode={mode!r} "
             f"policy={policy!r} warm={warm!r}; use backend='reference' "
             f"or backend='auto' in the sweep engine")
-    return be.simulate(requests, cores, policy=policy, mode=mode,
-                       memory_mb=memory_mb, container_mb=container_mb,
-                       warm=warm, kappa=kappa)
+    if trace and be.supports(mode=mode, policy=policy, warm=warm, trace=True):
+        return be.simulate(requests, cores, policy=policy, mode=mode,
+                           memory_mb=memory_mb, container_mb=container_mb,
+                           warm=warm, kappa=kappa, trace=True)
+    res = be.simulate(requests, cores, policy=policy, mode=mode,
+                      memory_mb=memory_mb, container_mb=container_mb,
+                      warm=warm, kappa=kappa)
+    if trace:
+        res.trace = trace_from_result(res, slots_per_node=cores,
+                                      meta={"backend": be.name})
+    return res

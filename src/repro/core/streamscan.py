@@ -407,6 +407,43 @@ class StreamResult:
     def ratt_minus_one(self, e: int) -> int:
         return int(self.attempts[e])
 
+    def trace(self, order=None) -> "SimTrace":
+        """Canonical flight-recorder stream (arrival/dispatch/complete/fail)
+        reconstructed straight from the event-order output arrays — same
+        schema as :func:`repro.core.flight.trace_from_result`, so a
+        streamed replay is comparable event-for-event against a traced
+        reference or single-shot scan run.  ``order`` (the permutation from
+        ``stream_from_requests``) labels events with their original request
+        index; without it the event position is the request id."""
+        import math as _math
+
+        from .flight import SimTrace, TraceEvent, _KIND_RANK
+
+        ids = (np.asarray(order).tolist() if order is not None
+               else list(range(self.n)))
+        events = []
+        for e in range(self.n):
+            rid = int(ids[e])
+            fn = self.fns[int(self.fnid[e])]
+            att = max(int(self.attempts[e]), 0)
+            events.append(TraceEvent(float(self.t[e]), "arrival", rid, -1,
+                                     fn, 0))
+            if int(self.failed[e]):
+                cause = "timeout" if int(self.failed[e]) == 1 else "shed"
+                events.append(TraceEvent(float("nan"), "fail", rid,
+                                         int(self.node[e]), fn, att, cause))
+                continue
+            info = "cold" if bool(self.cold[e]) else ""
+            events.append(TraceEvent(float(self.start[e]), "dispatch", rid,
+                                     int(self.node[e]), fn, att, info))
+            events.append(TraceEvent(float(self.finish[e]), "complete", rid,
+                                     int(self.node[e]), fn, att))
+        events.sort(key=lambda ev: (_math.inf if _math.isnan(ev.t) else ev.t,
+                                    _KIND_RANK.get(ev.kind, 99), ev.req))
+        return SimTrace(events=events, nodes=self.nodes_used,
+                        meta={"backend": "streamscan", "chunks": self.chunks,
+                              "canonical": True})
+
 
 # ---------------------------------------------------------------------------
 # the chunked replay driver

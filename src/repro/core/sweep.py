@@ -29,6 +29,7 @@ from __future__ import annotations
 import csv
 import itertools
 import json
+import math
 import multiprocessing
 import os
 import sys
@@ -680,12 +681,32 @@ def _cell_metrics(cell: SweepCell, done, cold, failures, backups,
     return metrics
 
 
+def _mismatch(cell: SweepCell, rtol: float,
+              msg: str) -> BackendMismatchError:
+    """Build a BackendMismatchError with first-divergence triage attached:
+    rerun the cell traced on both engines and name the first divergent
+    lifecycle event.  Triage is best-effort — it must never mask the
+    original mismatch — so any triage failure just drops the report."""
+    report = None
+    try:
+        report = triage_cell(cell, rtol=rtol)
+    except Exception:   # noqa: BLE001 -- diagnostic layer only
+        report = None
+    if report is not None:
+        msg = f"{msg}\n  {report}"
+    err = BackendMismatchError(msg)
+    err.report = report
+    return err
+
+
 def _cross_check(cell: SweepCell, ref: dict[str, float],
                  fast: dict[str, float], backend: str,
                  rtol: float = CROSS_CHECK_RTOL) -> float:
     """Max relative disagreement over CROSS_CHECK_KEYS; raises on breach.
     Count-like metrics (CROSS_CHECK_EXACT: failures / backups / steals)
-    must match *bit-identically* -- any difference is a hard failure."""
+    must match *bit-identically* -- any difference is a hard failure.
+    A raised :class:`BackendMismatchError` carries the first-divergence
+    triage report (``err.report``) when one could be computed."""
     worst = 0.0
     for k in CROSS_CHECK_KEYS:
         a, b = ref.get(k), fast.get(k)
@@ -694,7 +715,8 @@ def _cross_check(cell: SweepCell, ref: dict[str, float],
         err = abs(a - b) / max(abs(a), abs(b), 1e-9)
         worst = max(worst, err)
         if err > rtol:
-            raise BackendMismatchError(
+            raise _mismatch(
+                cell, rtol,
                 f"backend {backend!r} disagrees with reference on "
                 f"{cell.label()} seed={cell.seed}: {k} {b!r} vs {a!r} "
                 f"(rel err {err:.2e} > {rtol})")
@@ -703,7 +725,8 @@ def _cross_check(cell: SweepCell, ref: dict[str, float],
         if a is None or b is None:
             continue
         if a != b:
-            raise BackendMismatchError(
+            raise _mismatch(
+                cell, rtol,
                 f"backend {backend!r} miscounts {k} on {cell.label()} "
                 f"seed={cell.seed}: {b!r} vs reference {a!r} "
                 "(count metrics must match exactly)")
@@ -725,6 +748,91 @@ def _cluster_scan_ok(cell: SweepCell, reqs: list[Request],
                                  profile=_cell_profile(cell),
                                  hedging=_cell_hedging(cell),
                                  resilience=_cell_resilience(cell))
+
+
+def _cluster_kwargs(cell: SweepCell, policy: str) -> dict:
+    """The ``simulate_cluster`` keyword set a cell expands to — shared by
+    :func:`run_cell` and :func:`triage_cell` so a triage rerun is guaranteed
+    to reproduce exactly the scenario the cross-check ran."""
+    kw = dict(nodes=cell.nodes, cores_per_node=cell.cores,
+              policy=policy, assignment=cell.assignment,
+              lb=cell.lb,
+              warm=cell.warm, fail_at=cell.fail_at,
+              fail_spec=cell.fail_spec or (),
+              node_speeds=cell.node_speeds,
+              degrade=cell.degrade or (),
+              hedging=_cell_hedging(cell),
+              resilience=_cell_resilience(cell),
+              autoscale=cell.autoscale)
+    if cell.provision_delay is not None:
+        kw["provision_delay_s"] = cell.provision_delay
+    if cell.scale_up is not None:
+        kw["scale_up_queue_per_slot"] = cell.scale_up
+    if cell.max_nodes is not None:
+        kw["max_nodes"] = cell.max_nodes
+    return kw
+
+
+def triage_cell(cell: SweepCell, rtol: float | None = None):
+    """First-divergence triage: rerun ``cell`` on the reference engine and
+    its fast counterpart, reconstruct both canonical lifecycle streams
+    (:func:`repro.core.flight.trace_from_result`) and return the
+    :class:`~repro.core.flight.DivergenceReport` naming the first divergent
+    event — or ``None`` when the streams agree (or the cell has no fast
+    counterpart to triage against).  Called automatically when a
+    ``validate="cross-check"`` comparison fails, so the raised
+    ``BackendMismatchError`` names the event, not just the metric."""
+    from .cluster import simulate_cluster
+    from .flight import first_divergence, trace_from_result
+    from .simulator import simulate_single_node
+
+    mode = "baseline" if (cell.mode == "baseline"
+                          or cell.policy == "baseline") else "ours"
+    if mode == "baseline":
+        return None                    # stock baseline has no fast engine
+    policy = "fifo" if cell.policy == "baseline" else cell.policy
+    a, b = make_workload(cell), make_workload(cell)
+    remap = {qb.id: qa.id for qa, qb in zip(a, b)}
+    single = (cell.nodes <= 1 and not cell.autoscale and cell.fail_at is None
+              and not _cell_straggler(cell)
+              and _cell_resilience(cell) is None)
+    try:
+        if single:
+            if not _vectorized_eligible(cell):
+                return None
+            fast_name = (cell.backend if cell.backend in ("vectorized",
+                                                          "scan")
+                         else "vectorized")
+            ref = simulate_single_node(a, cores=cell.cores, policy=policy,
+                                       mode=mode, warm=cell.warm,
+                                       backend="reference")
+            fast = simulate_single_node(b, cores=cell.cores, policy=policy,
+                                        mode=mode, warm=cell.warm,
+                                        backend=fast_name)
+            rtol = CROSS_CHECK_RTOL if rtol is None else rtol
+        else:
+            if not (_cluster_scan_capable(cell)
+                    and _cluster_scan_ok(cell, a, policy)):
+                return None
+            from .fastpath import simulate_cluster_cells_scan
+            ref = simulate_cluster(a, **_cluster_kwargs(cell, policy))
+            fast = simulate_cluster_cells_scan(
+                [(b, cell.nodes, cell.cores, policy, cell.assignment,
+                  cell.lb, _cell_dynamics(cell), _cell_profile(cell),
+                  _cell_hedging(cell), cell.warm,
+                  _cell_resilience(cell))])[0]
+            rtol = CLUSTER_XCHECK_RTOL if rtol is None else rtol
+    except (ValueError, ImportError):
+        return None                    # no fast engine for this scenario
+    # the scan kernel re-routes kill-lost calls but does not write back a
+    # per-request resubmission count outside hedge/resilience cells
+    kills = cell.fail_at is not None or bool(cell.fail_spec)
+    cmp_att = not (kills and _cell_hedging(cell) is None
+                   and _cell_resilience(cell) is None)
+    return first_divergence(
+        trace_from_result(ref, requests=a),
+        trace_from_result(fast, requests=b).relabel(remap),
+        rtol=rtol, compare_attempts=cmp_att)
 
 
 def run_cell(cell: SweepCell) -> dict[str, float]:
@@ -797,22 +905,7 @@ def run_cell(cell: SweepCell) -> dict[str, float]:
         scan_ok = (cell.backend == "scan" or cell.cross_check) \
             and _cluster_scan_capable(cell) \
             and _cluster_scan_ok(cell, reqs, policy)
-        ref_kw = dict(nodes=cell.nodes, cores_per_node=cell.cores,
-                      policy=policy, assignment=cell.assignment,
-                      lb=cell.lb,
-                      warm=cell.warm, fail_at=cell.fail_at,
-                      fail_spec=cell.fail_spec or (),
-                      node_speeds=cell.node_speeds,
-                      degrade=cell.degrade or (),
-                      hedging=hedging,
-                      resilience=resilience,
-                      autoscale=cell.autoscale)
-        if cell.provision_delay is not None:
-            ref_kw["provision_delay_s"] = cell.provision_delay
-        if cell.scale_up is not None:
-            ref_kw["scale_up_queue_per_slot"] = cell.scale_up
-        if cell.max_nodes is not None:
-            ref_kw["max_nodes"] = cell.max_nodes
+        ref_kw = _cluster_kwargs(cell, policy)
         def _counts(r):
             return (r.timed_out, r.shed, r.retries_issued, r.wasted_work)
 
@@ -1208,12 +1301,49 @@ class SweepResult:
 
 # ---------------------------------------------------------------------------
 # runner
+class ProgressReporter:
+    """Default ``run_sweep`` progress callback: a log line every ``every``
+    cells (and at completion) with done/total, cells/s and ETA — so a
+    100k-cell mega sweep is no longer silent for minutes.  ``every=None``
+    auto-picks ~1% of the total (at least 1); ``min_interval_s`` rate-limits
+    output when cells are fast.  Writes to ``stream`` (stderr by default;
+    any ``write()``-able object works, tests pass ``io.StringIO``)."""
+
+    def __init__(self, every: int | None = None, min_interval_s: float = 5.0,
+                 stream=None, clock: Callable[[], float] = time.monotonic):
+        self.every = every
+        self.min_interval_s = min_interval_s
+        self.stream = stream
+        self._clock = clock
+        self._t0: float | None = None
+        self._last_emit = -math.inf
+        self.lines = 0
+
+    def __call__(self, done: int, total: int) -> None:
+        now = self._clock()
+        if self._t0 is None:
+            self._t0 = now
+        every = self.every or max(1, total // 100)
+        if done < total and (done % every != 0
+                             or now - self._last_emit < self.min_interval_s):
+            return
+        self._last_emit = now
+        elapsed = max(now - self._t0, 1e-9)
+        rate = done / elapsed
+        eta = (total - done) / rate if rate > 0 else float("inf")
+        line = (f"[sweep] {done}/{total} cells "
+                f"({100.0 * done / total:.0f}%) "
+                f"{rate:.1f} cells/s eta {eta:.0f}s")
+        self.lines += 1
+        print(line, file=self.stream or sys.stderr, flush=True)
+
+
 # ---------------------------------------------------------------------------
 def run_sweep(
     spec: SweepSpec,
     workers: int | None = None,
     runner: Callable[[SweepCell], dict] | None = None,
-    progress: Callable[[int, int], None] | None = None,
+    progress: "Callable[[int, int], None] | bool | None" = None,
     executor: str | None = None,
 ) -> SweepResult:
     """Execute every cell of ``spec``.
@@ -1232,7 +1362,16 @@ def run_sweep(
     partitioned into padded shape buckets and dispatched as batched
     ``jax.lax.scan`` calls in-process (see :func:`run_cells_scan`) -- for a
     10k-cell cluster grid that is a handful of XLA dispatches after one
-    compile per bucket, far faster than any per-cell pool."""
+    compile per bucket, far faster than any per-cell pool.
+
+    ``progress`` is called as ``progress(done, total)`` after every
+    completed cell (and after each batched-scan bucket); pass ``True`` for
+    the default :class:`ProgressReporter` log line (done/total, cells/s,
+    ETA)."""
+    if progress is True:
+        progress = ProgressReporter()
+    elif progress is False:
+        progress = None
     cells = spec.cells()
     if not cells:
         raise ValueError("SweepSpec expands to zero cells")

@@ -1,0 +1,107 @@
+"""Explain a request's lifecycle from a traced simulation run.
+
+Builds one sweep-style cell workload (the same ``generate_burst`` the
+sweeps use), runs it with the flight recorder on (``trace=True``) through
+the reference event loop or the scan engine, and prints the per-request
+lifecycle narrative (``SimTrace.explain``) for the requests you name with
+``--req`` and/or the ``--slowest N`` responses.  Optionally exports the
+whole trace as Chrome-trace JSON (``--chrome``, load at chrome://tracing
+or https://ui.perfetto.dev), the run manifest (``--manifest``), and the
+windowed-probe timeline figure (``--timeline``).
+
+Usage::
+
+    PYTHONPATH=src python tools/explain_request.py --slowest 3
+    PYTHONPATH=src python tools/explain_request.py --backend scan --req 17
+    PYTHONPATH=src python tools/explain_request.py \\
+        --chrome artifacts/flight_trace.json \\
+        --manifest artifacts/manifest.json
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+for p in (str(ROOT / "src"), str(ROOT)):   # repro.core + benchmarks.plots
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+from repro.core import generate_burst, simulate_cluster, write_manifest
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="trace one cell and explain request lifecycles")
+    ap.add_argument("--nodes", type=int, default=3)
+    ap.add_argument("--cores", type=int, default=4,
+                    help="cores per node")
+    ap.add_argument("--policy", default="fc")
+    ap.add_argument("--assignment", default="pull",
+                    choices=("pull", "push"))
+    ap.add_argument("--intensity", type=float, default=30.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default="reference",
+                    choices=("reference", "scan", "auto"),
+                    help="reference = rich instrumented stream; "
+                         "scan = canonical reconstruction")
+    ap.add_argument("--req", type=int, action="append", default=None,
+                    metavar="ID", help="request id(s) to explain")
+    ap.add_argument("--slowest", type=int, default=None, metavar="N",
+                    help="also explain the N slowest responses "
+                         "(default 3 when no --req given)")
+    ap.add_argument("--chrome", default=None, metavar="PATH",
+                    help="write the Chrome-trace JSON export here")
+    ap.add_argument("--manifest", default=None, metavar="PATH",
+                    help="write the run manifest JSON here")
+    ap.add_argument("--timeline", default=None, metavar="PNG",
+                    help="write the windowed-probe timeline figure here")
+    args = ap.parse_args(argv)
+
+    requests = generate_burst(cores=args.nodes * args.cores,
+                              intensity=args.intensity, seed=args.seed)
+    res = simulate_cluster(requests, nodes=args.nodes,
+                           cores_per_node=args.cores, policy=args.policy,
+                           assignment=args.assignment,
+                           backend=args.backend, trace=True)
+    trace = res.trace
+    if trace is None:
+        print("backend attached no trace", file=sys.stderr)
+        return 1
+    counts = trace.counts()
+    print(f"# {len(requests)} requests, {args.nodes}x{args.cores} cores, "
+          f"policy={args.policy}, assignment={args.assignment}, "
+          f"backend={trace.meta.get('backend', args.backend)}")
+    print("# events: " + ", ".join(f"{k}={v}"
+                                   for k, v in sorted(counts.items())))
+
+    ids = list(args.req or [])
+    slowest = args.slowest if args.slowest is not None else (
+        0 if ids else 3)
+    if slowest:
+        done = sorted((r for r in requests if r.c is not None),
+                      key=lambda r: r.c - r.r, reverse=True)
+        ids.extend(r.id for r in done[:slowest] if r.id not in ids)
+    for rid in ids:
+        print()
+        print(trace.explain(rid))
+
+    for path in (args.chrome, args.manifest, args.timeline):
+        if path:
+            Path(path).parent.mkdir(parents=True, exist_ok=True)
+    if args.chrome:
+        trace.to_chrome(args.chrome)
+        print(f"\nwrote Chrome trace to {args.chrome}")
+    if args.manifest:
+        write_manifest(args.manifest)
+        print(f"wrote run manifest to {args.manifest}")
+    if args.timeline:
+        from benchmarks.plots import plot_timeline
+        plot_timeline(trace, out=args.timeline)
+        print(f"wrote timeline figure to {args.timeline}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -78,7 +78,7 @@ def _supports(backend_name: str, kwargs: dict) -> bool:
     base = dict(mode="ours", policy="fc", warm=True, nodes=1,
                 assignment="pull", autoscale=False, failures=False,
                 hedging=False, hetero=False, timeouts=False, retries=False,
-                shedding=False, streaming=False)
+                shedding=False, streaming=False, trace=False)
     base.update(kwargs)
     return bool(get_backend(backend_name).supports(**base))
 
@@ -86,18 +86,24 @@ def _supports(backend_name: str, kwargs: dict) -> bool:
 def render_table() -> str:
     # the trailing `streaming` column asks the scan backend about the
     # chunked carry-handoff replay path (core/streamscan.py) for the same
-    # scenario -- bounded-memory streams on every row it says yes to
+    # scenario -- bounded-memory streams on every row it says yes to; the
+    # `trace` column asks the reference backend for the rich instrumented
+    # flight-recorder stream (core/flight.py) -- the canonical trace needs
+    # no capability bit, trace_from_result reconstructs it from any
+    # backend's written-back request state
     lines = [
         "| scenario | " + " | ".join(f"`{b}`" for b in BACKENDS)
-        + " | `streaming` |",
-        "|" + "---|" * (len(BACKENDS) + 2),
+        + " | `streaming` | `trace` |",
+        "|" + "---|" * (len(BACKENDS) + 3),
     ]
     for label, kwargs in SCENARIOS:
         cells = " | ".join(
             "yes" if _supports(b, kwargs) else "no" for b in BACKENDS)
         stream = "yes" if _supports(
             "scan", {**kwargs, "streaming": True}) else "no"
-        lines.append(f"| {label} | {cells} | {stream} |")
+        trace = "yes" if _supports(
+            "reference", {**kwargs, "trace": True}) else "no"
+        lines.append(f"| {label} | {cells} | {stream} | {trace} |")
     return "\n".join(lines)
 
 
